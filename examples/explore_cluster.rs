@@ -1,0 +1,45 @@
+//! Sweep BaPipe's auto-exploration across the paper's workloads and GPU
+//! cluster sizes — a compact view of the Table-3 decision surface: which
+//! schedule wins where, and when the explorer falls back to DP.
+//!
+//! Run: `cargo run --release --example explore_cluster`
+
+use bapipe::cluster::presets;
+use bapipe::explorer::{self, Choice, Options};
+use bapipe::model::zoo;
+use bapipe::profile::analytical;
+use bapipe::util::benchkit::print_table;
+
+fn main() {
+    let mut rows = Vec::new();
+    for model in ["vgg16", "resnet50", "gnmt8", "gnmt16", "alexnet"] {
+        let net = zoo::by_name(model).unwrap();
+        for n in [2usize, 4, 8] {
+            let cl = presets::v100_cluster(n);
+            let prof = analytical::profile(&net, &cl);
+            let opts = Options {
+                batch_per_device: 32.0,
+                samples_per_epoch: 50_000,
+                ..Default::default()
+            };
+            let plan = explorer::explore(&net, &cl, &prof, &opts);
+            let choice = match &plan.choice {
+                Choice::Pipeline { kind, m, partition, .. } => {
+                    format!("{} M={m} {}", kind.label(), partition.describe())
+                }
+                Choice::DataParallel => "DP".to_string(),
+            };
+            rows.push(vec![
+                model.to_string(),
+                format!("{n}x V100"),
+                format!("{:.2}x", plan.speedup_over_dp),
+                choice,
+            ]);
+        }
+    }
+    print_table(
+        "BaPipe exploration across workloads x cluster sizes",
+        &["model", "cluster", "speedup vs DP", "chosen plan"],
+        &rows,
+    );
+}

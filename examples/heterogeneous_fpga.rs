@@ -1,0 +1,69 @@
+//! Heterogeneous FPGA clusters (the Table-6 setting): BaPipe balances
+//! ResNet-50 across mixed VCU129/VCU118 boards — inter-layer partition
+//! proportional to DSP counts, intra-layer fractional refinement, FBP-AS
+//! scheduling, and the on-chip-weight residency check.
+//!
+//! Run: `cargo run --release --example heterogeneous_fpga`
+
+use bapipe::cluster::presets;
+use bapipe::explorer::build_spec;
+use bapipe::model::zoo;
+use bapipe::partition::{balanced_partition, stage_costs};
+use bapipe::profile::analytical;
+use bapipe::schedule::ScheduleKind;
+use bapipe::sim::engine::simulate;
+use bapipe::util::benchkit::print_table;
+use bapipe::util::fmt_bytes;
+
+fn main() -> bapipe::Result<()> {
+    let net = zoo::resnet50(224);
+    println!("workload: {}", net.describe());
+    for boards in [
+        vec!["VCU118"; 4],
+        vec!["VCU129", "VCU129", "VCU118", "VCU118"],
+        vec!["VCU129"; 4],
+    ] {
+        let cl = presets::fpga_cluster(&boards);
+        let prof = analytical::profile(&net, &cl);
+        let m = 128;
+        let plan = balanced_partition(&net, &cl, &prof, ScheduleKind::FbpAs, 1.0, m)?;
+        println!("\n=== {} ===", cl.describe());
+        for note in &plan.notes {
+            println!("  flow: {note}");
+        }
+        let costs = stage_costs(&prof, &cl, &plan.partition, 1.0);
+        let mut rows = Vec::new();
+        for (i, (f, b)) in costs.iter().enumerate() {
+            let r = plan.partition.stage(i);
+            let w = prof.param_bytes(r.start, r.end);
+            let onchip = cl.devices[i].onchip_capacity;
+            rows.push(vec![
+                format!("stage {i} ({})", cl.devices[i].name),
+                format!("{}..{}", r.start, r.end),
+                format!("{:.3} ms", (f + b) * 1e3),
+                fmt_bytes(w),
+                if (w as f64) < 0.75 * onchip as f64 { "on-chip" } else { "DDR spill" }.into(),
+            ]);
+        }
+        print_table(
+            "balanced stages (micro-batch 1, FBP-AS)",
+            &["stage", "layers", "F+B", "stage weights", "residency"],
+            &rows,
+        );
+        if let Some(fp) = &plan.frac {
+            println!(
+                "  intra-layer refinement: imbalance {:.2}% -> {:.2}%",
+                fp.imbalance_before * 100.0,
+                fp.imbalance_after * 100.0
+            );
+        }
+        let spec = build_spec(&prof, &cl, &plan.partition, ScheduleKind::FbpAs, 1.0, m);
+        let r = simulate(&spec);
+        println!(
+            "  mini-batch (M={m}): {:.2} ms, bubble {:.1}%",
+            r.makespan * 1e3,
+            r.bubble_fraction * 100.0
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,74 @@
+//! Watch the Fig.-3 balanced-partition flow stage by stage on any zoo
+//! model: Eq.-1 seed → iterative refinement → DP-optimal → (coarse pass if
+//! communication-bound) → memory fine-tune.
+//!
+//! Run: `cargo run --release --example partition_playground -- \
+//!         --model gnmt8 --cluster v100 --n 4 --micro 8`
+
+use bapipe::cluster::presets;
+use bapipe::model::zoo;
+use bapipe::partition::{balanced_partition, coarse, interlayer, stage_costs};
+use bapipe::profile::analytical;
+use bapipe::schedule::ScheduleKind;
+use bapipe::util::cli::Args;
+
+fn main() -> bapipe::Result<()> {
+    let args = Args::from_env();
+    let model = args.get_str("model", "gnmt8");
+    let n = args.get_usize("n", 4);
+    let micro = args.get_f64("micro", 8.0);
+    let net = zoo::by_name(&model).ok_or_else(|| anyhow::anyhow!("unknown model {model}"))?;
+    let cl = match args.get_str("cluster", "v100").as_str() {
+        "v100" => presets::v100_cluster(n),
+        "vcu118" => presets::fpga_cluster(&vec!["VCU118"; n]),
+        other => anyhow::bail!("unknown cluster {other}"),
+    };
+    let prof = analytical::profile(&net, &cl);
+    let cuts = net.legal_cuts();
+
+    println!("{} on {}, micro-batch {micro}", net.describe(), cl.describe());
+    println!("\nEq. 1 ideal stage time T = {:.3} ms", interlayer::eq1_ideal_time(&prof) * micro * 1e3);
+
+    let seed = interlayer::seed_partition(&prof, &cl, &cuts, micro)?;
+    println!(
+        "\n1. seed:        {}  (max stage {:.3} ms)",
+        seed.describe(),
+        interlayer::max_stage_time(&prof, &seed, micro, None) * 1e3
+    );
+    let refined = interlayer::refine(&prof, seed, &cuts, micro);
+    println!(
+        "2. refined:     {}  (max stage {:.3} ms)",
+        refined.describe(),
+        interlayer::max_stage_time(&prof, &refined, micro, None) * 1e3
+    );
+    let dp = interlayer::dp_optimal(&prof, &cl, &cuts, micro, None)?;
+    println!(
+        "3. DP-optimal:  {}  (max stage {:.3} ms)",
+        dp.describe(),
+        interlayer::max_stage_time(&prof, &dp, micro, None) * 1e3
+    );
+
+    // Coarse view: how many cut points survive each threshold decade.
+    println!("\ncut points by activation-size threshold:");
+    for a_th in [64e3, 256e3, 1e6, 4e6, f64::INFINITY] {
+        let kept = coarse::allowed_cuts(&prof, &cuts, a_th);
+        println!("  a_th ≤ {:>9}: {} of {} cuts",
+            if a_th.is_finite() { format!("{:.0} KB", a_th / 1e3) } else { "inf".into() },
+            kept.len(),
+            cuts.len()
+        );
+    }
+
+    // Full flow.
+    let plan = balanced_partition(&net, &cl, &prof, ScheduleKind::OneFOneBSno, micro, 16)?;
+    println!("\nfull Fig.-3 flow:");
+    for note in &plan.notes {
+        println!("  {note}");
+    }
+    let costs = stage_costs(&prof, &cl, &plan.partition, micro);
+    println!("\nfinal stage times:");
+    for (i, (f, b)) in costs.iter().enumerate() {
+        println!("  stage {i}: F {:.3} ms + B {:.3} ms = {:.3} ms", f * 1e3, b * 1e3, (f + b) * 1e3);
+    }
+    Ok(())
+}

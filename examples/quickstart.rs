@@ -1,0 +1,42 @@
+//! Quickstart: BaPipe's planner in five calls — describe a workload,
+//! describe the cluster, profile, explore, read the plan.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use bapipe::cluster::presets;
+use bapipe::explorer::{self, Options};
+use bapipe::model::zoo;
+use bapipe::profile::analytical;
+use bapipe::sim::{engine, timeline};
+
+fn main() {
+    // 1. The workload: VGG-16 at 224x224 (the paper's Table 3 headliner).
+    let net = zoo::vgg16(224);
+    println!("workload: {}", net.describe());
+
+    // 2. The cluster: 4x NVIDIA V100 (16 GB) on PCIe gen3, GLOO transport.
+    let cluster = presets::v100_cluster(4);
+    println!("cluster:  {}", cluster.describe());
+
+    // 3. Profile (analytical here; `measured` profiles real executables).
+    let profile = analytical::profile(&net, &cluster);
+
+    // 4. Explore schedules x partitions x micro-batching (Fig. 3).
+    let opts = Options { batch_per_device: 32.0, samples_per_epoch: 50_000, ..Default::default() };
+    let plan = explorer::explore(&net, &cluster, &profile, &opts);
+
+    // 5. Read the plan.
+    println!("\n{}", plan.report());
+    println!("\nexploration log:");
+    for line in &plan.log {
+        println!("  {line}");
+    }
+
+    // Bonus: visualize the chosen schedule.
+    if let explorer::Choice::Pipeline { kind, m, micro, partition } = &plan.choice {
+        let spec = explorer::build_spec(&profile, &cluster, partition, *kind, *micro, *m);
+        let r = engine::simulate(&spec);
+        println!("\n{} timeline (one mini-batch):", kind.label());
+        print!("{}", timeline::render(&r, partition.n_stages(), 110));
+    }
+}

@@ -1,0 +1,94 @@
+//! E11 — the end-to-end driver: train a transformer LM through the REAL
+//! pipeline engine (compiled XLA stage programs, worker threads, channel
+//! interconnect) on a synthetic Markov corpus, logging the loss curve
+//! against the corpus' entropy floor and comparing schedules.
+//!
+//! Default workload: the lm10m bundle (≈10M params, 4 stages) for a few
+//! hundred steps — sized for this single-core CPU host. Build
+//! `make artifacts-lm100m` and pass `--artifacts artifacts/lm100m-s4-b2`
+//! for the paper-scale (~100M-param) run.
+//!
+//! Run: `cargo run --release --example train_transformer -- \
+//!         --artifacts artifacts/lm10m-s4-b4 --steps 300 --m 8`
+
+use bapipe::config::TrainConfig;
+use bapipe::pipeline::training;
+use bapipe::runtime::{Manifest, Runtime};
+use bapipe::util::cli::Args;
+
+fn main() -> bapipe::Result<()> {
+    let args = Args::from_env();
+    let artifacts = args.get_str("artifacts", "artifacts/lm10m-s4-b4");
+    let schedule = args.get_str("schedule", "1f1b");
+    let steps = args.get_usize("steps", 300);
+    let m = args.get_usize("m", 8);
+
+    let man = Manifest::load(&artifacts)?;
+    println!(
+        "model {}: {} params, {} stages, micro-batch {}, seq {}, pallas kernels: {}",
+        man.model,
+        bapipe::util::fmt_params(man.total_params() as u64),
+        man.n_stages,
+        man.micro_batch,
+        man.seq,
+        man.use_pallas
+    );
+    man.crosscheck_zoo()?;
+
+    // Planner first: measured profile of the real stage executables.
+    {
+        let rt = Runtime::load(&artifacts)?;
+        let times = training::measure_stage_times(&rt, 3)?;
+        println!("\nmeasured per-stage times (micro-batch {}):", man.micro_batch);
+        for (i, (f, b)) in times.iter().enumerate() {
+            println!("  stage {i}: fwd {:6.2} ms, bwd {:6.2} ms", f * 1e3, b * 1e3);
+        }
+        let imbalance = {
+            let tot: Vec<f64> = times.iter().map(|(f, b)| f + b).collect();
+            let max = tot.iter().cloned().fold(0.0, f64::max);
+            let min = tot.iter().cloned().fold(f64::INFINITY, f64::min);
+            max / min
+        };
+        println!("  stage imbalance (max/min): {imbalance:.2}x");
+    }
+
+    let cfg = TrainConfig {
+        artifacts: artifacts.clone(),
+        schedule: schedule.clone(),
+        m,
+        steps,
+        lr: args.get_f64("lr", 1e-3) as f32,
+        seed: args.get_u64("seed", 0),
+        branch: args.get_usize("branch", 8),
+        noise: args.get_f64("noise", 0.1),
+        log_every: args.get_usize("log-every", 10),
+    };
+    println!("\ntraining: schedule={} M={} steps={} lr={}", cfg.schedule, cfg.m, steps, cfg.lr);
+    let t0 = std::time::Instant::now();
+    let rep = training::train(&cfg)?;
+    println!("\nloss curve:");
+    print!("{}", rep.render_curve());
+    println!(
+        "\nfirst loss {:.4} (ln V = {:.4}), final loss {:.4}, floor {:.4}",
+        rep.first_loss,
+        (man.vocab as f64).ln(),
+        rep.final_loss,
+        rep.entropy_floor
+    );
+    println!(
+        "throughput {:.1} tokens/s over {:.1}s wall-clock",
+        rep.tokens_per_sec,
+        t0.elapsed().as_secs_f64()
+    );
+    println!("\nper-stage mean seconds/step (fwd | bwd | opt | stall):");
+    for (i, (f, b, o, s)) in rep.per_stage_means.iter().enumerate() {
+        println!(
+            "  stage {i}: {:7.1} ms | {:7.1} ms | {:6.1} ms | {:7.1} ms",
+            f * 1e3,
+            b * 1e3,
+            o * 1e3,
+            s * 1e3
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,179 @@
+"""AOT lowering: per-stage JAX programs → HLO **text** + manifest.json.
+
+Run once by `make artifacts`; python never executes on the training path.
+
+HLO text (not `.serialize()`) is the interchange format: jax ≥ 0.5 emits
+HloModuleProto with 64-bit instruction ids which the rust `xla` crate's
+xla_extension 0.5.1 rejects; the text parser reassigns ids (see
+/opt/xla-example/README.md).
+
+Artifacts per stage k:
+  stage<k>_init.hlo.txt : (seed i32[])                       → params…
+  stage<k>_fwd.hlo.txt  : (params…, x[, targets])            → y | loss
+  stage<k>_bwd.hlo.txt  : (params…, acc…, x, gy|targets)     → acc'…[, gx]
+  stage<k>_opt.hlo.txt  : (params…, acc…, m…, v…, step, lr, gscale)
+                                                             → params'…, m'…, v'…
+plus manifest.json describing shapes, arg counts and file names.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (return_tuple so multi-output
+    programs unwrap uniformly on the rust side)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_stage(cfg, kind, n_blocks, micro, use_pallas):
+    """Lower the four per-stage programs; returns {name: hlo_text} plus
+    the parameter spec list."""
+    specs = M.stage_param_specs(cfg, kind, n_blocks)
+    p_structs = [jax.ShapeDtypeStruct(s, jnp.float32) for _, s in specs]
+    b, s, d = micro, cfg.seq, cfg.d_model
+    x_struct = (
+        jax.ShapeDtypeStruct((b, s), jnp.int32)
+        if kind == "first"
+        else jax.ShapeDtypeStruct((b, s, d), jnp.float32)
+    )
+    gy_struct = jax.ShapeDtypeStruct((b, s, d), jnp.float32)
+    tgt_struct = jax.ShapeDtypeStruct((b, s), jnp.int32)
+    scalar = jax.ShapeDtypeStruct((), jnp.float32)
+    seed = jax.ShapeDtypeStruct((), jnp.int32)
+
+    out = {}
+
+    def init_fn(sd):
+        return tuple(M.init_stage(cfg, kind, n_blocks, sd))
+
+    out["init"] = to_hlo_text(jax.jit(init_fn, keep_unused=True).lower(seed))
+
+    if kind == "last":
+        def fwd_fn(*args):
+            p, x, t = list(args[:-2]), args[-2], args[-1]
+            return (M.stage_fwd(cfg, kind, n_blocks, use_pallas, p, x, t),)
+
+        out["fwd"] = to_hlo_text(jax.jit(fwd_fn, keep_unused=True).lower(*p_structs, x_struct, tgt_struct))
+
+        def bwd_fn(*args):
+            np_ = len(p_structs)
+            p = list(args[:np_])
+            acc = list(args[np_ : 2 * np_])
+            x, t = args[-2], args[-1]
+            return tuple(M.stage_bwd(cfg, kind, n_blocks, use_pallas, p, acc, x, t))
+
+        out["bwd"] = to_hlo_text(
+            jax.jit(bwd_fn, keep_unused=True).lower(*p_structs, *p_structs, x_struct, tgt_struct)
+        )
+    else:
+        def fwd_fn(*args):
+            p, x = list(args[:-1]), args[-1]
+            return (M.stage_fwd(cfg, kind, n_blocks, use_pallas, p, x),)
+
+        out["fwd"] = to_hlo_text(jax.jit(fwd_fn, keep_unused=True).lower(*p_structs, x_struct))
+
+        def bwd_fn(*args):
+            np_ = len(p_structs)
+            p = list(args[:np_])
+            acc = list(args[np_ : 2 * np_])
+            x, gy = args[-2], args[-1]
+            return tuple(M.stage_bwd(cfg, kind, n_blocks, use_pallas, p, acc, x, gy))
+
+        out["bwd"] = to_hlo_text(
+            jax.jit(bwd_fn, keep_unused=True).lower(*p_structs, *p_structs, x_struct, gy_struct)
+        )
+
+    def opt_fn(*args):
+        np_ = len(p_structs)
+        p = list(args[:np_])
+        g = list(args[np_ : 2 * np_])
+        m = list(args[2 * np_ : 3 * np_])
+        v = list(args[3 * np_ : 4 * np_])
+        step, lr, gscale = args[-3], args[-2], args[-1]
+        new_p, new_m, new_v = M.adam_update(p, g, m, v, step, lr, gscale)
+        return tuple(new_p + new_m + new_v)
+
+    out["opt"] = to_hlo_text(
+        jax.jit(opt_fn, keep_unused=True).lower(*(p_structs * 4), scalar, scalar, scalar)
+    )
+    return out, specs
+
+
+def build(model_name: str, n_stages: int, micro: int, use_pallas: bool, out_dir: str):
+    """Build all artifacts for one (model, n_stages, micro) configuration."""
+    cfg = M.CONFIGS[model_name]
+    kinds, blocks = M.stage_layout(cfg, n_stages)
+    os.makedirs(out_dir, exist_ok=True)
+    stages_meta = []
+    for k, (kind, nb) in enumerate(zip(kinds, blocks)):
+        print(f"  lowering stage {k} ({kind}, {nb} blocks)...", flush=True)
+        hlos, specs = lower_stage(cfg, kind, nb, micro, use_pallas)
+        files = {}
+        for name, text in hlos.items():
+            fname = f"stage{k}_{name}.hlo.txt"
+            with open(os.path.join(out_dir, fname), "w") as f:
+                f.write(text)
+            files[name] = fname
+        stages_meta.append(
+            {
+                "kind": kind,
+                "blocks": nb,
+                "files": files,
+                "params": [
+                    {"name": n, "shape": list(s)} for n, s in specs
+                ],
+                "in_shape": [micro, cfg.seq] if kind == "first" else [micro, cfg.seq, cfg.d_model],
+                "in_dtype": "i32" if kind == "first" else "f32",
+            }
+        )
+    manifest = {
+        "model": model_name,
+        "d_model": cfg.d_model,
+        "n_layers": cfg.n_layers,
+        "n_heads": cfg.n_heads,
+        "vocab": cfg.vocab,
+        "seq": cfg.seq,
+        "micro_batch": micro,
+        "n_stages": n_stages,
+        "use_pallas": use_pallas,
+        "stages": stages_meta,
+    }
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"  wrote {out_dir}/manifest.json")
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--model", default="lm10m", choices=sorted(M.CONFIGS))
+    ap.add_argument("--stages", type=int, default=4)
+    ap.add_argument("--micro", type=int, default=4, help="micro-batch size (static)")
+    ap.add_argument("--no-pallas", action="store_true",
+                    help="use pure-jnp ops instead of the Pallas kernels")
+    ap.add_argument("--out-dir", default=None,
+                    help="default: ../artifacts/<model>-s<stages>-b<micro>[-jnp]")
+    args = ap.parse_args()
+    suffix = "-jnp" if args.no_pallas else ""
+    out_dir = args.out_dir or os.path.join(
+        os.path.dirname(__file__), "..", "..", "artifacts",
+        f"{args.model}-s{args.stages}-b{args.micro}{suffix}",
+    )
+    print(f"AOT: {args.model} stages={args.stages} micro={args.micro} "
+          f"pallas={not args.no_pallas} -> {out_dir}")
+    build(args.model, args.stages, args.micro, not args.no_pallas, out_dir)
+
+
+if __name__ == "__main__":
+    main()

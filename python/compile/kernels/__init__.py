@@ -1,0 +1,8 @@
+"""L1 Pallas kernels (interpret=True for CPU-PJRT execution) + jnp oracle."""
+
+from . import ref  # noqa: F401
+from .attention import causal_attention  # noqa: F401
+from .fused_linear import linear_bias_gelu  # noqa: F401
+from .layernorm import layernorm  # noqa: F401
+from .matmul import matmul, mxu_utilization, vmem_bytes  # noqa: F401
+from .softmax_xent import softmax_xent  # noqa: F401

@@ -1,0 +1,39 @@
+"""Causal self-attention Pallas kernel.
+
+Grid = (batch × heads); each step owns one head's full [S, Dh] Q/K/V tiles
+in VMEM (S ≤ 128, Dh ≤ 128 here, so scores are a [S, S] on-chip tile —
+the flash-attention outer loop is unnecessary at these shapes, which is
+itself a VMEM-budget decision: 128·128·4B ≈ 64 KiB per tensor)."""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref):
+    q = q_ref[0]
+    k = k_ref[0]
+    v = v_ref[0]
+    s = q.shape[0]
+    scores = (q @ k.T) / jnp.sqrt(jnp.asarray(q.shape[-1], q.dtype))
+    row = jax.lax.broadcasted_iota(jnp.int32, (s, s), 0)
+    col = jax.lax.broadcasted_iota(jnp.int32, (s, s), 1)
+    scores = jnp.where(row >= col, scores, jnp.asarray(-1e30, q.dtype))
+    probs = jax.nn.softmax(scores, axis=-1)
+    o_ref[0] = probs @ v
+
+
+@jax.jit
+def causal_attention(q, k, v):
+    """q, k, v: [BH, S, Dh] (batch×heads flattened) → [BH, S, Dh]."""
+    bh, s, dh = q.shape
+    return pl.pallas_call(
+        _kernel,
+        grid=(bh,),
+        in_specs=[pl.BlockSpec((1, s, dh), lambda i: (i, 0, 0))] * 3,
+        out_specs=pl.BlockSpec((1, s, dh), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, s, dh), q.dtype),
+        interpret=True,
+    )(q, k, v)

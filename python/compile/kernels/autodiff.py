@@ -1,0 +1,141 @@
+"""Differentiable wrappers: forward = the Pallas kernel, backward =
+hand-derived VJP whose large gemms route through the Pallas matmul again
+(so the backward pass exercises the same L1 hot path). `interpret=True`
+pallas_call has no AD rule, and on real hardware you want explicit
+backward kernels anyway."""
+
+import jax
+import jax.numpy as jnp
+
+from .attention import causal_attention as _attn
+from .fused_linear import linear_bias_gelu as _flg
+from .layernorm import layernorm as _ln
+from .matmul import matmul as _mm
+from .softmax_xent import softmax_xent as _sx
+
+_C = 0.7978845608028654  # sqrt(2/pi)
+_A = 0.044715
+
+
+def _gelu_grad(h):
+    u = _C * (h + _A * h**3)
+    t = jnp.tanh(u)
+    return 0.5 * (1.0 + t) + 0.5 * h * (1.0 - t * t) * _C * (1.0 + 3.0 * _A * h * h)
+
+
+@jax.custom_vjp
+def matmul(x, y):
+    """Differentiable tiled-Pallas matmul."""
+    return _mm(x, y)
+
+
+def _mm_fwd(x, y):
+    return _mm(x, y), (x, y)
+
+
+def _mm_bwd(res, g):
+    x, y = res
+    return _mm(g, y.T), _mm(x.T, g)
+
+
+matmul.defvjp(_mm_fwd, _mm_bwd)
+
+
+@jax.custom_vjp
+def linear_bias_gelu(x, w, b):
+    """Differentiable fused GELU(x @ w + b)."""
+    return _flg(x, w, b)
+
+
+def _flg_fwd(x, w, b):
+    return _flg(x, w, b), (x, w, b)
+
+
+def _flg_bwd(res, g):
+    x, w, b = res
+    h = _mm(x, w) + b  # recompute pre-activation (rematerialization)
+    dg = g * _gelu_grad(h)
+    return _mm(dg, w.T), _mm(x.T, dg), dg.sum(axis=0)
+
+
+linear_bias_gelu.defvjp(_flg_fwd, _flg_bwd)
+
+
+@jax.custom_vjp
+def layernorm(x, scale, bias):
+    """Differentiable Pallas LayerNorm (last axis)."""
+    return _ln(x, scale, bias)
+
+
+def _ln_fwd(x, scale, bias):
+    return _ln(x, scale, bias), (x, scale)
+
+
+def _ln_bwd(res, g):
+    x, scale = res
+    eps = 1e-5
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    inv = 1.0 / jnp.sqrt(var + eps)
+    xhat = (x - mu) * inv
+    gx_hat = g * scale
+    gx = inv * (
+        gx_hat
+        - jnp.mean(gx_hat, axis=-1, keepdims=True)
+        - xhat * jnp.mean(gx_hat * xhat, axis=-1, keepdims=True)
+    )
+    return gx, (g * xhat).sum(axis=0), g.sum(axis=0)
+
+
+layernorm.defvjp(_ln_fwd, _ln_bwd)
+
+
+@jax.custom_vjp
+def causal_attention(q, k, v):
+    """Differentiable Pallas causal attention ([BH, S, Dh])."""
+    return _attn(q, k, v)
+
+
+def _attn_fwd(q, k, v):
+    return _attn(q, k, v), (q, k, v)
+
+
+def _attn_bwd(res, g):
+    q, k, v = res
+    s = q.shape[1]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(q.shape[-1], q.dtype))
+    scores = jnp.einsum("bsd,btd->bst", q, k) * scale
+    mask = jnp.tril(jnp.ones((s, s), bool))
+    scores = jnp.where(mask, scores, jnp.asarray(-1e30, q.dtype))
+    p = jax.nn.softmax(scores, axis=-1)
+    gv = jnp.einsum("bst,bsd->btd", p, g)
+    gp = jnp.einsum("bsd,btd->bst", g, v)
+    # softmax backward
+    gs = p * (gp - jnp.sum(gp * p, axis=-1, keepdims=True))
+    gs = jnp.where(mask, gs, 0.0) * scale
+    gq = jnp.einsum("bst,btd->bsd", gs, k)
+    gk = jnp.einsum("bst,bsd->btd", gs, q)
+    return gq, gk, gv
+
+
+causal_attention.defvjp(_attn_fwd, _attn_bwd)
+
+
+@jax.custom_vjp
+def softmax_xent(logits, targets):
+    """Differentiable fused cross-entropy ([R, V], [R] → [R])."""
+    return _sx(logits, targets)
+
+
+def _sx_fwd(logits, targets):
+    return _sx(logits, targets), (logits, targets)
+
+
+def _sx_bwd(res, g):
+    logits, targets = res
+    p = jax.nn.softmax(logits, axis=-1)
+    onehot = jax.nn.one_hot(targets, logits.shape[-1], dtype=logits.dtype)
+    return (g[:, None] * (p - onehot), None)
+
+
+softmax_xent.defvjp(_sx_fwd, _sx_bwd)

@@ -1,0 +1,48 @@
+"""Fused linear + bias + GELU Pallas kernel — the transformer MLP's first
+half fused into one VMEM-resident pass (the fusion CUDA kernels do with
+shared memory, re-expressed as a BlockSpec schedule; DESIGN.md
+§Hardware-Adaptation)."""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .matmul import _pick_block
+
+
+def _kernel(x_ref, w_ref, b_ref, o_ref):
+    @pl.when(pl.program_id(2) == 0)
+    def _():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += x_ref[...] @ w_ref[...]
+
+    @pl.when(pl.program_id(2) == pl.num_programs(2) - 1)
+    def _():
+        h = o_ref[...] + b_ref[...]
+        o_ref[...] = 0.5 * h * (1.0 + jnp.tanh(0.7978845608028654 * (h + 0.044715 * h**3)))
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def linear_bias_gelu(x, w, b, bm: int = 128, bn: int = 128, bk: int = 128):
+    """GELU(x @ w + b) in one fused kernel. x: [M, K], w: [K, N], b: [N]."""
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2 and b.shape == (n,)
+    bm = _pick_block(m, bm)
+    bn = _pick_block(n, bn)
+    bk = _pick_block(k, bk)
+    return pl.pallas_call(
+        _kernel,
+        grid=(m // bm, n // bn, k // bk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, l: (i, l)),
+            pl.BlockSpec((bk, bn), lambda i, j, l: (l, j)),
+            pl.BlockSpec((bn,), lambda i, j, l: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, l: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        interpret=True,
+    )(x, w, b)

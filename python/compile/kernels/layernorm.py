@@ -1,0 +1,37 @@
+"""LayerNorm Pallas kernel: rows are tiled across the grid, the feature
+axis stays whole in VMEM (D ≤ a few thousand floats — far under budget),
+so each row's mean/variance reduce entirely on-chip."""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .matmul import _pick_block
+
+
+def _kernel(x_ref, s_ref, b_ref, o_ref, *, eps):
+    x = x_ref[...]
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    o_ref[...] = (x - mu) / jnp.sqrt(var + eps) * s_ref[...] + b_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("br",))
+def layernorm(x, scale, bias, br: int = 128, eps: float = 1e-5):
+    """LayerNorm over the last axis of x: [R, D]; scale/bias: [D]."""
+    r, d = x.shape
+    br = _pick_block(r, br)
+    return pl.pallas_call(
+        functools.partial(_kernel, eps=eps),
+        grid=(r // br,),
+        in_specs=[
+            pl.BlockSpec((br, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((br, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((r, d), x.dtype),
+        interpret=True,
+    )(x, scale, bias)

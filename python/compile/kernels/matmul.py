@@ -1,0 +1,70 @@
+"""Tiled Pallas matmul — the L1 compute hot-spot of every stage's gemms.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): blocks are sized for the MXU
+(multiples of 128 on M/N when the operand allows) and for VMEM — the three
+resident tiles `bm×bk + bk×bn + bm×bn` stay well under the ~16 MB budget.
+The k-loop is the innermost grid dimension; the output block is revisited
+across it and accumulated in place (dimension_semantics would mark i/j
+"parallel" and k "arbitrary" on real hardware).
+
+`interpret=True` everywhere: the CPU PJRT client cannot run Mosaic
+custom-calls; numerics are identical.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _mm_kernel(x_ref, y_ref, o_ref):
+    @pl.when(pl.program_id(2) == 0)
+    def _():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += x_ref[...] @ y_ref[...]
+
+
+def _pick_block(dim: int, target: int) -> int:
+    """Largest divisor of `dim` that is ≤ target (prefer MXU-friendly sizes)."""
+    for cand in (target, 256, 128, 64, 32, 16, 8, 4, 2, 1):
+        if cand <= target and dim % cand == 0:
+            return cand
+    return 1
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def matmul(x, y, bm: int = 128, bn: int = 128, bk: int = 128):
+    """`x @ y` via the tiled Pallas kernel. Shapes must be divisible by the
+    chosen blocks (blocks shrink automatically to divisors)."""
+    m, k = x.shape
+    k2, n = y.shape
+    assert k == k2, f"inner dims {k} != {k2}"
+    bm = _pick_block(m, bm)
+    bn = _pick_block(n, bn)
+    bk = _pick_block(k, bk)
+    return pl.pallas_call(
+        _mm_kernel,
+        grid=(m // bm, n // bn, k // bk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, l: (i, l)),
+            pl.BlockSpec((bk, bn), lambda i, j, l: (l, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, l: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        interpret=True,
+    )(x, y)
+
+
+def vmem_bytes(bm: int, bn: int, bk: int, dtype_bytes: int = 4) -> int:
+    """VMEM footprint of one grid step (x, y and output tiles resident)."""
+    return dtype_bytes * (bm * bk + bk * bn + bm * bn)
+
+
+def mxu_utilization(bm: int, bn: int, bk: int) -> float:
+    """Fraction of 128×128 MXU lanes a (bm, bn, bk) tiling keeps busy —
+    the §Perf structural estimate for real-TPU efficiency."""
+    use_m = min(bm, 128) / 128.0
+    use_n = min(bn, 128) / 128.0
+    return use_m * use_n

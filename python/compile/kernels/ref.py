@@ -1,0 +1,48 @@
+"""Pure-jnp oracles for every Pallas kernel — the correctness ground truth.
+
+Each function here is the mathematical definition the corresponding kernel
+in this package must match to float32 tolerance; pytest (and hypothesis
+sweeps) assert `assert_allclose(kernel(...), ref(...))`.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul(x, y):
+    """Plain matrix product."""
+    return x @ y
+
+
+def gelu(h):
+    """tanh-approx GELU."""
+    return 0.5 * h * (1.0 + jnp.tanh(0.7978845608028654 * (h + 0.044715 * h**3)))
+
+
+def linear_bias_gelu(x, w, b):
+    """x @ w + b then GELU (the transformer MLP's first half)."""
+    return gelu(x @ w + b)
+
+
+def layernorm(x, scale, bias, eps=1e-5):
+    """LayerNorm over the last axis."""
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * scale + bias
+
+
+def causal_attention(q, k, v):
+    """Single-head causal attention for [S, Dh] blocks (vmapped upstream)."""
+    s = q.shape[0]
+    scores = (q @ k.T) / jnp.sqrt(jnp.asarray(q.shape[-1], q.dtype))
+    mask = jnp.tril(jnp.ones((s, s), bool))
+    scores = jnp.where(mask, scores, jnp.asarray(-1e30, q.dtype))
+    probs = jax.nn.softmax(scores, axis=-1)
+    return probs @ v
+
+
+def softmax_xent(logits, targets):
+    """Per-position cross-entropy: logits [R, V], targets [R] → [R]."""
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[:, None], axis=-1)[:, 0]
+    return logz - gold

@@ -1,0 +1,38 @@
+"""Fused softmax cross-entropy Pallas kernel: per row-block, the whole
+vocab row stays in VMEM and log-sum-exp + gold-logit gather happen in one
+pass (V ≤ 8192 floats/row ≈ 32 KiB — fine)."""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .matmul import _pick_block
+
+
+def _kernel(lg_ref, t_ref, o_ref):
+    lg = lg_ref[...]
+    t = t_ref[...]
+    m = jnp.max(lg, axis=-1, keepdims=True)
+    logz = jnp.log(jnp.sum(jnp.exp(lg - m), axis=-1)) + m[:, 0]
+    gold = jnp.take_along_axis(lg, t[:, None], axis=-1)[:, 0]
+    o_ref[...] = logz - gold
+
+
+@functools.partial(jax.jit, static_argnames=("br",))
+def softmax_xent(logits, targets, br: int = 64):
+    """Per-position cross-entropy: logits [R, V] f32, targets [R] i32 → [R]."""
+    r, v = logits.shape
+    br = _pick_block(r, br)
+    return pl.pallas_call(
+        _kernel,
+        grid=(r // br,),
+        in_specs=[
+            pl.BlockSpec((br, v), lambda i: (i, 0)),
+            pl.BlockSpec((br,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((br,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((r,), logits.dtype),
+        interpret=True,
+    )(logits, targets)

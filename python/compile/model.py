@@ -1,0 +1,253 @@
+"""L2: the decoder-only transformer LM as *pipeline stages* in JAX.
+
+Each stage is a pure function over a flat list of parameter arrays (HLO
+takes positional args, so pytrees are flattened in a fixed, manifest-
+recorded order). The backward pass recomputes the stage forward via
+`jax.vjp` at the stashed stage *input* — so the rust engine stashes only
+stage inputs per in-flight micro-batch, matching the 1F1B activation
+accounting (`(N-i)·a`).
+
+Stage kinds:
+  first : tok_emb + pos_emb + K blocks          (tokens i32[B,S] → f32[B,S,D])
+  mid   : K blocks                              (f32[B,S,D] → f32[B,S,D])
+  last  : K blocks + ln_f + untied lm head +    (x, targets → scalar mean loss)
+          fused softmax-xent
+
+`use_pallas=True` routes every gemm / layernorm / attention / loss through
+the L1 Pallas kernels (via their custom-vjp wrappers); `False` uses the
+pure-jnp reference ops — numerics must match either way (tested).
+"""
+
+import dataclasses
+import functools
+from typing import List
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import autodiff as AD
+from .kernels import ref as R
+
+
+@dataclasses.dataclass(frozen=True)
+class Config:
+    """Transformer hyper-parameters (mirrors rust `TransformerCfg`)."""
+
+    d_model: int
+    n_layers: int
+    n_heads: int
+    vocab: int
+    seq: int
+
+    @property
+    def d_head(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+
+CONFIGS = {
+    "lm1m": Config(d_model=128, n_layers=4, n_heads=4, vocab=512, seq=32),
+    "lm10m": Config(d_model=256, n_layers=8, n_heads=8, vocab=4096, seq=64),
+    "lm100m": Config(d_model=768, n_layers=12, n_heads=12, vocab=8192, seq=64),
+}
+
+
+def split_blocks(n_layers: int, n_stages: int) -> List[int]:
+    """Distribute transformer blocks over stages as evenly as possible,
+    biasing the *extra* blocks toward middle stages (first/last also carry
+    embedding / head work)."""
+    base = n_layers // n_stages
+    extra = n_layers % n_stages
+    counts = [base] * n_stages
+    order = sorted(range(n_stages), key=lambda i: (i == 0 or i == n_stages - 1, i))
+    for i in range(extra):
+        counts[order[i % n_stages]] += 1
+    assert sum(counts) == n_layers
+    return counts
+
+
+# ---------------------------------------------------------------- params
+
+def block_param_specs(cfg: Config, prefix: str):
+    """(name, shape) pairs for one transformer block, in flattened order."""
+    d = cfg.d_model
+    return [
+        (f"{prefix}.ln1_s", (d,)),
+        (f"{prefix}.ln1_b", (d,)),
+        (f"{prefix}.wqkv", (d, 3 * d)),
+        (f"{prefix}.bqkv", (3 * d,)),
+        (f"{prefix}.wo", (d, d)),
+        (f"{prefix}.bo", (d,)),
+        (f"{prefix}.ln2_s", (d,)),
+        (f"{prefix}.ln2_b", (d,)),
+        (f"{prefix}.w1", (d, 4 * d)),
+        (f"{prefix}.b1", (4 * d,)),
+        (f"{prefix}.w2", (4 * d, d)),
+        (f"{prefix}.b2", (d,)),
+    ]
+
+
+def stage_param_specs(cfg: Config, kind: str, n_blocks: int):
+    """(name, shape) pairs for a whole stage."""
+    specs = []
+    if kind == "first":
+        specs.append(("tok_emb", (cfg.vocab, cfg.d_model)))
+        specs.append(("pos_emb", (cfg.seq, cfg.d_model)))
+    for b in range(n_blocks):
+        specs.extend(block_param_specs(cfg, f"blk{b}"))
+    if kind == "last":
+        specs.append(("lnf_s", (cfg.d_model,)))
+        specs.append(("lnf_b", (cfg.d_model,)))
+        specs.append(("w_out", (cfg.d_model, cfg.vocab)))
+    return specs
+
+
+def init_stage(cfg: Config, kind: str, n_blocks: int, seed):
+    """Initialize one stage's parameter list from an i32 seed (traceable)."""
+    key = jax.random.PRNGKey(seed)
+    out = []
+    for i, (name, shape) in enumerate(stage_param_specs(cfg, kind, n_blocks)):
+        sub = jax.random.fold_in(key, i)
+        base = name.split(".")[-1]
+        if base in ("ln1_s", "ln2_s", "lnf_s"):
+            out.append(jnp.ones(shape, jnp.float32))
+        elif base in ("ln1_b", "ln2_b", "lnf_b", "bqkv", "bo", "b1", "b2"):
+            out.append(jnp.zeros(shape, jnp.float32))
+        else:
+            std = 0.02
+            if base in ("wo", "w2"):  # residual-branch outputs scaled down
+                std = 0.02 / jnp.sqrt(2.0 * cfg.n_layers)
+            out.append(std * jax.random.normal(sub, shape, jnp.float32))
+    return out
+
+
+# ---------------------------------------------------------------- forward
+
+def _attention(cfg: Config, x2d, wqkv, bqkv, wo, bo, b, s, use_pallas):
+    mm = AD.matmul if use_pallas else R.matmul
+    qkv = mm(x2d, wqkv) + bqkv  # [B*S, 3D]
+    qkv = qkv.reshape(b, s, 3, cfg.n_heads, cfg.d_head)
+    q, k, v = (
+        qkv[:, :, i].transpose(0, 2, 1, 3).reshape(b * cfg.n_heads, s, cfg.d_head)
+        for i in range(3)
+    )
+    if use_pallas:
+        ctx = AD.causal_attention(q, k, v)
+    else:
+        ctx = jax.vmap(R.causal_attention)(q, k, v)
+    ctx = (
+        ctx.reshape(b, cfg.n_heads, s, cfg.d_head)
+        .transpose(0, 2, 1, 3)
+        .reshape(b * s, cfg.d_model)
+    )
+    return mm(ctx, wo) + bo
+
+
+def block_fwd(cfg: Config, p12, x, use_pallas):
+    """One pre-norm transformer block. x: [B, S, D]."""
+    b, s, d = x.shape
+    ln = AD.layernorm if use_pallas else R.layernorm
+    mm = AD.matmul if use_pallas else R.matmul
+    flg = AD.linear_bias_gelu if use_pallas else R.linear_bias_gelu
+    (ln1_s, ln1_b, wqkv, bqkv, wo, bo, ln2_s, ln2_b, w1, b1, w2, b2) = p12
+    x2d = x.reshape(b * s, d)
+    h = ln(x2d, ln1_s, ln1_b)
+    x2d = x2d + _attention(cfg, h, wqkv, bqkv, wo, bo, b, s, use_pallas)
+    h = ln(x2d, ln2_s, ln2_b)
+    h = flg(h, w1, b1)
+    x2d = x2d + mm(h, w2) + b2
+    return x2d.reshape(b, s, d)
+
+
+def stage_fwd(cfg: Config, kind: str, n_blocks: int, use_pallas, params, x, targets=None):
+    """Run one stage. `x` is tokens (first) or activations; `targets` only
+    for the last stage. Returns activations, or the scalar mean loss."""
+    params = list(params)
+    if kind == "first":
+        tok_emb, pos_emb = params[0], params[1]
+        params = params[2:]
+        x = tok_emb[x] + pos_emb[None, :, :]
+    for bi in range(n_blocks):
+        x = block_fwd(cfg, params[bi * 12 : (bi + 1) * 12], x, use_pallas)
+    if kind == "last":
+        lnf_s, lnf_b, w_out = params[n_blocks * 12 :]
+        b, s, d = x.shape
+        ln = AD.layernorm if use_pallas else R.layernorm
+        mm = AD.matmul if use_pallas else R.matmul
+        sx = AD.softmax_xent if use_pallas else R.softmax_xent
+        h = ln(x.reshape(b * s, d), lnf_s, lnf_b)
+        logits = mm(h, w_out)  # [B*S, V]
+        losses = sx(logits, targets.reshape(b * s))
+        return jnp.mean(losses)
+    return x
+
+
+# --------------------------------------------------------------- backward
+
+def stage_bwd(cfg: Config, kind: str, n_blocks: int, use_pallas, params, acc, x, gy_or_targets):
+    """Backward with gradient accumulation: recomputes the stage forward
+    (`jax.vjp` at the stashed input), returns `(acc + grads, gx)`.
+
+    * first : gy_or_targets is gy [B,S,D]; returns (acc', ) — tokens have
+      no gradient.
+    * mid   : gy_or_targets is gy; returns (acc', gx).
+    * last  : gy_or_targets is targets i32; dLoss = 1; returns (acc', gx).
+    """
+    params = list(params)
+    acc = list(acc)
+    if kind == "last":
+        f = lambda p, xx: stage_fwd(cfg, kind, n_blocks, use_pallas, p, xx, gy_or_targets)
+        _, vjp = jax.vjp(f, params, x)
+        gp, gx = vjp(jnp.float32(1.0))
+        return [a + g for a, g in zip(acc, gp)] + [gx]
+    f = lambda p, xx: stage_fwd(cfg, kind, n_blocks, use_pallas, p, xx)
+    _, vjp = jax.vjp(f, params, x)
+    gp, gx = vjp(gy_or_targets)
+    out = [a + g for a, g in zip(acc, gp)]
+    if kind != "first":
+        out.append(gx)
+    return out
+
+
+# -------------------------------------------------------------- optimizer
+
+def adam_update(params, grads, m, v, step, lr, grad_scale,
+                beta1=0.9, beta2=0.999, eps=1e-8):
+    """One Adam step over flat lists; `grad_scale` divides the accumulated
+    gradient by the number of micro-batches. Returns (params', m', v')."""
+    b1t = 1.0 - beta1**step
+    b2t = 1.0 - beta2**step
+    new_p, new_m, new_v = [], [], []
+    for p, g, mi, vi in zip(params, grads, m, v):
+        g = g * grad_scale
+        mi = beta1 * mi + (1.0 - beta1) * g
+        vi = beta2 * vi + (1.0 - beta2) * g * g
+        mh = mi / b1t
+        vh = vi / b2t
+        new_p.append(p - lr * mh / (jnp.sqrt(vh) + eps))
+        new_m.append(mi)
+        new_v.append(vi)
+    return new_p, new_m, new_v
+
+
+# ------------------------------------------------------- whole-model refs
+
+def full_forward_loss(cfg: Config, stage_kinds, stage_blocks, all_params, tokens, targets,
+                      use_pallas=False):
+    """Compose all stages — the oracle the pipeline engine must match."""
+    x = tokens
+    for i, (kind, nb, p) in enumerate(zip(stage_kinds, stage_blocks, all_params)):
+        if kind == "last":
+            return stage_fwd(cfg, kind, nb, use_pallas, p, x, targets)
+        x = stage_fwd(cfg, kind, nb, use_pallas, p, x)
+    raise AssertionError("no last stage")
+
+
+def stage_layout(cfg: Config, n_stages: int):
+    """(kinds, blocks) describing the pipeline decomposition."""
+    blocks = split_blocks(cfg.n_layers, n_stages)
+    if n_stages == 1:
+        kinds = ["last"]  # single stage carries embed too — see stage_fwd
+        raise ValueError("n_stages must be >= 2 (first/last are distinct)")
+    kinds = ["first"] + ["mid"] * (n_stages - 2) + ["last"]
+    return kinds, blocks

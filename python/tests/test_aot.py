@@ -1,0 +1,72 @@
+"""AOT path: artifacts build, the manifest is complete, and the emitted
+HLO text is parseable (header + parameter arity spot checks)."""
+
+import json
+import os
+
+import pytest
+
+from compile import aot
+from compile import model as M
+
+
+@pytest.fixture(scope="module")
+def built(tmp_path_factory):
+    out = str(tmp_path_factory.mktemp("artifacts") / "lm1m-s2-b2")
+    aot.build("lm1m", n_stages=2, micro=2, use_pallas=False, out_dir=out)
+    return out
+
+
+def test_manifest_fields(built):
+    with open(os.path.join(built, "manifest.json")) as f:
+        man = json.load(f)
+    cfg = M.CONFIGS["lm1m"]
+    assert man["model"] == "lm1m"
+    assert man["d_model"] == cfg.d_model
+    assert man["n_stages"] == 2
+    assert man["micro_batch"] == 2
+    assert len(man["stages"]) == 2
+    assert man["stages"][0]["kind"] == "first"
+    assert man["stages"][1]["kind"] == "last"
+    assert man["stages"][0]["in_dtype"] == "i32"
+    assert man["stages"][1]["in_dtype"] == "f32"
+
+
+def test_all_artifacts_exist_and_are_hlo(built):
+    with open(os.path.join(built, "manifest.json")) as f:
+        man = json.load(f)
+    for st in man["stages"]:
+        for name in ("init", "fwd", "bwd", "opt"):
+            path = os.path.join(built, st["files"][name])
+            assert os.path.exists(path), path
+            with open(path) as f:
+                head = f.read(200)
+            assert head.startswith("HloModule"), f"{path}: {head[:40]}"
+
+
+def test_param_specs_match_model(built):
+    with open(os.path.join(built, "manifest.json")) as f:
+        man = json.load(f)
+    cfg = M.CONFIGS["lm1m"]
+    kinds, blocks = M.stage_layout(cfg, 2)
+    for st, kind, nb in zip(man["stages"], kinds, blocks):
+        specs = M.stage_param_specs(cfg, kind, nb)
+        assert len(st["params"]) == len(specs)
+        for got, (name, shape) in zip(st["params"], specs):
+            assert got["name"] == name
+            assert tuple(got["shape"]) == shape
+
+
+def test_fwd_param_count_in_hlo(built):
+    """fwd takes P params + 1 input (+1 targets for last stage)."""
+    with open(os.path.join(built, "manifest.json")) as f:
+        man = json.load(f)
+    for st in man["stages"]:
+        with open(os.path.join(built, st["files"]["fwd"])) as f:
+            text = f.read()
+        entry = [l for l in text.splitlines() if "ENTRY" in l][0]
+        n_args = entry.count("parameter(") or entry.count(": ")  # fallback
+        expect = len(st["params"]) + (2 if st["kind"] == "last" else 1)
+        # count parameter declarations across the entry computation
+        n_params = text.count("parameter(")
+        assert n_params >= expect, f"{st['kind']}: {n_params} < {expect}"

@@ -1,0 +1,150 @@
+"""L2 correctness: stage decomposition, pipeline-chain gradients vs
+end-to-end autodiff, pallas/jnp path equivalence, Adam, and a short
+training-loss sanity run."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+CFG = M.CONFIGS["lm1m"]
+
+
+def make_params(n_stages, seed=0):
+    kinds, blocks = M.stage_layout(CFG, n_stages)
+    return kinds, blocks, [M.init_stage(CFG, k, nb, seed) for k, nb in zip(kinds, blocks)]
+
+
+def data(b=2, seed=0):
+    rng = np.random.default_rng(seed)
+    tok = jnp.asarray(rng.integers(0, CFG.vocab, (b, CFG.seq)), jnp.int32)
+    tgt = jnp.asarray(rng.integers(0, CFG.vocab, (b, CFG.seq)), jnp.int32)
+    return tok, tgt
+
+
+def test_split_blocks_even_and_total():
+    assert M.split_blocks(8, 4) == [2, 2, 2, 2]
+    assert sum(M.split_blocks(12, 5)) == 12
+    # extras land on middle stages first
+    c = M.split_blocks(7, 3)
+    assert sum(c) == 7 and c[1] >= c[0] and c[1] >= c[2]
+
+
+def test_stage_layout_kinds():
+    kinds, blocks = M.stage_layout(CFG, 4)
+    assert kinds == ["first", "mid", "mid", "last"]
+    assert sum(blocks) == CFG.n_layers
+    with pytest.raises(ValueError):
+        M.stage_layout(CFG, 1)
+
+
+def test_init_shapes_match_specs():
+    kinds, blocks, params = make_params(3)
+    for kind, nb, p in zip(kinds, blocks, params):
+        specs = M.stage_param_specs(CFG, kind, nb)
+        assert len(p) == len(specs)
+        for arr, (_, shape) in zip(p, specs):
+            assert arr.shape == shape
+
+
+def test_initial_loss_near_log_vocab():
+    kinds, blocks, params = make_params(2)
+    tok, tgt = data()
+    loss = float(M.full_forward_loss(CFG, kinds, blocks, params, tok, tgt))
+    assert abs(loss - np.log(CFG.vocab)) < 0.5, loss
+
+
+def test_pallas_and_jnp_paths_agree():
+    kinds, blocks, params = make_params(2)
+    tok, tgt = data()
+    l_ref = float(M.full_forward_loss(CFG, kinds, blocks, params, tok, tgt, use_pallas=False))
+    l_pal = float(M.full_forward_loss(CFG, kinds, blocks, params, tok, tgt, use_pallas=True))
+    assert abs(l_ref - l_pal) < 1e-3
+
+
+@pytest.mark.parametrize("n_stages", [2, 3, 4])
+@pytest.mark.parametrize("use_pallas", [False, True])
+def test_pipeline_chain_grads_match_autodiff(n_stages, use_pallas):
+    """fwd through the chain, bwd back through the chain == jax.grad of the
+    composed loss — the invariant the rust engine relies on."""
+    kinds, blocks, params = make_params(n_stages)
+    tok, tgt = data()
+    # forward chain, stashing stage inputs
+    xs = [tok]
+    for kind, nb, p in zip(kinds[:-1], blocks[:-1], params[:-1]):
+        xs.append(M.stage_fwd(CFG, kind, nb, use_pallas, p, xs[-1]))
+    # backward chain with zero accumulators
+    grads = [None] * n_stages
+    acc = [jnp.zeros_like(a) for a in params[-1]]
+    out = M.stage_bwd(CFG, "last", blocks[-1], use_pallas, params[-1], acc, xs[-1], tgt)
+    grads[-1], gx = out[:-1], out[-1]
+    for i in range(n_stages - 2, -1, -1):
+        acc = [jnp.zeros_like(a) for a in params[i]]
+        out = M.stage_bwd(CFG, kinds[i], blocks[i], use_pallas, params[i], acc, xs[i], gx)
+        if kinds[i] == "first":
+            grads[i] = out
+        else:
+            grads[i], gx = out[:-1], out[-1]
+    # oracle
+    gref = jax.grad(
+        lambda ps: M.full_forward_loss(CFG, kinds, blocks, ps, tok, tgt, use_pallas=False)
+    )(params)
+    tol = 5e-3 if use_pallas else 5e-4
+    for gs, rs in zip(grads, gref):
+        for a, b in zip(gs, rs):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=tol, atol=tol)
+
+
+def test_bwd_accumulates():
+    """Calling bwd twice with the same inputs doubles the accumulator."""
+    kinds, blocks, params = make_params(2)
+    tok, tgt = data()
+    x1 = M.stage_fwd(CFG, "first", blocks[0], False, params[0], tok)
+    acc = [jnp.zeros_like(a) for a in params[1]]
+    out1 = M.stage_bwd(CFG, "last", blocks[1], False, params[1], acc, x1, tgt)
+    out2 = M.stage_bwd(CFG, "last", blocks[1], False, params[1], out1[:-1], x1, tgt)
+    for once, twice in zip(out1[:-1], out2[:-1]):
+        np.testing.assert_allclose(2 * np.asarray(once), np.asarray(twice), rtol=1e-4, atol=1e-5)
+
+
+def test_adam_moves_params_against_gradient():
+    p = [jnp.ones(4)]
+    g = [jnp.ones(4)]
+    m = [jnp.zeros(4)]
+    v = [jnp.zeros(4)]
+    new_p, new_m, new_v = M.adam_update(p, g, m, v, step=1.0, lr=0.1, grad_scale=1.0)
+    assert np.all(np.asarray(new_p[0]) < 1.0)
+    assert np.all(np.asarray(new_m[0]) > 0.0)
+    # grad_scale=0 is a no-op
+    same_p, _, _ = M.adam_update(p, g, m, v, step=1.0, lr=0.1, grad_scale=0.0)
+    np.testing.assert_allclose(same_p[0], p[0])
+
+
+def test_short_training_run_reduces_loss():
+    """20 full-model Adam steps on a fixed batch must cut the loss."""
+    kinds, blocks, params = make_params(2)
+    tok, tgt = data(b=4)
+    flat = [a for p in params for a in p]
+    sizes = [len(p) for p in params]
+
+    def unflatten(flat):
+        out, i = [], 0
+        for s in sizes:
+            out.append(flat[i : i + s])
+            i += s
+        return out
+
+    loss_fn = jax.jit(
+        lambda fl: M.full_forward_loss(CFG, kinds, blocks, unflatten(fl), tok, tgt)
+    )
+    grad_fn = jax.jit(jax.grad(lambda fl: M.full_forward_loss(CFG, kinds, blocks, unflatten(fl), tok, tgt)))
+    m = [jnp.zeros_like(a) for a in flat]
+    v = [jnp.zeros_like(a) for a in flat]
+    l0 = float(loss_fn(flat))
+    for step in range(1, 21):
+        g = grad_fn(flat)
+        flat, m, v = M.adam_update(flat, g, m, v, step=float(step), lr=1e-3, grad_scale=1.0)
+    l1 = float(loss_fn(flat))
+    assert l1 < l0 - 0.5, f"{l0} -> {l1}"

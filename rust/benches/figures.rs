@@ -1,0 +1,81 @@
+//! E7–E10 — Figures 2, 4, 5, 6: ASCII timeline regenerations from the
+//! discrete-event simulator.
+//!
+//! Run: `cargo bench --bench figures`
+
+use bapipe::cluster::ExecMode;
+use bapipe::schedule::ScheduleKind;
+use bapipe::sim::engine::{simulate, SimSpec};
+use bapipe::sim::timeline;
+
+fn show(title: &str, spec: &SimSpec, n: usize, order_only: bool) {
+    let r = simulate(spec);
+    println!("\n== {title} ==");
+    println!(
+        "makespan {:.2} (bubble {:.1}%)",
+        r.makespan,
+        r.bubble_fraction * 100.0
+    );
+    if order_only {
+        print!("{}", timeline::render_order(&r, n));
+    } else {
+        print!("{}", timeline::render(&r, n, 110));
+    }
+}
+
+fn main() {
+    // Fig. 2(a): intra-batch pipeline parallelism (GPipe), 4 stages, M=4.
+    show(
+        "Fig. 2(a): intra-batch (GPipe fill-drain), 4 accel, M=4",
+        &SimSpec::uniform(ScheduleKind::GPipe, 4, 4, 1.0, 2.0, 0.0, ExecMode::Sync),
+        4,
+        false,
+    );
+    // Fig. 2(b): inter-batch pipeline (PipeDream 1F1B across mini-batches).
+    show(
+        "Fig. 2(b): inter-batch (PipeDream 1F1B), 4 accel, 8 mini-batches",
+        &SimSpec::uniform(ScheduleKind::PipeDream, 4, 8, 1.0, 2.0, 0.0, ExecMode::Sync),
+        4,
+        false,
+    );
+    // Fig. 4: async vs sync execution, 2 accelerators (comm visible through
+    // the arrival gap in the sync case).
+    show(
+        "Fig. 4(a): asynchronous execution (streamed comm), 2 accel",
+        &SimSpec::uniform(ScheduleKind::OneFOneBAs, 2, 4, 1.0, 1.0, 0.6, ExecMode::Async),
+        2,
+        false,
+    );
+    show(
+        "Fig. 4(b): synchronous execution (comm after compute), 2 accel",
+        &SimSpec::uniform(ScheduleKind::OneFOneBSno, 2, 4, 1.0, 1.0, 0.6, ExecMode::Sync),
+        2,
+        false,
+    );
+    // Fig. 5: 1F1B-AS and FBP-AS, 3 accelerators, M=8.
+    show(
+        "Fig. 5(a): 1F1B-AS, 3 accel, M=8 (op order; cf. warm-up depths 3/2/1)",
+        &SimSpec::uniform(ScheduleKind::OneFOneBAs, 3, 8, 1.0, 1.0, 0.1, ExecMode::Async),
+        3,
+        true,
+    );
+    show(
+        "Fig. 5(b): FBP-AS, 3 accel, M=8 (op order; * = concurrent fwd/bwd slot)",
+        &SimSpec::uniform(ScheduleKind::FbpAs, 3, 8, 1.0, 1.0, 0.1, ExecMode::Async),
+        3,
+        true,
+    );
+    // Fig. 6: 1F1B-SNO vs 1F1B-SO, 3 accelerators.
+    show(
+        "Fig. 6(a): 1F1B-SNO, 3 accel, M=6, SR=0.4 (comm on the critical path)",
+        &SimSpec::uniform(ScheduleKind::OneFOneBSno, 3, 6, 1.0, 1.0, 0.4, ExecMode::Sync),
+        3,
+        false,
+    );
+    show(
+        "Fig. 6(b): 1F1B-SO, 3 accel, M=6, SR=0.4 (doubled warm-up overlaps comm)",
+        &SimSpec::uniform(ScheduleKind::OneFOneBSo, 3, 6, 1.0, 1.0, 0.4, ExecMode::Sync),
+        3,
+        false,
+    );
+}

@@ -1,0 +1,76 @@
+//! Micro-benchmarks of the L3 hot paths (the §Perf working set):
+//! DES throughput, DP partitioner, explorer, JSON parse, ring all-reduce.
+//!
+//! Run: `cargo bench --bench micro`
+
+use bapipe::cluster::{presets, ExecMode};
+use bapipe::collective::ring::{make_ring, ring_allreduce};
+use bapipe::explorer::{self, Options};
+use bapipe::model::zoo;
+use bapipe::partition::interlayer;
+use bapipe::profile::analytical;
+use bapipe::schedule::ScheduleKind;
+use bapipe::sim::engine::{simulate, SimSpec};
+use bapipe::util::benchkit::bench;
+use bapipe::util::json::Json;
+
+fn main() {
+    // DES: a large schedule (8 stages, 256 micro-batches = 4k+ ops).
+    let spec = SimSpec::uniform(ScheduleKind::OneFOneBSo, 8, 256, 1e-3, 2e-3, 0.2e-3, ExecMode::Sync);
+    bench("des/1f1b-so n=8 m=256", 3, 20, || {
+        std::hint::black_box(simulate(&spec).makespan);
+    });
+    let spec_fbp =
+        SimSpec::uniform(ScheduleKind::FbpAs, 8, 256, 1e-3, 2e-3, 0.2e-3, ExecMode::Async);
+    bench("des/fbp-as n=8 m=256", 3, 20, || {
+        std::hint::black_box(simulate(&spec_fbp).makespan);
+    });
+
+    // Partitioner: DP-optimal over ResNet-50's 52 layers, 8 stages.
+    let net = zoo::resnet50(224);
+    let cl = presets::v100_cluster(8);
+    let prof = analytical::profile(&net, &cl);
+    let cuts = net.legal_cuts();
+    bench("partition/dp-optimal resnet50 n=8", 3, 20, || {
+        std::hint::black_box(
+            interlayer::dp_optimal(&prof, &cl, &cuts, 4.0, None).unwrap(),
+        );
+    });
+
+    // Whole exploration (Fig. 3 flow across schedules and M candidates).
+    let opts = Options { batch_per_device: 32.0, samples_per_epoch: 50_000, ..Default::default() };
+    bench("explorer/full vgg16 4xV100", 1, 5, || {
+        let net = zoo::vgg16(224);
+        let prof = analytical::profile(&net, &presets::v100_cluster(4));
+        std::hint::black_box(explorer::explore(&net, &presets::v100_cluster(4), &prof, &opts));
+    });
+
+    // JSON parse of a manifest-sized document.
+    let doc = {
+        let inner: Vec<String> = (0..200)
+            .map(|i| format!(r#"{{"name":"p{i}","shape":[{i},128],"x":{i}.5}}"#))
+            .collect();
+        format!(r#"{{"model":"bench","params":[{}]}}"#, inner.join(","))
+    };
+    bench("json/parse 200-param manifest", 3, 50, || {
+        std::hint::black_box(Json::parse(&doc).unwrap());
+    });
+
+    // Ring all-reduce over threads: 4 ranks x 1M floats.
+    bench("collective/ring-allreduce 4x1M f32", 1, 5, || {
+        let nodes = make_ring(4);
+        let handles: Vec<_> = nodes
+            .into_iter()
+            .map(|node| {
+                std::thread::spawn(move || {
+                    let mut buf = vec![1.0f32; 1_000_000];
+                    ring_allreduce(&node, &mut buf);
+                    buf[0]
+                })
+            })
+            .collect();
+        for h in handles {
+            std::hint::black_box(h.join().unwrap());
+        }
+    });
+}

@@ -1,0 +1,91 @@
+//! Device specification: the hardware constraints BaPipe's explorer
+//! consumes (Fig. 3 — computing power, memory bandwidth, memory capacity)
+//! plus the execution mode that decides which schedules are available
+//! (Section 3.2: GPUs execute synchronously, FPGAs asynchronously).
+
+/// Compute/communication overlap semantics of an accelerator.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ExecMode {
+    /// GPU-style: a kernel's outputs are sent only after the whole kernel
+    /// finishes; FP and BP cannot run concurrently (Section 3.2.2).
+    /// Eligible schedules: 1F1B-SNO, 1F1B-SO.
+    Sync,
+    /// FPGA-style: communication streams out as partial results complete,
+    /// and FP/BP can be computed in parallel (Section 3.2.1).
+    /// Eligible schedules: 1F1B-AS, FBP-AS.
+    Async,
+}
+
+/// One accelerator. All throughputs are *effective peaks*; per-layer-kind
+/// efficiency factors live in the profiler.
+#[derive(Debug, Clone)]
+pub struct Device {
+    /// Model name (`V100`, `VCU118`, ...).
+    pub name: String,
+    /// Peak dense-compute throughput in FLOP/s at the training precision.
+    pub peak_flops: f64,
+    /// Bandwidth of the memory holding weights/activations, bytes/s.
+    pub mem_bw: f64,
+    /// Capacity of that memory, bytes (16 GiB for the paper's V100s).
+    pub mem_capacity: u64,
+    /// Fast on-chip memory capacity, bytes (FPGA BRAM/URAM; 0 for GPUs —
+    /// their HBM is already the "higher-bandwidth memory" of the paper).
+    pub onchip_capacity: u64,
+    /// On-chip memory bandwidth, bytes/s (FPGA only).
+    pub onchip_bw: f64,
+    /// Execution semantics.
+    pub exec: ExecMode,
+    /// Micro-batch size at which compute efficiency reaches 50% of peak
+    /// (GPU utilization saturation; Section 3.2.2 notes throughput drops
+    /// at small batch). FPGAs pipeline at micro-batch 1, so ~0.
+    pub batch_half_sat: f64,
+    /// DSP slices (FPGA) — drives the FPDeep-style profile. 0 for GPUs.
+    pub dsp_slices: u64,
+}
+
+impl Device {
+    /// Compute-efficiency factor for micro-batch size `b`:
+    /// `b / (b + batch_half_sat)` — a saturating utilization curve.
+    pub fn batch_efficiency(&self, b: f64) -> f64 {
+        if self.batch_half_sat <= 0.0 {
+            1.0
+        } else {
+            b / (b + self.batch_half_sat)
+        }
+    }
+
+    /// Effective FLOP/s at micro-batch size `b` and kind-efficiency `eff`.
+    pub fn effective_flops(&self, b: f64, eff: f64) -> f64 {
+        self.peak_flops * eff * self.batch_efficiency(b)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::presets;
+
+    #[test]
+    fn batch_efficiency_monotone_saturating() {
+        let d = presets::v100();
+        let e1 = d.batch_efficiency(1.0);
+        let e8 = d.batch_efficiency(8.0);
+        let e64 = d.batch_efficiency(64.0);
+        assert!(e1 < e8 && e8 < e64 && e64 < 1.0);
+        assert!(e64 > 0.9, "large batches near peak: {e64}");
+    }
+
+    #[test]
+    fn fpga_full_efficiency_at_microbatch_1() {
+        let d = presets::vcu118();
+        assert_eq!(d.batch_efficiency(1.0), 1.0);
+        assert_eq!(d.exec, ExecMode::Async);
+    }
+
+    #[test]
+    fn effective_flops_scales() {
+        let d = presets::v100();
+        assert!(d.effective_flops(64.0, 0.5) < d.peak_flops);
+        assert!(d.effective_flops(64.0, 0.5) > 0.4 * d.peak_flops * 0.9 * 0.5);
+    }
+}

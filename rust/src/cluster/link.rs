@@ -1,0 +1,48 @@
+//! Point-to-point interconnect links (PCIe between GPUs, GTY/GTM
+//! transceiver links between FPGAs).
+
+/// A duplex link between adjacent accelerators in the daisy chain.
+#[derive(Debug, Clone)]
+pub struct Link {
+    /// Effective bandwidth, bytes/s.
+    pub bandwidth: f64,
+    /// Per-message latency, seconds.
+    pub latency: f64,
+}
+
+impl Link {
+    /// New link.
+    pub fn new(bandwidth: f64, latency: f64) -> Link {
+        assert!(bandwidth > 0.0, "link bandwidth must be positive");
+        Link { bandwidth, latency }
+    }
+
+    /// Transfer time for `bytes` bytes.
+    pub fn xfer_time(&self, bytes: f64) -> f64 {
+        self.latency + bytes / self.bandwidth
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn xfer_time_includes_latency() {
+        let l = Link::new(1e9, 1e-5);
+        let t = l.xfer_time(1e6);
+        assert!((t - (1e-5 + 1e-3)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn zero_bytes_costs_latency_only() {
+        let l = Link::new(1e9, 5e-6);
+        assert_eq!(l.xfer_time(0.0), 5e-6);
+    }
+
+    #[test]
+    #[should_panic(expected = "bandwidth must be positive")]
+    fn zero_bandwidth_rejected() {
+        Link::new(0.0, 0.0);
+    }
+}

@@ -1,0 +1,13 @@
+//! Accelerator-cluster model: device specifications ([`device`]),
+//! interconnect links ([`link`]), the 1-D daisy-chain topology BaPipe
+//! targets ([`topology`]) and presets for the paper's testbeds
+//! ([`presets`]: NVIDIA V100, Xilinx VCU118/VCU129, CPU host).
+
+pub mod device;
+pub mod link;
+pub mod presets;
+pub mod topology;
+
+pub use device::{Device, ExecMode};
+pub use link::Link;
+pub use topology::Cluster;

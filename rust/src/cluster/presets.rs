@@ -1,0 +1,156 @@
+//! Presets for the paper's testbeds.
+//!
+//! * **V100** — 8× NVIDIA V100 16 GB, PCIe gen3 x16 (Section 4.1).
+//! * **VCU118 / VCU129** — Table 5's Xilinx boards; peak compute derived
+//!   FPDeep-style from DSP slices (1 fp16 MAC/DSP/cycle @ 250 MHz).
+//! * **cpu_host** — the machine the *real* engine runs on (measured
+//!   profiles; capacities read generously since we simulate the cluster).
+
+use super::device::{Device, ExecMode};
+use super::link::Link;
+use super::topology::Cluster;
+
+const GIB: u64 = 1024 * 1024 * 1024;
+
+/// NVIDIA V100 (16 GB), fp32 training.
+pub fn v100() -> Device {
+    Device {
+        name: "V100".into(),
+        peak_flops: 15.7e12,          // fp32 CUDA-core peak
+        mem_bw: 900e9,                // HBM2
+        mem_capacity: 16 * GIB,
+        onchip_capacity: 0,
+        onchip_bw: 0.0,
+        exec: ExecMode::Sync,
+        batch_half_sat: 4.0,          // ~89% utilization at micro-batch 32
+        dsp_slices: 0,
+    }
+}
+
+/// PCIe gen3 x16 between adjacent GPUs, at the ~2 GB/s a GLOO-mediated
+/// tensor transfer actually achieves (device→host→device staging with
+/// CPU copies; the paper's communication backend is GLOO for all modes —
+/// Section 4.2.1). Raw PCIe peak is ~12 GB/s; GLOO reaches a fraction.
+pub fn pcie_gen3_x16() -> Link {
+    Link::new(2e9, 10e-6)
+}
+
+/// Homogeneous V100 cluster of `n` GPUs on PCIe gen3 x16.
+pub fn v100_cluster(n: usize) -> Cluster {
+    Cluster::homogeneous(v100(), pcie_gen3_x16(), n)
+}
+
+/// FPDeep-style FPGA compute peak: `dsp` MACs/cycle at `mhz` MHz, 2 FLOPs
+/// per MAC (fp16 DSP packing).
+fn fpga_peak(dsp: u64, mhz: f64) -> f64 {
+    dsp as f64 * 2.0 * mhz * 1e6
+}
+
+/// Xilinx VCU118 (Table 5): 6840 DSP, 345.9 Mb on-chip RAM, ~40 GB/s DDR4.
+pub fn vcu118() -> Device {
+    Device {
+        name: "VCU118".into(),
+        peak_flops: fpga_peak(6840, 250.0), // 3.42 TFLOPS fp16
+        mem_bw: 40e9,                       // DDR4
+        mem_capacity: 8 * GIB,              // DDR4 DIMM on the board
+        onchip_capacity: (345.9e6 / 8.0) as u64, // 345.9 Mb → ~43.2 MB
+        onchip_bw: 4e12,                    // aggregate BRAM/URAM bandwidth
+        exec: ExecMode::Async,
+        batch_half_sat: 0.0,                // fine-grained pipeline: full DSP
+        dsp_slices: 6840,                   //   utilization at micro-batch 1
+    }
+}
+
+/// Xilinx VCU129 (Table 5): 12288 DSP, 454.9 Mb on-chip RAM, ~40 GB/s DDR4.
+pub fn vcu129() -> Device {
+    Device {
+        name: "VCU129".into(),
+        peak_flops: fpga_peak(12288, 250.0), // 6.14 TFLOPS fp16
+        mem_bw: 40e9,
+        mem_capacity: 8 * GIB,
+        onchip_capacity: (454.9e6 / 8.0) as u64, // ~56.9 MB
+        onchip_bw: 4e12,
+        exec: ExecMode::Async,
+        batch_half_sat: 0.0,
+        dsp_slices: 12288,
+    }
+}
+
+/// Inter-FPGA serial link: 4 bonded GTY lanes @ 25 Gb/s ≈ 12.5 GB/s.
+pub fn gty_link() -> Link {
+    Link::new(12.5e9, 2e-6)
+}
+
+/// FPGA cluster from board names (`"VCU118"` / `"VCU129"`), daisy-chained.
+pub fn fpga_cluster(boards: &[&str]) -> Cluster {
+    let devices: Vec<Device> = boards
+        .iter()
+        .map(|b| match *b {
+            "VCU118" => vcu118(),
+            "VCU129" => vcu129(),
+            other => panic!("unknown FPGA board `{other}`"),
+        })
+        .collect();
+    let links = vec![gty_link(); devices.len().saturating_sub(1)];
+    Cluster::new(devices, links)
+}
+
+/// The host CPU as a device — used when the *measured* profiler times the
+/// real per-stage HLO executables, and by the real pipeline engine.
+pub fn cpu_host() -> Device {
+    Device {
+        name: "cpu-host".into(),
+        peak_flops: 5.0e10, // conservative single-core XLA-CPU gemm estimate
+        mem_bw: 20e9,
+        mem_capacity: 8 * GIB,
+        onchip_capacity: 0,
+        onchip_bw: 0.0,
+        exec: ExecMode::Sync,
+        batch_half_sat: 0.5,
+        dsp_slices: 0,
+    }
+}
+
+/// In-process "cluster" of `n` CPU pipeline workers (channels as links —
+/// bandwidth set high; the real engine measures, it does not model).
+pub fn cpu_cluster(n: usize) -> Cluster {
+    Cluster::homogeneous(cpu_host(), Link::new(50e9, 1e-6), n)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table5_parameters() {
+        let a = vcu118();
+        let b = vcu129();
+        assert_eq!(a.dsp_slices, 6840);
+        assert_eq!(b.dsp_slices, 12288);
+        // VCU129 has ~1.8x the DSPs → 1.8x peak
+        assert!((b.peak_flops / a.peak_flops - 12288.0 / 6840.0).abs() < 1e-9);
+        // on-chip RAM: 345.9 Mb vs 454.9 Mb
+        assert!(a.onchip_capacity < b.onchip_capacity);
+        assert!((a.onchip_capacity as f64 - 43.2e6).abs() < 1e6);
+    }
+
+    #[test]
+    fn v100_is_sync_16gb() {
+        let d = v100();
+        assert_eq!(d.exec, ExecMode::Sync);
+        assert_eq!(d.mem_capacity, 16 * GIB);
+    }
+
+    #[test]
+    #[should_panic(expected = "unknown FPGA board")]
+    fn unknown_board_rejected() {
+        fpga_cluster(&["VCU999"]);
+    }
+
+    #[test]
+    fn mixed_cluster_table6() {
+        let c = fpga_cluster(&["VCU129", "VCU129", "VCU118", "VCU118"]);
+        assert_eq!(c.len(), 4);
+        assert!(c.all_async());
+    }
+}

@@ -1,0 +1,137 @@
+//! [`Cluster`]: N accelerators in the 1-D daisy-chain topology BaPipe
+//! targets (Section 2.3), possibly heterogeneous. `links[i]` connects
+//! device `i` to device `i+1`; a closing link is assumed equal to
+//! `links[0]` for ring all-reduce in the DP baseline.
+
+use super::device::{Device, ExecMode};
+use super::link::Link;
+
+/// An accelerator cluster.
+#[derive(Debug, Clone)]
+pub struct Cluster {
+    /// Devices in chain order.
+    pub devices: Vec<Device>,
+    /// `links[i]` connects device i ↔ i+1 (`len == devices.len()-1`;
+    /// empty for a single device).
+    pub links: Vec<Link>,
+}
+
+impl Cluster {
+    /// Build a cluster; validates link count.
+    pub fn new(devices: Vec<Device>, links: Vec<Link>) -> Cluster {
+        assert!(!devices.is_empty(), "cluster needs at least one device");
+        assert_eq!(
+            links.len(),
+            devices.len().saturating_sub(1),
+            "need exactly N-1 links for N devices"
+        );
+        Cluster { devices, links }
+    }
+
+    /// Homogeneous cluster: `n` copies of `dev` joined by copies of `link`.
+    pub fn homogeneous(dev: Device, link: Link, n: usize) -> Cluster {
+        assert!(n >= 1);
+        Cluster::new(vec![dev; n], vec![link; n.saturating_sub(1)])
+    }
+
+    /// Number of accelerators.
+    pub fn len(&self) -> usize {
+        self.devices.len()
+    }
+
+    /// True when there are no devices (constructor forbids it).
+    pub fn is_empty(&self) -> bool {
+        self.devices.is_empty()
+    }
+
+    /// Is every device the same model?
+    pub fn is_homogeneous(&self) -> bool {
+        self.devices.windows(2).all(|w| w[0].name == w[1].name)
+    }
+
+    /// Can this cluster run asynchronous schedules (all devices Async)?
+    pub fn all_async(&self) -> bool {
+        self.devices.iter().all(|d| d.exec == ExecMode::Async)
+    }
+
+    /// Can this cluster run synchronous schedules? (always true — sync is
+    /// the lowest common denominator.)
+    pub fn supports_sync(&self) -> bool {
+        true
+    }
+
+    /// Link used between pipeline stage `i` and `i+1`.
+    pub fn link(&self, i: usize) -> &Link {
+        &self.links[i]
+    }
+
+    /// The slowest link bandwidth (bytes/s) — bounds all-reduce rings.
+    pub fn min_link_bandwidth(&self) -> f64 {
+        self.links
+            .iter()
+            .map(|l| l.bandwidth)
+            .fold(f64::INFINITY, f64::min)
+            .min(if self.links.is_empty() { f64::INFINITY } else { f64::INFINITY })
+    }
+
+    /// Short description, e.g. `4x V100` or `2x VCU129 + 2x VCU118`.
+    pub fn describe(&self) -> String {
+        let mut parts: Vec<(String, usize)> = Vec::new();
+        for d in &self.devices {
+            if let Some(last) = parts.last_mut() {
+                if last.0 == d.name {
+                    last.1 += 1;
+                    continue;
+                }
+            }
+            parts.push((d.name.clone(), 1));
+        }
+        parts
+            .into_iter()
+            .map(|(n, c)| format!("{c}x {n}"))
+            .collect::<Vec<_>>()
+            .join(" + ")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::presets;
+
+    #[test]
+    fn homogeneous_build_and_describe() {
+        let c = presets::v100_cluster(4);
+        assert_eq!(c.len(), 4);
+        assert!(c.is_homogeneous());
+        assert_eq!(c.describe(), "4x V100");
+        assert_eq!(c.links.len(), 3);
+    }
+
+    #[test]
+    fn heterogeneous_describe() {
+        let c = presets::fpga_cluster(&["VCU129", "VCU129", "VCU118", "VCU118"]);
+        assert!(!c.is_homogeneous());
+        assert_eq!(c.describe(), "2x VCU129 + 2x VCU118");
+        assert!(c.all_async());
+    }
+
+    #[test]
+    fn gpu_cluster_not_async() {
+        assert!(!presets::v100_cluster(2).all_async());
+    }
+
+    #[test]
+    #[should_panic(expected = "N-1 links")]
+    fn wrong_link_count() {
+        let d = presets::v100();
+        Cluster::new(vec![d.clone(), d], vec![]);
+    }
+
+    #[test]
+    fn single_device_cluster() {
+        let c = presets::v100_cluster(1);
+        assert_eq!(c.len(), 1);
+        assert!(c.links.is_empty());
+    }
+}

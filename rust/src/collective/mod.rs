@@ -1,0 +1,7 @@
+//! Collective communication over in-process channels — the substrate for
+//! the data-parallel baseline engine: a real ring all-reduce
+//! (reduce-scatter + all-gather) across worker threads.
+
+pub mod ring;
+
+pub use ring::{ring_allreduce, RingNode};

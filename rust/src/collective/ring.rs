@@ -1,0 +1,130 @@
+//! Ring all-reduce (Section 2.1: "Ring All-Reduce options are used
+//! commonly nowadays"): each rank sends to `(rank+1) % n` and receives
+//! from `(rank-1+n) % n`; `n-1` reduce-scatter steps then `n-1`
+//! all-gather steps over equal chunks. Implemented over `std::sync::mpsc`
+//! channels — the in-process stand-in for GLOO.
+
+use std::sync::mpsc::{Receiver, Sender};
+
+/// One rank's endpoints in the ring.
+pub struct RingNode {
+    /// This rank.
+    pub rank: usize,
+    /// Total ranks.
+    pub n: usize,
+    /// Send to successor.
+    pub tx: Sender<Vec<f32>>,
+    /// Receive from predecessor.
+    pub rx: Receiver<Vec<f32>>,
+}
+
+/// Build the channel ring for `n` ranks.
+pub fn make_ring(n: usize) -> Vec<RingNode> {
+    let mut txs = Vec::with_capacity(n);
+    let mut rxs = Vec::with_capacity(n);
+    for _ in 0..n {
+        let (tx, rx) = std::sync::mpsc::channel();
+        txs.push(tx);
+        rxs.push(rx);
+    }
+    // rank r sends on txs[(r+1)%n]'s receiving channel: rearrange so that
+    // node r holds tx_to_successor and rx_from_predecessor.
+    let mut nodes = Vec::with_capacity(n);
+    let mut rx_iter = rxs.into_iter();
+    for r in 0..n {
+        let tx = txs[(r + 1) % n].clone();
+        let rx = rx_iter.next().unwrap();
+        nodes.push(RingNode { rank: r, n, tx, rx });
+    }
+    nodes
+}
+
+/// In-place ring all-reduce (sum) of `buf` across all ranks. Every rank
+/// must call this with equal-length buffers. Chunks are `ceil(len/n)`.
+pub fn ring_allreduce(node: &RingNode, buf: &mut [f32]) {
+    let n = node.n;
+    if n == 1 {
+        return;
+    }
+    let len = buf.len();
+    let chunk = len.div_ceil(n);
+    let bounds = |c: usize| -> (usize, usize) {
+        let lo = (c % n) * chunk;
+        (lo.min(len), (lo + chunk).min(len))
+    };
+    // reduce-scatter: after step s, rank r owns the fully-reduced chunk
+    // (r + 1) ... standard ring: at step s, rank r sends chunk (r - s)
+    // and receives chunk (r - s - 1), accumulating.
+    for s in 0..n - 1 {
+        let send_c = (node.rank + n - s) % n;
+        let (lo, hi) = bounds(send_c);
+        node.tx.send(buf[lo..hi].to_vec()).expect("ring send");
+        let recv = node.rx.recv().expect("ring recv");
+        let recv_c = (node.rank + n - s - 1) % n;
+        let (lo, hi) = bounds(recv_c);
+        for (d, v) in buf[lo..hi].iter_mut().zip(recv.iter()) {
+            *d += v;
+        }
+    }
+    // all-gather: circulate the reduced chunks.
+    for s in 0..n - 1 {
+        let send_c = (node.rank + 1 + n - s) % n;
+        let (lo, hi) = bounds(send_c);
+        node.tx.send(buf[lo..hi].to_vec()).expect("ring send");
+        let recv = node.rx.recv().expect("ring recv");
+        let recv_c = (node.rank + n - s) % n;
+        let (lo, hi) = bounds(recv_c);
+        buf[lo..hi].copy_from_slice(&recv);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::thread;
+
+    fn run_allreduce(n: usize, len: usize) {
+        let nodes = make_ring(n);
+        let handles: Vec<_> = nodes
+            .into_iter()
+            .map(|node| {
+                thread::spawn(move || {
+                    let mut buf: Vec<f32> =
+                        (0..len).map(|i| (node.rank * len + i) as f32).collect();
+                    ring_allreduce(&node, &mut buf);
+                    buf
+                })
+            })
+            .collect();
+        let results: Vec<Vec<f32>> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        // expected: elementwise sum over ranks
+        let expect: Vec<f32> =
+            (0..len).map(|i| (0..n).map(|r| (r * len + i) as f32).sum()).collect();
+        for (r, buf) in results.iter().enumerate() {
+            assert_eq!(buf, &expect, "rank {r}");
+        }
+    }
+
+    #[test]
+    fn allreduce_2_ranks() {
+        run_allreduce(2, 10);
+    }
+
+    #[test]
+    fn allreduce_4_ranks() {
+        run_allreduce(4, 1003); // non-divisible length exercises chunk clamping
+    }
+
+    #[test]
+    fn allreduce_8_ranks_small() {
+        run_allreduce(8, 5); // len < n: some empty chunks
+    }
+
+    #[test]
+    fn allreduce_single_rank_noop() {
+        let nodes = make_ring(1);
+        let mut buf = vec![1.0, 2.0];
+        ring_allreduce(&nodes[0], &mut buf);
+        assert_eq!(buf, vec![1.0, 2.0]);
+    }
+}

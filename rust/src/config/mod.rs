@@ -1,0 +1,130 @@
+//! Configuration system: JSON-backed configs for training runs and
+//! exploration (parsed with `util::json`), defaulting sensibly so the CLI
+//! works with zero files.
+
+use crate::util::json::Json;
+use std::path::Path;
+
+/// Training-run configuration (the real engine).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TrainConfig {
+    /// Artifact directory (must contain manifest.json).
+    pub artifacts: String,
+    /// Schedule name: `gpipe` | `1f1b` (SNO) | `1f1b-so` | `fbp` | `pipedream` | `dp`.
+    pub schedule: String,
+    /// Micro-batches per mini-batch.
+    pub m: usize,
+    /// Training steps (mini-batches).
+    pub steps: usize,
+    /// Adam learning rate.
+    pub lr: f32,
+    /// Data seed.
+    pub seed: u64,
+    /// Markov corpus branch factor.
+    pub branch: usize,
+    /// Markov corpus uniform-noise mass.
+    pub noise: f64,
+    /// Log every k steps.
+    pub log_every: usize,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            artifacts: "artifacts/lm10m-s4-b4".into(),
+            schedule: "1f1b".into(),
+            m: 8,
+            steps: 50,
+            lr: 1e-3,
+            seed: 0,
+            branch: 8,
+            noise: 0.1,
+            log_every: 5,
+        }
+    }
+}
+
+impl TrainConfig {
+    /// Parse from a JSON object (unknown keys rejected to catch typos).
+    pub fn from_json(j: &Json) -> crate::Result<TrainConfig> {
+        let mut c = TrainConfig::default();
+        let obj = j.as_obj().ok_or_else(|| anyhow::anyhow!("config must be an object"))?;
+        for (k, v) in obj {
+            match k.as_str() {
+                "artifacts" => c.artifacts = v.as_str().unwrap_or(&c.artifacts).to_string(),
+                "schedule" => c.schedule = v.as_str().unwrap_or(&c.schedule).to_string(),
+                "m" => c.m = v.as_usize().ok_or_else(|| anyhow::anyhow!("bad m"))?,
+                "steps" => c.steps = v.as_usize().ok_or_else(|| anyhow::anyhow!("bad steps"))?,
+                "lr" => c.lr = v.as_f64().ok_or_else(|| anyhow::anyhow!("bad lr"))? as f32,
+                "seed" => c.seed = v.as_i64().ok_or_else(|| anyhow::anyhow!("bad seed"))? as u64,
+                "branch" => c.branch = v.as_usize().ok_or_else(|| anyhow::anyhow!("bad branch"))?,
+                "noise" => c.noise = v.as_f64().ok_or_else(|| anyhow::anyhow!("bad noise"))?,
+                "log_every" => {
+                    c.log_every = v.as_usize().ok_or_else(|| anyhow::anyhow!("bad log_every"))?
+                }
+                other => anyhow::bail!("unknown config key `{other}`"),
+            }
+        }
+        Ok(c)
+    }
+
+    /// Load from a JSON file.
+    pub fn load(path: impl AsRef<Path>) -> crate::Result<TrainConfig> {
+        let text = std::fs::read_to_string(path.as_ref())?;
+        let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("{e}"))?;
+        Self::from_json(&j)
+    }
+
+    /// Resolve the schedule name to a kind (pipeline) or None (= DP).
+    pub fn schedule_kind(&self) -> crate::Result<Option<crate::schedule::ScheduleKind>> {
+        use crate::schedule::ScheduleKind::*;
+        Ok(match self.schedule.as_str() {
+            "1f1b" | "1f1b-sno" => Some(OneFOneBSno),
+            "1f1b-so" => Some(OneFOneBSo),
+            "1f1b-as" => Some(OneFOneBAs),
+            "fbp" | "fbp-as" => Some(FbpAs),
+            "gpipe" => Some(GPipe),
+            "pipedream" => Some(PipeDream),
+            "dp" => None,
+            other => anyhow::bail!("unknown schedule `{other}`"),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_and_overrides() {
+        let j = Json::parse(r#"{"schedule":"gpipe","m":16,"lr":0.01}"#).unwrap();
+        let c = TrainConfig::from_json(&j).unwrap();
+        assert_eq!(c.schedule, "gpipe");
+        assert_eq!(c.m, 16);
+        assert!((c.lr - 0.01).abs() < 1e-9);
+        assert_eq!(c.steps, TrainConfig::default().steps);
+    }
+
+    #[test]
+    fn unknown_key_rejected() {
+        let j = Json::parse(r#"{"schdule":"gpipe"}"#).unwrap();
+        assert!(TrainConfig::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn schedule_names_resolve() {
+        for (name, some) in [
+            ("1f1b", true),
+            ("1f1b-so", true),
+            ("gpipe", true),
+            ("fbp", true),
+            ("pipedream", true),
+            ("dp", false),
+        ] {
+            let c = TrainConfig { schedule: name.into(), ..Default::default() };
+            assert_eq!(c.schedule_kind().unwrap().is_some(), some, "{name}");
+        }
+        let bad = TrainConfig { schedule: "zzz".into(), ..Default::default() };
+        assert!(bad.schedule_kind().is_err());
+    }
+}

@@ -1,0 +1,7 @@
+//! Synthetic training data: a seeded Markov-chain token stream with a
+//! known entropy floor, so the e2e loss curve has a meaningful target
+//! (initial loss ≈ ln V, floor ≈ the chain's conditional entropy).
+
+pub mod synth;
+
+pub use synth::MarkovCorpus;

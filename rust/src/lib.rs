@@ -1,0 +1,54 @@
+//! # BaPipe — balanced pipeline parallelism for DNN training
+//!
+//! Reproduction of *"BaPipe: Exploration of Balanced Pipeline Parallelism
+//! for DNN Training"* (Zhao et al., 2020) as a three-layer Rust + JAX +
+//! Pallas stack:
+//!
+//! * **L3 (this crate)** — the paper's contribution: automatic exploration
+//!   of pipeline *scheduling* ([`schedule`], [`explorer`]) and *balanced
+//!   partition* ([`partition`]), a discrete-event cluster simulator
+//!   ([`sim`]), and a real multi-threaded pipeline training engine
+//!   ([`pipeline`]) executing AOT-compiled XLA stage programs via
+//!   [`runtime`].
+//! * **L2 (python/compile/model.py)** — JAX transformer-LM stage graphs
+//!   (fwd / bwd-with-recompute / adam / init), lowered once to HLO text.
+//! * **L1 (python/compile/kernels/)** — Pallas kernels for the compute
+//!   hot spots, verified against a pure-jnp oracle.
+//!
+//! Python never runs on the training path: `make artifacts` produces
+//! `artifacts/<model>/*.hlo.txt` + `manifest.json`, and the rust binary is
+//! self-contained afterwards.
+//!
+//! ## Quick tour
+//!
+//! ```no_run
+//! use bapipe::{cluster, model, profile, explorer};
+//!
+//! // 1. Describe the workload and the cluster.
+//! let net = model::zoo::vgg16(224);
+//! let cl = cluster::presets::v100_cluster(4);
+//! // 2. Profile analytically (or measure real stage executables).
+//! let prof = profile::analytical::profile(&net, &cl);
+//! // 3. Let BaPipe explore schedule x partition x micro-batching.
+//! let plan = explorer::explore(&net, &cl, &prof, &explorer::Options::default());
+//! println!("{}", plan.report());
+//! ```
+#![deny(missing_docs)]
+
+pub mod cluster;
+pub mod collective;
+pub mod config;
+pub mod data;
+pub mod explorer;
+pub mod metrics;
+pub mod model;
+pub mod partition;
+pub mod pipeline;
+pub mod profile;
+pub mod runtime;
+pub mod schedule;
+pub mod sim;
+pub mod util;
+
+/// Crate-wide result type (thin alias over [`anyhow::Result`]).
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,169 @@
+//! `bapipe` — the BaPipe launcher CLI.
+//!
+//! Subcommands:
+//!   explore   — run the Fig.-3 auto-exploration on a zoo model + cluster
+//!   partition — show the balanced partition for a model/cluster
+//!   simulate  — DES one schedule and print its timeline (Figs. 4–6)
+//!   train     — real pipeline training over AOT artifacts
+//!   dp        — real data-parallel baseline training
+//!   profile   — measured per-stage times of an artifact bundle
+
+use bapipe::cluster::{presets, Cluster};
+use bapipe::config::TrainConfig;
+use bapipe::explorer;
+use bapipe::model::zoo;
+use bapipe::pipeline::{dp_engine, training};
+use bapipe::profile::analytical;
+use bapipe::runtime::Runtime;
+use bapipe::schedule::ScheduleKind;
+use bapipe::sim::{engine as des, timeline};
+use bapipe::util::cli::Args;
+use bapipe::util::logging::{self, Level};
+
+fn cluster_by_name(name: &str, n: usize) -> Cluster {
+    match name {
+        "v100" => presets::v100_cluster(n),
+        "vcu118" => presets::fpga_cluster(&vec!["VCU118"; n]),
+        "vcu129" => presets::fpga_cluster(&vec!["VCU129"; n]),
+        "fpga-mixed" => {
+            let mut boards = vec!["VCU129"; n / 2];
+            boards.extend(vec!["VCU118"; n - n / 2]);
+            presets::fpga_cluster(&boards)
+        }
+        "cpu" => presets::cpu_cluster(n),
+        other => panic!("unknown cluster `{other}` (v100|vcu118|vcu129|fpga-mixed|cpu)"),
+    }
+}
+
+fn main() -> bapipe::Result<()> {
+    let args = Args::from_env();
+    if args.has_flag("verbose") {
+        logging::set_level(Level::Debug);
+    }
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    match cmd {
+        "explore" => {
+            let model = args.get_str("model", "vgg16");
+            let net = zoo::by_name(&model)
+                .ok_or_else(|| anyhow::anyhow!("unknown model `{model}`"))?;
+            let cl = cluster_by_name(&args.get_str("cluster", "v100"), args.get_usize("n", 4));
+            let prof = analytical::profile(&net, &cl);
+            let opts = explorer::Options {
+                batch_per_device: args.get_f64("batch", 32.0),
+                samples_per_epoch: args.get_usize("samples", 50_000),
+                ..Default::default()
+            };
+            let plan = explorer::explore(&net, &cl, &prof, &opts);
+            println!("== exploration log ==");
+            for l in &plan.log {
+                println!("  {l}");
+            }
+            println!("\n{}", plan.report());
+        }
+        "partition" => {
+            let model = args.get_str("model", "vgg16");
+            let net = zoo::by_name(&model)
+                .ok_or_else(|| anyhow::anyhow!("unknown model `{model}`"))?;
+            let cl = cluster_by_name(&args.get_str("cluster", "v100"), args.get_usize("n", 4));
+            let prof = analytical::profile(&net, &cl);
+            let plan = bapipe::partition::balanced_partition(
+                &net,
+                &cl,
+                &prof,
+                ScheduleKind::OneFOneBSno,
+                args.get_f64("micro", 4.0),
+                args.get_usize("m", 16),
+            )?;
+            println!("{} on {}:", net.describe(), cl.describe());
+            for note in &plan.notes {
+                println!("  {note}");
+            }
+            println!("  max stage time {:.4} ms", plan.max_stage_time * 1e3);
+        }
+        "simulate" => {
+            let sched = args.get_str("schedule", "1f1b-so");
+            let kind = TrainConfig { schedule: sched.clone(), ..Default::default() }
+                .schedule_kind()?
+                .ok_or_else(|| anyhow::anyhow!("simulate needs a pipeline schedule"))?;
+            let n = args.get_usize("n", 3);
+            let m = args.get_usize("m", 8);
+            let exec = if matches!(kind, ScheduleKind::OneFOneBAs | ScheduleKind::FbpAs) {
+                bapipe::cluster::ExecMode::Async
+            } else {
+                bapipe::cluster::ExecMode::Sync
+            };
+            let spec = des::SimSpec::uniform(
+                kind,
+                n,
+                m,
+                args.get_f64("f", 1.0),
+                args.get_f64("b", 2.0),
+                args.get_f64("sr", 0.25),
+                exec,
+            );
+            let r = des::simulate(&spec);
+            println!(
+                "{} N={n} M={m}: makespan {:.2}, bubble {:.1}%",
+                kind.label(),
+                r.makespan,
+                100.0 * r.bubble_fraction
+            );
+            println!("{}", timeline::render(&r, n, args.get_usize("width", 100)));
+        }
+        "train" => {
+            let mut cfg = match args.opt_str("config") {
+                Some(path) => TrainConfig::load(path)?,
+                None => TrainConfig::default(),
+            };
+            if let Some(a) = args.opt_str("artifacts") {
+                cfg.artifacts = a.to_string();
+            }
+            if let Some(s) = args.opt_str("schedule") {
+                cfg.schedule = s.to_string();
+            }
+            cfg.m = args.get_usize("m", cfg.m);
+            cfg.steps = args.get_usize("steps", cfg.steps);
+            cfg.lr = args.get_f64("lr", cfg.lr as f64) as f32;
+            let report = training::train(&cfg)?;
+            println!("{}", report.render_curve());
+            println!(
+                "throughput {:.1} tokens/s, total {:.1}s",
+                report.tokens_per_sec, report.total_secs
+            );
+        }
+        "dp" => {
+            let mut cfg = TrainConfig::default();
+            if let Some(a) = args.opt_str("artifacts") {
+                cfg.artifacts = a.to_string();
+            }
+            cfg.steps = args.get_usize("steps", cfg.steps);
+            cfg.lr = args.get_f64("lr", cfg.lr as f64) as f32;
+            let rep = dp_engine::train_dp(&cfg, args.get_usize("replicas", 2))?;
+            for (s, l) in &rep.curve {
+                println!("step {s:>5}  loss {l:.4}");
+            }
+            println!("throughput {:.1} tokens/s", rep.tokens_per_sec);
+        }
+        "profile" => {
+            let dir = args.get_str("artifacts", "artifacts/lm10m-s4-b4");
+            let rt = Runtime::load(&dir)?;
+            let times = training::measure_stage_times(&rt, args.get_usize("reps", 3))?;
+            println!("measured per-stage times ({}):", dir);
+            for (i, (f, b)) in times.iter().enumerate() {
+                println!("  stage {i}: fwd {:.2} ms, bwd {:.2} ms", f * 1e3, b * 1e3);
+            }
+        }
+        _ => {
+            println!(
+                "bapipe — balanced pipeline parallelism for DNN training\n\n\
+                 usage: bapipe <explore|partition|simulate|train|dp|profile> [--key value ...]\n\
+                 examples:\n\
+                   bapipe explore --model vgg16 --cluster v100 --n 4 --batch 32\n\
+                   bapipe simulate --schedule 1f1b-so --n 3 --m 8\n\
+                   bapipe train --artifacts artifacts/lm10m-s4-b4 --schedule 1f1b --m 8 --steps 50\n\
+                   bapipe dp --artifacts artifacts/lm10m-s4-b4 --replicas 2 --steps 20"
+            );
+        }
+    }
+    Ok(())
+}

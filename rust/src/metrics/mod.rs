@@ -1,0 +1,134 @@
+//! Lightweight telemetry: named counters, timers and throughput meters
+//! for the coordinator (logged at the end of runs and by benches).
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// A metrics registry (cheap enough to share behind a Mutex — updates are
+/// off the per-op hot path; per-op timing uses local `Stopwatch`es that
+/// flush once).
+#[derive(Debug, Default)]
+pub struct Metrics {
+    inner: Mutex<Inner>,
+}
+
+#[derive(Debug, Default)]
+struct Inner {
+    counters: BTreeMap<String, u64>,
+    sums: BTreeMap<String, (f64, u64)>, // sum, count
+}
+
+impl Metrics {
+    /// New empty registry.
+    pub fn new() -> Metrics {
+        Metrics::default()
+    }
+
+    /// Increment a counter.
+    pub fn inc(&self, name: &str, by: u64) {
+        let mut g = self.inner.lock().unwrap();
+        *g.counters.entry(name.to_string()).or_insert(0) += by;
+    }
+
+    /// Record an observation (e.g. seconds) into a mean series.
+    pub fn observe(&self, name: &str, value: f64) {
+        let mut g = self.inner.lock().unwrap();
+        let e = g.sums.entry(name.to_string()).or_insert((0.0, 0));
+        e.0 += value;
+        e.1 += 1;
+    }
+
+    /// Counter value.
+    pub fn counter(&self, name: &str) -> u64 {
+        self.inner.lock().unwrap().counters.get(name).copied().unwrap_or(0)
+    }
+
+    /// Mean of an observation series (0 if empty).
+    pub fn mean(&self, name: &str) -> f64 {
+        let g = self.inner.lock().unwrap();
+        match g.sums.get(name) {
+            Some(&(s, n)) if n > 0 => s / n as f64,
+            _ => 0.0,
+        }
+    }
+
+    /// Sum of an observation series.
+    pub fn sum(&self, name: &str) -> f64 {
+        self.inner.lock().unwrap().sums.get(name).map(|&(s, _)| s).unwrap_or(0.0)
+    }
+
+    /// Render a sorted report.
+    pub fn report(&self) -> String {
+        let g = self.inner.lock().unwrap();
+        let mut out = String::new();
+        for (k, v) in &g.counters {
+            out.push_str(&format!("{k}: {v}\n"));
+        }
+        for (k, &(s, n)) in &g.sums {
+            if n > 0 {
+                out.push_str(&format!("{k}: mean {:.6} (n={n}, sum {:.4})\n", s / n as f64, s));
+            }
+        }
+        out
+    }
+}
+
+/// Scope timer that reports elapsed seconds into a `Metrics` series.
+pub struct Stopwatch<'a> {
+    metrics: &'a Metrics,
+    name: &'a str,
+    start: Instant,
+}
+
+impl<'a> Stopwatch<'a> {
+    /// Start timing `name`.
+    pub fn start(metrics: &'a Metrics, name: &'a str) -> Stopwatch<'a> {
+        Stopwatch { metrics, name, start: Instant::now() }
+    }
+}
+
+impl Drop for Stopwatch<'_> {
+    fn drop(&mut self) {
+        self.metrics.observe(self.name, self.start.elapsed().as_secs_f64());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_and_means() {
+        let m = Metrics::new();
+        m.inc("ops", 2);
+        m.inc("ops", 3);
+        assert_eq!(m.counter("ops"), 5);
+        m.observe("t", 1.0);
+        m.observe("t", 3.0);
+        assert_eq!(m.mean("t"), 2.0);
+        assert_eq!(m.sum("t"), 4.0);
+        assert_eq!(m.counter("missing"), 0);
+        assert_eq!(m.mean("missing"), 0.0);
+    }
+
+    #[test]
+    fn stopwatch_records() {
+        let m = Metrics::new();
+        {
+            let _s = Stopwatch::start(&m, "lap");
+            std::thread::sleep(std::time::Duration::from_millis(5));
+        }
+        assert!(m.mean("lap") >= 0.004);
+    }
+
+    #[test]
+    fn report_contains_entries() {
+        let m = Metrics::new();
+        m.inc("steps", 1);
+        m.observe("loss", 2.5);
+        let r = m.report();
+        assert!(r.contains("steps: 1"));
+        assert!(r.contains("loss"));
+    }
+}

@@ -1,0 +1,113 @@
+//! Per-layer cost formulas: FLOPs, parameter counts and activation sizes
+//! for the building blocks used by the zoo. Forward multiply-accumulate is
+//! counted as 2 FLOPs; backward for gemm/conv is 2× forward (grad wrt
+//! inputs + grad wrt weights).
+
+/// Conv2d forward FLOPs per sample: `2 · K² · Cin · Cout · Hout · Wout`.
+pub fn conv2d_flops(k: u64, cin: u64, cout: u64, hout: u64, wout: u64) -> f64 {
+    2.0 * (k * k * cin * cout * hout * wout) as f64
+}
+
+/// Conv2d parameters: `K² · Cin · Cout + Cout` (bias).
+pub fn conv2d_params(k: u64, cin: u64, cout: u64) -> u64 {
+    k * k * cin * cout + cout
+}
+
+/// Linear forward FLOPs per sample (optionally per `tokens` positions).
+pub fn linear_flops(inp: u64, out: u64, tokens: u64) -> f64 {
+    2.0 * (inp * out * tokens) as f64
+}
+
+/// Linear parameters: `in·out + out`.
+pub fn linear_params(inp: u64, out: u64) -> u64 {
+    inp * out + out
+}
+
+/// LSTM layer parameters: 4 gates of `(input + hidden + 1) · hidden`.
+pub fn lstm_params(input: u64, hidden: u64) -> u64 {
+    4 * (input + hidden + 1) * hidden
+}
+
+/// LSTM forward FLOPs for a sequence of `seq` tokens.
+pub fn lstm_flops(input: u64, hidden: u64, seq: u64) -> f64 {
+    // 4 gate gemms per token + elementwise gate math (~32h, negligible but counted)
+    (2.0 * (4 * (input + hidden) * hidden) as f64 + 32.0 * hidden as f64) * seq as f64
+}
+
+/// Multi-head self-attention fwd FLOPs for `seq` tokens, model dim `d`:
+/// QKV projections + scores + context + output projection.
+pub fn attention_flops(d: u64, seq: u64) -> f64 {
+    let proj = 2.0 * (4 * d * d * seq) as f64; // Q,K,V,O projections
+    let scores = 2.0 * (seq * seq * d) as f64; // QK^T
+    let ctx = 2.0 * (seq * seq * d) as f64; // scores·V
+    proj + scores + ctx
+}
+
+/// Attention parameters (Q,K,V,O projections with bias).
+pub fn attention_params(d: u64) -> u64 {
+    4 * (d * d + d)
+}
+
+/// Transformer MLP (d → 4d → d, GELU) fwd FLOPs for `seq` tokens.
+pub fn mlp_flops(d: u64, seq: u64) -> f64 {
+    2.0 * (2 * d * 4 * d * seq) as f64
+}
+
+/// Transformer MLP parameters.
+pub fn mlp_params(d: u64) -> u64 {
+    (d * 4 * d + 4 * d) + (4 * d * d + d)
+}
+
+/// LayerNorm parameters (scale + shift).
+pub fn norm_params(d: u64) -> u64 {
+    2 * d
+}
+
+/// Batch/Layer-norm fwd FLOPs (≈8 per element).
+pub fn norm_flops(elems: u64) -> f64 {
+    8.0 * elems as f64
+}
+
+/// Elementwise activation FLOPs (1 per element; GELU ≈ 8).
+pub fn act_flops(elems: u64, per_elem: f64) -> f64 {
+    per_elem * elems as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conv_flops_match_hand_calc() {
+        // 3x3 conv, 64->64, 224x224 out: 2*9*64*64*224*224
+        let f = conv2d_flops(3, 64, 64, 224, 224);
+        assert_eq!(f, 2.0 * 9.0 * 64.0 * 64.0 * 224.0 * 224.0);
+    }
+
+    #[test]
+    fn linear_params_match() {
+        assert_eq!(linear_params(4096, 1000), 4096 * 1000 + 1000);
+    }
+
+    #[test]
+    fn lstm_params_reference() {
+        // PyTorch LSTM(1024,1024) has 4*(1024+1024+2)*1024 weights+biases(2 bias vecs);
+        // we fold to one bias: 4*(2049)*1024.
+        assert_eq!(lstm_params(1024, 1024), 4 * 2049 * 1024);
+    }
+
+    #[test]
+    fn attention_scales_quadratically_in_seq() {
+        let a = attention_flops(512, 128);
+        let b = attention_flops(512, 256);
+        // projection part doubles, score part quadruples → ratio in (2,4)
+        let r = b / a;
+        assert!(r > 2.0 && r < 4.0, "ratio {r}");
+    }
+
+    #[test]
+    fn mlp_params_match() {
+        let d = 64;
+        assert_eq!(mlp_params(d), (d * 4 * d + 4 * d) + (4 * d * d + d));
+    }
+}

@@ -1,0 +1,164 @@
+//! [`Network`]: a named linear sequence of layers plus aggregate queries
+//! (total FLOPs/params, legal cut points, prefix sums for the partitioner).
+
+use super::layer::Layer;
+
+/// A DNN expressed as a linear layer sequence (pipeline-partitionable IR).
+#[derive(Debug, Clone)]
+pub struct Network {
+    /// Model name (`vgg16`, `gnmt8`, ...).
+    pub name: String,
+    /// The layers in execution order.
+    pub layers: Vec<Layer>,
+    /// Input activation elements per sample (e.g. `3*224*224`).
+    pub input_elems: u64,
+}
+
+impl Network {
+    /// Construct; panics on an empty layer list.
+    pub fn new(name: impl Into<String>, layers: Vec<Layer>, input_elems: u64) -> Network {
+        assert!(!layers.is_empty(), "Network must have at least one layer");
+        Network { name: name.into(), layers, input_elems }
+    }
+
+    /// Number of layers.
+    pub fn len(&self) -> usize {
+        self.layers.len()
+    }
+
+    /// Always false (constructor enforces non-empty) — for clippy symmetry.
+    pub fn is_empty(&self) -> bool {
+        self.layers.is_empty()
+    }
+
+    /// Total trainable parameters.
+    pub fn total_params(&self) -> u64 {
+        self.layers.iter().map(|l| l.params).sum()
+    }
+
+    /// Total fwd FLOPs per sample.
+    pub fn total_flops_fwd(&self) -> f64 {
+        self.layers.iter().map(|l| l.flops_fwd).sum()
+    }
+
+    /// Total bwd FLOPs per sample.
+    pub fn total_flops_bwd(&self) -> f64 {
+        self.layers.iter().map(|l| l.flops_bwd).sum()
+    }
+
+    /// Output activation elements of layer `i` (the tensor crossing a cut
+    /// placed after layer `i`). For `i == len-1` this is the model output.
+    pub fn act_out(&self, i: usize) -> u64 {
+        self.layers[i].act_out_elems
+    }
+
+    /// Input activation elements of layer `i` (output of `i-1`, or the
+    /// network input for `i == 0`).
+    pub fn act_in(&self, i: usize) -> u64 {
+        if i == 0 {
+            self.input_elems
+        } else {
+            self.layers[i - 1].act_out_elems
+        }
+    }
+
+    /// Indices after which a pipeline cut is legal (excludes the last
+    /// layer — a cut there would produce an empty stage).
+    pub fn legal_cuts(&self) -> Vec<usize> {
+        (0..self.layers.len() - 1).filter(|&i| self.layers[i].cut_ok).collect()
+    }
+
+    /// Prefix sums of (fwd+bwd) FLOPs — `prefix[i]` = sum of layers `0..i`.
+    /// Length `len+1`; used by the DP partitioner for O(1) range queries.
+    pub fn flops_prefix(&self) -> Vec<f64> {
+        let mut p = Vec::with_capacity(self.layers.len() + 1);
+        p.push(0.0);
+        let mut acc = 0.0;
+        for l in &self.layers {
+            acc += l.flops_total();
+            p.push(acc);
+        }
+        p
+    }
+
+    /// Prefix sums of parameter counts (length `len+1`).
+    pub fn params_prefix(&self) -> Vec<u64> {
+        let mut p = Vec::with_capacity(self.layers.len() + 1);
+        p.push(0);
+        let mut acc = 0u64;
+        for l in &self.layers {
+            acc += l.params;
+            p.push(acc);
+        }
+        p
+    }
+
+    /// One-line description.
+    pub fn describe(&self) -> String {
+        format!(
+            "{}: {} layers, {} params, {:.2} GFLOPs fwd/sample",
+            self.name,
+            self.len(),
+            crate::util::fmt_params(self.total_params()),
+            self.total_flops_fwd() / 1e9,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::layer::{Layer, LayerKind};
+
+    fn tiny() -> Network {
+        Network::new(
+            "tiny",
+            vec![
+                Layer::new("a", LayerKind::Linear, 10.0, 5, 4),
+                Layer::new("b", LayerKind::Act, 1.0, 0, 4).no_cut(),
+                Layer::new("c", LayerKind::Linear, 20.0, 8, 2),
+            ],
+            3,
+        )
+    }
+
+    #[test]
+    fn totals() {
+        let n = tiny();
+        assert_eq!(n.total_params(), 13);
+        assert_eq!(n.total_flops_fwd(), 31.0);
+        assert_eq!(n.total_flops_bwd(), 62.0);
+    }
+
+    #[test]
+    fn act_in_out() {
+        let n = tiny();
+        assert_eq!(n.act_in(0), 3);
+        assert_eq!(n.act_out(0), 4);
+        assert_eq!(n.act_in(2), 4);
+        assert_eq!(n.act_out(2), 2);
+    }
+
+    #[test]
+    fn legal_cuts_respect_no_cut() {
+        let n = tiny();
+        assert_eq!(n.legal_cuts(), vec![0]); // after "a"; "b" is no_cut; "c" is last
+    }
+
+    #[test]
+    fn prefix_sums() {
+        let n = tiny();
+        let p = n.flops_prefix();
+        assert_eq!(p.len(), 4);
+        assert_eq!(p[0], 0.0);
+        assert_eq!(p[3], 31.0 + 62.0);
+        let q = n.params_prefix();
+        assert_eq!(q, vec![0, 5, 5, 13]);
+    }
+
+    #[test]
+    #[should_panic(expected = "at least one layer")]
+    fn empty_panics() {
+        Network::new("x", vec![], 1);
+    }
+}

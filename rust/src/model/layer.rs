@@ -1,0 +1,133 @@
+//! A single layer: per-sample FLOP counts, parameter count and output
+//! activation size — the quantities the profiler, partitioner and memory
+//! model consume.
+
+/// Coarse layer taxonomy. Used by the FPGA profiler (DSP mapping differs
+/// for conv vs. gemm vs. elementwise) and the coarse-grained partitioner.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LayerKind {
+    /// 2-D convolution.
+    Conv2d,
+    /// Fully-connected / dense / projection.
+    Linear,
+    /// LSTM layer (per-token gates).
+    Lstm,
+    /// Embedding lookup.
+    Embedding,
+    /// Multi-head self-attention (fused block component).
+    Attention,
+    /// Normalization (batchnorm / layernorm).
+    Norm,
+    /// Pooling.
+    Pool,
+    /// Elementwise activation (ReLU/GELU/...).
+    Act,
+    /// Softmax / classifier head / loss.
+    Softmax,
+    /// Residual add or concat glue.
+    Glue,
+}
+
+impl LayerKind {
+    /// Is this a "compute" layer for DSP-utilization purposes (vs glue)?
+    pub fn is_compute(&self) -> bool {
+        matches!(
+            self,
+            LayerKind::Conv2d
+                | LayerKind::Linear
+                | LayerKind::Lstm
+                | LayerKind::Attention
+                | LayerKind::Embedding
+        )
+    }
+}
+
+/// One layer of a [`super::Network`]. All quantities are **per sample**
+/// (batch size 1); schedulers and memory models scale by micro-batch size.
+#[derive(Debug, Clone)]
+pub struct Layer {
+    /// Human-readable name (`conv1_1`, `enc_lstm3`, ...).
+    pub name: String,
+    /// Taxonomy tag.
+    pub kind: LayerKind,
+    /// Forward FLOPs per sample.
+    pub flops_fwd: f64,
+    /// Backward FLOPs per sample (typically ≈ 2× forward for conv/gemm).
+    pub flops_bwd: f64,
+    /// Trainable parameter count.
+    pub params: u64,
+    /// Output activation **elements** per sample (bytes = × dtype width).
+    pub act_out_elems: u64,
+    /// May the pipeline be cut **after** this layer? (false inside
+    /// residual blocks whose skip edge would cross the cut).
+    pub cut_ok: bool,
+}
+
+impl Layer {
+    /// Construct with backward defaulting to 2× forward FLOPs and
+    /// `cut_ok = true`.
+    pub fn new(
+        name: impl Into<String>,
+        kind: LayerKind,
+        flops_fwd: f64,
+        params: u64,
+        act_out_elems: u64,
+    ) -> Layer {
+        Layer {
+            name: name.into(),
+            kind,
+            flops_fwd,
+            flops_bwd: 2.0 * flops_fwd,
+            params,
+            act_out_elems,
+            cut_ok: true,
+        }
+    }
+
+    /// Builder: set backward FLOPs explicitly.
+    pub fn with_bwd(mut self, flops_bwd: f64) -> Layer {
+        self.flops_bwd = flops_bwd;
+        self
+    }
+
+    /// Builder: forbid cutting after this layer.
+    pub fn no_cut(mut self) -> Layer {
+        self.cut_ok = false;
+        self
+    }
+
+    /// Total (fwd + bwd) FLOPs per sample.
+    pub fn flops_total(&self) -> f64 {
+        self.flops_fwd + self.flops_bwd
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults() {
+        let l = Layer::new("fc", LayerKind::Linear, 100.0, 10, 5);
+        assert_eq!(l.flops_bwd, 200.0);
+        assert!(l.cut_ok);
+        assert_eq!(l.flops_total(), 300.0);
+    }
+
+    #[test]
+    fn builders() {
+        let l = Layer::new("res", LayerKind::Conv2d, 10.0, 1, 1)
+            .with_bwd(15.0)
+            .no_cut();
+        assert_eq!(l.flops_bwd, 15.0);
+        assert!(!l.cut_ok);
+    }
+
+    #[test]
+    fn kind_compute() {
+        assert!(LayerKind::Conv2d.is_compute());
+        assert!(LayerKind::Lstm.is_compute());
+        assert!(!LayerKind::Pool.is_compute());
+        assert!(!LayerKind::Glue.is_compute());
+    }
+}

@@ -1,0 +1,16 @@
+//! DNN model intermediate representation: a linear sequence of [`Layer`]s
+//! with per-sample compute/parameter/activation costs ([`graph::Network`]),
+//! cost formulas ([`costs`]) and a zoo of the paper's workloads
+//! ([`zoo`]: VGG-16, ResNet-50, GNMT-8/GNMT-L, Transformer-LM, AlexNet, MLP).
+//!
+//! BaPipe partitions a network *vertically* into contiguous stages, so the
+//! IR is a layer list; residual blocks (ResNet, Transformer) are flattened
+//! but only layers with `cut_ok == true` are legal stage boundaries.
+
+pub mod costs;
+pub mod graph;
+pub mod layer;
+pub mod zoo;
+
+pub use graph::Network;
+pub use layer::{Layer, LayerKind};

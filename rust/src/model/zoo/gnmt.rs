@@ -1,0 +1,157 @@
+//! GNMT (Wu et al. 2016) — LSTM encoder-decoder with attention, the
+//! sequence workload of Tables 3–4. `gnmt_l(L)` builds the paper's GNMT-L
+//! scaling family: L/2 encoder + L/2 decoder layers; calibrated so the
+//! parameter counts match Table 4 ((32, 445.6M) … (158, 1.78B) within a
+//! few percent).
+
+use crate::model::costs::*;
+use crate::model::{Layer, LayerKind, Network};
+
+/// Build GNMT with `total_layers` LSTM layers split evenly between encoder
+/// and decoder, hidden size `h`, vocabulary `vocab`, sequence length `seq`.
+///
+/// Structure (following the GNMT paper):
+/// * source embedding `vocab×h`
+/// * encoder: layer 1 bidirectional (2× params, output 2h), layer 2 input
+///   2h, remaining layers h→h
+/// * additive attention (`2h² + h` params)
+/// * target embedding `vocab×h`
+/// * decoder: every layer input `2h` (hidden + attention context)
+/// * output projection `h → vocab`
+pub fn gnmt(total_layers: u64, h: u64, vocab: u64, seq: u64) -> Network {
+    assert!(total_layers >= 2 && total_layers % 2 == 0, "gnmt needs an even layer count ≥ 2");
+    let n_enc = total_layers / 2;
+    let n_dec = total_layers / 2;
+    let mut layers = Vec::new();
+
+    // Source embedding. Lookup is memory-bound: ~1 FLOP/element copied.
+    layers.push(Layer::new(
+        "src_embed",
+        LayerKind::Embedding,
+        act_flops(seq * h, 1.0),
+        vocab * h,
+        seq * h,
+    ));
+
+    // Encoder.
+    for i in 0..n_enc {
+        let (name, params, flops, out_elems) = if i == 0 {
+            // bidirectional: 2 directions of h→h
+            (
+                "enc_bilstm1".to_string(),
+                2 * lstm_params(h, h),
+                2.0 * lstm_flops(h, h, seq),
+                seq * 2 * h,
+            )
+        } else if i == 1 {
+            // consumes the 2h bidirectional output
+            ("enc_lstm2".to_string(), lstm_params(2 * h, h), lstm_flops(2 * h, h, seq), seq * h)
+        } else {
+            (format!("enc_lstm{}", i + 1), lstm_params(h, h), lstm_flops(h, h, seq), seq * h)
+        };
+        layers.push(Layer::new(name, LayerKind::Lstm, flops, params, out_elems));
+    }
+
+    // Attention (additive): scored once per decoder step over seq keys.
+    layers.push(Layer::new(
+        "attention",
+        LayerKind::Attention,
+        2.0 * (2 * h * h * seq) as f64 + 2.0 * (seq * seq * h) as f64,
+        2 * h * h + h,
+        seq * h,
+    ));
+
+    // Target embedding.
+    layers.push(Layer::new(
+        "tgt_embed",
+        LayerKind::Embedding,
+        act_flops(seq * h, 1.0),
+        vocab * h,
+        seq * h,
+    ));
+
+    // Decoder: every layer input 2h (prev hidden/emb concat context).
+    for i in 0..n_dec {
+        layers.push(Layer::new(
+            format!("dec_lstm{}", i + 1),
+            LayerKind::Lstm,
+            lstm_flops(2 * h, h, seq),
+            lstm_params(2 * h, h),
+            seq * h,
+        ));
+    }
+
+    // Output projection + softmax.
+    layers.push(Layer::new(
+        "proj",
+        LayerKind::Linear,
+        linear_flops(h, vocab, seq),
+        linear_params(h, vocab),
+        seq * vocab,
+    ));
+    layers.push(Layer::new(
+        "softmax",
+        LayerKind::Softmax,
+        act_flops(seq * vocab, 5.0),
+        0,
+        seq * vocab,
+    ));
+
+    Network::new(format!("gnmt{total_layers}"), layers, seq)
+}
+
+/// The Table-4 scaling family: GNMT-L with `l` total LSTM layers
+/// (h=1024, vocab=32k, seq=50).
+pub fn gnmt_l(l: u64) -> Network {
+    let mut n = gnmt(l, 1024, 32000, 50);
+    n.name = format!("gnmt-l{l}");
+    n
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Table 4 calibration: the paper's (L, W) pairs.
+    #[test]
+    fn table4_param_calibration() {
+        for (l, w) in [(32u64, 445.6e6), (42, 550.6e6), (60, 739.5e6), (74, 886.4e6)] {
+            let n = gnmt_l(l);
+            let p = n.total_params() as f64;
+            let rel = (p - w).abs() / w;
+            assert!(rel < 0.05, "gnmt-l{l}: params {p:.3e} vs paper {w:.3e} (rel {rel:.3})");
+        }
+    }
+
+    #[test]
+    fn table4_large_sizes() {
+        for (l, w) in [(118u64, 1.35e9), (158, 1.78e9)] {
+            let n = gnmt_l(l);
+            let p = n.total_params() as f64;
+            let rel = (p - w).abs() / w;
+            assert!(rel < 0.06, "gnmt-l{l}: params {p:.3e} vs paper {w:.3e} (rel {rel:.3})");
+        }
+    }
+
+    #[test]
+    fn structure() {
+        let n = gnmt(8, 1024, 32000, 50);
+        // embed + 4 enc + attn + embed + 4 dec + proj + softmax = 13
+        assert_eq!(n.len(), 13);
+        assert!(n.layers.iter().any(|l| l.name == "enc_bilstm1"));
+        assert!(n.layers.iter().any(|l| l.name == "dec_lstm4"));
+    }
+
+    #[test]
+    #[should_panic(expected = "even layer count")]
+    fn odd_layers_rejected() {
+        gnmt(7, 1024, 32000, 50);
+    }
+
+    #[test]
+    fn params_grow_linearly_in_l() {
+        let d = gnmt_l(34).total_params() - gnmt_l(32).total_params();
+        let d2 = gnmt_l(66).total_params() - gnmt_l(64).total_params();
+        assert_eq!(d, d2, "constant per-layer-pair increment");
+    }
+}

@@ -1,0 +1,51 @@
+//! Model zoo: builders for every workload the paper evaluates (VGG-16,
+//! ResNet-50, GNMT-8 / GNMT-L) plus the Transformer-LM used by the real
+//! training engine and small nets for tests and examples.
+
+mod gnmt;
+mod resnet;
+mod small;
+mod transformer;
+mod vgg;
+
+pub use gnmt::{gnmt, gnmt_l};
+pub use resnet::resnet50;
+pub use small::{alexnet, mlp};
+pub use transformer::{transformer_lm, TransformerCfg};
+pub use vgg::vgg16;
+
+/// Look a zoo model up by name (CLI / config convenience).
+///
+/// Supported: `vgg16`, `resnet50`, `alexnet`, `gnmt8`, `gnmt16`,
+/// `gnmt-l<L>` (e.g. `gnmt-l32`), `lm10m`, `lm100m`.
+pub fn by_name(name: &str) -> Option<crate::model::Network> {
+    match name {
+        "vgg16" => Some(vgg16(224)),
+        "resnet50" => Some(resnet50(224)),
+        "alexnet" => Some(alexnet()),
+        "gnmt8" => Some(gnmt(8, 1024, 32000, 50)),
+        "gnmt16" => Some(gnmt(16, 1024, 32000, 50)),
+        "lm10m" => Some(transformer_lm(&TransformerCfg::lm10m())),
+        "lm100m" => Some(transformer_lm(&TransformerCfg::lm100m())),
+        _ => {
+            if let Some(l) = name.strip_prefix("gnmt-l") {
+                l.parse::<u64>().ok().map(gnmt_l)
+            } else {
+                None
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn by_name_resolves() {
+        for n in ["vgg16", "resnet50", "alexnet", "gnmt8", "gnmt-l32", "lm10m", "lm100m"] {
+            assert!(by_name(n).is_some(), "{n} should resolve");
+        }
+        assert!(by_name("nope").is_none());
+    }
+}

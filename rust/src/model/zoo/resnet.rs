@@ -1,0 +1,156 @@
+//! ResNet-50 (He et al. 2016) — bottleneck residual network, ~25.6M
+//! parameters. Blocks are flattened into conv layers; layers inside a
+//! bottleneck are marked `no_cut` so pipeline cuts never sever a skip edge.
+
+use crate::model::costs::*;
+use crate::model::{Layer, LayerKind, Network};
+
+/// One bottleneck block: 1×1 reduce → 3×3 → 1×1 expand (+ optional
+/// projection shortcut). `stride` applies to the 3×3.
+fn bottleneck(
+    layers: &mut Vec<Layer>,
+    name: &str,
+    cin: u64,
+    cmid: u64,
+    cout: u64,
+    h_in: u64,
+    stride: u64,
+) -> u64 {
+    let h_out = h_in / stride;
+    // 1x1 reduce
+    layers.push(
+        Layer::new(
+            format!("{name}_a"),
+            LayerKind::Conv2d,
+            conv2d_flops(1, cin, cmid, h_in, h_in),
+            conv2d_params(1, cin, cmid),
+            cmid * h_in * h_in,
+        )
+        .no_cut(),
+    );
+    // 3x3 (stride)
+    layers.push(
+        Layer::new(
+            format!("{name}_b"),
+            LayerKind::Conv2d,
+            conv2d_flops(3, cmid, cmid, h_out, h_out),
+            conv2d_params(3, cmid, cmid),
+            cmid * h_out * h_out,
+        )
+        .no_cut(),
+    );
+    // 1x1 expand
+    layers.push(
+        Layer::new(
+            format!("{name}_c"),
+            LayerKind::Conv2d,
+            conv2d_flops(1, cmid, cout, h_out, h_out),
+            conv2d_params(1, cmid, cout),
+            cout * h_out * h_out,
+        )
+        .no_cut(),
+    );
+    // projection shortcut when shape changes
+    let proj_params =
+        if cin != cout || stride != 1 { conv2d_params(1, cin, cout) } else { 0 };
+    let proj_flops = if proj_params > 0 {
+        conv2d_flops(1, cin, cout, h_out, h_out)
+    } else {
+        0.0
+    };
+    // residual add closes the block — cut allowed after it
+    layers.push(Layer::new(
+        format!("{name}_add"),
+        LayerKind::Glue,
+        proj_flops + act_flops(cout * h_out * h_out, 2.0),
+        proj_params,
+        cout * h_out * h_out,
+    ));
+    h_out
+}
+
+/// Build ResNet-50 for a square input of side `img` (224 in the paper).
+pub fn resnet50(img: u64) -> Network {
+    assert!(img % 32 == 0, "resnet50 needs input divisible by 32");
+    let mut layers = Vec::new();
+    let mut h = img / 2; // conv1 stride 2
+    layers.push(Layer::new(
+        "conv1",
+        LayerKind::Conv2d,
+        conv2d_flops(7, 3, 64, h, h),
+        conv2d_params(7, 3, 64),
+        64 * h * h,
+    ));
+    h /= 2; // maxpool stride 2
+    layers.push(Layer::new("pool1", LayerKind::Pool, act_flops(64 * h * h, 1.0), 0, 64 * h * h));
+
+    let stages: [(u64, u64, u64, usize); 4] =
+        [(64, 64, 256, 3), (256, 128, 512, 4), (512, 256, 1024, 6), (1024, 512, 2048, 3)];
+    let mut cin;
+    let mut cur_in = 64u64;
+    for (si, &(_, cmid, cout, nblocks)) in stages.iter().enumerate() {
+        for b in 0..nblocks {
+            let stride = if si > 0 && b == 0 { 2 } else { 1 };
+            let name = format!("res{}_{}", si + 2, b + 1);
+            h = bottleneck(&mut layers, &name, cur_in, cmid, cout, h, stride);
+            cur_in = cout;
+        }
+        cin = cout;
+        let _ = cin;
+    }
+    // global average pool + fc
+    layers.push(Layer::new("avgpool", LayerKind::Pool, act_flops(2048 * h * h, 1.0), 0, 2048));
+    layers.push(Layer::new(
+        "fc",
+        LayerKind::Linear,
+        linear_flops(2048, 1000, 1),
+        linear_params(2048, 1000),
+        1000,
+    ));
+    layers.push(Layer::new("softmax", LayerKind::Softmax, act_flops(1000, 5.0), 0, 1000));
+    Network::new("resnet50", layers, 3 * img * img)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn param_count_matches_reference() {
+        // Canonical ResNet-50: 25.557M params (ours omits batchnorms'
+        // 53k affine params folded into convs' bias terms — within 1%).
+        let n = resnet50(224);
+        let p = n.total_params() as f64;
+        assert!((p - 25.55e6).abs() / 25.55e6 < 0.02, "resnet50 params {p}");
+    }
+
+    #[test]
+    fn flops_matches_reference() {
+        // Canonical: ~4.1 GMACs = ~8.2 GFLOPs fwd.
+        let n = resnet50(224);
+        let g = n.total_flops_fwd() / 1e9;
+        assert!(g > 7.5 && g < 9.0, "resnet50 fwd GFLOPs {g}");
+    }
+
+    #[test]
+    fn cuts_only_at_block_boundaries() {
+        let n = resnet50(224);
+        for i in n.legal_cuts() {
+            let l = &n.layers[i];
+            assert!(
+                !l.name.ends_with("_a") && !l.name.ends_with("_b") && !l.name.ends_with("_c"),
+                "illegal cut point inside block: {}",
+                l.name
+            );
+        }
+        // 16 blocks → at least 16 block-boundary cuts + stem
+        assert!(n.legal_cuts().len() >= 17);
+    }
+
+    #[test]
+    fn block_count() {
+        let n = resnet50(224);
+        let adds = n.layers.iter().filter(|l| l.name.ends_with("_add")).count();
+        assert_eq!(adds, 16); // 3+4+6+3
+    }
+}

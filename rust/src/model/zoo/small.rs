@@ -1,0 +1,97 @@
+//! Small networks for tests, examples and fast exploration demos.
+
+use crate::model::costs::*;
+use crate::model::{Layer, LayerKind, Network};
+
+/// AlexNet (Krizhevsky 2012) — 5 conv + 3 FC, ~61M params.
+pub fn alexnet() -> Network {
+    let mut layers = Vec::new();
+    // (name, k, cin, cout, hout, pool_after)
+    let convs: [(&str, u64, u64, u64, u64, bool); 5] = [
+        ("conv1", 11, 3, 96, 55, true),
+        ("conv2", 5, 96, 256, 27, true),
+        ("conv3", 3, 256, 384, 13, false),
+        ("conv4", 3, 384, 384, 13, false),
+        ("conv5", 3, 384, 256, 13, true),
+    ];
+    let mut h;
+    for (name, k, cin, cout, hout, pool) in convs {
+        layers.push(Layer::new(
+            name,
+            LayerKind::Conv2d,
+            conv2d_flops(k, cin, cout, hout, hout),
+            conv2d_params(k, cin, cout),
+            cout * hout * hout,
+        ));
+        h = hout;
+        if pool {
+            let hp = (h - 1) / 2;
+            layers.push(Layer::new(
+                format!("{name}_pool"),
+                LayerKind::Pool,
+                act_flops(cout * hp * hp, 1.0),
+                0,
+                cout * hp * hp,
+            ));
+        }
+    }
+    for (i, (inp, out)) in [(256u64 * 6 * 6, 4096u64), (4096, 4096), (4096, 1000)]
+        .iter()
+        .enumerate()
+    {
+        layers.push(Layer::new(
+            format!("fc{}", i + 6),
+            LayerKind::Linear,
+            linear_flops(*inp, *out, 1),
+            linear_params(*inp, *out),
+            *out,
+        ));
+    }
+    layers.push(Layer::new("softmax", LayerKind::Softmax, act_flops(1000, 5.0), 0, 1000));
+    Network::new("alexnet", layers, 3 * 224 * 224)
+}
+
+/// A plain MLP over the given layer widths (`dims[0]` is the input width).
+pub fn mlp(dims: &[u64]) -> Network {
+    assert!(dims.len() >= 2, "mlp needs at least input+output dims");
+    let layers = dims
+        .windows(2)
+        .enumerate()
+        .map(|(i, w)| {
+            Layer::new(
+                format!("fc{i}"),
+                LayerKind::Linear,
+                linear_flops(w[0], w[1], 1),
+                linear_params(w[0], w[1]),
+                w[1],
+            )
+        })
+        .collect();
+    Network::new("mlp", layers, dims[0])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alexnet_params() {
+        // Canonical AlexNet: ~61M (62.38M with local-response-norm variants).
+        let p = alexnet().total_params() as f64;
+        assert!(p > 55e6 && p < 65e6, "alexnet params {p}");
+    }
+
+    #[test]
+    fn mlp_structure() {
+        let n = mlp(&[784, 512, 256, 10]);
+        assert_eq!(n.len(), 3);
+        assert_eq!(n.total_params(), (784 * 512 + 512) + (512 * 256 + 256) + (256 * 10 + 10));
+        assert_eq!(n.input_elems, 784);
+    }
+
+    #[test]
+    #[should_panic(expected = "at least input+output")]
+    fn mlp_too_short() {
+        mlp(&[10]);
+    }
+}

@@ -1,0 +1,159 @@
+//! Decoder-only Transformer LM — the workload the **real** training engine
+//! runs end-to-end (L2 lowers exactly this structure to per-stage HLO).
+//! The rust-side cost IR here must stay consistent with
+//! `python/compile/model.py`; the manifest round-trip test checks that.
+
+use crate::model::costs::*;
+use crate::model::{Layer, LayerKind, Network};
+
+/// Transformer LM hyper-parameters (mirrors `python/compile/model.py`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TransformerCfg {
+    /// Model (residual-stream) dimension.
+    pub d_model: u64,
+    /// Number of transformer blocks.
+    pub n_layers: u64,
+    /// Attention heads.
+    pub n_heads: u64,
+    /// Vocabulary size.
+    pub vocab: u64,
+    /// Sequence length.
+    pub seq: u64,
+}
+
+impl TransformerCfg {
+    /// ~10M-param config — the default e2e loss-curve run (1 CPU core).
+    pub fn lm10m() -> Self {
+        Self { d_model: 256, n_layers: 8, n_heads: 8, vocab: 4096, seq: 64 }
+    }
+
+    /// ~100M-param config — paper-scale validation (fewer steps on CPU).
+    pub fn lm100m() -> Self {
+        Self { d_model: 768, n_layers: 12, n_heads: 12, vocab: 8192, seq: 64 }
+    }
+
+    /// ~1M smoke config for integration tests.
+    pub fn lm1m() -> Self {
+        Self { d_model: 128, n_layers: 4, n_heads: 4, vocab: 512, seq: 32 }
+    }
+
+    /// Exact parameter count (embeddings + blocks + final norm; the LM
+    /// head shares the embedding matrix, matching the python model).
+    pub fn param_count(&self) -> u64 {
+        let d = self.d_model;
+        let embed = self.vocab * d + self.seq * d;
+        let per_block = attention_params(d) + mlp_params(d) + 2 * norm_params(d);
+        embed + self.n_layers * per_block + norm_params(d)
+    }
+}
+
+/// Build the cost-model view of the transformer LM.
+pub fn transformer_lm(cfg: &TransformerCfg) -> Network {
+    let d = cfg.d_model;
+    let s = cfg.seq;
+    let mut layers = Vec::new();
+    layers.push(Layer::new(
+        "embed",
+        LayerKind::Embedding,
+        act_flops(s * d, 1.0),
+        cfg.vocab * d + s * d,
+        s * d,
+    ));
+    for b in 0..cfg.n_layers {
+        // One block = ln1 + attention + ln2 + mlp, flattened; cuts only
+        // after the complete block (residual stream crosses sub-layers).
+        layers.push(
+            Layer::new(
+                format!("blk{b}_ln1"),
+                LayerKind::Norm,
+                norm_flops(s * d),
+                norm_params(d),
+                s * d,
+            )
+            .no_cut(),
+        );
+        layers.push(
+            Layer::new(
+                format!("blk{b}_attn"),
+                LayerKind::Attention,
+                attention_flops(d, s),
+                attention_params(d),
+                s * d,
+            )
+            .no_cut(),
+        );
+        layers.push(
+            Layer::new(
+                format!("blk{b}_ln2"),
+                LayerKind::Norm,
+                norm_flops(s * d),
+                norm_params(d),
+                s * d,
+            )
+            .no_cut(),
+        );
+        layers.push(Layer::new(
+            format!("blk{b}_mlp"),
+            LayerKind::Linear,
+            mlp_flops(d, s),
+            mlp_params(d),
+            s * d,
+        ));
+    }
+    layers.push(Layer::new("ln_f", LayerKind::Norm, norm_flops(s * d), norm_params(d), s * d));
+    layers.push(Layer::new(
+        "lm_head",
+        LayerKind::Linear,
+        linear_flops(d, cfg.vocab, s),
+        0, // tied to embedding
+        s * cfg.vocab,
+    ));
+    layers.push(Layer::new(
+        "loss",
+        LayerKind::Softmax,
+        act_flops(s * cfg.vocab, 5.0),
+        0,
+        1,
+    ));
+    Network::new(
+        format!("lm-d{}-l{}", cfg.d_model, cfg.n_layers),
+        layers,
+        s, // token ids
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lm10m_is_about_10m() {
+        let p = TransformerCfg::lm10m().param_count() as f64;
+        assert!(p > 6e6 && p < 14e6, "lm10m params {p}");
+    }
+
+    #[test]
+    fn lm100m_is_about_100m() {
+        let p = TransformerCfg::lm100m().param_count() as f64;
+        assert!(p > 85e6 && p < 120e6, "lm100m params {p}");
+    }
+
+    #[test]
+    fn network_params_match_cfg_count() {
+        let cfg = TransformerCfg::lm10m();
+        let n = transformer_lm(&cfg);
+        assert_eq!(n.total_params(), cfg.param_count());
+    }
+
+    #[test]
+    fn cuts_only_after_blocks() {
+        let n = transformer_lm(&TransformerCfg::lm1m());
+        for i in n.legal_cuts() {
+            let name = &n.layers[i].name;
+            assert!(
+                name == "embed" || name.ends_with("_mlp") || name == "ln_f" || name == "lm_head",
+                "bad cut point {name}"
+            );
+        }
+    }
+}

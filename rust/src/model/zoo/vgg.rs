@@ -1,0 +1,96 @@
+//! VGG-16 (configuration D, Simonyan & Zisserman 2014) — 13 conv + 3 FC
+//! layers, ~138.4M parameters at 224×224 input.
+
+use crate::model::costs::*;
+use crate::model::{Layer, LayerKind, Network};
+
+/// Build VGG-16 for a square input of side `img` (224 in the paper).
+pub fn vgg16(img: u64) -> Network {
+    assert!(img % 32 == 0, "vgg16 needs input divisible by 32");
+    let mut layers = Vec::new();
+    let mut h = img;
+    let mut cin = 3u64;
+    // (n_convs, channels) per block — configuration D.
+    let blocks = [(2u64, 64u64), (2, 128), (3, 256), (3, 512), (3, 512)];
+    for (bi, &(n, cout)) in blocks.iter().enumerate() {
+        for ci in 0..n {
+            let name = format!("conv{}_{}", bi + 1, ci + 1);
+            let f = conv2d_flops(3, cin, cout, h, h);
+            let act = cout * h * h;
+            layers.push(Layer::new(name, LayerKind::Conv2d, f, conv2d_params(3, cin, cout), act));
+            // ReLU folded into the conv cost model (negligible) — explicit
+            // layer omitted to keep the cut-point set at conv granularity.
+            cin = cout;
+        }
+        h /= 2;
+        layers.push(Layer::new(
+            format!("pool{}", bi + 1),
+            LayerKind::Pool,
+            act_flops(cin * h * h, 1.0),
+            0,
+            cin * h * h,
+        ));
+    }
+    // Classifier: 512*7*7 → 4096 → 4096 → 1000.
+    let flat = cin * h * h;
+    for (i, (inp, out)) in [(flat, 4096u64), (4096, 4096), (4096, 1000)].iter().enumerate() {
+        layers.push(Layer::new(
+            format!("fc{}", i + 6),
+            LayerKind::Linear,
+            linear_flops(*inp, *out, 1),
+            linear_params(*inp, *out),
+            *out,
+        ));
+    }
+    layers.push(Layer::new("softmax", LayerKind::Softmax, act_flops(1000, 5.0), 0, 1000));
+    Network::new("vgg16", layers, 3 * img * img)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn param_count_matches_reference() {
+        // Canonical VGG-16: 138,357,544 parameters.
+        let n = vgg16(224);
+        let p = n.total_params();
+        assert!(
+            (p as i64 - 138_357_544i64).abs() < 200_000,
+            "vgg16 params {p} should be ≈138.36M"
+        );
+    }
+
+    #[test]
+    fn flops_matches_reference() {
+        // Canonical VGG-16 fwd: ~15.5 GMACs = ~31 GFLOPs at 224².
+        let n = vgg16(224);
+        let g = n.total_flops_fwd() / 1e9;
+        assert!(g > 29.0 && g < 33.0, "vgg16 fwd GFLOPs {g}");
+    }
+
+    #[test]
+    fn layer_structure() {
+        let n = vgg16(224);
+        // 13 conv + 5 pool + 3 fc + softmax = 22
+        assert_eq!(n.len(), 22);
+        assert_eq!(n.layers[0].name, "conv1_1");
+        // fc6 dominates params (102.8M)
+        let fc6 = n.layers.iter().find(|l| l.name == "fc6").unwrap();
+        assert_eq!(fc6.params, 25088 * 4096 + 4096);
+    }
+
+    #[test]
+    fn activations_shrink_monotonically_across_pools() {
+        let n = vgg16(224);
+        let pools: Vec<u64> = n
+            .layers
+            .iter()
+            .filter(|l| l.kind == LayerKind::Pool)
+            .map(|l| l.act_out_elems)
+            .collect();
+        for w in pools.windows(2) {
+            assert!(w[1] <= w[0]);
+        }
+    }
+}

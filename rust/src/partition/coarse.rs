@@ -1,0 +1,77 @@
+//! Coarse-grained partition based on communication (Section 3.3.3): when
+//! the inter-stage transfer time exceeds the stage compute time, restrict
+//! cuts to edges whose activation size is below the threshold `a_th`, so
+//! the coarse network "no longer suffers from a communication bottleneck".
+
+use crate::profile::Profile;
+
+/// Filter `cuts` down to edges whose per-sample activation bytes are at
+/// most `a_th` bytes.
+pub fn allowed_cuts(profile: &Profile, cuts: &[usize], a_th: f64) -> Vec<usize> {
+    cuts.iter().copied().filter(|&c| (profile.cut_bytes(c) as f64) <= a_th).collect()
+}
+
+/// The smallest `a_th` that still leaves at least `need` cut points —
+/// used when the ideal threshold is infeasible and we must trade some
+/// communication overlap for feasibility.
+pub fn relax_threshold(profile: &Profile, cuts: &[usize], need: usize) -> Option<f64> {
+    let mut sizes: Vec<f64> = cuts.iter().map(|&c| profile.cut_bytes(c) as f64).collect();
+    if sizes.len() < need {
+        return None;
+    }
+    sizes.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    Some(sizes[need - 1])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::presets;
+    use crate::model::zoo;
+    use crate::profile::analytical;
+
+    #[test]
+    fn threshold_filters_big_edges() {
+        let net = zoo::vgg16(224);
+        let cl = presets::v100_cluster(2);
+        let prof = analytical::profile(&net, &cl);
+        let cuts = net.legal_cuts();
+        let all = allowed_cuts(&prof, &cuts, f64::INFINITY);
+        assert_eq!(all.len(), cuts.len());
+        // A tight threshold keeps only late (small-activation) edges.
+        let small = allowed_cuts(&prof, &cuts, 64.0 * 1024.0);
+        assert!(!small.is_empty());
+        assert!(small.len() < cuts.len());
+        for &c in &small {
+            assert!(prof.cut_bytes(c) <= 64 * 1024);
+        }
+        // VGG activations shrink with depth → allowed cuts are the later ones
+        let min_allowed = *small.iter().min().unwrap();
+        let disallowed_late =
+            cuts.iter().filter(|&&c| c > min_allowed && !small.contains(&c)).count();
+        let disallowed_early = cuts.iter().filter(|&&c| c < min_allowed).count();
+        assert!(disallowed_early >= disallowed_late);
+    }
+
+    #[test]
+    fn relax_threshold_keeps_exactly_need() {
+        let net = zoo::vgg16(224);
+        let cl = presets::v100_cluster(4);
+        let prof = analytical::profile(&net, &cl);
+        let cuts = net.legal_cuts();
+        let th = relax_threshold(&prof, &cuts, 3).unwrap();
+        let kept = allowed_cuts(&prof, &cuts, th);
+        assert!(kept.len() >= 3);
+        // one fewer than the 3rd-smallest leaves < 3
+        let kept2 = allowed_cuts(&prof, &cuts, th * 0.999);
+        assert!(kept2.len() <= kept.len());
+    }
+
+    #[test]
+    fn relax_threshold_infeasible() {
+        let net = zoo::mlp(&[4, 4]);
+        let cl = presets::v100_cluster(1);
+        let prof = analytical::profile(&net, &cl);
+        assert!(relax_threshold(&prof, &[], 1).is_none());
+    }
+}

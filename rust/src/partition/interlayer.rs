@@ -1,0 +1,345 @@
+//! Inter-layer partition (Section 3.3.1).
+//!
+//! * [`eq1_ideal_time`] — the harmonic-mean ideal stage time of Eq. 1:
+//!   `T = 1 / Σₙ (1/Tₙ)` where `Tₙ` is the whole-network time on device n.
+//! * [`seed_partition`] — greedy partition targeting `T` per stage
+//!   (the paper's "partitions DNN according to T firstly").
+//! * [`refine`] — iterative boundary hill-climbing ("then iterates to
+//!   load balancing").
+//! * [`dp_optimal`] — exact min-max-stage-cost dynamic program over legal
+//!   cuts (the PipeDream-style DP, extended with per-device times for
+//!   heterogeneous clusters and an optional per-cut communication cost).
+
+use super::Partition;
+use crate::cluster::Cluster;
+use crate::profile::Profile;
+
+/// Eq. 1: ideal per-stage time given whole-network times per device.
+pub fn eq1_ideal_time(profile: &Profile) -> f64 {
+    let inv_sum: f64 = (0..profile.n_devices()).map(|d| 1.0 / profile.whole_net_time(d)).sum();
+    1.0 / inv_sum
+}
+
+/// Per-layer (fwd+bwd) time on device `d` at micro-batch `micro`.
+fn layer_time(profile: &Profile, d: usize, l: usize, micro: f64) -> f64 {
+    profile.fwd_time(d, l, l + 1, micro) + profile.bwd_time(d, l, l + 1, micro)
+}
+
+/// Greedy seed: walk the layers, assigning to device `d` until its stage
+/// time reaches the Eq.-1 share, cutting at the nearest legal cut.
+pub fn seed_partition(
+    profile: &Profile,
+    cluster: &Cluster,
+    cuts: &[usize],
+    micro: f64,
+) -> crate::Result<Partition> {
+    let n = cluster.len();
+    let l_total = profile.n_layers();
+    if n == 1 {
+        return Ok(Partition::new(vec![0, l_total], l_total));
+    }
+    let t_ideal = eq1_ideal_time(profile) * micro;
+    let mut bounds = vec![0usize];
+    let mut lo = 0usize;
+    for d in 0..n - 1 {
+        // accumulate until stage time ≥ ideal, then snap to a legal cut
+        let mut acc = 0.0;
+        let mut l = lo;
+        while l < l_total && acc < t_ideal {
+            acc += layer_time(profile, d, l, micro);
+            l += 1;
+        }
+        // snap: nearest legal cut boundary b (cut after layer c means bound c+1)
+        let remaining_stages = n - 1 - d;
+        let bound = snap_to_cut(cuts, l, lo, l_total, remaining_stages)?;
+        bounds.push(bound);
+        lo = bound;
+    }
+    bounds.push(l_total);
+    Ok(Partition::new(bounds, l_total))
+}
+
+/// Snap a desired boundary to the nearest legal cut in `(lo, hi)`, keeping
+/// at least `remaining` cuts available to the right.
+fn snap_to_cut(
+    cuts: &[usize],
+    desired: usize,
+    lo: usize,
+    l_total: usize,
+    remaining: usize,
+) -> crate::Result<usize> {
+    // legal bounds are cut+1 for cut in cuts, within (lo, l_total)
+    let mut best: Option<usize> = None;
+    let mut best_dist = usize::MAX;
+    for &c in cuts {
+        let b = c + 1;
+        if b <= lo || b >= l_total {
+            continue;
+        }
+        // must leave enough legal cuts strictly to the right for the
+        // remaining stage boundaries
+        let right = cuts.iter().filter(|&&c2| c2 + 1 > b && c2 + 1 < l_total).count();
+        if right + 1 < remaining {
+            continue;
+        }
+        let dist = b.abs_diff(desired);
+        if dist < best_dist {
+            best_dist = dist;
+            best = Some(b);
+        }
+    }
+    best.ok_or_else(|| anyhow::anyhow!("no legal cut available after layer {lo}"))
+}
+
+/// Max per-stage (F+B) time of a partition.
+pub fn max_stage_time(
+    profile: &Profile,
+    part: &Partition,
+    micro: f64,
+    comm: Option<&dyn Fn(usize) -> f64>,
+) -> f64 {
+    (0..part.n_stages())
+        .map(|i| {
+            let r = part.stage(i);
+            let t = profile.fwd_time(i, r.start, r.end, micro)
+                + profile.bwd_time(i, r.start, r.end, micro);
+            let c = comm.map(|f| if i + 1 < part.n_stages() { f(i) } else { 0.0 }).unwrap_or(0.0);
+            t + c
+        })
+        .fold(0.0, f64::max)
+}
+
+/// Iterative refinement: move stage boundaries to adjacent legal cuts
+/// while the max stage time decreases.
+pub fn refine(
+    profile: &Profile,
+    part: Partition,
+    cuts: &[usize],
+    micro: f64,
+) -> Partition {
+    let legal: std::collections::BTreeSet<usize> = cuts.iter().map(|&c| c + 1).collect();
+    let mut best = part;
+    let mut best_t = max_stage_time(profile, &best, micro, None);
+    loop {
+        let mut improved = false;
+        for bi in 1..best.bounds.len() - 1 {
+            for dir in [-1i64, 1] {
+                // next legal bound in direction `dir`
+                let cur = best.bounds[bi];
+                let cand = if dir < 0 {
+                    legal.range(..cur).next_back().copied()
+                } else {
+                    legal.range(cur + 1..).next().copied()
+                };
+                let Some(nb) = cand else { continue };
+                if nb <= best.bounds[bi - 1] || nb >= best.bounds[bi + 1] {
+                    continue;
+                }
+                let mut b2 = best.bounds.clone();
+                b2[bi] = nb;
+                let cand_part = Partition::new(b2, *best.bounds.last().unwrap());
+                let t = max_stage_time(profile, &cand_part, micro, None);
+                if t < best_t - 1e-15 {
+                    best = cand_part;
+                    best_t = t;
+                    improved = true;
+                }
+            }
+        }
+        if !improved {
+            return best;
+        }
+    }
+}
+
+/// Exact DP over legal cuts minimizing the maximum per-stage cost, with an
+/// optional extra cost per cut (communication). `O(N · C²)` for C cuts.
+pub fn dp_optimal(
+    profile: &Profile,
+    cluster: &Cluster,
+    cuts: &[usize],
+    micro: f64,
+    cut_cost: Option<&dyn Fn(usize, usize) -> f64>, // (stage, cut_layer) -> secs
+) -> crate::Result<Partition> {
+    let n = cluster.len();
+    let l_total = profile.n_layers();
+    if n == 1 {
+        return Ok(Partition::new(vec![0, l_total], l_total));
+    }
+    // candidate boundaries: 0, each cut+1, L
+    let mut bpts: Vec<usize> = std::iter::once(0)
+        .chain(cuts.iter().map(|&c| c + 1).filter(|&b| b > 0 && b < l_total))
+        .chain(std::iter::once(l_total))
+        .collect();
+    bpts.dedup();
+    let k = bpts.len();
+    anyhow::ensure!(k >= n + 1, "not enough cut points ({}) for {} stages", k - 2, n);
+
+    // stage cost of device d covering bpts[a]..bpts[b]
+    let cost = |d: usize, a: usize, b: usize| -> f64 {
+        let (lo, hi) = (bpts[a], bpts[b]);
+        let mut t =
+            profile.fwd_time(d, lo, hi, micro) + profile.bwd_time(d, lo, hi, micro);
+        if d + 1 < n {
+            if let Some(cc) = cut_cost {
+                t += cc(d, hi - 1);
+            }
+        }
+        t
+    };
+
+    // dp[d][j] = min over i<j of max(dp[d-1][i], cost(d, i, j))
+    const INF: f64 = f64::INFINITY;
+    let mut dp = vec![vec![INF; k]; n];
+    let mut back = vec![vec![usize::MAX; k]; n];
+    for j in 1..k {
+        dp[0][j] = cost(0, 0, j);
+        back[0][j] = 0;
+    }
+    for d in 1..n {
+        for j in d + 1..k {
+            for i in d..j {
+                if dp[d - 1][i] == INF {
+                    continue;
+                }
+                let c = dp[d - 1][i].max(cost(d, i, j));
+                if c < dp[d][j] {
+                    dp[d][j] = c;
+                    back[d][j] = i;
+                }
+            }
+        }
+    }
+    anyhow::ensure!(dp[n - 1][k - 1] < INF, "DP found no feasible partition");
+    // reconstruct
+    let mut bounds = vec![l_total];
+    let mut j = k - 1;
+    for d in (0..n).rev() {
+        let i = back[d][j];
+        bounds.push(bpts[i]);
+        j = i;
+    }
+    bounds.reverse();
+    Ok(Partition::new(bounds, l_total))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::presets;
+    use crate::model::zoo;
+    use crate::profile::analytical;
+    use crate::util::prop::{check, ensure, Config};
+
+    #[test]
+    fn eq1_homogeneous_is_t_over_n() {
+        let net = zoo::vgg16(224);
+        let cl = presets::v100_cluster(4);
+        let p = analytical::profile(&net, &cl);
+        let t = eq1_ideal_time(&p);
+        let t1 = p.whole_net_time(0);
+        assert!((t - t1 / 4.0).abs() / t < 1e-9);
+    }
+
+    #[test]
+    fn eq1_heterogeneous_harmonic() {
+        let net = zoo::resnet50(224);
+        let cl = presets::fpga_cluster(&["VCU129", "VCU118"]);
+        let p = analytical::profile(&net, &cl);
+        let t = eq1_ideal_time(&p);
+        let (t1, t2) = (p.whole_net_time(0), p.whole_net_time(1));
+        assert!((t - 1.0 / (1.0 / t1 + 1.0 / t2)).abs() / t < 1e-9);
+        // ideal stage time is less than either device's share alone
+        assert!(t < t1 && t < t2);
+    }
+
+    #[test]
+    fn dp_beats_or_matches_seed_plus_refine() {
+        let net = zoo::vgg16(224);
+        let cl = presets::v100_cluster(4);
+        let prof = analytical::profile(&net, &cl);
+        let cuts = net.legal_cuts();
+        let seed = seed_partition(&prof, &cl, &cuts, 8.0).unwrap();
+        let refined = refine(&prof, seed.clone(), &cuts, 8.0);
+        let dp = dp_optimal(&prof, &cl, &cuts, 8.0, None).unwrap();
+        let t_seed = max_stage_time(&prof, &seed, 8.0, None);
+        let t_ref = max_stage_time(&prof, &refined, 8.0, None);
+        let t_dp = max_stage_time(&prof, &dp, 8.0, None);
+        assert!(t_ref <= t_seed + 1e-12);
+        assert!(t_dp <= t_ref + 1e-12, "DP {t_dp} must be ≤ refined {t_ref}");
+    }
+
+    #[test]
+    fn dp_single_stage() {
+        let net = zoo::mlp(&[64, 64, 64]);
+        let cl = presets::v100_cluster(1);
+        let prof = analytical::profile(&net, &cl);
+        let p = dp_optimal(&prof, &cl, &net.legal_cuts(), 1.0, None).unwrap();
+        assert_eq!(p.bounds, vec![0, 2]);
+    }
+
+    #[test]
+    fn dp_respects_cut_restrictions() {
+        let net = zoo::resnet50(224);
+        let cl = presets::v100_cluster(4);
+        let prof = analytical::profile(&net, &cl);
+        let cuts = net.legal_cuts();
+        let p = dp_optimal(&prof, &cl, &cuts, 4.0, None).unwrap();
+        for &b in &p.bounds[1..p.bounds.len() - 1] {
+            assert!(cuts.contains(&(b - 1)), "bound {b} not at a legal cut");
+        }
+    }
+
+    #[test]
+    fn dp_optimality_property_vs_bruteforce() {
+        // On random small profiles, DP must equal brute-force enumeration.
+        check(
+            &Config { cases: 60, ..Default::default() },
+            |g| {
+                let l = g.usize_in(3, 10);
+                let n = g.usize_in(2, l.min(4) + 1);
+                let times: Vec<f64> = (0..l).map(|_| g.f64_in(0.1, 10.0)).collect();
+                (l, n, times)
+            },
+            |(l, n, times)| {
+                let net = zoo::mlp(&vec![8u64; l + 1]); // l linear layers
+                let cl = presets::v100_cluster(*n);
+                let mut prof = analytical::profile(&net, &cl);
+                for d in 0..*n {
+                    for (i, t) in times.iter().enumerate() {
+                        prof.per_device[d][i].fwd = *t;
+                        prof.per_device[d][i].bwd = *t;
+                        prof.per_device[d][i].half_sat = 0.0;
+                    }
+                }
+                let cuts = net.legal_cuts();
+                let dp = dp_optimal(&prof, &cl, &cuts, 1.0, None).unwrap();
+                let t_dp = max_stage_time(&prof, &dp, 1.0, None);
+                // brute force over all C(l-1, n-1) partitions
+                let mut best = f64::INFINITY;
+                let mut stack = vec![(vec![0usize], 0usize)];
+                while let Some((bounds, _)) = stack.pop() {
+                    if bounds.len() == *n {
+                        let mut b = bounds.clone();
+                        b.push(*l);
+                        if b.windows(2).all(|w| w[0] < w[1]) {
+                            let p = Partition::new(b, *l);
+                            best = best.min(max_stage_time(&prof, &p, 1.0, None));
+                        }
+                        continue;
+                    }
+                    let lo = *bounds.last().unwrap();
+                    for nb in lo + 1..*l {
+                        let mut b2 = bounds.clone();
+                        b2.push(nb);
+                        stack.push((b2, 0));
+                    }
+                }
+                ensure(
+                    (t_dp - best).abs() < 1e-9,
+                    format!("dp {t_dp} != brute {best}"),
+                )
+            },
+        );
+    }
+}

@@ -1,0 +1,189 @@
+//! Intra-layer partition (Section 3.3.2, after FPDeep): fractionally split
+//! the boundary layer between adjacent stages so heterogeneous devices
+//! reach exact balance. Applied only when communication is not the
+//! bottleneck (it adds boundary traffic) and only on async (FPGA)
+//! clusters, whose fine-grained pipelines can split a layer's output
+//! channels/neurons across boards.
+
+use super::Partition;
+use crate::cluster::Cluster;
+use crate::profile::Profile;
+
+/// A fractional partition: stage `i` owns the continuous layer interval
+/// `[x[i], x[i+1])` where layer `l`'s interior corresponds to `[l, l+1)`.
+#[derive(Debug, Clone)]
+pub struct FracPartition {
+    /// Continuous boundaries, length `n_stages+1`, `x[0]=0`, `x[n]=L`.
+    pub x: Vec<f64>,
+    /// Max/min stage time ratio − 1 before fractional refinement.
+    pub imbalance_before: f64,
+    /// Same after refinement (≈0 for feasible cases).
+    pub imbalance_after: f64,
+}
+
+/// Stage time under a fractional boundary vector (per micro-batch).
+fn stage_time_frac(profile: &Profile, d: usize, lo: f64, hi: f64, micro: f64) -> f64 {
+    let (f, b) = frac_fwd_bwd(profile, d, lo, hi, micro);
+    f + b
+}
+
+/// (fwd, bwd) time of the fractional interval `[lo, hi)` on device `d`.
+pub fn frac_fwd_bwd(profile: &Profile, d: usize, lo: f64, hi: f64, micro: f64) -> (f64, f64) {
+    let l_total = profile.n_layers();
+    let mut f = 0.0;
+    let mut b = 0.0;
+    let mut l = lo.floor() as usize;
+    while (l as f64) < hi && l < l_total {
+        let seg_lo = lo.max(l as f64);
+        let seg_hi = hi.min((l + 1) as f64);
+        let frac = (seg_hi - seg_lo).max(0.0);
+        f += profile.fwd_time(d, l, l + 1, micro) * frac;
+        b += profile.bwd_time(d, l, l + 1, micro) * frac;
+        l += 1;
+    }
+    (f, b)
+}
+
+/// Per-stage (fwd, bwd) costs of a fractional partition — feeds the DES
+/// the same way `partition::stage_costs` does for integral partitions.
+pub fn frac_stage_costs(
+    profile: &Profile,
+    fp: &FracPartition,
+    micro: f64,
+) -> Vec<(f64, f64)> {
+    let n = fp.x.len() - 1;
+    (0..n).map(|d| frac_fwd_bwd(profile, d, fp.x[d], fp.x[d + 1], micro)).collect()
+}
+
+/// Imbalance of a boundary vector: `max/min − 1` over stage times.
+fn imbalance(profile: &Profile, x: &[f64], micro: f64) -> f64 {
+    let n = x.len() - 1;
+    let times: Vec<f64> =
+        (0..n).map(|d| stage_time_frac(profile, d, x[d], x[d + 1], micro)).collect();
+    let max = times.iter().cloned().fold(0.0, f64::max);
+    let min = times.iter().cloned().fold(f64::INFINITY, f64::min);
+    if min <= 0.0 {
+        f64::INFINITY
+    } else {
+        max / min - 1.0
+    }
+}
+
+/// Refine an integral partition into a balanced fractional one: bisection
+/// on the common stage time `T`, greedily advancing each boundary until
+/// its stage reaches `T`.
+pub fn refine_fractional(
+    profile: &Profile,
+    cluster: &Cluster,
+    part: &Partition,
+    micro: f64,
+) -> FracPartition {
+    let n = cluster.len();
+    let l_total = profile.n_layers() as f64;
+    let x0: Vec<f64> = part.bounds.iter().map(|&b| b as f64).collect();
+    let before = imbalance(profile, &x0, micro);
+
+    // Bisection on T: find T such that consuming T per stage exactly
+    // exhausts the layer interval.
+    let total_each: Vec<f64> =
+        (0..n).map(|d| stage_time_frac(profile, d, 0.0, l_total, micro)).collect();
+    let mut t_lo = 0.0;
+    let mut t_hi = total_each.iter().cloned().fold(0.0, f64::max);
+    let consumed = |t: f64| -> (f64, Vec<f64>) {
+        let mut x = vec![0.0];
+        let mut pos = 0.0;
+        for d in 0..n {
+            // advance pos until stage_time(d, start..pos) == t (or end)
+            let start = pos;
+            let mut lo = start;
+            let mut hi = l_total;
+            if stage_time_frac(profile, d, start, l_total, micro) <= t {
+                pos = l_total;
+            } else {
+                for _ in 0..60 {
+                    let mid = 0.5 * (lo + hi);
+                    if stage_time_frac(profile, d, start, mid, micro) < t {
+                        lo = mid;
+                    } else {
+                        hi = mid;
+                    }
+                }
+                pos = 0.5 * (lo + hi);
+            }
+            x.push(pos);
+        }
+        (pos, x)
+    };
+    let mut best_x = x0.clone();
+    for _ in 0..60 {
+        let t = 0.5 * (t_lo + t_hi);
+        let (end, x) = consumed(t);
+        if end >= l_total {
+            t_hi = t;
+            best_x = x;
+            best_x[n] = l_total; // snap final boundary
+        } else {
+            t_lo = t;
+        }
+    }
+    // Guard monotonicity.
+    for i in 1..best_x.len() {
+        if best_x[i] < best_x[i - 1] {
+            best_x[i] = best_x[i - 1];
+        }
+    }
+    let after = imbalance(profile, &best_x, micro);
+    FracPartition { x: best_x, imbalance_before: before, imbalance_after: after.min(before) }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::presets;
+    use crate::model::zoo;
+    use crate::partition::interlayer;
+    use crate::profile::analytical;
+
+    #[test]
+    fn fractional_improves_heterogeneous_balance() {
+        let net = zoo::vgg16(224);
+        let cl = presets::fpga_cluster(&["VCU129", "VCU118", "VCU118"]);
+        let prof = analytical::profile(&net, &cl);
+        let cuts = net.legal_cuts();
+        let part = interlayer::dp_optimal(&prof, &cl, &cuts, 1.0, None).unwrap();
+        let fp = refine_fractional(&prof, &cl, &part, 1.0);
+        assert!(
+            fp.imbalance_after <= fp.imbalance_before + 1e-12,
+            "{} -> {}",
+            fp.imbalance_before,
+            fp.imbalance_after
+        );
+        assert!(fp.imbalance_after < 0.05, "near-perfect balance: {}", fp.imbalance_after);
+        // boundaries monotone and spanning
+        assert_eq!(fp.x[0], 0.0);
+        assert_eq!(*fp.x.last().unwrap(), net.len() as f64);
+        assert!(fp.x.windows(2).all(|w| w[1] >= w[0]));
+    }
+
+    #[test]
+    fn stage_time_frac_linear_in_fraction() {
+        let net = zoo::mlp(&[128, 128, 128]);
+        let cl = presets::fpga_cluster(&["VCU118"]);
+        let prof = analytical::profile(&net, &cl);
+        let full = stage_time_frac(&prof, 0, 0.0, 1.0, 1.0);
+        let half = stage_time_frac(&prof, 0, 0.0, 0.5, 1.0);
+        assert!((half - 0.5 * full).abs() < 1e-15);
+    }
+
+    #[test]
+    fn homogeneous_fractional_equals_flops_share() {
+        let net = zoo::vgg16(224);
+        let cl = presets::fpga_cluster(&["VCU118", "VCU118"]);
+        let prof = analytical::profile(&net, &cl);
+        let part = interlayer::dp_optimal(&prof, &cl, &net.legal_cuts(), 1.0, None).unwrap();
+        let fp = refine_fractional(&prof, &cl, &part, 1.0);
+        let t0 = stage_time_frac(&prof, 0, fp.x[0], fp.x[1], 1.0);
+        let t1 = stage_time_frac(&prof, 1, fp.x[1], fp.x[2], 1.0);
+        assert!((t0 / t1 - 1.0).abs() < 0.02, "{t0} vs {t1}");
+    }
+}

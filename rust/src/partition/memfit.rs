@@ -1,0 +1,269 @@
+//! Memory model + fine-tune partition based on memory capacity (the last
+//! step of Fig. 3): verify every stage's working set fits its device, and
+//! if not, shift boundary layers toward neighbours with headroom.
+
+use super::Partition;
+use crate::cluster::Cluster;
+use crate::profile::Profile;
+use crate::schedule::ScheduleKind;
+
+/// Constants of the memory model (per-device overheads beyond raw tensors).
+#[derive(Debug, Clone)]
+pub struct MemoryModel {
+    /// Optimizer state bytes per parameter (8 = Adam fp32 moments,
+    /// 4 = SGD momentum, 0 = plain SGD).
+    pub optimizer_bytes_per_param: u64,
+    /// Extra communication buffer bytes per parameter (gradient buckets
+    /// for all-reduce; used by the DP baseline).
+    pub comm_bytes_per_param: u64,
+    /// Framework/runtime reserve per device, bytes (context, workspaces).
+    pub framework_reserve: u64,
+    /// Fraction of device capacity actually allocatable.
+    pub usable_fraction: f64,
+}
+
+impl Default for MemoryModel {
+    fn default() -> Self {
+        MemoryModel {
+            optimizer_bytes_per_param: 8,
+            comm_bytes_per_param: 0,
+            framework_reserve: 700 << 20, // 700 MiB
+            usable_fraction: 0.95,
+        }
+    }
+}
+
+impl MemoryModel {
+    /// The model used for DP baselines (adds the all-reduce bucket).
+    pub fn data_parallel() -> Self {
+        MemoryModel { comm_bytes_per_param: 4, ..Default::default() }
+    }
+
+    /// Usable bytes on a device.
+    pub fn usable(&self, capacity: u64) -> u64 {
+        ((capacity as f64 * self.usable_fraction) as u64).saturating_sub(self.framework_reserve)
+    }
+}
+
+/// Peak memory (bytes) of stage `i` of `n` under schedule `kind` with
+/// micro-batch size `micro` and `m` micro-batches per mini-batch.
+pub fn stage_memory_bytes(
+    profile: &Profile,
+    mm: &MemoryModel,
+    kind: ScheduleKind,
+    n: usize,
+    i: usize,
+    range: std::ops::Range<usize>,
+    micro: f64,
+    m: usize,
+) -> u64 {
+    let w = profile.param_bytes(range.start, range.end);
+    let params = w / profile.dtype_bytes;
+    // working weights + gradient accumulator + stashed versions
+    let weights = (2 + kind.weight_versions(n, i)) as u64 * w;
+    let opt = params * mm.optimizer_bytes_per_param;
+    let comm = params * mm.comm_bytes_per_param;
+    // activation stash: per in-flight micro-batch, everything BP needs
+    let stash =
+        kind.stash_depth(n, i, m) as u64 * (profile.stash_bytes(range.start, range.end) as f64 * micro) as u64;
+    // boundary I/O buffers (double-buffered in and out)
+    let io = 2 * (profile.stage_in_bytes(range.start) as f64 * micro) as u64
+        + 2 * (profile.cut_bytes(range.end - 1) as f64 * micro) as u64;
+    weights + opt + comm + stash + io
+}
+
+/// Memory of the whole net on one device under data parallelism with
+/// per-device batch `b` (baseline; stores *all* activations of a batch).
+pub fn dp_memory_bytes(profile: &Profile, mm: &MemoryModel, b: f64) -> u64 {
+    let l = profile.n_layers();
+    let w = profile.param_bytes(0, l);
+    let params = w / profile.dtype_bytes;
+    let weights = 2 * w;
+    let opt = params * mm.optimizer_bytes_per_param;
+    let comm = params * mm.comm_bytes_per_param;
+    let stash = (profile.stash_bytes(0, l) as f64 * b) as u64;
+    weights + opt + comm + stash
+}
+
+/// Result of the memory fine-tune pass.
+#[derive(Debug, Clone)]
+pub struct FitResult {
+    /// The (possibly adjusted) partition.
+    pub partition: Partition,
+    /// How many boundary moves were needed.
+    pub moved: usize,
+}
+
+/// Fine-tune `part` until every stage fits its device (or fail). Boundary
+/// moves stay on legal cuts (`cuts` are layer indices after which cutting
+/// is allowed).
+pub fn fit_memory(
+    profile: &Profile,
+    cluster: &Cluster,
+    part: Partition,
+    kind: ScheduleKind,
+    micro: f64,
+    m: usize,
+    cuts: &[usize],
+) -> crate::Result<FitResult> {
+    let mm = MemoryModel::default();
+    let legal: std::collections::BTreeSet<usize> = cuts.iter().map(|&c| c + 1).collect();
+    let n = part.n_stages();
+    let mut cur = part;
+    let mut moved = 0usize;
+    let max_moves = 4 * profile.n_layers();
+
+    let usage = |p: &Partition, i: usize| -> i64 {
+        let used = stage_memory_bytes(profile, &mm, kind, n, i, p.stage(i), micro, m);
+        used as i64 - mm.usable(cluster.devices[i].mem_capacity) as i64
+    };
+
+    loop {
+        // find the most-violating stage
+        let mut worst = None;
+        let mut worst_over = 0i64;
+        for i in 0..n {
+            let over = usage(&cur, i);
+            if over > worst_over {
+                worst_over = over;
+                worst = Some(i);
+            }
+        }
+        let Some(i) = worst else {
+            return Ok(FitResult { partition: cur, moved });
+        };
+        if moved >= max_moves {
+            anyhow::bail!(
+                "memory fine-tune failed: stage {i} over budget by {} after {moved} moves",
+                crate::util::fmt_bytes(worst_over as u64)
+            );
+        }
+        // Try shrinking stage i from either side toward a neighbour with
+        // headroom; pick the move that most reduces the global violation.
+        let mut best: Option<(usize, usize)> = None; // (bound index, new bound)
+        let mut best_score = worst_over;
+        // left boundary moves right (give first layers to stage i-1)
+        if i > 0 {
+            if let Some(&nb) = legal.range(cur.bounds[i] + 1..cur.bounds[i + 1]).next() {
+                let mut b2 = cur.bounds.clone();
+                b2[i] = nb;
+                let cand = Partition::new(b2, *cur.bounds.last().unwrap());
+                let score = (0..n).map(|s| usage(&cand, s).max(0)).max().unwrap();
+                if score < best_score {
+                    best_score = score;
+                    best = Some((i, nb));
+                }
+            }
+        }
+        // right boundary moves left (give last layers to stage i+1)
+        if i + 1 < n {
+            if let Some(&nb) = legal.range(cur.bounds[i] + 1..cur.bounds[i + 1]).next_back() {
+                let mut b2 = cur.bounds.clone();
+                b2[i + 1] = nb;
+                let cand = Partition::new(b2, *cur.bounds.last().unwrap());
+                let score = (0..n).map(|s| usage(&cand, s).max(0)).max().unwrap();
+                if score < best_score {
+                    best = Some((i + 1, nb));
+                }
+            }
+        }
+        match best {
+            Some((bi, nb)) => {
+                cur.bounds[bi] = nb;
+                moved += 1;
+            }
+            None => anyhow::bail!(
+                "memory fine-tune failed: stage {i} over budget by {} and no boundary move helps",
+                crate::util::fmt_bytes(worst_over as u64)
+            ),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::presets;
+    use crate::model::zoo;
+    use crate::partition::interlayer;
+    use crate::profile::analytical;
+
+    #[test]
+    fn stage_memory_components() {
+        let net = zoo::vgg16(224);
+        let cl = presets::v100_cluster(2);
+        let prof = analytical::profile(&net, &cl);
+        let mm = MemoryModel::default();
+        let all = net.len();
+        // one stage owning everything ≈ DP memory minus comm buffer
+        let m1 = stage_memory_bytes(
+            &prof, &mm, ScheduleKind::OneFOneBSno, 1, 0, 0..all, 1.0, 1,
+        );
+        let dp = dp_memory_bytes(&prof, &mm, 1.0);
+        let rel = (m1 as f64 - dp as f64).abs() / dp as f64;
+        assert!(rel < 0.1, "single-stage pipeline ≈ DP: {m1} vs {dp}");
+    }
+
+    #[test]
+    fn so_needs_more_activation_memory_than_sno() {
+        let net = zoo::vgg16(224);
+        let cl = presets::v100_cluster(4);
+        let prof = analytical::profile(&net, &cl);
+        let mm = MemoryModel::default();
+        let r = 0..5;
+        let sno = stage_memory_bytes(&prof, &mm, ScheduleKind::OneFOneBSno, 4, 0, r.clone(), 4.0, 16);
+        let so = stage_memory_bytes(&prof, &mm, ScheduleKind::OneFOneBSo, 4, 0, r, 4.0, 16);
+        assert!(so > sno, "SO {so} should exceed SNO {sno}");
+    }
+
+    #[test]
+    fn gpipe_memory_grows_with_m() {
+        let net = zoo::vgg16(224);
+        let cl = presets::v100_cluster(4);
+        let prof = analytical::profile(&net, &cl);
+        let mm = MemoryModel::default();
+        let a = stage_memory_bytes(&prof, &mm, ScheduleKind::GPipe, 4, 0, 0..5, 4.0, 4);
+        let b = stage_memory_bytes(&prof, &mm, ScheduleKind::GPipe, 4, 0, 0..5, 4.0, 32);
+        assert!(b > a);
+    }
+
+    #[test]
+    fn fit_noop_when_memory_ample() {
+        let net = zoo::vgg16(224);
+        let cl = presets::v100_cluster(4);
+        let prof = analytical::profile(&net, &cl);
+        let cuts = net.legal_cuts();
+        let p = interlayer::dp_optimal(&prof, &cl, &cuts, 4.0, None).unwrap();
+        let r = fit_memory(&prof, &cl, p.clone(), ScheduleKind::OneFOneBSno, 4.0, 8, &cuts)
+            .unwrap();
+        assert_eq!(r.moved, 0);
+        assert_eq!(r.partition, p);
+    }
+
+    #[test]
+    fn fit_fails_when_model_cannot_fit() {
+        // A giant GNMT on a single 16GB V100 cannot fit.
+        let net = zoo::gnmt_l(158);
+        let cl = presets::v100_cluster(1);
+        let prof = analytical::profile(&net, &cl);
+        let cuts = net.legal_cuts();
+        let p = Partition::new(vec![0, net.len()], net.len());
+        assert!(fit_memory(&prof, &cl, p, ScheduleKind::OneFOneBSno, 32.0, 2, &cuts).is_err());
+    }
+
+    #[test]
+    fn fit_moves_layers_off_overloaded_stage() {
+        // Force an unbalanced seed on a big model: stage 0 owns almost
+        // everything. The fine-tune must shift layers right.
+        let net = zoo::gnmt_l(60);
+        let cl = presets::v100_cluster(4);
+        let prof = analytical::profile(&net, &cl);
+        let cuts = net.legal_cuts();
+        let l = net.len();
+        let p = Partition::new(vec![0, l - 3, l - 2, l - 1, l], l);
+        let r = fit_memory(&prof, &cl, p, ScheduleKind::OneFOneBSno, 32.0, 8, &cuts).unwrap();
+        assert!(r.moved > 0);
+        // first stage now owns fewer layers
+        assert!(r.partition.bounds[1] < l - 3);
+    }
+}

@@ -1,0 +1,285 @@
+//! Balanced partition (Section 3.3): splitting the layer list into N
+//! contiguous stages balancing compute, communication and memory.
+//!
+//! The full Fig.-3 flow lives in [`balanced_partition`]:
+//! 1. inter-layer partition ([`interlayer`] — Eq. 1 seed, iterative
+//!    refinement, and a DP-optimal variant),
+//! 2. coarse-grained partition when communication is the bottleneck
+//!    ([`coarse`] — only cut where activations are below `a_th`),
+//! 3. intra-layer partition when it is not ([`intralayer`] — fractional
+//!    boundary layers, FPDeep-style),
+//! 4. fine-tune for memory capacity ([`memfit`]).
+
+pub mod coarse;
+pub mod interlayer;
+pub mod intralayer;
+pub mod memfit;
+
+use crate::cluster::{Cluster, ExecMode};
+use crate::profile::Profile;
+use crate::schedule::ScheduleKind;
+
+/// A partition of layers `0..L` into contiguous stages. `bounds` has
+/// `n_stages+1` entries: stage `i` owns layers `bounds[i]..bounds[i+1]`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Partition {
+    /// Stage boundaries (monotone, `bounds[0]==0`, `bounds[n]==L`).
+    pub bounds: Vec<usize>,
+}
+
+impl Partition {
+    /// Build from boundaries; validates shape.
+    pub fn new(bounds: Vec<usize>, n_layers: usize) -> Partition {
+        assert!(bounds.len() >= 2, "need at least one stage");
+        assert_eq!(bounds[0], 0, "first bound must be 0");
+        assert_eq!(*bounds.last().unwrap(), n_layers, "last bound must be L");
+        assert!(bounds.windows(2).all(|w| w[0] < w[1]), "stages must be non-empty & ordered");
+        Partition { bounds }
+    }
+
+    /// Number of stages.
+    pub fn n_stages(&self) -> usize {
+        self.bounds.len() - 1
+    }
+
+    /// Layer range of stage `i`.
+    pub fn stage(&self, i: usize) -> std::ops::Range<usize> {
+        self.bounds[i]..self.bounds[i + 1]
+    }
+
+    /// Which stage owns layer `l`.
+    pub fn stage_of(&self, l: usize) -> usize {
+        match self.bounds.binary_search(&l) {
+            Ok(i) => i.min(self.n_stages() - 1),
+            Err(i) => i - 1,
+        }
+    }
+
+    /// Human-readable, e.g. `[0..5 | 5..9 | 9..22]`.
+    pub fn describe(&self) -> String {
+        let parts: Vec<String> =
+            (0..self.n_stages()).map(|i| format!("{}..{}", self.bounds[i], self.bounds[i + 1])).collect();
+        format!("[{}]", parts.join(" | "))
+    }
+}
+
+/// Per-stage forward/backward compute times (seconds per micro-batch),
+/// including the FPGA weight-spill penalty: when a stage's weights exceed
+/// the device's on-chip capacity, weights stream from DDR every
+/// micro-batch and the stage becomes weight-bandwidth-bound (the Table 6
+/// effect; Section 4.3 "guarantee weights of each stage are stored in
+/// on-chip memory as much as possible").
+pub fn stage_costs(
+    profile: &Profile,
+    cluster: &Cluster,
+    part: &Partition,
+    micro: f64,
+) -> Vec<(f64, f64)> {
+    assert_eq!(part.n_stages(), cluster.len(), "one stage per device");
+    (0..part.n_stages())
+        .map(|i| {
+            let r = part.stage(i);
+            let dev = &cluster.devices[i];
+            let mut f = profile.fwd_time(i, r.start, r.end, micro);
+            let mut b = profile.bwd_time(i, r.start, r.end, micro);
+            if dev.exec == ExecMode::Async && dev.onchip_capacity > 0 {
+                let w_bytes = profile.param_bytes(r.start, r.end) as f64;
+                // ~75% of BRAM/URAM usable for weights (rest: buffers).
+                if w_bytes > 0.75 * dev.onchip_capacity as f64 {
+                    // Weight streaming from DDR bounds each pass.
+                    let stream = w_bytes / dev.mem_bw;
+                    f = f.max(stream);
+                    b = b.max(2.0 * stream); // read weights + write gradients
+                }
+            }
+            (f, b)
+        })
+        .collect()
+}
+
+/// Communication time (seconds) to ship one micro-batch's activations
+/// across the cut after stage `i` (same-size errors flow back in BP).
+pub fn cut_comm_time(
+    profile: &Profile,
+    cluster: &Cluster,
+    part: &Partition,
+    micro: f64,
+    i: usize,
+) -> f64 {
+    let cut_layer = part.bounds[i + 1] - 1;
+    let bytes = profile.cut_bytes(cut_layer) as f64 * micro;
+    cluster.link(i).xfer_time(bytes)
+}
+
+/// Result of the full balanced-partition flow.
+#[derive(Debug, Clone)]
+pub struct PartitionPlan {
+    /// The chosen inter-layer partition.
+    pub partition: Partition,
+    /// Fractional refinement (FPGA intra-layer partition), if applied.
+    pub frac: Option<intralayer::FracPartition>,
+    /// Activation threshold `a_th` (bytes) if the coarse-grained pass ran.
+    pub coarse_threshold: Option<f64>,
+    /// Max per-stage (F+B) time at micro-batch 1 after balancing.
+    pub max_stage_time: f64,
+    /// Flow notes for reports (which passes fired).
+    pub notes: Vec<String>,
+}
+
+/// The complete Fig.-3 balanced-partition flow.
+///
+/// `micro` is the micro-batch size used for balancing; `m` the number of
+/// micro-batches per mini-batch (memory fine-tune needs the schedule's
+/// stash depths).
+pub fn balanced_partition(
+    net: &crate::model::Network,
+    cluster: &Cluster,
+    profile: &Profile,
+    kind: ScheduleKind,
+    micro: f64,
+    m: usize,
+) -> crate::Result<PartitionPlan> {
+    let mut notes = Vec::new();
+    let cuts = net.legal_cuts();
+    anyhow::ensure!(
+        cuts.len() + 1 >= cluster.len(),
+        "{} legal cut points cannot make {} stages",
+        cuts.len(),
+        cluster.len()
+    );
+
+    // 1. Inter-layer partition (Eq. 1 seed + refinement; DP-optimal is
+    //    equivalent here and used as the implementation).
+    let mut part = interlayer::dp_optimal(profile, cluster, &cuts, micro, None)?;
+    notes.push(format!("inter-layer: {}", part.describe()));
+
+    // 2. Communication bottleneck? (Fig. 3 decision diamond.) On sync
+    //    (GLOO half-duplex) clusters the edge carries activation + error
+    //    per micro-batch, so the round trip is what competes with F+B.
+    let duplex_factor = if cluster.all_async() { 1.0 } else { 2.0 };
+    let is_comm_bound = |p: &Partition| -> bool {
+        let costs = stage_costs(profile, cluster, p, micro);
+        let max_comp = costs.iter().map(|(f, b)| f + b).fold(0.0, f64::max);
+        (0..p.n_stages() - 1)
+            .map(|i| duplex_factor * cut_comm_time(profile, cluster, p, micro, i))
+            .fold(0.0, f64::max)
+            > max_comp
+    };
+
+    let mut coarse_threshold = None;
+    if cluster.len() > 1 && is_comm_bound(&part) {
+        // Coarse-grained partition: restrict cuts to edges whose
+        // activation is below a_th, then repartition (Section 3.3.3).
+        let costs = stage_costs(profile, cluster, &part, micro);
+        let t_target = costs.iter().map(|(f, b)| f + b).fold(0.0, f64::max);
+        let min_bw = cluster.links.iter().map(|l| l.bandwidth).fold(f64::INFINITY, f64::min);
+        let a_th = t_target * min_bw / (duplex_factor * micro); // bytes per sample
+        let coarse_cuts = coarse::allowed_cuts(profile, &cuts, a_th);
+        anyhow::ensure!(
+            coarse_cuts.len() + 1 >= cluster.len(),
+            "coarse partition infeasible: only {} cuts below a_th for {} stages",
+            coarse_cuts.len(),
+            cluster.len()
+        );
+        part = interlayer::dp_optimal(profile, cluster, &coarse_cuts, micro, None)?;
+        coarse_threshold = Some(a_th);
+        notes.push(format!("coarse (a_th={:.0} B/sample): {}", a_th, part.describe()));
+    }
+
+    // 3. Intra-layer partition — only when communication is NOT the
+    //    bottleneck (it adds communication; Section 3.3.2). The paper
+    //    applies it to both FPGA clusters (fine-grained pipeline) and
+    //    GPU clusters (boundary-layer tensor slice).
+    let mut frac = None;
+    if cluster.len() > 1 && !is_comm_bound(&part) {
+        let fp = intralayer::refine_fractional(profile, cluster, &part, micro);
+        if fp.imbalance_after < fp.imbalance_before - 1e-9 {
+            notes.push(format!(
+                "intra-layer: imbalance {:.4} → {:.4}",
+                fp.imbalance_before, fp.imbalance_after
+            ));
+            frac = Some(fp);
+        }
+    }
+
+    // 4. Memory fine-tune (stays on the active cut set — coarse if it ran).
+    let active_cuts = if coarse_threshold.is_some() {
+        coarse::allowed_cuts(profile, &cuts, coarse_threshold.unwrap())
+    } else {
+        cuts.clone()
+    };
+    let fitted = memfit::fit_memory(profile, cluster, part, kind, micro, m, &active_cuts)?;
+    if fitted.moved > 0 {
+        notes.push(format!("memfit: moved {} boundary layers", fitted.moved));
+    }
+    let part = fitted.partition;
+
+    let costs = stage_costs(profile, cluster, &part, micro);
+    let max_stage_time = costs.iter().map(|(f, b)| f + b).fold(0.0, f64::max);
+    Ok(PartitionPlan { partition: part, frac, coarse_threshold, max_stage_time, notes })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::presets;
+    use crate::model::zoo;
+    use crate::profile::analytical;
+
+    #[test]
+    fn partition_shape() {
+        let p = Partition::new(vec![0, 3, 7, 10], 10);
+        assert_eq!(p.n_stages(), 3);
+        assert_eq!(p.stage(1), 3..7);
+        assert_eq!(p.stage_of(0), 0);
+        assert_eq!(p.stage_of(3), 1);
+        assert_eq!(p.stage_of(9), 2);
+        assert_eq!(p.describe(), "[0..3 | 3..7 | 7..10]");
+    }
+
+    #[test]
+    #[should_panic(expected = "non-empty")]
+    fn empty_stage_rejected() {
+        Partition::new(vec![0, 3, 3, 10], 10);
+    }
+
+    #[test]
+    fn full_flow_vgg_on_4_v100() {
+        let net = zoo::vgg16(224);
+        let cl = presets::v100_cluster(4);
+        let prof = analytical::profile(&net, &cl);
+        let plan =
+            balanced_partition(&net, &cl, &prof, ScheduleKind::OneFOneBSo, 8.0, 16).unwrap();
+        assert_eq!(plan.partition.n_stages(), 4);
+        // stage times within 3x of each other (VGG's fc block is chunky)
+        let costs = stage_costs(&prof, &cl, &plan.partition, 8.0);
+        let times: Vec<f64> = costs.iter().map(|(f, b)| f + b).collect();
+        let max = times.iter().cloned().fold(0.0, f64::max);
+        let min = times.iter().cloned().fold(f64::INFINITY, f64::min);
+        assert!(max / min < 3.0, "imbalance {max}/{min}");
+    }
+
+    #[test]
+    fn full_flow_fpga_resnet() {
+        let net = zoo::resnet50(224);
+        let cl = presets::fpga_cluster(&["VCU118"; 4]);
+        let prof = analytical::profile(&net, &cl);
+        let plan = balanced_partition(&net, &cl, &prof, ScheduleKind::FbpAs, 1.0, 128).unwrap();
+        assert_eq!(plan.partition.n_stages(), 4);
+    }
+
+    #[test]
+    fn heterogeneous_gets_proportional_stages() {
+        // VCU129 (1.8x DSPs) should get a larger share of layers/FLOPs.
+        let net = zoo::vgg16(224);
+        let cl = presets::fpga_cluster(&["VCU129", "VCU118"]);
+        let prof = analytical::profile(&net, &cl);
+        let plan = balanced_partition(&net, &cl, &prof, ScheduleKind::FbpAs, 1.0, 32).unwrap();
+        let pre = net.flops_prefix();
+        let r0 = plan.partition.stage(0);
+        let r1 = plan.partition.stage(1);
+        let f0 = pre[r0.end] - pre[r0.start];
+        let f1 = pre[r1.end] - pre[r1.start];
+        assert!(f0 > f1, "faster device should carry more FLOPs: {f0} vs {f1}");
+    }
+}

@@ -1,0 +1,20 @@
+//! The **real** pipeline training engine: one OS thread per stage, each
+//! owning its compiled XLA stage programs and parameter state; `mpsc`
+//! channels carry activations forward and gradients backward; the static
+//! op sequences from `schedule::generators` drive every worker — the same
+//! source of truth the simulator executes.
+//!
+//! * [`engine`] — builds the worker topology and runs training steps.
+//! * [`worker`] — the per-stage thread: op interpreter + state.
+//! * [`training`] — high-level loop with data generation, loss logging,
+//!   throughput metrics, and the measured profiler.
+//! * [`dp_engine`] — data-parallel baseline: every worker runs the whole
+//!   model and ring-all-reduces gradients (over `collective::ring`).
+
+pub mod dp_engine;
+pub mod engine;
+pub mod training;
+pub mod worker;
+
+pub use engine::PipelineEngine;
+pub use training::{train, TrainReport};

@@ -1,0 +1,143 @@
+//! High-level training loop over the real engine: data generation, loss
+//! logging, throughput metrics, and the measured profiler that feeds the
+//! planner (the paper's "short profiling run").
+
+use super::engine::PipelineEngine;
+use crate::config::TrainConfig;
+use crate::data::MarkovCorpus;
+use crate::metrics::Metrics;
+use crate::runtime::{Manifest, Runtime};
+use crate::util::logging;
+
+/// Result of a training run.
+#[derive(Debug, Clone)]
+pub struct TrainReport {
+    /// (step, mean loss) curve at `log_every` granularity.
+    pub curve: Vec<(usize, f32)>,
+    /// First logged loss.
+    pub first_loss: f32,
+    /// Final logged loss.
+    pub final_loss: f32,
+    /// Theoretical corpus entropy floor (nats).
+    pub entropy_floor: f64,
+    /// Tokens processed per second (end to end).
+    pub tokens_per_sec: f64,
+    /// Total wall-clock seconds.
+    pub total_secs: f64,
+    /// Mean per-stage (fwd, bwd, opt, stall) seconds per step.
+    pub per_stage_means: Vec<(f64, f64, f64, f64)>,
+}
+
+impl TrainReport {
+    /// Render the loss curve as text (one line per log point).
+    pub fn render_curve(&self) -> String {
+        let mut s = String::new();
+        for (step, loss) in &self.curve {
+            s.push_str(&format!("step {step:>5}  loss {loss:.4}\n"));
+        }
+        s.push_str(&format!("entropy floor ≈ {:.4}\n", self.entropy_floor));
+        s
+    }
+}
+
+/// Train with the pipeline engine per `cfg`. `manifest_dir` overrides
+/// `cfg.artifacts` when given (examples pass CLI paths through).
+pub fn train(cfg: &TrainConfig) -> crate::Result<TrainReport> {
+    let kind = cfg
+        .schedule_kind()?
+        .ok_or_else(|| anyhow::anyhow!("use dp_engine::train_dp for schedule=dp"))?;
+    let manifest = Manifest::load(&cfg.artifacts)?;
+    manifest.crosscheck_zoo()?;
+    let micro = manifest.micro_batch;
+    let seq = manifest.seq;
+    logging::info(&format!(
+        "training {} ({} params) with {} M={} micro={} on {} stages",
+        manifest.model,
+        crate::util::fmt_params(manifest.total_params() as u64),
+        kind.label(),
+        cfg.m,
+        micro,
+        manifest.n_stages
+    ));
+    let engine = PipelineEngine::launch(manifest, kind, cfg.m, cfg.lr, cfg.seed as i32)?;
+    let mut corpus = MarkovCorpus::new(engine.manifest.vocab, cfg.branch, cfg.noise, cfg.seed);
+    let metrics = Metrics::new();
+
+    let mut curve = Vec::new();
+    let mut per_stage_sums = vec![(0.0, 0.0, 0.0, 0.0); engine.manifest.n_stages];
+    let t0 = std::time::Instant::now();
+    let mut window: Vec<f32> = Vec::new();
+    for step in 0..cfg.steps {
+        let mut inputs = Vec::with_capacity(cfg.m);
+        let mut targets = Vec::with_capacity(cfg.m);
+        for _ in 0..cfg.m {
+            let (x, y) = corpus.batch(micro, seq);
+            inputs.push(x);
+            targets.push(y);
+        }
+        let stats = engine.step(&inputs, &targets)?;
+        metrics.observe("minibatch_secs", stats.secs);
+        window.push(stats.loss);
+        for (s, p) in per_stage_sums.iter_mut().zip(&stats.per_stage) {
+            s.0 += p.0;
+            s.1 += p.1;
+            s.2 += p.2;
+            s.3 += p.3;
+        }
+        if (step + 1) % cfg.log_every == 0 || step + 1 == cfg.steps {
+            let mean = window.iter().sum::<f32>() / window.len() as f32;
+            window.clear();
+            curve.push((step + 1, mean));
+            logging::info(&format!("step {:>5}  loss {mean:.4}", step + 1));
+        }
+    }
+    let total_secs = t0.elapsed().as_secs_f64();
+    engine.shutdown()?;
+
+    let tokens = cfg.steps * cfg.m * micro * seq;
+    let steps = cfg.steps.max(1) as f64;
+    Ok(TrainReport {
+        first_loss: curve.first().map(|c| c.1).unwrap_or(f32::NAN),
+        final_loss: curve.last().map(|c| c.1).unwrap_or(f32::NAN),
+        entropy_floor: corpus.entropy_floor(),
+        tokens_per_sec: tokens as f64 / total_secs,
+        total_secs,
+        per_stage_means: per_stage_sums
+            .into_iter()
+            .map(|(f, b, o, s)| (f / steps, b / steps, o / steps, s / steps))
+            .collect(),
+        curve,
+    })
+}
+
+/// Measured profiler: time each stage's fwd/bwd once on the real
+/// executables (median of `reps`), producing the per-stage costs the
+/// planner consumes — the paper's measured-profile path at small scale.
+pub fn measure_stage_times(rt: &Runtime, reps: usize) -> crate::Result<Vec<(f64, f64)>> {
+    let man = &rt.manifest;
+    let mut out = Vec::with_capacity(rt.stages.len());
+    let toks = vec![0i32; man.micro_batch * man.seq];
+    let tok_lit = crate::runtime::i32_literal(&toks, &[man.micro_batch, man.seq])?;
+    let act = crate::runtime::f32_literal(&man.act_shape(), 0.01)?;
+    for st in &rt.stages {
+        let params = st.init(7)?;
+        let acc = st.zero_acc()?;
+        let x = if st.meta.kind == "first" { &tok_lit } else { &act };
+        let tgt = (st.meta.kind == "last").then_some(&tok_lit);
+        let gy_or_t: &xla::Literal = if st.meta.kind == "last" { &tok_lit } else { &act };
+        let mut fs = Vec::new();
+        let mut bs = Vec::new();
+        for _ in 0..reps.max(1) {
+            let t0 = std::time::Instant::now();
+            let _ = st.fwd(&params, x, tgt)?;
+            fs.push(t0.elapsed().as_secs_f64());
+            let t0 = std::time::Instant::now();
+            let _ = st.bwd(&params, &acc, x, gy_or_t)?;
+            bs.push(t0.elapsed().as_secs_f64());
+        }
+        fs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        bs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        out.push((fs[fs.len() / 2], bs[bs.len() / 2]));
+    }
+    Ok(out)
+}

@@ -1,0 +1,312 @@
+//! The per-stage worker thread: interprets its static `StageProgram`
+//! against the compiled XLA stage, owning parameters / Adam state /
+//! gradient accumulators / the per-micro-batch input stash.
+
+use crate::runtime::{Manifest, StageExe};
+use crate::schedule::{generators, Op, ScheduleKind};
+use std::collections::HashMap;
+use std::sync::mpsc::{Receiver, Sender};
+use xla::Literal;
+
+/// Send-safe wrapper for moving a Literal between threads.
+///
+/// Safety: `xla::Literal` exclusively owns a heap-allocated C++
+/// `xla::Literal` (no `Rc`, no thread-local state); transferring it
+/// through a channel transfers unique ownership, so no aliasing occurs.
+pub struct SendLit(pub Literal);
+unsafe impl Send for SendLit {}
+
+/// Per-mini-batch command to a worker.
+pub enum Ctl {
+    /// Run one mini-batch: stage 0 receives the micro-batch inputs, the
+    /// last stage receives the per-micro-batch targets.
+    Run {
+        /// Micro-batch inputs (stage 0 only).
+        inputs: Option<Vec<SendLit>>,
+        /// Micro-batch targets (last stage only).
+        targets: Option<Vec<SendLit>>,
+    },
+    /// Shut down.
+    Stop,
+}
+
+/// What a worker reports after each mini-batch.
+#[derive(Debug)]
+pub struct StepReport {
+    /// Stage index.
+    pub stage: usize,
+    /// Per-micro-batch losses (last stage only).
+    pub losses: Vec<f32>,
+    /// Seconds in fwd ops.
+    pub fwd_secs: f64,
+    /// Seconds in bwd ops.
+    pub bwd_secs: f64,
+    /// Seconds in the optimizer.
+    pub opt_secs: f64,
+    /// Seconds blocked on channel receives (pipeline stall time).
+    pub stall_secs: f64,
+}
+
+/// Static configuration of one worker.
+pub struct WorkerCfg {
+    /// Stage index.
+    pub stage: usize,
+    /// Total stages.
+    pub n_stages: usize,
+    /// Schedule.
+    pub kind: ScheduleKind,
+    /// Micro-batches per mini-batch.
+    pub m: usize,
+    /// Learning rate.
+    pub lr: f32,
+    /// Init seed (stage-unique).
+    pub seed: i32,
+}
+
+/// Channel endpoints of one worker.
+pub struct WorkerIo {
+    /// Control from the engine.
+    pub ctl: Receiver<Ctl>,
+    /// Activations from the previous stage (None for stage 0).
+    pub fwd_in: Option<Receiver<SendLit>>,
+    /// Activations to the next stage (None for the last stage).
+    pub fwd_out: Option<Sender<SendLit>>,
+    /// Gradients from the next stage (None for the last stage).
+    pub bwd_in: Option<Receiver<SendLit>>,
+    /// Gradients to the previous stage (None for stage 0).
+    pub bwd_out: Option<Sender<SendLit>>,
+    /// Per-mini-batch report to the engine.
+    pub report: Sender<StepReport>,
+}
+
+/// Worker state + main loop. Constructed **inside** its thread (the
+/// PJRT client is thread-local).
+pub struct Worker {
+    cfg: WorkerCfg,
+    exe: StageExe,
+    params: Vec<Literal>,
+    acc: Vec<Literal>,
+    m_state: Vec<Literal>,
+    v_state: Vec<Literal>,
+    step: f32,
+    /// PipeDream weight stashing: version used for each in-flight mb.
+    stashed_weights: HashMap<usize, Vec<Literal>>,
+}
+
+impl Worker {
+    /// Compile the stage on a fresh thread-local client and init state.
+    pub fn new(manifest: &Manifest, cfg: WorkerCfg) -> crate::Result<Worker> {
+        let client = xla::PjRtClient::cpu()?;
+        let exe = StageExe::load(&client, manifest, cfg.stage)?;
+        let params = exe.init(cfg.seed)?;
+        let acc = exe.zero_acc()?;
+        let m_state = exe.zero_acc()?;
+        let v_state = exe.zero_acc()?;
+        Ok(Worker {
+            cfg,
+            exe,
+            params,
+            acc,
+            m_state,
+            v_state,
+            step: 0.0,
+            stashed_weights: HashMap::new(),
+        })
+    }
+
+    /// Run mini-batches until `Ctl::Stop`.
+    pub fn run(mut self, io: WorkerIo) -> crate::Result<()> {
+        let program = generators::program(
+            self.cfg.kind,
+            self.cfg.n_stages,
+            self.cfg.stage,
+            self.cfg.m,
+        );
+        loop {
+            match io.ctl.recv() {
+                Ok(Ctl::Run { inputs, targets }) => {
+                    let rep = self.run_minibatch(&program.ops, inputs, targets, &io)?;
+                    io.report.send(rep).ok();
+                }
+                Ok(Ctl::Stop) | Err(_) => return Ok(()),
+            }
+        }
+    }
+
+    fn is_last(&self) -> bool {
+        self.cfg.stage + 1 == self.cfg.n_stages
+    }
+
+    fn run_minibatch(
+        &mut self,
+        ops: &[Op],
+        inputs: Option<Vec<SendLit>>,
+        targets: Option<Vec<SendLit>>,
+        io: &WorkerIo,
+    ) -> crate::Result<StepReport> {
+        let mut inputs: Vec<Option<Literal>> = match inputs {
+            Some(v) => v.into_iter().map(|l| Some(l.0)).collect(),
+            None => Vec::new(),
+        };
+        let targets: Vec<Option<Literal>> = match targets {
+            Some(v) => v.into_iter().map(|l| Some(l.0)).collect(),
+            None => Vec::new(),
+        };
+        let mut stash: HashMap<usize, Literal> = HashMap::new();
+        let mut rep = StepReport {
+            stage: self.cfg.stage,
+            losses: vec![0.0; if self.is_last() { self.cfg.m } else { 0 }],
+            fwd_secs: 0.0,
+            bwd_secs: 0.0,
+            opt_secs: 0.0,
+            stall_secs: 0.0,
+        };
+        let pipedream = self.cfg.kind == ScheduleKind::PipeDream;
+
+        for op in ops {
+            match *op {
+                Op::Fwd { mb } => self.do_fwd(mb, &mut inputs, &targets, &mut stash, io, &mut rep, pipedream)?,
+                Op::Bwd { mb } => self.do_bwd(mb, &targets, &mut stash, io, &mut rep, pipedream)?,
+                Op::FwdBwd { fwd_mb, bwd_mb } => {
+                    // FBP-AS: forward and backward of the slot share the
+                    // accelerator; on the CPU engine they run back-to-back
+                    // (semantically equivalent; the DES models the timing).
+                    self.do_fwd(fwd_mb, &mut inputs, &targets, &mut stash, io, &mut rep, pipedream)?;
+                    self.do_bwd(bwd_mb, &targets, &mut stash, io, &mut rep, pipedream)?;
+                }
+                Op::Update => {
+                    let t0 = std::time::Instant::now();
+                    self.apply_update(1.0 / self.cfg.m as f32)?;
+                    rep.opt_secs += t0.elapsed().as_secs_f64();
+                }
+            }
+        }
+        Ok(rep)
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn do_fwd(
+        &mut self,
+        mb: usize,
+        inputs: &mut Vec<Option<Literal>>,
+        targets: &[Option<Literal>],
+        stash: &mut HashMap<usize, Literal>,
+        io: &WorkerIo,
+        rep: &mut StepReport,
+        pipedream: bool,
+    ) -> crate::Result<()> {
+        // obtain input
+        let x = if self.cfg.stage == 0 {
+            inputs
+                .get_mut(mb)
+                .and_then(|o| o.take())
+                .ok_or_else(|| anyhow::anyhow!("stage 0 missing input mb {mb}"))?
+        } else {
+            let t0 = std::time::Instant::now();
+            let r = io
+                .fwd_in
+                .as_ref()
+                .expect("non-first stage has fwd_in")
+                .recv()
+                .map_err(|_| anyhow::anyhow!("fwd channel closed"))?;
+            rep.stall_secs += t0.elapsed().as_secs_f64();
+            r.0
+        };
+        if pipedream {
+            // weight stashing: remember the version used for this fwd
+            self.stashed_weights.insert(mb, self.params.clone());
+        }
+        let t0 = std::time::Instant::now();
+        let tgt = if self.is_last() {
+            Some(
+                targets[mb]
+                    .as_ref()
+                    .ok_or_else(|| anyhow::anyhow!("last stage missing targets mb {mb}"))?,
+            )
+        } else {
+            None
+        };
+        let y = self.exe.fwd(&self.params, &x, tgt)?;
+        rep.fwd_secs += t0.elapsed().as_secs_f64();
+        stash.insert(mb, x);
+        if self.is_last() {
+            rep.losses[mb] = y.to_vec::<f32>()?[0];
+        } else {
+            io.fwd_out
+                .as_ref()
+                .expect("non-last stage has fwd_out")
+                .send(SendLit(y))
+                .map_err(|_| anyhow::anyhow!("fwd send failed"))?;
+        }
+        Ok(())
+    }
+
+    fn do_bwd(
+        &mut self,
+        mb: usize,
+        targets: &[Option<Literal>],
+        stash: &mut HashMap<usize, Literal>,
+        io: &WorkerIo,
+        rep: &mut StepReport,
+        pipedream: bool,
+    ) -> crate::Result<()> {
+        let gy: Literal = if self.is_last() {
+            targets[mb]
+                .as_ref()
+                .ok_or_else(|| anyhow::anyhow!("last stage missing targets mb {mb}"))?
+                .clone()
+        } else {
+            let t0 = std::time::Instant::now();
+            let r = io
+                .bwd_in
+                .as_ref()
+                .expect("non-last stage has bwd_in")
+                .recv()
+                .map_err(|_| anyhow::anyhow!("bwd channel closed"))?;
+            rep.stall_secs += t0.elapsed().as_secs_f64();
+            r.0
+        };
+        let x = stash
+            .remove(&mb)
+            .ok_or_else(|| anyhow::anyhow!("bwd {mb} before fwd at stage {}", self.cfg.stage))?;
+        let t0 = std::time::Instant::now();
+        // PipeDream: backward runs on the stashed weight version.
+        let params_for_bwd: &[Literal] = if pipedream {
+            self.stashed_weights.get(&mb).map(|v| v.as_slice()).unwrap_or(&self.params)
+        } else {
+            &self.params
+        };
+        let (acc, gx) = self.exe.bwd(params_for_bwd, &self.acc, &x, &gy)?;
+        self.acc = acc;
+        rep.bwd_secs += t0.elapsed().as_secs_f64();
+        if let (Some(gx), Some(tx)) = (gx, io.bwd_out.as_ref()) {
+            tx.send(SendLit(gx)).map_err(|_| anyhow::anyhow!("bwd send failed"))?;
+        }
+        if pipedream {
+            self.stashed_weights.remove(&mb);
+            // inter-batch semantics: update immediately after each backward
+            let t0 = std::time::Instant::now();
+            self.apply_update(1.0)?;
+            rep.opt_secs += t0.elapsed().as_secs_f64();
+        }
+        Ok(())
+    }
+
+    fn apply_update(&mut self, grad_scale: f32) -> crate::Result<()> {
+        self.step += 1.0;
+        let (p, m, v) = self.exe.opt(
+            &self.params,
+            &self.acc,
+            &self.m_state,
+            &self.v_state,
+            self.step,
+            self.cfg.lr,
+            grad_scale,
+        )?;
+        self.params = p;
+        self.m_state = m;
+        self.v_state = v;
+        self.acc = self.exe.zero_acc()?;
+        Ok(())
+    }
+}

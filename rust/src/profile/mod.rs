@@ -1,0 +1,187 @@
+//! DNN profiling (Fig. 3, first box): per-layer forward/backward time on
+//! every device of the cluster, plus weight and activation sizes — the
+//! inputs both auto-exploration methodologies consume.
+//!
+//! Two sources, one representation:
+//! * [`analytical`] — roofline cost model (GPU) / FPDeep-style DSP model
+//!   (FPGA); stands in for the paper's 1000-mini-batch measured profiling
+//!   run on hardware we don't have.
+//! * [`measured`] — times real per-stage HLO executables on the CPU PJRT
+//!   client (used by the real engine's planner).
+
+pub mod analytical;
+pub mod measured;
+
+use crate::cluster::Cluster;
+
+/// Per-layer costs on one device, split into a **variable** per-sample
+/// part (FLOPs + activation traffic, scales with micro-batch size) and a
+/// **fixed** per-pass part (parameter/weight traffic — read once per
+/// micro-batch regardless of its size). Batch scaling is applied by
+/// [`Profile::fwd_time`] / [`Profile::bwd_time`].
+#[derive(Debug, Clone)]
+pub struct LayerCost {
+    /// Forward seconds/sample (variable part).
+    pub fwd: f64,
+    /// Backward seconds/sample (variable part).
+    pub bwd: f64,
+    /// Forward seconds/pass (fixed part: weight reads).
+    pub fwd_fixed: f64,
+    /// Backward seconds/pass (fixed part: weight reads + gradient writes).
+    pub bwd_fixed: f64,
+    /// Trainable parameters.
+    pub params: u64,
+    /// Input activation elements/sample.
+    pub act_in_elems: u64,
+    /// Output activation elements/sample.
+    pub act_out_elems: u64,
+    /// Elements stashed per sample for backward (saved intermediates).
+    pub stash_elems: u64,
+    /// Micro-batch size at which this layer reaches 50% device
+    /// utilization (kind-dependent: convs saturate at ~1 sample thanks to
+    /// their spatial parallelism; LSTM/GEMM layers need batching).
+    pub half_sat: f64,
+}
+
+/// A complete profile: `per_device[d][l]` is layer `l` on device `d`.
+#[derive(Debug, Clone)]
+pub struct Profile {
+    /// Model name this profile belongs to.
+    pub model: String,
+    /// Bytes per element at training precision (4 = fp32, 2 = fp16).
+    pub dtype_bytes: u64,
+    /// Per-device, per-layer costs.
+    pub per_device: Vec<Vec<LayerCost>>,
+}
+
+impl Profile {
+    /// Number of layers.
+    pub fn n_layers(&self) -> usize {
+        self.per_device[0].len()
+    }
+
+    /// Number of devices.
+    pub fn n_devices(&self) -> usize {
+        self.per_device.len()
+    }
+
+    fn eff(c: &LayerCost, micro: f64) -> f64 {
+        if c.half_sat <= 0.0 {
+            1.0
+        } else {
+            micro / (micro + c.half_sat)
+        }
+    }
+
+    /// Forward time of layers `lo..hi` on device `dev` at micro-batch
+    /// size `micro` (per-layer utilization curves applied to the variable
+    /// part; the fixed weight-traffic part is paid once per pass).
+    pub fn fwd_time(&self, dev: usize, lo: usize, hi: usize, micro: f64) -> f64 {
+        self.per_device[dev][lo..hi]
+            .iter()
+            .map(|c| c.fwd_fixed + c.fwd * micro / Self::eff(c, micro))
+            .sum()
+    }
+
+    /// Backward time of layers `lo..hi` on device `dev` at micro-batch
+    /// size `micro`.
+    pub fn bwd_time(&self, dev: usize, lo: usize, hi: usize, micro: f64) -> f64 {
+        self.per_device[dev][lo..hi]
+            .iter()
+            .map(|c| c.bwd_fixed + c.bwd * micro / Self::eff(c, micro))
+            .sum()
+    }
+
+    /// Whole-network training time (fwd+bwd) of one sample on device `dev`
+    /// — the `T_n` of Eq. 1.
+    pub fn whole_net_time(&self, dev: usize) -> f64 {
+        self.fwd_time(dev, 0, self.n_layers(), 1.0) + self.bwd_time(dev, 0, self.n_layers(), 1.0)
+    }
+
+    /// Parameter bytes of layers `lo..hi` (weights only, at `dtype_bytes`).
+    pub fn param_bytes(&self, lo: usize, hi: usize) -> u64 {
+        self.per_device[0][lo..hi].iter().map(|c| c.params).sum::<u64>() * self.dtype_bytes
+    }
+
+    /// Bytes crossing the cut after layer `i` (activations in FP, same-size
+    /// errors in BP) for one sample.
+    pub fn cut_bytes(&self, i: usize) -> u64 {
+        self.per_device[0][i].act_out_elems * self.dtype_bytes
+    }
+
+    /// Input activation bytes of layer `lo` (what an upstream stage sends
+    /// us) for one sample.
+    pub fn stage_in_bytes(&self, lo: usize) -> u64 {
+        self.per_device[0][lo].act_in_elems * self.dtype_bytes
+    }
+
+    /// Stash bytes per sample for BP across layers `lo..hi`.
+    pub fn stash_bytes(&self, lo: usize, hi: usize) -> u64 {
+        self.per_device[0][lo..hi].iter().map(|c| c.stash_elems).sum::<u64>() * self.dtype_bytes
+    }
+
+    /// Sanity-check a profile against a cluster (device count matches,
+    /// all times positive).
+    pub fn validate(&self, cluster: &Cluster) -> crate::Result<()> {
+        anyhow::ensure!(
+            self.n_devices() == cluster.len(),
+            "profile has {} devices, cluster has {}",
+            self.n_devices(),
+            cluster.len()
+        );
+        for (d, layers) in self.per_device.iter().enumerate() {
+            anyhow::ensure!(
+                layers.len() == self.n_layers(),
+                "device {d} has {} layers, expected {}",
+                layers.len(),
+                self.n_layers()
+            );
+            for (l, c) in layers.iter().enumerate() {
+                anyhow::ensure!(
+                    c.fwd > 0.0 && c.bwd >= 0.0,
+                    "device {d} layer {l}: non-positive time"
+                );
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::presets;
+    use crate::model::zoo;
+
+    #[test]
+    fn whole_net_time_is_sum() {
+        let net = zoo::vgg16(224);
+        let cl = presets::v100_cluster(2);
+        let p = analytical::profile(&net, &cl);
+        let t = p.whole_net_time(0);
+        let manual =
+            p.fwd_time(0, 0, p.n_layers(), 1.0) + p.bwd_time(0, 0, p.n_layers(), 1.0);
+        assert!((t - manual).abs() < 1e-15);
+        p.validate(&cl).unwrap();
+    }
+
+    #[test]
+    fn batch_scaling_superlinear_speedup_per_sample() {
+        // per-sample time falls as micro-batch grows (utilization effect)
+        let net = zoo::vgg16(224);
+        let cl = presets::v100_cluster(1);
+        let p = analytical::profile(&net, &cl);
+        let t1 = p.fwd_time(0, 0, 5, 1.0);
+        let t32 = p.fwd_time(0, 0, 5, 32.0) / 32.0;
+        assert!(t32 < t1, "per-sample time should drop with batch: {t32} vs {t1}");
+    }
+
+    #[test]
+    fn validate_rejects_wrong_device_count() {
+        let net = zoo::mlp(&[8, 8]);
+        let cl1 = presets::v100_cluster(1);
+        let cl2 = presets::v100_cluster(2);
+        let p = analytical::profile(&net, &cl1);
+        assert!(p.validate(&cl2).is_err());
+    }
+}

@@ -1,0 +1,202 @@
+//! Artifact manifest: the JSON contract between `python/compile/aot.py`
+//! and the rust engine (parsed with the in-repo `util::json` — no serde
+//! offline).
+
+use crate::util::json::Json;
+use std::path::{Path, PathBuf};
+
+/// One parameter's metadata.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ParamMeta {
+    /// Name (`blk0.wqkv`, ...).
+    pub name: String,
+    /// Shape.
+    pub shape: Vec<usize>,
+}
+
+impl ParamMeta {
+    /// Element count.
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+}
+
+/// One stage's metadata.
+#[derive(Debug, Clone)]
+pub struct StageMeta {
+    /// `first` / `mid` / `last`.
+    pub kind: String,
+    /// Transformer blocks in this stage.
+    pub blocks: usize,
+    /// Artifact file per program (`init`/`fwd`/`bwd`/`opt`).
+    pub files: std::collections::BTreeMap<String, String>,
+    /// Parameter list in positional order.
+    pub params: Vec<ParamMeta>,
+    /// Input activation shape.
+    pub in_shape: Vec<usize>,
+    /// `i32` (tokens) or `f32`.
+    pub in_dtype: String,
+}
+
+impl StageMeta {
+    /// Total parameter elements of this stage.
+    pub fn param_elems(&self) -> usize {
+        self.params.iter().map(|p| p.elems()).sum()
+    }
+}
+
+/// The whole artifact bundle's manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    /// Model name (`lm10m`, ...).
+    pub model: String,
+    /// Model dim.
+    pub d_model: usize,
+    /// Total transformer blocks.
+    pub n_layers: usize,
+    /// Attention heads.
+    pub n_heads: usize,
+    /// Vocabulary.
+    pub vocab: usize,
+    /// Sequence length.
+    pub seq: usize,
+    /// Static micro-batch size the programs were lowered at.
+    pub micro_batch: usize,
+    /// Pipeline stages.
+    pub n_stages: usize,
+    /// Were the Pallas kernels used (vs pure-jnp ops)?
+    pub use_pallas: bool,
+    /// Per-stage metadata.
+    pub stages: Vec<StageMeta>,
+    /// Directory the artifacts live in.
+    pub dir: PathBuf,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> crate::Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| anyhow::anyhow!("reading {}: {e} (run `make artifacts`)", path.display()))?;
+        let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("parsing manifest: {e}"))?;
+        let stages = j
+            .req_arr("stages")?
+            .iter()
+            .map(|s| -> crate::Result<StageMeta> {
+                let files = s
+                    .req("files")?
+                    .as_obj()
+                    .ok_or_else(|| anyhow::anyhow!("files not an object"))?
+                    .iter()
+                    .map(|(k, v)| (k.clone(), v.as_str().unwrap_or_default().to_string()))
+                    .collect();
+                let params = s
+                    .req_arr("params")?
+                    .iter()
+                    .map(|p| -> crate::Result<ParamMeta> {
+                        Ok(ParamMeta {
+                            name: p.req_str("name")?.to_string(),
+                            shape: p
+                                .req_arr("shape")?
+                                .iter()
+                                .map(|d| d.as_usize().unwrap_or(0))
+                                .collect(),
+                        })
+                    })
+                    .collect::<crate::Result<Vec<_>>>()?;
+                Ok(StageMeta {
+                    kind: s.req_str("kind")?.to_string(),
+                    blocks: s.req_usize("blocks")?,
+                    files,
+                    params,
+                    in_shape: s
+                        .req_arr("in_shape")?
+                        .iter()
+                        .map(|d| d.as_usize().unwrap_or(0))
+                        .collect(),
+                    in_dtype: s.req_str("in_dtype")?.to_string(),
+                })
+            })
+            .collect::<crate::Result<Vec<_>>>()?;
+        Ok(Manifest {
+            model: j.req_str("model")?.to_string(),
+            d_model: j.req_usize("d_model")?,
+            n_layers: j.req_usize("n_layers")?,
+            n_heads: j.req_usize("n_heads")?,
+            vocab: j.req_usize("vocab")?,
+            seq: j.req_usize("seq")?,
+            micro_batch: j.req_usize("micro_batch")?,
+            n_stages: j.req_usize("n_stages")?,
+            use_pallas: j.get("use_pallas").and_then(|v| v.as_bool()).unwrap_or(false),
+            stages,
+            dir,
+        })
+    }
+
+    /// Activation shape between stages: `[micro, seq, d_model]`.
+    pub fn act_shape(&self) -> Vec<usize> {
+        vec![self.micro_batch, self.seq, self.d_model]
+    }
+
+    /// Total parameters across stages.
+    pub fn total_params(&self) -> usize {
+        self.stages.iter().map(|s| s.param_elems()).sum()
+    }
+
+    /// Cross-check against the rust cost-model zoo (the L2/L3 contract):
+    /// same parameter count as `model::zoo::transformer_lm` for the same
+    /// config.
+    pub fn crosscheck_zoo(&self) -> crate::Result<()> {
+        let cfg = crate::model::zoo::TransformerCfg {
+            d_model: self.d_model as u64,
+            n_layers: self.n_layers as u64,
+            n_heads: self.n_heads as u64,
+            vocab: self.vocab as u64,
+            seq: self.seq as u64,
+        };
+        // python model unties the head and has no pos-emb asymmetries:
+        // zoo counts tok+pos emb and an untied head = vocab*d.
+        let zoo = cfg.param_count() as i64 + (self.vocab * self.d_model) as i64;
+        let ours = self.total_params() as i64;
+        let rel = (zoo - ours).abs() as f64 / ours as f64;
+        anyhow::ensure!(
+            rel < 0.02,
+            "manifest params {ours} vs zoo {zoo} differ by {rel:.3}"
+        );
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifact_dir() -> Option<PathBuf> {
+        let d = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts/lm1m-s2-b2-jnp");
+        d.join("manifest.json").exists().then_some(d)
+    }
+
+    #[test]
+    fn load_manifest_if_built() {
+        let Some(dir) = artifact_dir() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.model, "lm1m");
+        assert_eq!(m.n_stages, 2);
+        assert_eq!(m.stages.len(), 2);
+        assert_eq!(m.stages[0].kind, "first");
+        assert_eq!(m.stages[1].kind, "last");
+        assert_eq!(m.act_shape(), vec![2, 32, 128]);
+        assert!(m.stages[0].params[0].name == "tok_emb");
+        m.crosscheck_zoo().unwrap();
+    }
+
+    #[test]
+    fn missing_dir_is_helpful_error() {
+        let err = Manifest::load("/nonexistent/path").unwrap_err();
+        assert!(err.to_string().contains("make artifacts"));
+    }
+}

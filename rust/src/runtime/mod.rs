@@ -1,0 +1,48 @@
+//! XLA/PJRT runtime: loads the AOT artifacts `make artifacts` produced
+//! (`artifacts/<cfg>/stage<k>_{init,fwd,bwd,opt}.hlo.txt` + manifest) and
+//! executes them on the PJRT CPU client. HLO **text** is the interchange
+//! format — see `python/compile/aot.py` and DESIGN.md.
+
+pub mod artifact;
+pub mod stage;
+
+pub use artifact::{Manifest, StageMeta};
+pub use stage::{Runtime, StageExe};
+
+/// Build an f32 literal of the given shape filled with `v`.
+pub fn f32_literal(dims: &[usize], v: f32) -> crate::Result<xla::Literal> {
+    let count: usize = dims.iter().product::<usize>().max(1);
+    let flat = vec![v; count];
+    let lit = xla::Literal::vec1(&flat);
+    if dims.is_empty() {
+        // scalar
+        Ok(xla::Literal::scalar(v))
+    } else {
+        Ok(lit.reshape(&dims.iter().map(|&d| d as i64).collect::<Vec<_>>())?)
+    }
+}
+
+/// Build an i32 literal from data + shape.
+pub fn i32_literal(data: &[i32], dims: &[usize]) -> crate::Result<xla::Literal> {
+    anyhow::ensure!(data.len() == dims.iter().product::<usize>(), "shape/data mismatch");
+    let lit = xla::Literal::vec1(data);
+    Ok(lit.reshape(&dims.iter().map(|&d| d as i64).collect::<Vec<_>>())?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_builders() {
+        let l = f32_literal(&[2, 3], 0.5).unwrap();
+        assert_eq!(l.element_count(), 6);
+        let v = l.to_vec::<f32>().unwrap();
+        assert!(v.iter().all(|&x| x == 0.5));
+        let s = f32_literal(&[], 2.0).unwrap();
+        assert_eq!(s.to_vec::<f32>().unwrap(), vec![2.0]);
+        let i = i32_literal(&[1, 2, 3, 4], &[2, 2]).unwrap();
+        assert_eq!(i.element_count(), 4);
+        assert!(i32_literal(&[1, 2], &[3]).is_err());
+    }
+}

@@ -1,0 +1,220 @@
+//! Compiled per-stage executables and the typed call wrappers the
+//! pipeline engine uses on its hot path.
+
+use super::artifact::{Manifest, StageMeta};
+use super::f32_literal;
+use std::path::Path;
+use xla::{Literal, PjRtClient, PjRtLoadedExecutable};
+
+/// One pipeline stage's four compiled programs.
+pub struct StageExe {
+    /// Stage index.
+    pub idx: usize,
+    /// Manifest metadata.
+    pub meta: StageMeta,
+    init: PjRtLoadedExecutable,
+    fwd: PjRtLoadedExecutable,
+    bwd: PjRtLoadedExecutable,
+    opt: PjRtLoadedExecutable,
+}
+
+fn compile(client: &PjRtClient, path: &Path) -> crate::Result<PjRtLoadedExecutable> {
+    let proto = xla::HloModuleProto::from_text_file(path.to_str().unwrap())?;
+    let comp = xla::XlaComputation::from_proto(&proto);
+    Ok(client.compile(&comp)?)
+}
+
+/// Execute and unpack the (return_tuple=True) result into leaf literals.
+fn run(exe: &PjRtLoadedExecutable, args: &[&Literal]) -> crate::Result<Vec<Literal>> {
+    let result = exe.execute::<&Literal>(args)?;
+    let lit = result[0][0].to_literal_sync()?;
+    Ok(lit.to_tuple()?)
+}
+
+impl StageExe {
+    /// Initialize parameters from a seed.
+    pub fn init(&self, seed: i32) -> crate::Result<Vec<Literal>> {
+        let s = Literal::scalar(seed);
+        let out = run(&self.init, &[&s])?;
+        anyhow::ensure!(
+            out.len() == self.meta.params.len(),
+            "init returned {} arrays, manifest says {}",
+            out.len(),
+            self.meta.params.len()
+        );
+        Ok(out)
+    }
+
+    /// Forward: params + input (+ targets on the last stage).
+    /// Returns activations (or the scalar loss literal on the last stage).
+    pub fn fwd(
+        &self,
+        params: &[Literal],
+        x: &Literal,
+        targets: Option<&Literal>,
+    ) -> crate::Result<Literal> {
+        let mut args: Vec<&Literal> = params.iter().collect();
+        args.push(x);
+        if self.meta.kind == "last" {
+            args.push(targets.ok_or_else(|| anyhow::anyhow!("last stage needs targets"))?);
+        }
+        let mut out = run(&self.fwd, &args)?;
+        anyhow::ensure!(out.len() == 1, "fwd returned {} outputs", out.len());
+        Ok(out.pop().unwrap())
+    }
+
+    /// Backward with gradient accumulation: returns `(acc', Some(gx))` —
+    /// `gx` is `None` on the first stage (tokens carry no gradient).
+    /// `gy_or_targets` is the upstream gradient (mid) or targets (last).
+    pub fn bwd(
+        &self,
+        params: &[Literal],
+        acc: &[Literal],
+        x: &Literal,
+        gy_or_targets: &Literal,
+    ) -> crate::Result<(Vec<Literal>, Option<Literal>)> {
+        let mut args: Vec<&Literal> = params.iter().chain(acc.iter()).collect();
+        args.push(x);
+        args.push(gy_or_targets);
+        let mut out = run(&self.bwd, &args)?;
+        let p = self.meta.params.len();
+        if self.meta.kind == "first" {
+            anyhow::ensure!(out.len() == p, "first-stage bwd arity {}", out.len());
+            Ok((out, None))
+        } else {
+            anyhow::ensure!(out.len() == p + 1, "bwd arity {}", out.len());
+            let gx = out.pop().unwrap();
+            Ok((out, Some(gx)))
+        }
+    }
+
+    /// Adam step: returns `(params', m', v')`.
+    #[allow(clippy::too_many_arguments)]
+    pub fn opt(
+        &self,
+        params: &[Literal],
+        acc: &[Literal],
+        m: &[Literal],
+        v: &[Literal],
+        step: f32,
+        lr: f32,
+        grad_scale: f32,
+    ) -> crate::Result<(Vec<Literal>, Vec<Literal>, Vec<Literal>)> {
+        let st = Literal::scalar(step);
+        let lrl = Literal::scalar(lr);
+        let gs = Literal::scalar(grad_scale);
+        let mut args: Vec<&Literal> =
+            params.iter().chain(acc.iter()).chain(m.iter()).chain(v.iter()).collect();
+        args.push(&st);
+        args.push(&lrl);
+        args.push(&gs);
+        let out = run(&self.opt, &args)?;
+        let p = self.meta.params.len();
+        anyhow::ensure!(out.len() == 3 * p, "opt arity {}", out.len());
+        let mut it = out.into_iter();
+        let params: Vec<Literal> = it.by_ref().take(p).collect();
+        let m: Vec<Literal> = it.by_ref().take(p).collect();
+        let v: Vec<Literal> = it.collect();
+        Ok((params, m, v))
+    }
+
+    /// Zero-filled gradient accumulators matching this stage's params.
+    pub fn zero_acc(&self) -> crate::Result<Vec<Literal>> {
+        self.meta.params.iter().map(|p| f32_literal(&p.shape, 0.0)).collect()
+    }
+}
+
+/// The loaded runtime: PJRT client + manifest + all stage executables.
+pub struct Runtime {
+    /// PJRT CPU client (one per process; stages share it).
+    pub client: PjRtClient,
+    /// The artifact manifest.
+    pub manifest: Manifest,
+    /// Stage executables in pipeline order.
+    pub stages: Vec<StageExe>,
+}
+
+impl StageExe {
+    /// Compile one stage's programs on a given client. Worker threads call
+    /// this with a **thread-local** client: `PjRtClient` is `Rc`-based, so
+    /// clients must never be shared across threads.
+    pub fn load(client: &PjRtClient, manifest: &Manifest, idx: usize) -> crate::Result<StageExe> {
+        let meta = manifest.stages[idx].clone();
+        let f = |name: &str| -> crate::Result<PjRtLoadedExecutable> {
+            let file = meta
+                .files
+                .get(name)
+                .ok_or_else(|| anyhow::anyhow!("stage {idx} missing `{name}` artifact"))?;
+            compile(client, &manifest.dir.join(file))
+        };
+        let (init, fwd, bwd, opt) = (f("init")?, f("fwd")?, f("bwd")?, f("opt")?);
+        Ok(StageExe { idx, meta, init, fwd, bwd, opt })
+    }
+}
+
+impl Runtime {
+    /// Load + compile every stage program from an artifact directory
+    /// (single-threaded use: tests, measured profiling, DP chains).
+    pub fn load(dir: impl AsRef<Path>) -> crate::Result<Runtime> {
+        let manifest = Manifest::load(&dir)?;
+        let client = PjRtClient::cpu()?;
+        let stages = (0..manifest.n_stages)
+            .map(|idx| StageExe::load(&client, &manifest, idx))
+            .collect::<crate::Result<Vec<_>>>()?;
+        Ok(Runtime { client, manifest, stages })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn artifact_dir() -> Option<PathBuf> {
+        let d = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts/lm1m-s2-b2-jnp");
+        d.join("manifest.json").exists().then_some(d)
+    }
+
+    #[test]
+    fn load_and_roundtrip_if_built() {
+        let Some(dir) = artifact_dir() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let rt = Runtime::load(&dir).unwrap();
+        assert_eq!(rt.stages.len(), 2);
+        // init → param shapes match manifest
+        let p0 = rt.stages[0].init(42).unwrap();
+        for (lit, meta) in p0.iter().zip(&rt.stages[0].meta.params) {
+            assert_eq!(lit.element_count(), meta.elems(), "{}", meta.name);
+        }
+        // fwd chain produces finite loss near ln(V)
+        let man = &rt.manifest;
+        let toks = vec![1i32; man.micro_batch * man.seq];
+        let x = super::super::i32_literal(&toks, &[man.micro_batch, man.seq]).unwrap();
+        let y = rt.stages[0].fwd(&p0, &x, None).unwrap();
+        assert_eq!(y.element_count(), man.micro_batch * man.seq * man.d_model);
+        let p1 = rt.stages[1].init(43).unwrap();
+        let tgt = super::super::i32_literal(&toks, &[man.micro_batch, man.seq]).unwrap();
+        let loss = rt.stages[1].fwd(&p1, &y, Some(&tgt)).unwrap();
+        let l = loss.to_vec::<f32>().unwrap()[0];
+        let ln_v = (man.vocab as f32).ln();
+        assert!(l.is_finite() && (l - ln_v).abs() < 1.0, "loss {l} vs ln V {ln_v}");
+        // bwd arities
+        let acc1 = rt.stages[1].zero_acc().unwrap();
+        let (g1, gx) = rt.stages[1].bwd(&p1, &acc1, &y, &tgt).unwrap();
+        assert_eq!(g1.len(), p1.len());
+        let gx = gx.expect("last stage returns gx");
+        let acc0 = rt.stages[0].zero_acc().unwrap();
+        let (g0, none) = rt.stages[0].bwd(&p0, &acc0, &x, &gx).unwrap();
+        assert_eq!(g0.len(), p0.len());
+        assert!(none.is_none());
+        // opt runs and changes params
+        let m = rt.stages[1].zero_acc().unwrap();
+        let v = rt.stages[1].zero_acc().unwrap();
+        let (p1b, _, _) = rt.stages[1].opt(&p1, &g1, &m, &v, 1.0, 1e-3, 1.0).unwrap();
+        let before = p1[0].to_vec::<f32>().unwrap();
+        let after = p1b[0].to_vec::<f32>().unwrap();
+        assert!(before.iter().zip(&after).any(|(a, b)| a != b), "params unchanged");
+    }
+}

@@ -1,0 +1,200 @@
+//! Closed-form performance model — Tables 1 and 2 of the paper, plus the
+//! same quantities for the GPipe / PipeDream baselines.
+//!
+//! Symbols (paper notation): `M` micro-batches per mini-batch, `N`
+//! pipeline stages, `F`/`B` per-stage forward/backward compute time
+//! (balanced partition assumption), `SR` one-hop send/receive time,
+//! `a` activation bytes per micro-batch at a stage boundary, `w` stage
+//! weight bytes, `i` the 1-based stage index in the memory rows.
+
+use super::ScheduleKind;
+
+/// Inputs to the closed forms.
+#[derive(Debug, Clone, Copy)]
+pub struct Symbols {
+    /// Micro-batches per mini-batch.
+    pub m: usize,
+    /// Pipeline stages.
+    pub n: usize,
+    /// Per-stage forward time (s).
+    pub f: f64,
+    /// Per-stage backward time (s).
+    pub b: f64,
+    /// One-hop send/receive time per micro-batch activation (s).
+    pub sr: f64,
+    /// Activation bytes per micro-batch crossing a stage boundary.
+    pub a: f64,
+    /// Weight bytes per stage.
+    pub w: f64,
+}
+
+/// Mini-batch time (Tables 1–2 row 1).
+pub fn minibatch_time(kind: ScheduleKind, s: &Symbols) -> f64 {
+    let (m, n) = (s.m as f64, s.n as f64);
+    let fb = s.f + s.b;
+    match kind {
+        // Table 1: (M+N-1)(F+B) — communication fully overlapped.
+        ScheduleKind::OneFOneBAs | ScheduleKind::FbpAs => (m + n - 1.0) * fb,
+        // Table 2, 1F1B-SNO: (M+N-1)(F+B) + (N+M-2-⌈(M-1)/N⌉)·2SR.
+        ScheduleKind::OneFOneBSno => {
+            let ceil = ((s.m - 1) as f64 / n).ceil();
+            (m + n - 1.0) * fb + (n + m - 2.0 - ceil) * 2.0 * s.sr
+        }
+        // Table 2, 1F1B-SO: (M+N-1)(F+B) + (N-1)·2SR.
+        ScheduleKind::OneFOneBSo => (m + n - 1.0) * fb + (n - 1.0) * 2.0 * s.sr,
+        // GPipe fill-drain with non-overlapped communication behaves like
+        // the naïve sync pipeline on the fill and drain ramps.
+        ScheduleKind::GPipe => (m + n - 1.0) * fb + (n + m - 2.0) * 2.0 * s.sr,
+        // PipeDream steady state: one mini-batch (= micro-batch) per
+        // max-stage period; its GLOO communication sits on the critical
+        // path (the paper's Section 4.2.1 observation), so the period is
+        // F+B+2SR and there is no fill/drain bubble across mini-batches.
+        ScheduleKind::PipeDream => m * (fb + 2.0 * s.sr),
+    }
+}
+
+/// Pipeline-bubble fraction (Tables 1–2 row 2): idle time / total time.
+pub fn bubble_fraction(kind: ScheduleKind, s: &Symbols) -> f64 {
+    let (m, n) = (s.m as f64, s.n as f64);
+    let fb = s.f + s.b;
+    match kind {
+        ScheduleKind::OneFOneBAs | ScheduleKind::FbpAs => (n - 1.0) / (m + n - 1.0),
+        ScheduleKind::OneFOneBSno => {
+            let ceil = ((s.m - 1) as f64 / n).ceil();
+            let num = (n - 1.0) * (fb + 2.0 * s.sr) + (m - 1.0 - ceil) * 2.0 * s.sr;
+            num / minibatch_time(kind, s)
+        }
+        ScheduleKind::OneFOneBSo => {
+            (n - 1.0) * (fb + 2.0 * s.sr) / minibatch_time(kind, s)
+        }
+        ScheduleKind::GPipe => {
+            let t = minibatch_time(kind, s);
+            (t - m * fb) / t
+        }
+        ScheduleKind::PipeDream => {
+            let t = minibatch_time(kind, s);
+            (t - m * fb) / t
+        }
+    }
+}
+
+/// Peak feature (activation) memory at 1-based stage `i` (Tables 1–2 row 3).
+pub fn features_memory(kind: ScheduleKind, s: &Symbols, i: usize) -> f64 {
+    assert!(i >= 1 && i <= s.n);
+    kind.stash_depth(s.n, i - 1, s.m) as f64 * s.a
+}
+
+/// Weights(+gradient/version) memory per stage (Tables 1–2 row 4).
+pub fn weights_memory(kind: ScheduleKind, s: &Symbols, i: usize) -> f64 {
+    assert!(i >= 1 && i <= s.n);
+    // All intra-batch schedules: weights + gradient accumulator = 2w.
+    // PipeDream: + stashed versions.
+    (2 + kind.weight_versions(s.n, i - 1)) as f64 * s.w
+}
+
+/// Demand bandwidth to fully overlap communication (Tables 1–2 row 5),
+/// bytes/s.
+pub fn demand_bandwidth(kind: ScheduleKind, s: &Symbols) -> f64 {
+    match kind {
+        // Table 1: a/F for 1F1B (activation must stream during one F),
+        // 2a/(F+B) for FBP (activation + error during one combined slot).
+        ScheduleKind::OneFOneBAs => s.a / s.f,
+        ScheduleKind::FbpAs => 2.0 * s.a / (s.f + s.b),
+        // Table 2: both sync schedules demand a/F.
+        ScheduleKind::OneFOneBSno | ScheduleKind::OneFOneBSo => s.a / s.f,
+        ScheduleKind::GPipe => s.a / s.f,
+        ScheduleKind::PipeDream => 2.0 * s.a / (s.f + s.b),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn syms() -> Symbols {
+        Symbols { m: 8, n: 3, f: 1.0, b: 2.0, sr: 0.25, a: 1e6, w: 4e6 }
+    }
+
+    #[test]
+    fn table1_equal_time_and_bubble() {
+        // Table 1: 1F1B-AS and FBP-AS have identical time & bubble.
+        let s = syms();
+        let t1 = minibatch_time(ScheduleKind::OneFOneBAs, &s);
+        let t2 = minibatch_time(ScheduleKind::FbpAs, &s);
+        assert_eq!(t1, t2);
+        assert_eq!(t1, (8.0 + 3.0 - 1.0) * 3.0);
+        let b1 = bubble_fraction(ScheduleKind::OneFOneBAs, &s);
+        assert!((b1 - 2.0 / 10.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn table1_fbp_memory_double_bandwidth_lower() {
+        let s = syms();
+        for i in 1..=s.n {
+            assert_eq!(
+                features_memory(ScheduleKind::FbpAs, &s, i),
+                2.0 * features_memory(ScheduleKind::OneFOneBAs, &s, i)
+            );
+        }
+        // bandwidth demand: a/F vs 2a/(F+B); with B=2F the FBP demand is lower
+        assert!(
+            demand_bandwidth(ScheduleKind::FbpAs, &s)
+                < demand_bandwidth(ScheduleKind::OneFOneBAs, &s)
+        );
+    }
+
+    #[test]
+    fn table2_so_beats_sno() {
+        let s = syms();
+        let sno = minibatch_time(ScheduleKind::OneFOneBSno, &s);
+        let so = minibatch_time(ScheduleKind::OneFOneBSo, &s);
+        assert!(so < sno, "SO {so} must beat SNO {sno}");
+        // Exact forms:
+        let ceil = ((s.m - 1) as f64 / s.n as f64).ceil(); // ⌈7/3⌉ = 3
+        assert_eq!(ceil, 3.0);
+        assert!((sno - (10.0 * 3.0 + (3.0 + 8.0 - 2.0 - 3.0) * 0.5)).abs() < 1e-12);
+        assert!((so - (10.0 * 3.0 + 2.0 * 0.5)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn table2_sno_extra_bubble_grows_with_m() {
+        let mut s = syms();
+        s.sr = 0.5;
+        let mut gap = |m: usize| {
+            s.m = m;
+            minibatch_time(ScheduleKind::OneFOneBSno, &s)
+                - minibatch_time(ScheduleKind::OneFOneBSo, &s)
+        };
+        assert!(gap(32) > gap(8), "SNO's non-overlap penalty is ∝ M");
+    }
+
+    #[test]
+    fn weights_memory_2w_intra_batch() {
+        let s = syms();
+        for kind in [ScheduleKind::OneFOneBAs, ScheduleKind::FbpAs, ScheduleKind::OneFOneBSno, ScheduleKind::OneFOneBSo] {
+            assert_eq!(weights_memory(kind, &s, 1), 2.0 * s.w, "{kind:?}");
+        }
+        // PipeDream stage 1 of 3 stashes 2 extra versions → 4w.
+        assert_eq!(weights_memory(ScheduleKind::PipeDream, &s, 1), 4.0 * s.w);
+        assert_eq!(weights_memory(ScheduleKind::PipeDream, &s, 3), 2.0 * s.w);
+    }
+
+    #[test]
+    fn features_memory_decreases_along_pipeline() {
+        let s = syms();
+        let f1 = features_memory(ScheduleKind::OneFOneBAs, &s, 1);
+        let f3 = features_memory(ScheduleKind::OneFOneBAs, &s, 3);
+        assert!(f1 > f3);
+        assert_eq!(f1, 3.0 * s.a);
+        assert_eq!(f3, 1.0 * s.a);
+    }
+
+    #[test]
+    fn bubble_fraction_vanishes_with_large_m() {
+        let mut s = syms();
+        s.m = 10_000;
+        for kind in [ScheduleKind::OneFOneBAs, ScheduleKind::OneFOneBSo] {
+            assert!(bubble_fraction(kind, &s) < 0.01, "{kind:?}");
+        }
+    }
+}

@@ -1,0 +1,245 @@
+//! Static per-stage op-sequence generators for every schedule kind.
+//!
+//! These sequences are the single source of truth: the discrete-event
+//! simulator executes them against a cost model, and the real engine's
+//! schedule drivers execute them against compiled XLA stage programs.
+
+use super::{Op, ScheduleKind, StageProgram};
+
+/// Generate the op sequence for stage `i` (0-based) of `n` stages with
+/// `m` micro-batches per mini-batch.
+pub fn program(kind: ScheduleKind, n: usize, i: usize, m: usize) -> StageProgram {
+    assert!(n >= 1 && i < n && m >= 1, "program({kind:?}, n={n}, i={i}, m={m})");
+    match kind {
+        ScheduleKind::OneFOneBAs | ScheduleKind::OneFOneBSno => {
+            one_f_one_b(n - i, m, true)
+        }
+        ScheduleKind::OneFOneBSo => one_f_one_b((2 * (n - i)).min(m.max(1)), m, true),
+        ScheduleKind::GPipe => gpipe(m),
+        ScheduleKind::PipeDream => one_f_one_b(n - i, m, false),
+        ScheduleKind::FbpAs => fbp(n, i, m),
+    }
+}
+
+/// Classic 1F1B at warm-up depth `w`: `w` forwards, then alternate
+/// backward/forward, then drain backwards; `update` appends the
+/// mini-batch optimizer step (intra-batch schedules only).
+fn one_f_one_b(w: usize, m: usize, update: bool) -> StageProgram {
+    let w = w.min(m).max(1);
+    let mut ops = Vec::with_capacity(2 * m + 1);
+    for k in 0..w {
+        ops.push(Op::Fwd { mb: k });
+    }
+    for j in 0..m - w {
+        ops.push(Op::Bwd { mb: j });
+        ops.push(Op::Fwd { mb: w + j });
+    }
+    for j in m - w..m {
+        ops.push(Op::Bwd { mb: j });
+    }
+    if update {
+        ops.push(Op::Update);
+    }
+    StageProgram { ops }
+}
+
+/// GPipe fill-drain: all forwards (0..m), then all backwards in reverse
+/// micro-batch order (the last forward's activations unwind first).
+fn gpipe(m: usize) -> StageProgram {
+    let mut ops = Vec::with_capacity(2 * m + 1);
+    for k in 0..m {
+        ops.push(Op::Fwd { mb: k });
+    }
+    for k in (0..m).rev() {
+        ops.push(Op::Bwd { mb: k });
+    }
+    ops.push(Op::Update);
+    StageProgram { ops }
+}
+
+/// FBP-AS (FPDeep): forward and backward streams run concurrently on the
+/// same accelerator. Slot `t` computes forward of micro-batch `t` (while
+/// `t < m`) and backward of micro-batch `t - o_i` (once non-negative),
+/// where `o_i = 2·(n-1-i)+1` is the round-trip distance from stage `i` to
+/// the last stage and back.
+fn fbp(n: usize, i: usize, m: usize) -> StageProgram {
+    let o = 2 * (n - 1 - i) + 1;
+    let mut ops = Vec::new();
+    // last backward (mb m-1) lands in slot m-1+o
+    for t in 0..m + o {
+        let f = if t < m { Some(t) } else { None };
+        let b = if t >= o && t - o < m { Some(t - o) } else { None };
+        match (f, b) {
+            (Some(fk), Some(bk)) => ops.push(Op::FwdBwd { fwd_mb: fk, bwd_mb: bk }),
+            (Some(fk), None) => ops.push(Op::Fwd { mb: fk }),
+            (None, Some(bk)) => ops.push(Op::Bwd { mb: bk }),
+            (None, None) => {} // idle gap slot between fwd and bwd streams
+        }
+    }
+    ops.push(Op::Update);
+    StageProgram { ops }
+}
+
+/// Structural invariants every stage program must satisfy — used by unit
+/// and property tests, and asserted by the real engine at startup.
+pub fn validate(p: &StageProgram, m: usize, intra_batch: bool) -> Result<(), String> {
+    let mut fwd_seen = vec![false; m];
+    let mut bwd_seen = vec![false; m];
+    let mut update_seen = false;
+    for op in &p.ops {
+        match *op {
+            Op::Fwd { mb } => mark(&mut fwd_seen, mb, "fwd")?,
+            Op::Bwd { mb } => {
+                if !fwd_seen.get(mb).copied().unwrap_or(false) {
+                    return Err(format!("bwd {mb} before its fwd"));
+                }
+                mark(&mut bwd_seen, mb, "bwd")?;
+            }
+            Op::FwdBwd { fwd_mb, bwd_mb } => {
+                mark(&mut fwd_seen, fwd_mb, "fwd")?;
+                if fwd_mb != bwd_mb && !fwd_seen.get(bwd_mb).copied().unwrap_or(false) {
+                    return Err(format!("bwd {bwd_mb} before its fwd"));
+                }
+                mark(&mut bwd_seen, bwd_mb, "bwd")?;
+            }
+            Op::Update => {
+                if update_seen {
+                    return Err("duplicate update".into());
+                }
+                update_seen = true;
+            }
+        }
+        if update_seen && !bwd_seen.iter().all(|&b| b) {
+            return Err("update before all backwards".into());
+        }
+    }
+    if !fwd_seen.iter().all(|&f| f) {
+        return Err("missing fwd ops".into());
+    }
+    if !bwd_seen.iter().all(|&b| b) {
+        return Err("missing bwd ops".into());
+    }
+    if intra_batch && !update_seen {
+        return Err("intra-batch schedule missing update".into());
+    }
+    Ok(())
+}
+
+fn mark(seen: &mut [bool], mb: usize, what: &str) -> Result<(), String> {
+    if mb >= seen.len() {
+        return Err(format!("{what} mb {mb} out of range"));
+    }
+    if seen[mb] {
+        return Err(format!("duplicate {what} {mb}"));
+    }
+    seen[mb] = true;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{check, ensure, Config};
+
+    #[test]
+    fn one_f_one_b_fig5a_shape() {
+        // Fig. 5(a): 3 accelerators, M=8; accelerator 1 (i=0) warms up 3.
+        let p = program(ScheduleKind::OneFOneBAs, 3, 0, 8);
+        let head: Vec<Op> = p.ops[..4].to_vec();
+        assert_eq!(
+            head,
+            vec![Op::Fwd { mb: 0 }, Op::Fwd { mb: 1 }, Op::Fwd { mb: 2 }, Op::Bwd { mb: 0 }]
+        );
+        // last stage (i=2) warms up 1: F0 B0 F1 B1 ...
+        let p2 = program(ScheduleKind::OneFOneBAs, 3, 2, 8);
+        assert_eq!(p2.ops[..4], [Op::Fwd { mb: 0 }, Op::Bwd { mb: 0 }, Op::Fwd { mb: 1 }, Op::Bwd { mb: 1 }]);
+    }
+
+    #[test]
+    fn so_doubles_warmup() {
+        let p_sno = program(ScheduleKind::OneFOneBSno, 3, 0, 12);
+        let p_so = program(ScheduleKind::OneFOneBSo, 3, 0, 12);
+        let warm = |p: &StageProgram| {
+            p.ops.iter().take_while(|o| matches!(o, Op::Fwd { .. })).count()
+        };
+        assert_eq!(warm(&p_sno), 3);
+        assert_eq!(warm(&p_so), 6);
+    }
+
+    #[test]
+    fn gpipe_reverse_drain() {
+        let p = program(ScheduleKind::GPipe, 4, 1, 3);
+        assert_eq!(
+            p.ops,
+            vec![
+                Op::Fwd { mb: 0 },
+                Op::Fwd { mb: 1 },
+                Op::Fwd { mb: 2 },
+                Op::Bwd { mb: 2 },
+                Op::Bwd { mb: 1 },
+                Op::Bwd { mb: 0 },
+                Op::Update
+            ]
+        );
+    }
+
+    #[test]
+    fn fbp_concurrent_slots() {
+        // 3 stages, last stage (i=2): o = 1, so slot 1 is FwdBwd{1,0}.
+        let p = program(ScheduleKind::FbpAs, 3, 2, 4);
+        assert_eq!(p.ops[0], Op::Fwd { mb: 0 });
+        assert_eq!(p.ops[1], Op::FwdBwd { fwd_mb: 1, bwd_mb: 0 });
+        validate(&p, 4, true).unwrap();
+    }
+
+    #[test]
+    fn pipedream_has_no_update() {
+        let p = program(ScheduleKind::PipeDream, 3, 0, 6);
+        assert!(!p.ops.iter().any(|o| matches!(o, Op::Update)));
+        validate(&p, 6, false).unwrap();
+    }
+
+    #[test]
+    fn all_kinds_validate_property() {
+        // Property: every (kind, n, i, m) yields a structurally valid program.
+        check(
+            &Config { cases: 300, ..Default::default() },
+            |g| {
+                let n = g.usize_in(1, 9);
+                let i = g.usize_in(0, n);
+                let m = g.usize_in(1, 33);
+                let kind = [
+                    ScheduleKind::OneFOneBAs,
+                    ScheduleKind::FbpAs,
+                    ScheduleKind::OneFOneBSno,
+                    ScheduleKind::OneFOneBSo,
+                    ScheduleKind::GPipe,
+                    ScheduleKind::PipeDream,
+                ][g.usize_in(0, 6)];
+                (kind, n, i, m)
+            },
+            |&(kind, n, i, m)| {
+                let p = program(kind, n, i, m);
+                ensure(
+                    validate(&p, m, kind.intra_batch()).is_ok(),
+                    format!("{kind:?} n={n} i={i} m={m}: {:?}", validate(&p, m, kind.intra_batch())),
+                )
+            },
+        );
+    }
+
+    #[test]
+    fn op_counts() {
+        for kind in [
+            ScheduleKind::OneFOneBAs,
+            ScheduleKind::FbpAs,
+            ScheduleKind::OneFOneBSno,
+            ScheduleKind::OneFOneBSo,
+            ScheduleKind::GPipe,
+        ] {
+            let p = program(kind, 4, 2, 10);
+            assert_eq!(p.n_fwd(), 10, "{kind:?}");
+            assert_eq!(p.n_bwd(), 10, "{kind:?}");
+        }
+    }
+}

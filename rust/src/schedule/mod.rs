@@ -1,0 +1,212 @@
+//! Pipeline scheduling (Section 3.2): schedule kinds, per-stage op-sequence
+//! generators (one source of truth for both the discrete-event simulator
+//! and the real engine's schedule drivers), the closed-form performance
+//! model of Tables 1–2 ([`analytical`]), and the baseline schedules
+//! (GPipe fill-drain, PipeDream inter-batch 1F1B).
+
+pub mod analytical;
+pub mod generators;
+
+use crate::cluster::{Cluster, ExecMode};
+
+/// The pipeline-scheduling methodologies BaPipe explores, plus baselines.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ScheduleKind {
+    /// 1F1B with asynchronous (streamed) communication — FPGA (Fig. 5a).
+    OneFOneBAs,
+    /// Forward and backward computed in parallel, asynchronous — FPGA
+    /// (Fig. 5b, FPDeep).
+    FbpAs,
+    /// Naïve synchronous 1F1B, communication not overlapped — GPU (Fig. 6a).
+    OneFOneBSno,
+    /// Synchronous 1F1B with doubled warm-up so communication overlaps —
+    /// GPU (Fig. 6b, BaPipe's contribution).
+    OneFOneBSo,
+    /// GPipe fill-drain: all forwards then all backwards (baseline).
+    GPipe,
+    /// PipeDream inter-batch 1F1B with weight stashing (baseline).
+    PipeDream,
+}
+
+impl ScheduleKind {
+    /// All intra-batch kinds BaPipe's explorer considers.
+    pub fn bapipe_candidates() -> [ScheduleKind; 4] {
+        [
+            ScheduleKind::OneFOneBAs,
+            ScheduleKind::FbpAs,
+            ScheduleKind::OneFOneBSno,
+            ScheduleKind::OneFOneBSo,
+        ]
+    }
+
+    /// Is this schedule the right family for the cluster? Async schedules
+    /// need every device to support asynchronous execution; the sync
+    /// 1F1B variants are the GPU family — on an all-async (FPGA) cluster
+    /// BaPipe explores 1F1B-AS/FBP-AS instead (Section 3.2). Baselines
+    /// run anywhere.
+    pub fn eligible(&self, cluster: &Cluster) -> bool {
+        match self {
+            ScheduleKind::OneFOneBAs | ScheduleKind::FbpAs => cluster.all_async(),
+            ScheduleKind::OneFOneBSno | ScheduleKind::OneFOneBSo => !cluster.all_async(),
+            _ => true,
+        }
+    }
+
+    /// Does the schedule update weights synchronously per mini-batch
+    /// (intra-batch parallelism — consistent weights)?
+    pub fn intra_batch(&self) -> bool {
+        !matches!(self, ScheduleKind::PipeDream)
+    }
+
+    /// Number of in-flight micro-batch activations stage `i` (0-based) of
+    /// `n` must stash, for `m` micro-batches per mini-batch (Tables 1–2
+    /// "Features memory" rows, expressed 0-based: the paper's
+    /// `(N-i+1)·a` with 1-based i equals our `n-i`).
+    pub fn stash_depth(&self, n: usize, i: usize, m: usize) -> usize {
+        let base = n - i; // 1F1B warm-up depth at stage i
+        match self {
+            ScheduleKind::OneFOneBAs | ScheduleKind::OneFOneBSno => base.min(m),
+            ScheduleKind::FbpAs | ScheduleKind::OneFOneBSo => (2 * base).min(m),
+            ScheduleKind::GPipe => m, // all micro-batches of the mini-batch
+            ScheduleKind::PipeDream => base,
+        }
+    }
+
+    /// Extra stored weight *versions* beyond the working copy (PipeDream's
+    /// weight stashing; zero for all intra-batch schedules).
+    pub fn weight_versions(&self, n: usize, i: usize) -> usize {
+        match self {
+            ScheduleKind::PipeDream => (n - i).saturating_sub(1),
+            _ => 0,
+        }
+    }
+
+    /// Execution mode this schedule requires (None = runs in either).
+    pub fn required_exec(&self) -> Option<ExecMode> {
+        match self {
+            ScheduleKind::OneFOneBAs | ScheduleKind::FbpAs => Some(ExecMode::Async),
+            ScheduleKind::OneFOneBSno | ScheduleKind::OneFOneBSo => Some(ExecMode::Sync),
+            _ => None,
+        }
+    }
+
+    /// Short name used in reports (matches the paper's Table 3 labels).
+    pub fn label(&self) -> &'static str {
+        match self {
+            ScheduleKind::OneFOneBAs => "1F1B-AS",
+            ScheduleKind::FbpAs => "FBP-AS",
+            ScheduleKind::OneFOneBSno => "1F1B-SNO",
+            ScheduleKind::OneFOneBSo => "1F1B-SO",
+            ScheduleKind::GPipe => "GPipe",
+            ScheduleKind::PipeDream => "PipeDream",
+        }
+    }
+}
+
+/// One operation in a stage's static program.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Op {
+    /// Forward of micro-batch `mb` (0-based within the mini-batch).
+    Fwd {
+        /// Micro-batch index.
+        mb: usize,
+    },
+    /// Backward of micro-batch `mb`.
+    Bwd {
+        /// Micro-batch index.
+        mb: usize,
+    },
+    /// Forward of `fwd_mb` and backward of `bwd_mb` computed *in parallel*
+    /// (FBP-AS on FPGAs; the slot costs F+B on shared DSPs).
+    FwdBwd {
+        /// Forward micro-batch index.
+        fwd_mb: usize,
+        /// Backward micro-batch index.
+        bwd_mb: usize,
+    },
+    /// Apply the optimizer with the gradients accumulated this mini-batch.
+    Update,
+}
+
+/// A stage's static op sequence for one mini-batch.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StageProgram {
+    /// Ops in execution order.
+    pub ops: Vec<Op>,
+}
+
+impl StageProgram {
+    /// Count of forward ops (including the fwd half of FwdBwd).
+    pub fn n_fwd(&self) -> usize {
+        self.ops
+            .iter()
+            .filter(|o| matches!(o, Op::Fwd { .. } | Op::FwdBwd { .. }))
+            .count()
+    }
+
+    /// Count of backward ops (including the bwd half of FwdBwd).
+    pub fn n_bwd(&self) -> usize {
+        self.ops
+            .iter()
+            .filter(|o| matches!(o, Op::Bwd { .. } | Op::FwdBwd { .. }))
+            .count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::presets;
+
+    #[test]
+    fn eligibility() {
+        let gpu = presets::v100_cluster(2);
+        let fpga = presets::fpga_cluster(&["VCU118", "VCU118"]);
+        assert!(!ScheduleKind::OneFOneBAs.eligible(&gpu));
+        assert!(ScheduleKind::OneFOneBSo.eligible(&gpu));
+        assert!(ScheduleKind::OneFOneBAs.eligible(&fpga));
+        assert!(ScheduleKind::FbpAs.eligible(&fpga));
+        assert!(!ScheduleKind::OneFOneBSno.eligible(&fpga));
+        assert!(ScheduleKind::GPipe.eligible(&gpu));
+        assert!(ScheduleKind::GPipe.eligible(&fpga));
+    }
+
+    #[test]
+    fn stash_depth_matches_tables() {
+        // Table 1 (0-based stage i of N): 1F1B stores N-i, FBP stores 2(N-i).
+        let n = 4;
+        let m = 16;
+        for i in 0..n {
+            assert_eq!(ScheduleKind::OneFOneBAs.stash_depth(n, i, m), n - i);
+            assert_eq!(ScheduleKind::FbpAs.stash_depth(n, i, m), 2 * (n - i));
+            assert_eq!(ScheduleKind::OneFOneBSo.stash_depth(n, i, m), 2 * (n - i));
+            assert_eq!(ScheduleKind::GPipe.stash_depth(n, i, m), m);
+        }
+        // capped by M when M is small
+        assert_eq!(ScheduleKind::FbpAs.stash_depth(4, 0, 3), 3);
+    }
+
+    #[test]
+    fn pipedream_weight_versions_decrease_along_pipe() {
+        let n = 4;
+        let v: Vec<usize> =
+            (0..n).map(|i| ScheduleKind::PipeDream.weight_versions(n, i)).collect();
+        assert_eq!(v, vec![3, 2, 1, 0]);
+        assert_eq!(ScheduleKind::OneFOneBSo.weight_versions(n, 0), 0);
+    }
+
+    #[test]
+    fn intra_batch_flags() {
+        assert!(ScheduleKind::OneFOneBSo.intra_batch());
+        assert!(ScheduleKind::GPipe.intra_batch());
+        assert!(!ScheduleKind::PipeDream.intra_batch());
+    }
+
+    #[test]
+    fn labels_match_paper() {
+        assert_eq!(ScheduleKind::OneFOneBAs.label(), "1F1B-AS");
+        assert_eq!(ScheduleKind::FbpAs.label(), "FBP-AS");
+        assert_eq!(ScheduleKind::OneFOneBSno.label(), "1F1B-SNO");
+        assert_eq!(ScheduleKind::OneFOneBSo.label(), "1F1B-SO");
+    }
+}

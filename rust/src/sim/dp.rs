@@ -1,0 +1,134 @@
+//! Data-parallel baseline model (Section 2.1: synchronized All-Reduce DP,
+//! the paper's baseline for every experiment). Each device computes the
+//! full network on its local batch, then ring-all-reduces gradients.
+
+use crate::cluster::Cluster;
+use crate::partition::memfit::{dp_memory_bytes, MemoryModel};
+use crate::profile::Profile;
+
+/// Result of the DP model for one mini-batch.
+#[derive(Debug, Clone)]
+pub struct DpResult {
+    /// Mini-batch time (s).
+    pub minibatch_time: f64,
+    /// Compute portion (s).
+    pub compute: f64,
+    /// All-reduce portion (s).
+    pub allreduce: f64,
+    /// Per-device memory (bytes).
+    pub memory: u64,
+    /// Does it fit device memory?
+    pub fits: bool,
+}
+
+/// Fraction of the (already GLOO-staged) link bandwidth a ring
+/// all-reduce achieves on top of point-to-point — the CPU performs the
+/// reduction between hops (the paper used GLOO because "NCCL does not
+/// currently support multi-threads communication in safety").
+pub const GLOO_EFFICIENCY: f64 = 0.7;
+
+/// Ring all-reduce time for `bytes` of gradients over `n` devices with the
+/// slowest link bandwidth `bw` (2(n-1)/n traversals of the full buffer).
+pub fn ring_allreduce_time(bytes: f64, n: usize, bw: f64, latency: f64) -> f64 {
+    if n <= 1 {
+        return 0.0;
+    }
+    let steps = 2 * (n - 1);
+    steps as f64 * (bytes / n as f64 / (bw * GLOO_EFFICIENCY) + latency)
+}
+
+/// Model one DP mini-batch: local compute at per-device batch `b`, then a
+/// non-overlapped gradient all-reduce (GLOO semantics — the paper's
+/// communication backend; Section 4.2.1 notes NCCL was unusable).
+pub fn minibatch(profile: &Profile, cluster: &Cluster, b: f64) -> DpResult {
+    let l = profile.n_layers();
+    // slowest device bounds the synchronized step
+    let compute = (0..cluster.len())
+        .map(|d| profile.fwd_time(d, 0, l, b) + profile.bwd_time(d, 0, l, b))
+        .fold(0.0, f64::max);
+    let grad_bytes = profile.param_bytes(0, l) as f64;
+    let (bw, lat) = if cluster.len() > 1 {
+        let bw = cluster.links.iter().map(|k| k.bandwidth).fold(f64::INFINITY, f64::min);
+        let lat = cluster.links.iter().map(|k| k.latency).fold(0.0, f64::max);
+        (bw, lat)
+    } else {
+        (f64::INFINITY, 0.0)
+    };
+    let allreduce = ring_allreduce_time(grad_bytes, cluster.len(), bw, lat);
+    let mm = MemoryModel::data_parallel();
+    let memory = dp_memory_bytes(profile, &mm, b);
+    let fits = cluster
+        .devices
+        .iter()
+        .all(|d| memory <= mm.usable(d.mem_capacity));
+    DpResult { minibatch_time: compute + allreduce, compute, allreduce, memory, fits }
+}
+
+/// Epoch time for `samples` training samples at per-device batch `b`.
+pub fn epoch_time(profile: &Profile, cluster: &Cluster, b: f64, samples: usize) -> f64 {
+    let r = minibatch(profile, cluster, b);
+    let global_batch = b * cluster.len() as f64;
+    let n_mb = (samples as f64 / global_batch).ceil();
+    n_mb * r.minibatch_time
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::presets;
+    use crate::model::zoo;
+    use crate::profile::analytical;
+
+    #[test]
+    fn ring_allreduce_scaling() {
+        // 2(n-1)/n · bytes/(bw·gloo_eff)
+        let t4 = ring_allreduce_time(1e9, 4, 1e9, 0.0);
+        assert!((t4 - 6.0 * 0.25 / GLOO_EFFICIENCY).abs() < 1e-9);
+        assert_eq!(ring_allreduce_time(1e9, 1, 1e9, 0.0), 0.0);
+        // more devices → approaches 2·bytes/(bw·gloo_eff)
+        let t16 = ring_allreduce_time(1e9, 16, 1e9, 0.0);
+        assert!(t16 > t4 && t16 < 2.0 / GLOO_EFFICIENCY);
+    }
+
+    #[test]
+    fn vgg_dp_is_comm_heavy_resnet_is_not() {
+        // The paper's ResNet-50 result (pipeline degenerates to DP) stems
+        // from ResNet's small weights (25.6M) vs VGG's huge ones (138M).
+        let cl = presets::v100_cluster(4);
+        let vgg = analytical::profile(&zoo::vgg16(224), &cl);
+        let res = analytical::profile(&zoo::resnet50(224), &cl);
+        let rv = minibatch(&vgg, &cl, 32.0);
+        let rr = minibatch(&res, &cl, 32.0);
+        let vgg_ratio = rv.allreduce / rv.compute;
+        let res_ratio = rr.allreduce / rr.compute;
+        assert!(vgg_ratio > 1.15 * res_ratio, "vgg {vgg_ratio} vs resnet {res_ratio}");
+    }
+
+    #[test]
+    fn smaller_batch_worse_epoch_time() {
+        // Table 3's DP column: B=32 is 0.55-0.62x of B=64.
+        let cl = presets::v100_cluster(4);
+        let p = analytical::profile(&zoo::vgg16(224), &cl);
+        let e32 = epoch_time(&p, &cl, 32.0, 50_000);
+        let e64 = epoch_time(&p, &cl, 64.0, 50_000);
+        assert!(e32 > 1.2 * e64, "B=32 epoch {e32} vs B=64 {e64}");
+    }
+
+    #[test]
+    fn giant_model_does_not_fit() {
+        let cl = presets::v100_cluster(4);
+        let p = analytical::profile(&zoo::gnmt_l(158), &cl);
+        assert!(!minibatch(&p, &cl, 32.0).fits);
+        let p2 = analytical::profile(&zoo::gnmt_l(32), &cl);
+        assert!(minibatch(&p2, &cl, 32.0).fits);
+    }
+
+    #[test]
+    fn single_device_no_allreduce() {
+        let cl = presets::v100_cluster(1);
+        let p = analytical::profile(&zoo::resnet50(224), &cl);
+        let r = minibatch(&p, &cl, 8.0);
+        assert_eq!(r.allreduce, 0.0);
+        assert!(r.minibatch_time > 0.0);
+    }
+}

@@ -1,0 +1,12 @@
+//! Discrete-event simulation of pipeline schedules on accelerator
+//! clusters: the [`engine`] executes the per-stage op sequences from
+//! `schedule::generators` against a cost model, honouring synchronous
+//! (GPU) vs asynchronous/streamed (FPGA) communication semantics;
+//! [`timeline`] renders Figs. 4–6-style ASCII timelines; [`dp`] models the
+//! data-parallel baseline with ring all-reduce.
+
+pub mod dp;
+pub mod engine;
+pub mod timeline;
+
+pub use engine::{simulate, SimResult, SimSpec};

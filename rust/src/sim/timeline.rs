@@ -1,0 +1,97 @@
+//! ASCII timeline renderer — regenerates the paper's Figs. 2, 4, 5 and 6
+//! from simulator event traces.
+
+use super::engine::{Executed, SimResult};
+use crate::schedule::Op;
+
+/// Render a simulation's event trace as one row per stage, one column per
+/// `dt` seconds. Ops are labelled `F3`/`B3` (`*3` for FwdBwd slots of
+/// micro-batch 3 fwd), idle time is `.`.
+pub fn render(result: &SimResult, n_stages: usize, width: usize) -> String {
+    assert!(width >= 10);
+    let dt = result.makespan / width as f64;
+    let mut out = String::new();
+    for s in 0..n_stages {
+        let evs: Vec<&Executed> = result.events.iter().filter(|e| e.stage == s).collect();
+        let mut row = vec![b'.'; width];
+        for e in evs {
+            let lo = ((e.start / dt) as usize).min(width - 1);
+            let hi = (((e.end / dt).ceil()) as usize).clamp(lo + 1, width);
+            let label = op_label(&e.op);
+            let bytes = label.as_bytes();
+            for (j, cell) in row[lo..hi].iter_mut().enumerate() {
+                *cell = if j < bytes.len() { bytes[j] } else { b'-' };
+            }
+        }
+        out.push_str(&format!("acc{:<2}|{}|\n", s + 1, String::from_utf8_lossy(&row)));
+    }
+    out
+}
+
+fn op_label(op: &Op) -> String {
+    match op {
+        Op::Fwd { mb } => format!("F{}", mb + 1),
+        Op::Bwd { mb } => format!("B{}", mb + 1),
+        Op::FwdBwd { fwd_mb, .. } => format!("*{}", fwd_mb + 1),
+        Op::Update => "U".to_string(),
+    }
+}
+
+/// A compact per-stage op-sequence line (no time axis) — useful when the
+/// schedule's *order* is the point, e.g. Fig. 5's warm-up depths.
+pub fn render_order(result: &SimResult, n_stages: usize) -> String {
+    let mut out = String::new();
+    for s in 0..n_stages {
+        let seq: Vec<String> = result
+            .events
+            .iter()
+            .filter(|e| e.stage == s)
+            .map(|e| op_label(&e.op))
+            .collect();
+        out.push_str(&format!("acc{:<2}: {}\n", s + 1, seq.join(" ")));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::ExecMode;
+    use crate::schedule::ScheduleKind;
+    use crate::sim::engine::{simulate, SimSpec};
+
+    #[test]
+    fn render_shape() {
+        let spec =
+            SimSpec::uniform(ScheduleKind::OneFOneBSno, 3, 4, 1.0, 2.0, 0.2, ExecMode::Sync);
+        let r = simulate(&spec);
+        let s = render(&r, 3, 80);
+        let lines: Vec<&str> = s.lines().collect();
+        assert_eq!(lines.len(), 3);
+        for l in &lines {
+            assert!(l.starts_with("acc"));
+            assert_eq!(l.len(), 80 + 7, "{l}"); // "accN |" + cells + "|"
+        }
+        // later stages start later → leading idle dots
+        assert!(lines[2].contains("|.."), "stage 3 has leading idle: {}", lines[2]);
+    }
+
+    #[test]
+    fn render_order_warmup_depths() {
+        let spec =
+            SimSpec::uniform(ScheduleKind::OneFOneBAs, 3, 8, 1.0, 1.0, 0.0, ExecMode::Async);
+        let r = simulate(&spec);
+        let s = render_order(&r, 3);
+        // Fig. 5(a): acc1 warms up F1 F2 F3; acc3 alternates immediately.
+        assert!(s.lines().next().unwrap().starts_with("acc1 : F1 F2 F3 B1"));
+        assert!(s.lines().nth(2).unwrap().starts_with("acc3 : F1 B1 F2 B2"));
+    }
+
+    #[test]
+    fn fbp_slots_rendered_as_stars() {
+        let spec = SimSpec::uniform(ScheduleKind::FbpAs, 2, 4, 1.0, 1.0, 0.0, ExecMode::Async);
+        let r = simulate(&spec);
+        let s = render_order(&r, 2);
+        assert!(s.contains('*'), "{s}");
+    }
+}

@@ -1,0 +1,73 @@
+//! Minimal benchmark harness (the offline crate set has no criterion):
+//! warm-up + N timed iterations, median/p90 reporting in criterion-like
+//! one-line format. Used by every `rust/benches/*.rs` target
+//! (`harness = false`).
+
+use super::stats::Summary;
+use std::time::Instant;
+
+/// Time `f` with `warmup` + `iters` runs; print and return the summary.
+pub fn bench(name: &str, warmup: usize, iters: usize, mut f: impl FnMut()) -> Summary {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters.max(1));
+    for _ in 0..iters.max(1) {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    let s = Summary::of(&samples);
+    println!(
+        "bench {name:<40} median {:>12} p90 {:>12} (n={})",
+        super::fmt_secs(s.p50),
+        super::fmt_secs(s.p90),
+        s.n
+    );
+    s
+}
+
+/// Print a markdown-ish table: header + rows of equal arity.
+pub fn print_table(title: &str, header: &[&str], rows: &[Vec<String>]) {
+    println!("\n== {title} ==");
+    let ncols = header.len();
+    let mut widths: Vec<usize> = header.iter().map(|h| h.len()).collect();
+    for r in rows {
+        assert_eq!(r.len(), ncols, "row arity");
+        for (w, cell) in widths.iter_mut().zip(r) {
+            *w = (*w).max(cell.len());
+        }
+    }
+    let fmt_row = |cells: Vec<String>| {
+        cells
+            .iter()
+            .zip(&widths)
+            .map(|(c, w)| format!("{c:>w$}", w = w))
+            .collect::<Vec<_>>()
+            .join(" | ")
+    };
+    println!("{}", fmt_row(header.iter().map(|s| s.to_string()).collect()));
+    println!("{}", widths.iter().map(|w| "-".repeat(*w)).collect::<Vec<_>>().join("-|-"));
+    for r in rows {
+        println!("{}", fmt_row(r.clone()));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_returns_summary() {
+        let s = bench("noop", 1, 5, || {
+            std::hint::black_box(1 + 1);
+        });
+        assert_eq!(s.n, 5);
+        assert!(s.p50 >= 0.0);
+    }
+
+    #[test]
+    fn table_renders() {
+        print_table("t", &["a", "bb"], &[vec!["1".into(), "2".into()]]);
+    }
+}

@@ -1,0 +1,139 @@
+//! Tiny CLI argument parser (the offline crate cache has no `clap`).
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positional args.
+//! Unknown flags are collected so callers can reject or ignore them.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line: positionals plus key/value options.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    /// Positional arguments in order.
+    pub positional: Vec<String>,
+    /// `--key value` / `--key=value` options (last occurrence wins).
+    pub options: BTreeMap<String, String>,
+    /// Bare `--flag` switches.
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw argument strings (no argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Args {
+        let mut a = Args::default();
+        let mut it = raw.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(body) = tok.strip_prefix("--") {
+                if let Some((k, v)) = body.split_once('=') {
+                    a.options.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    a.options.insert(body.to_string(), v);
+                } else {
+                    a.flags.push(body.to_string());
+                }
+            } else {
+                a.positional.push(tok);
+            }
+        }
+        a
+    }
+
+    /// Parse the process command line (skipping argv[0]).
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    /// Is a bare flag present? (`--foo`)
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    /// String option with default.
+    pub fn get_str(&self, name: &str, default: &str) -> String {
+        self.options.get(name).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    /// Optional string option.
+    pub fn opt_str(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    /// usize option with default; panics with a clear message on bad input.
+    pub fn get_usize(&self, name: &str, default: usize) -> usize {
+        match self.options.get(name) {
+            None => default,
+            Some(v) => v
+                .parse()
+                .unwrap_or_else(|_| panic!("--{name} expects an integer, got `{v}`")),
+        }
+    }
+
+    /// u64 option with default.
+    pub fn get_u64(&self, name: &str, default: u64) -> u64 {
+        match self.options.get(name) {
+            None => default,
+            Some(v) => v
+                .parse()
+                .unwrap_or_else(|_| panic!("--{name} expects an integer, got `{v}`")),
+        }
+    }
+
+    /// f64 option with default.
+    pub fn get_f64(&self, name: &str, default: f64) -> f64 {
+        match self.options.get(name) {
+            None => default,
+            Some(v) => v
+                .parse()
+                .unwrap_or_else(|_| panic!("--{name} expects a number, got `{v}`")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn positional_and_options() {
+        let a = parse("train --steps 100 --lr=0.01 config.json --verbose");
+        assert_eq!(a.positional, vec!["train", "config.json"]);
+        assert_eq!(a.get_usize("steps", 0), 100);
+        assert!((a.get_f64("lr", 0.0) - 0.01).abs() < 1e-12);
+        assert!(a.has_flag("verbose"));
+    }
+
+    #[test]
+    fn flag_before_flag() {
+        let a = parse("--fast --out dir");
+        assert!(a.has_flag("fast"));
+        assert_eq!(a.get_str("out", ""), "dir");
+    }
+
+    #[test]
+    fn last_wins() {
+        let a = parse("--n 1 --n 2");
+        assert_eq!(a.get_usize("n", 0), 2);
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("");
+        assert_eq!(a.get_usize("x", 7), 7);
+        assert_eq!(a.get_str("s", "d"), "d");
+        assert!(!a.has_flag("nope"));
+    }
+
+    #[test]
+    #[should_panic(expected = "expects an integer")]
+    fn bad_int_panics() {
+        parse("--n abc").get_usize("n", 0);
+    }
+}

@@ -1,0 +1,89 @@
+//! Plain-text leveled logging to stderr with a global verbosity switch.
+//! Kept deliberately simple (no `log`/`tracing` facade needed for a CLI
+//! tool): `info!`-style macros would hide the module; explicit calls keep
+//! the hot path free of formatting unless the level is enabled.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// Log verbosity levels.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    /// Errors only.
+    Error = 0,
+    /// + warnings.
+    Warn = 1,
+    /// + high-level progress (default).
+    Info = 2,
+    /// + per-step details.
+    Debug = 3,
+    /// + per-op details (schedule traces, channel hops).
+    Trace = 4,
+}
+
+static LEVEL: AtomicU8 = AtomicU8::new(Level::Info as u8);
+
+/// Set the global verbosity.
+pub fn set_level(l: Level) {
+    LEVEL.store(l as u8, Ordering::Relaxed);
+}
+
+/// Current verbosity.
+pub fn level() -> Level {
+    match LEVEL.load(Ordering::Relaxed) {
+        0 => Level::Error,
+        1 => Level::Warn,
+        2 => Level::Info,
+        3 => Level::Debug,
+        _ => Level::Trace,
+    }
+}
+
+/// Is `l` enabled under the current verbosity?
+pub fn enabled(l: Level) -> bool {
+    (l as u8) <= LEVEL.load(Ordering::Relaxed)
+}
+
+/// Log a message at a level (no-op if disabled).
+pub fn log(l: Level, msg: &str) {
+    if enabled(l) {
+        let tag = match l {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN ",
+            Level::Info => "INFO ",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
+        };
+        eprintln!("[{tag}] {msg}");
+    }
+}
+
+/// Info-level convenience.
+pub fn info(msg: &str) {
+    log(Level::Info, msg);
+}
+
+/// Debug-level convenience.
+pub fn debug(msg: &str) {
+    log(Level::Debug, msg);
+}
+
+/// Warn-level convenience.
+pub fn warn(msg: &str) {
+    log(Level::Warn, msg);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_gating() {
+        set_level(Level::Warn);
+        assert!(enabled(Level::Error));
+        assert!(enabled(Level::Warn));
+        assert!(!enabled(Level::Info));
+        set_level(Level::Trace);
+        assert!(enabled(Level::Debug));
+        set_level(Level::Info); // restore default for other tests
+    }
+}

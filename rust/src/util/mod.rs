@@ -1,0 +1,83 @@
+//! Substrate utilities built in-repo because the offline crate set has no
+//! serde / serde_json / rand / clap / proptest: a JSON parser and writer
+//! ([`json`]), seeded PRNGs ([`rng`]), descriptive statistics ([`stats`]),
+//! a tiny CLI argument parser ([`cli`]), a property-testing mini-framework
+//! ([`prop`]) and plain-text logging helpers ([`logging`]).
+
+pub mod benchkit;
+pub mod cli;
+pub mod json;
+pub mod logging;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+
+/// Format a byte count with binary units (`1.50 GiB`).
+pub fn fmt_bytes(b: u64) -> String {
+    const UNITS: [&str; 5] = ["B", "KiB", "MiB", "GiB", "TiB"];
+    let mut v = b as f64;
+    let mut u = 0;
+    while v >= 1024.0 && u < UNITS.len() - 1 {
+        v /= 1024.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{} {}", b, UNITS[0])
+    } else {
+        format!("{:.2} {}", v, UNITS[u])
+    }
+}
+
+/// Format a duration given in seconds with an auto-selected unit.
+pub fn fmt_secs(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{:.3} s", s)
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3} us", s * 1e6)
+    } else {
+        format!("{:.1} ns", s * 1e9)
+    }
+}
+
+/// Format a parameter count the way the paper does (`445.6M`, `1.35B`).
+pub fn fmt_params(p: u64) -> String {
+    if p >= 1_000_000_000 {
+        format!("{:.2}B", p as f64 / 1e9)
+    } else if p >= 1_000_000 {
+        format!("{:.1}M", p as f64 / 1e6)
+    } else if p >= 1_000 {
+        format!("{:.1}K", p as f64 / 1e3)
+    } else {
+        p.to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bytes_units() {
+        assert_eq!(fmt_bytes(512), "512 B");
+        assert_eq!(fmt_bytes(2048), "2.00 KiB");
+        assert_eq!(fmt_bytes(3 * 1024 * 1024), "3.00 MiB");
+        assert_eq!(fmt_bytes(16 * 1024 * 1024 * 1024), "16.00 GiB");
+    }
+
+    #[test]
+    fn secs_units() {
+        assert_eq!(fmt_secs(2.5), "2.500 s");
+        assert_eq!(fmt_secs(0.0025), "2.500 ms");
+        assert_eq!(fmt_secs(2.5e-6), "2.500 us");
+        assert_eq!(fmt_secs(3.0e-8), "30.0 ns");
+    }
+
+    #[test]
+    fn params_units() {
+        assert_eq!(fmt_params(445_600_000), "445.6M");
+        assert_eq!(fmt_params(1_350_000_000), "1.35B");
+        assert_eq!(fmt_params(950), "950");
+    }
+}

@@ -1,0 +1,140 @@
+//! Property-testing mini-framework (the offline crate cache has no
+//! `proptest`). Seeded case generation with failure reporting: each
+//! property runs `cases` random inputs drawn from a caller-supplied
+//! generator; on failure the framework retries with progressively
+//! "smaller" regenerated inputs (size-bounded regeneration — a pragmatic
+//! stand-in for structural shrinking) and reports the smallest failing
+//! seed so the case is exactly reproducible.
+
+use super::rng::Rng;
+
+/// Configuration for a property run.
+#[derive(Debug, Clone)]
+pub struct Config {
+    /// Number of random cases.
+    pub cases: usize,
+    /// Base seed; each case `i` uses `seed + i`.
+    pub seed: u64,
+    /// Maximum "size" hint passed to generators (they scale dimensions by it).
+    pub max_size: usize,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Self { cases: 128, seed: 0xBAB1_9E5E, max_size: 64 }
+    }
+}
+
+/// Generation context handed to generators: RNG + size hint.
+pub struct Gen<'a> {
+    /// The seeded RNG for this case.
+    pub rng: &'a mut Rng,
+    /// Size hint in `[1, max_size]`, grows with the case index.
+    pub size: usize,
+}
+
+impl<'a> Gen<'a> {
+    /// usize in `[lo, hi)` clamped to the size hint's spirit.
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        self.rng.range(lo, hi)
+    }
+
+    /// f64 in `[lo, hi)`.
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + self.rng.f64() * (hi - lo)
+    }
+
+    /// A vec of length in `[min_len, min_len+size]` filled by `f`.
+    pub fn vec_of<T>(&mut self, min_len: usize, mut f: impl FnMut(&mut Gen) -> T) -> Vec<T> {
+        let len = min_len + self.rng.below((self.size + 1) as u64) as usize;
+        let size = self.size;
+        (0..len)
+            .map(|_| {
+                let mut g = Gen { rng: self.rng, size };
+                f(&mut g)
+            })
+            .collect()
+    }
+}
+
+/// Run a property: generate inputs, check, regenerate-smaller on failure.
+///
+/// Panics (test failure) with the offending seed, size and debug repr.
+pub fn check<T: std::fmt::Debug>(
+    cfg: &Config,
+    mut gen: impl FnMut(&mut Gen) -> T,
+    mut prop: impl FnMut(&T) -> Result<(), String>,
+) {
+    for case in 0..cfg.cases {
+        let seed = cfg.seed.wrapping_add(case as u64);
+        // Ramp size 1..=max_size across cases so small inputs come first.
+        let size = 1 + (case * cfg.max_size) / cfg.cases.max(1);
+        let mut rng = Rng::new(seed);
+        let mut g = Gen { rng: &mut rng, size };
+        let input = gen(&mut g);
+        if let Err(msg) = prop(&input) {
+            // Regenerate with shrinking sizes from the same seed family to
+            // find a smaller counterexample.
+            let mut best: (usize, T, String) = (size, input, msg);
+            for shrink_size in (1..size).rev() {
+                let mut rng = Rng::new(seed);
+                let mut g = Gen { rng: &mut rng, size: shrink_size };
+                let cand = gen(&mut g);
+                if let Err(m) = prop(&cand) {
+                    best = (shrink_size, cand, m);
+                }
+            }
+            panic!(
+                "property failed (seed={seed}, size={}):\n  input: {:?}\n  reason: {}",
+                best.0, best.1, best.2
+            );
+        }
+    }
+}
+
+/// Assert-style helper for property bodies.
+pub fn ensure(cond: bool, msg: impl Into<String>) -> Result<(), String> {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg.into())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        check(
+            &Config { cases: 50, ..Default::default() },
+            |g| g.usize_in(0, 100),
+            |&x| {
+                count += 1;
+                ensure(x < 100, "in range")
+            },
+        );
+        assert_eq!(count, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics_with_seed() {
+        check(
+            &Config { cases: 200, ..Default::default() },
+            |g| g.usize_in(0, 1000),
+            |&x| ensure(x < 500, format!("{x} >= 500")),
+        );
+    }
+
+    #[test]
+    fn vec_generator_respects_min_len() {
+        check(
+            &Config { cases: 64, ..Default::default() },
+            |g| g.vec_of(2, |g| g.f64_in(0.0, 1.0)),
+            |v| ensure(v.len() >= 2, "min len"),
+        );
+    }
+}

@@ -1,0 +1,14 @@
+//! The shipped example configs must parse and resolve.
+
+use bapipe::config::TrainConfig;
+
+#[test]
+fn shipped_configs_parse() {
+    for path in ["configs/train_lm10m.json", "configs/train_lm100m.json"] {
+        let full = format!("{}/{}", env!("CARGO_MANIFEST_DIR"), path);
+        let c = TrainConfig::load(&full).unwrap_or_else(|e| panic!("{path}: {e}"));
+        assert!(c.schedule_kind().unwrap().is_some());
+        assert!(c.steps > 0 && c.m > 0);
+        assert!(c.lr > 0.0);
+    }
+}

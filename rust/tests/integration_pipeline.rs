@@ -1,0 +1,136 @@
+//! End-to-end integration: the real pipeline engine over AOT artifacts.
+//!
+//! The key invariant: all intra-batch schedules (GPipe, 1F1B-SNO,
+//! 1F1B-SO, FBP-AS) are *numerically identical* — same gradients, same
+//! updates, same loss sequence — because they only reorder work within a
+//! mini-batch. PipeDream (inter-batch, stale weights) may differ.
+//!
+//! Requires `make artifacts` (skips gracefully when absent).
+
+use bapipe::config::TrainConfig;
+use bapipe::pipeline::{dp_engine, training};
+use bapipe::runtime::Manifest;
+use std::path::PathBuf;
+
+fn artifact_dir() -> Option<String> {
+    let d = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts/lm1m-s2-b2-jnp");
+    d.join("manifest.json")
+        .exists()
+        .then(|| d.to_str().unwrap().to_string())
+}
+
+fn cfg(dir: &str, schedule: &str, m: usize, steps: usize) -> TrainConfig {
+    TrainConfig {
+        artifacts: dir.to_string(),
+        schedule: schedule.into(),
+        m,
+        steps,
+        lr: 3e-3,
+        seed: 42,
+        branch: 4,
+        noise: 0.05,
+        log_every: 1,
+    }
+}
+
+#[test]
+fn manifest_crosschecks_zoo() {
+    let Some(dir) = artifact_dir() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    Manifest::load(&dir).unwrap().crosscheck_zoo().unwrap();
+}
+
+#[test]
+fn intra_batch_schedules_numerically_identical() {
+    let Some(dir) = artifact_dir() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let mut curves = Vec::new();
+    for schedule in ["gpipe", "1f1b", "1f1b-so", "fbp"] {
+        let rep = training::train(&cfg(&dir, schedule, 4, 4)).unwrap();
+        curves.push((schedule, rep.curve));
+    }
+    let (ref_name, ref_curve) = &curves[0];
+    for (name, curve) in &curves[1..] {
+        assert_eq!(curve.len(), ref_curve.len());
+        for ((s1, l1), (s2, l2)) in curve.iter().zip(ref_curve.iter()) {
+            assert_eq!(s1, s2);
+            assert!(
+                (l1 - l2).abs() < 1e-4,
+                "{name} diverges from {ref_name} at step {s1}: {l1} vs {l2}"
+            );
+        }
+    }
+}
+
+#[test]
+fn pipeline_loss_decreases() {
+    let Some(dir) = artifact_dir() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let rep = training::train(&cfg(&dir, "1f1b", 4, 20)).unwrap();
+    assert!(
+        rep.final_loss < rep.first_loss - 0.1,
+        "loss should fall: {} -> {}",
+        rep.first_loss,
+        rep.final_loss
+    );
+    // starts near ln(V)
+    let ln_v = (Manifest::load(&dir).unwrap().vocab as f32).ln();
+    assert!((rep.first_loss - ln_v).abs() < 1.0, "first {} vs lnV {}", rep.first_loss, ln_v);
+    assert!(rep.tokens_per_sec > 0.0);
+}
+
+#[test]
+fn pipedream_trains_too() {
+    let Some(dir) = artifact_dir() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let rep = training::train(&cfg(&dir, "pipedream", 4, 10)).unwrap();
+    assert!(
+        rep.final_loss < rep.first_loss,
+        "pipedream loss should still fall: {} -> {}",
+        rep.first_loss,
+        rep.final_loss
+    );
+}
+
+#[test]
+fn dp_engine_trains_and_matches_start() {
+    let Some(dir) = artifact_dir() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let c = cfg(&dir, "dp", 1, 14);
+    let rep = dp_engine::train_dp(&c, 2).unwrap();
+    assert!(rep.curve.len() >= 2);
+    let ln_v = (Manifest::load(&dir).unwrap().vocab as f32).ln();
+    assert!((rep.curve[0].1 - ln_v).abs() < 1.0);
+    assert!(
+        rep.final_loss < rep.curve[0].1 - 0.05,
+        "dp loss should fall: {} -> {}",
+        rep.curve[0].1,
+        rep.final_loss
+    );
+}
+
+#[test]
+fn measured_profile_has_sane_shape() {
+    let Some(dir) = artifact_dir() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let rt = bapipe::runtime::Runtime::load(&dir).unwrap();
+    let times = training::measure_stage_times(&rt, 3).unwrap();
+    assert_eq!(times.len(), 2);
+    for (f, b) in &times {
+        assert!(*f > 0.0 && *b > 0.0);
+        // backward (recompute + grads) costs more than forward
+        assert!(b > f, "bwd {b} should exceed fwd {f}");
+    }
+}

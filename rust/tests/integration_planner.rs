@@ -1,0 +1,134 @@
+//! Planner integration: profile → partition → schedule → simulate across
+//! models and clusters, checking cross-module invariants end to end
+//! (no artifacts needed — runs on the analytical profilers).
+
+use bapipe::cluster::presets;
+use bapipe::explorer::{self, build_spec, build_spec_plan, Choice, Options};
+use bapipe::model::zoo;
+use bapipe::partition::{balanced_partition, stage_costs};
+use bapipe::profile::analytical;
+use bapipe::schedule::ScheduleKind;
+use bapipe::sim::engine::simulate;
+use bapipe::sim::timeline;
+
+#[test]
+fn every_zoo_model_partitions_on_every_gpu_cluster() {
+    for model in ["vgg16", "resnet50", "alexnet", "gnmt8", "gnmt16", "lm10m", "lm100m"] {
+        let net = zoo::by_name(model).unwrap();
+        for n in [2usize, 4] {
+            let cl = presets::v100_cluster(n);
+            let prof = analytical::profile(&net, &cl);
+            let plan = balanced_partition(&net, &cl, &prof, ScheduleKind::OneFOneBSno, 4.0, 8)
+                .unwrap_or_else(|e| panic!("{model} on {n} V100: {e}"));
+            assert_eq!(plan.partition.n_stages(), n, "{model}");
+            assert_eq!(plan.partition.bounds[0], 0);
+            assert_eq!(*plan.partition.bounds.last().unwrap(), net.len());
+        }
+    }
+}
+
+#[test]
+fn simulated_makespan_between_bottleneck_and_serial() {
+    let net = zoo::vgg16(224);
+    let cl = presets::v100_cluster(4);
+    let prof = analytical::profile(&net, &cl);
+    let m = 16;
+    let micro = 8.0;
+    let plan =
+        balanced_partition(&net, &cl, &prof, ScheduleKind::OneFOneBSo, micro, m).unwrap();
+    let costs = stage_costs(&prof, &cl, &plan.partition, micro);
+    let bottleneck: f64 = costs.iter().map(|(f, b)| f + b).fold(0.0, f64::max);
+    let serial: f64 = costs.iter().map(|(f, b)| f + b).sum::<f64>() * m as f64;
+    let spec = build_spec(&prof, &cl, &plan.partition, ScheduleKind::OneFOneBSo, micro, m);
+    let r = simulate(&spec);
+    assert!(r.makespan >= bottleneck * m as f64 - 1e-12, "below bottleneck bound");
+    assert!(r.makespan <= serial + 1.0, "above serial bound: {} vs {serial}", r.makespan);
+}
+
+#[test]
+fn explorer_plan_is_reproducible() {
+    let net = zoo::by_name("gnmt8").unwrap();
+    let cl = presets::v100_cluster(4);
+    let prof = analytical::profile(&net, &cl);
+    let opts =
+        Options { batch_per_device: 32.0, samples_per_epoch: 10_000, ..Default::default() };
+    let a = explorer::explore(&net, &cl, &prof, &opts);
+    let b = explorer::explore(&net, &cl, &prof, &opts);
+    assert_eq!(format!("{:?}", a.choice), format!("{:?}", b.choice));
+    assert_eq!(a.epoch_time, b.epoch_time);
+}
+
+#[test]
+fn fpga_explorer_prefers_async_and_respects_onchip() {
+    let net = zoo::resnet50(224);
+    let cl = presets::fpga_cluster(&["VCU129", "VCU129", "VCU118", "VCU118"]);
+    let prof = analytical::profile(&net, &cl);
+    let mut opts = Options { batch_per_device: 4.0, ..Default::default() };
+    opts.consider_dp = false;
+    let plan = explorer::explore(&net, &cl, &prof, &opts);
+    match plan.choice {
+        Choice::Pipeline { kind, ref partition, .. } => {
+            assert!(matches!(kind, ScheduleKind::OneFOneBAs | ScheduleKind::FbpAs));
+            // each stage's weights should be on-chip-resident
+            for i in 0..partition.n_stages() {
+                let r = partition.stage(i);
+                let w = prof.param_bytes(r.start, r.end);
+                assert!(
+                    (w as f64) < 0.9 * cl.devices[i].onchip_capacity as f64,
+                    "stage {i} weights {w} vs on-chip {}",
+                    cl.devices[i].onchip_capacity
+                );
+            }
+        }
+        Choice::DataParallel => panic!("expected a pipeline plan"),
+    }
+}
+
+#[test]
+fn timeline_render_is_consistent() {
+    let net = zoo::vgg16(224);
+    let cl = presets::v100_cluster(3);
+    let prof = analytical::profile(&net, &cl);
+    let plan =
+        balanced_partition(&net, &cl, &prof, ScheduleKind::OneFOneBSno, 4.0, 8).unwrap();
+    let spec = build_spec_plan(&prof, &cl, &plan, ScheduleKind::OneFOneBSno, 4.0, 8);
+    let r = simulate(&spec);
+    let s = timeline::render(&r, 3, 100);
+    assert_eq!(s.lines().count(), 3);
+    assert!(s.contains('U') && s.contains("B1"));
+}
+
+#[test]
+fn heterogeneous_fractional_feeds_simulator() {
+    let net = zoo::vgg16(224);
+    let cl = presets::fpga_cluster(&["VCU129", "VCU118"]);
+    let prof = analytical::profile(&net, &cl);
+    let plan = balanced_partition(&net, &cl, &prof, ScheduleKind::FbpAs, 1.0, 32).unwrap();
+    let spec_plain = build_spec(&prof, &cl, &plan.partition, ScheduleKind::FbpAs, 1.0, 32);
+    let spec_frac = build_spec_plan(&prof, &cl, &plan, ScheduleKind::FbpAs, 1.0, 32);
+    let t_plain = simulate(&spec_plain).makespan;
+    let t_frac = simulate(&spec_frac).makespan;
+    // fractional rebalancing can only help (or tie) the bottleneck
+    assert!(t_frac <= t_plain * 1.001, "frac {t_frac} vs plain {t_plain}");
+}
+
+#[test]
+fn memory_feasibility_monotone_in_model_size() {
+    // if GNMT-L(l) fits, every smaller size fits too (under BaPipe 1F1B-SNO)
+    let cl = presets::v100_cluster(4);
+    let fit = |l: u64| {
+        let net = zoo::gnmt_l(l);
+        let prof = analytical::profile(&net, &cl);
+        balanced_partition(&net, &cl, &prof, ScheduleKind::OneFOneBSno, 16.0, 8).is_ok()
+    };
+    let results: Vec<bool> = [16u64, 64, 128, 256, 400].iter().map(|&l| fit(l)).collect();
+    // once it stops fitting it never fits again
+    let mut seen_false = false;
+    for (i, &ok) in results.iter().enumerate() {
+        if !ok {
+            seen_false = true;
+        }
+        assert!(!(seen_false && ok), "non-monotone feasibility at index {i}: {results:?}");
+    }
+    assert!(results[0], "GNMT-16 must fit on 4 V100s");
+}

@@ -1,0 +1,205 @@
+//! Property tests on the coordinator's core invariants (via the in-repo
+//! `util::prop` mini-framework — the offline crate set has no proptest):
+//! partitions, schedule programs, DES conservation laws and analytical
+//! agreement over randomized inputs.
+
+use bapipe::cluster::{presets, ExecMode};
+use bapipe::model::zoo;
+use bapipe::partition::interlayer;
+use bapipe::profile::analytical;
+use bapipe::schedule::{analytical as closed, generators, Op, ScheduleKind};
+use bapipe::sim::engine::{simulate, SimSpec};
+use bapipe::util::prop::{check, ensure, Config};
+
+const KINDS: [ScheduleKind; 6] = [
+    ScheduleKind::OneFOneBAs,
+    ScheduleKind::FbpAs,
+    ScheduleKind::OneFOneBSno,
+    ScheduleKind::OneFOneBSo,
+    ScheduleKind::GPipe,
+    ScheduleKind::PipeDream,
+];
+
+#[test]
+fn prop_partition_covers_and_respects_cuts() {
+    // Random per-layer times on random models → the DP partitioner always
+    // returns contiguous, covering, legal-cut partitions.
+    check(
+        &Config { cases: 80, ..Default::default() },
+        |g| {
+            let model = ["vgg16", "resnet50", "gnmt8", "alexnet"][g.usize_in(0, 4)];
+            let n = g.usize_in(2, 7);
+            let micro = g.f64_in(1.0, 32.0);
+            (model, n, micro)
+        },
+        |&(model, n, micro)| {
+            let net = zoo::by_name(model).unwrap();
+            let cl = presets::v100_cluster(n);
+            let prof = analytical::profile(&net, &cl);
+            let cuts = net.legal_cuts();
+            let p = interlayer::dp_optimal(&prof, &cl, &cuts, micro, None)
+                .map_err(|e| e.to_string())?;
+            ensure(p.n_stages() == n, "stage count")?;
+            ensure(p.bounds[0] == 0 && *p.bounds.last().unwrap() == net.len(), "coverage")?;
+            for &b in &p.bounds[1..p.bounds.len() - 1] {
+                ensure(cuts.contains(&(b - 1)), format!("illegal cut at {b}"))?;
+            }
+            // optimality lower bound: max stage ≥ total/n and ≥ biggest
+            // un-cuttable segment
+            let t = interlayer::max_stage_time(&prof, &p, micro, None);
+            let total = prof.fwd_time(0, 0, net.len(), micro)
+                + prof.bwd_time(0, 0, net.len(), micro);
+            ensure(t >= total / n as f64 - 1e-12, "below mean bound")
+        },
+    );
+}
+
+#[test]
+fn prop_schedule_programs_valid_and_balanced() {
+    check(
+        &Config { cases: 200, ..Default::default() },
+        |g| {
+            let kind = KINDS[g.usize_in(0, KINDS.len())];
+            let n = g.usize_in(1, 10);
+            let m = g.usize_in(1, 65);
+            (kind, n, m)
+        },
+        |&(kind, n, m)| {
+            for i in 0..n {
+                let p = generators::program(kind, n, i, m);
+                generators::validate(&p, m, kind.intra_batch())?;
+                ensure(p.n_fwd() == m && p.n_bwd() == m, "op counts")?;
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_des_conservation_and_bounds() {
+    // For every schedule on random uniform specs: each stage executes
+    // exactly its program, makespan within [bottleneck, serial], peak
+    // in-flight ≤ stash_depth bound.
+    check(
+        &Config { cases: 120, ..Default::default() },
+        |g| {
+            let kind = KINDS[g.usize_in(0, KINDS.len())];
+            let n = g.usize_in(1, 7);
+            let m = g.usize_in(1, 33);
+            let f = g.f64_in(0.1, 3.0);
+            let b = g.f64_in(0.1, 5.0);
+            let sr = g.f64_in(0.0, 0.3);
+            (kind, n, m, f, b, sr)
+        },
+        |&(kind, n, m, f, b, sr)| {
+            let exec = match kind.required_exec() {
+                Some(e) => e,
+                None => ExecMode::Sync,
+            };
+            let spec = SimSpec::uniform(kind, n, m, f, b, sr, exec);
+            let r = simulate(&spec);
+            let slot = if kind == ScheduleKind::FbpAs { f + b } else { f.max(b) };
+            let _ = slot;
+            let per_stage_work = if kind == ScheduleKind::FbpAs {
+                // every slot costs f+b; a stage has at least m slots
+                m as f64 * (f + b)
+            } else {
+                m as f64 * (f + b)
+            };
+            ensure(r.makespan >= per_stage_work - 1e-9, "bottleneck bound")?;
+            let serial = n as f64 * m as f64 * (f + b) * 3.0 + (n + m) as f64 * 4.0 * sr;
+            ensure(r.makespan <= serial + 1e-9, format!("serial bound {} > {serial}", r.makespan))?;
+            for i in 0..n {
+                ensure(
+                    r.peak_in_flight[i] <= kind.stash_depth(n, i, m).max(1),
+                    format!("stage {i} in-flight {} > stash bound {}", r.peak_in_flight[i], kind.stash_depth(n, i, m)),
+                )?;
+            }
+            // events per stage = program length
+            for i in 0..n {
+                let prog = generators::program(kind, n, i, m);
+                let evs = r.events.iter().filter(|e| e.stage == i).count();
+                ensure(evs == prog.ops.len(), "event count == program length")?;
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_des_matches_closed_forms_when_comm_small() {
+    // With SR ≤ min(F,B)/2, the DES must match the paper's closed forms
+    // for 1F1B-AS (exact) and 1F1B-SO (exact).
+    check(
+        &Config { cases: 80, ..Default::default() },
+        |g| {
+            let n = g.usize_in(2, 7);
+            let m = g.usize_in(n, 48);
+            let f = g.f64_in(0.5, 2.0);
+            let b = g.f64_in(0.5, 2.0);
+            let sr = g.f64_in(0.0, 0.5 * f.min(b) / 2.0);
+            (n, m, f, b, sr)
+        },
+        |&(n, m, f, b, sr)| {
+            let syms = closed::Symbols { m, n, f, b, sr, a: 0.0, w: 0.0 };
+            let des_as = simulate(&SimSpec::uniform(
+                ScheduleKind::OneFOneBAs, n, m, f, b, sr, ExecMode::Async,
+            ))
+            .makespan;
+            let t_as = closed::minibatch_time(ScheduleKind::OneFOneBAs, &syms);
+            ensure(
+                (des_as - t_as).abs() / t_as < 0.05,
+                format!("1F1B-AS: DES {des_as} vs closed {t_as}"),
+            )?;
+            let des_so = simulate(&SimSpec::uniform(
+                ScheduleKind::OneFOneBSo, n, m, f, b, sr, ExecMode::Sync,
+            ))
+            .makespan;
+            let t_so = closed::minibatch_time(ScheduleKind::OneFOneBSo, &syms);
+            ensure(
+                (des_so - t_so).abs() / t_so < 0.08,
+                format!("1F1B-SO: DES {des_so} vs closed {t_so} (n={n} m={m} f={f} b={b} sr={sr})"),
+            )
+        },
+    );
+}
+
+#[test]
+fn prop_memfit_never_returns_oversubscribed_partition() {
+    use bapipe::partition::memfit::{fit_memory, stage_memory_bytes, MemoryModel};
+    check(
+        &Config { cases: 40, ..Default::default() },
+        |g| {
+            let l = [32u64, 60, 90][g.usize_in(0, 3)];
+            let n = g.usize_in(2, 6);
+            let micro = g.f64_in(4.0, 32.0);
+            let m = g.usize_in(2, 17);
+            (l, n, micro, m)
+        },
+        |&(l, n, micro, m)| {
+            let net = zoo::gnmt_l(l);
+            let cl = presets::v100_cluster(n);
+            let prof = analytical::profile(&net, &cl);
+            let cuts = net.legal_cuts();
+            let kind = ScheduleKind::OneFOneBSno;
+            let seed = interlayer::dp_optimal(&prof, &cl, &cuts, micro, None)
+                .map_err(|e| e.to_string())?;
+            match fit_memory(&prof, &cl, seed, kind, micro, m, &cuts) {
+                Err(_) => Ok(()), // honest failure is allowed
+                Ok(r) => {
+                    let mm = MemoryModel::default();
+                    for i in 0..n {
+                        let used = stage_memory_bytes(
+                            &prof, &mm, kind, n, i, r.partition.stage(i), micro, m,
+                        );
+                        ensure(
+                            used <= mm.usable(cl.devices[i].mem_capacity),
+                            format!("stage {i} oversubscribed after fit"),
+                        )?;
+                    }
+                    Ok(())
+                }
+            }
+        },
+    );
+}
