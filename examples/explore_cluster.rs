@@ -1,28 +1,30 @@
 //! Sweep BaPipe's auto-exploration across the paper's workloads and GPU
 //! cluster sizes — a compact view of the Table-3 decision surface: which
-//! schedule wins where, and when the explorer falls back to DP.
+//! schedule wins where, and when the explorer falls back to DP — then
+//! emit the flagship scenario as a machine-readable `plan.json`.
 //!
 //! Run: `cargo run --release --example explore_cluster`
 
 use bapipe::cluster::presets;
-use bapipe::explorer::{self, Choice, Options};
 use bapipe::model::zoo;
+use bapipe::planner::{self, Choice, Options};
 use bapipe::profile::analytical;
 use bapipe::util::benchkit::print_table;
 
 fn main() {
     let mut rows = Vec::new();
+    let opts = Options {
+        batch_per_device: 32.0,
+        samples_per_epoch: 50_000,
+        jobs: 4,
+        ..Default::default()
+    };
     for model in ["vgg16", "resnet50", "gnmt8", "gnmt16", "alexnet"] {
         let net = zoo::by_name(model).unwrap();
         for n in [2usize, 4, 8] {
             let cl = presets::v100_cluster(n);
             let prof = analytical::profile(&net, &cl);
-            let opts = Options {
-                batch_per_device: 32.0,
-                samples_per_epoch: 50_000,
-                ..Default::default()
-            };
-            let plan = explorer::explore(&net, &cl, &prof, &opts);
+            let plan = planner::explore(&net, &cl, &prof, &opts);
             let choice = match &plan.choice {
                 Choice::Pipeline { kind, m, partition, .. } => {
                     format!("{} M={m} {}", kind.label(), partition.describe())
@@ -33,7 +35,10 @@ fn main() {
                 model.to_string(),
                 format!("{n}x V100"),
                 format!("{:.2}x", plan.speedup_over_dp),
-                choice,
+                format!(
+                    "{choice} ({} DES, {} pruned)",
+                    plan.report.simulated_count, plan.report.pruned_count
+                ),
             ]);
         }
     }
@@ -42,4 +47,15 @@ fn main() {
         &["model", "cluster", "speedup vs DP", "chosen plan"],
         &rows,
     );
+
+    // The plan artifact: serialize the flagship scenario. `emit_json`
+    // verifies the document round-trips before returning the text (the
+    // same helper `bapipe explore --emit plan.json` uses).
+    let net = zoo::vgg16(224);
+    let cl = presets::v100_cluster(4);
+    let prof = analytical::profile(&net, &cl);
+    let plan = planner::explore(&net, &cl, &prof, &opts);
+    let text = plan.emit_json().expect("plan.json must round-trip");
+    std::fs::write("plan.json", &text).expect("write plan.json");
+    println!("\nwrote plan.json ({} bytes, round-trip verified)", text.len());
 }

@@ -4,8 +4,8 @@
 //! Run: `cargo run --release --example quickstart`
 
 use bapipe::cluster::presets;
-use bapipe::explorer::{self, Options};
 use bapipe::model::zoo;
+use bapipe::planner::{self, Choice, Options};
 use bapipe::profile::analytical;
 use bapipe::sim::{engine, timeline};
 
@@ -21,20 +21,27 @@ fn main() {
     // 3. Profile (analytical here; `measured` profiles real executables).
     let profile = analytical::profile(&net, &cluster);
 
-    // 4. Explore schedules x partitions x micro-batching (Fig. 3).
-    let opts = Options { batch_per_device: 32.0, samples_per_epoch: 50_000, ..Default::default() };
-    let plan = explorer::explore(&net, &cluster, &profile, &opts);
+    // 4. Explore schedules x partitions x micro-batching (Fig. 3) —
+    //    branch-and-bound pruned, over 4 worker threads.
+    let opts = Options {
+        batch_per_device: 32.0,
+        samples_per_epoch: 50_000,
+        jobs: 4,
+        ..Default::default()
+    };
+    let plan = planner::explore(&net, &cluster, &profile, &opts);
 
-    // 5. Read the plan.
-    println!("\n{}", plan.report());
+    // 5. Read the plan. The typed report also serializes: `plan.to_json()`
+    //    is exactly what `bapipe explore --emit plan.json` writes.
+    println!("\n{}", plan.summary());
     println!("\nexploration log:");
-    for line in &plan.log {
+    for line in plan.report.log_lines() {
         println!("  {line}");
     }
 
     // Bonus: visualize the chosen schedule.
-    if let explorer::Choice::Pipeline { kind, m, micro, partition } = &plan.choice {
-        let spec = explorer::build_spec(&profile, &cluster, partition, *kind, *micro, *m);
+    if let Choice::Pipeline { kind, m, micro, partition } = &plan.choice {
+        let spec = planner::build_spec(&profile, &cluster, partition, *kind, *micro, *m);
         let r = engine::simulate(&spec);
         println!("\n{} timeline (one mini-batch):", kind.label());
         print!("{}", timeline::render(&r, partition.n_stages(), 110));

@@ -5,8 +5,8 @@
 
 use bapipe::cluster::{presets, ExecMode};
 use bapipe::collective::ring::{make_ring, ring_allreduce};
-use bapipe::explorer::{self, Options};
 use bapipe::model::zoo;
+use bapipe::planner::{self, Options};
 use bapipe::partition::interlayer;
 use bapipe::profile::analytical;
 use bapipe::schedule::ScheduleKind;
@@ -37,13 +37,36 @@ fn main() {
         );
     });
 
-    // Whole exploration (Fig. 3 flow across schedules and M candidates).
-    let opts = Options { batch_per_device: 32.0, samples_per_epoch: 50_000, ..Default::default() };
-    bench("explorer/full vgg16 4xV100", 1, 5, || {
-        let net = zoo::vgg16(224);
-        let prof = analytical::profile(&net, &presets::v100_cluster(4));
-        std::hint::black_box(explorer::explore(&net, &presets::v100_cluster(4), &prof, &opts));
+    // Whole exploration (Fig. 3 flow across schedules and M candidates):
+    // exhaustive seed behaviour vs branch-and-bound vs pruned+parallel.
+    let vgg = zoo::vgg16(224);
+    let vcl = presets::v100_cluster(4);
+    let vprof = analytical::profile(&vgg, &vcl);
+    let exhaustive = Options {
+        batch_per_device: 32.0,
+        samples_per_epoch: 50_000,
+        prune: false,
+        ..Default::default()
+    };
+    bench("planner/exhaustive vgg16 4xV100", 1, 5, || {
+        std::hint::black_box(planner::explore(&vgg, &vcl, &vprof, &exhaustive));
     });
+    let pruned = Options { prune: true, ..exhaustive.clone() };
+    bench("planner/pruned vgg16 4xV100", 1, 5, || {
+        std::hint::black_box(planner::explore(&vgg, &vcl, &vprof, &pruned));
+    });
+    let parallel = Options { jobs: 8, ..pruned.clone() };
+    bench("planner/pruned+jobs=8 vgg16 4xV100", 1, 5, || {
+        std::hint::black_box(planner::explore(&vgg, &vcl, &vprof, &parallel));
+    });
+    let stats = planner::explore(&vgg, &vcl, &vprof, &pruned);
+    println!(
+        "  (pruned run: {} DES, {} pruned, {} cache hits of {} candidates)",
+        stats.report.simulated_count,
+        stats.report.pruned_count,
+        stats.report.cache_hits,
+        stats.report.evaluations.len()
+    );
 
     // JSON parse of a manifest-sized document.
     let doc = {

@@ -8,8 +8,8 @@
 //! Run: `cargo bench --bench table3`
 
 use bapipe::cluster::presets;
-use bapipe::explorer::{self, Choice, Options};
 use bapipe::model::zoo;
+use bapipe::planner::{self, Choice, Options};
 use bapipe::profile::analytical;
 use bapipe::sim::dp;
 use bapipe::util::benchkit::print_table;
@@ -17,6 +17,7 @@ use bapipe::util::benchkit::print_table;
 fn main() {
     let samples = 50_000usize;
     let mut rows = Vec::new();
+    let (mut total_des, mut total_pruned, mut total_cands) = (0usize, 0usize, 0usize);
     for model in ["vgg16", "resnet50", "gnmt8"] {
         let net = zoo::by_name(model).unwrap();
         for n in [4usize, 8] {
@@ -42,11 +43,15 @@ fn main() {
             let opts = Options {
                 batch_per_device: 64.0,
                 samples_per_epoch: samples,
+                jobs: 4,
                 ..Default::default()
             };
-            let pd = explorer::plan_pipedream(&net, &cl, &prof, &opts);
-            let gp = explorer::plan_gpipe(&net, &cl, &prof, &opts);
-            let plan = explorer::explore(&net, &cl, &prof, &opts);
+            let pd = planner::plan_pipedream(&net, &cl, &prof, &opts);
+            let gp = planner::plan_gpipe(&net, &cl, &prof, &opts);
+            let plan = planner::explore(&net, &cl, &prof, &opts);
+            total_des += plan.report.simulated_count;
+            total_pruned += plan.report.pruned_count;
+            total_cands += plan.report.evaluations.len();
 
             let speedup = |e: f64| {
                 if e.is_finite() {
@@ -95,5 +100,9 @@ fn main() {
         "\nPaper shapes to check: BaPipe >= GPipe and >= PipeDream on VGG-16/GNMT;\n\
          every ResNet-50 column ~1x (BaPipe's explorer falls back to DP);\n\
          DP B=32 < DP B=64 (utilization + per-epoch all-reduce count)."
+    );
+    println!(
+        "planner: {total_des} DES runs for {total_cands} candidates ({total_pruned} pruned by \
+         analytical bounds)"
     );
 }

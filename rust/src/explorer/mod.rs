@@ -1,66 +1,25 @@
-//! Automatic exploration (Fig. 3): given a DNN profile and hardware
-//! constraints, BaPipe searches schedule kind × micro-batch count ×
-//! balanced partition, evaluates each candidate with the discrete-event
-//! simulator, enforces memory feasibility, and returns the fastest plan —
-//! falling back to data parallelism when the pipeline cannot beat it
-//! (the paper's ResNet-50 outcome).
+//! Automatic exploration (Fig. 3) — compatibility façade.
+//!
+//! The exploration engine lives in [`crate::planner`]: typed candidates,
+//! memoized partitions, branch-and-bound pruning and parallel evaluation.
+//! This module keeps the seed explorer's surface — [`Options`],
+//! [`Choice`], a [`Plan`] with a `Vec<String>` log, [`explore`] and the
+//! GPipe / PipeDream baselines — as thin delegations, so existing call
+//! sites (benches, examples, tests) keep working unchanged. New code
+//! should prefer [`crate::planner`] and its machine-readable
+//! [`crate::planner::ExplorationReport`].
 
 use crate::cluster::Cluster;
 use crate::model::Network;
-use crate::partition::intralayer::frac_stage_costs;
-use crate::partition::memfit::{stage_memory_bytes, MemoryModel};
-use crate::partition::{balanced_partition, cut_comm_time, stage_costs, Partition, PartitionPlan};
+use crate::planner;
 use crate::profile::Profile;
-use crate::schedule::ScheduleKind;
-use crate::sim::engine::{epoch_time, simulate, SimSpec};
-use crate::sim::dp;
 
-/// Exploration options.
-#[derive(Debug, Clone)]
-pub struct Options {
-    /// Per-device batch size `B` (paper's Table 3 notation). The global
-    /// mini-batch entering the pipeline is `B × N`.
-    pub batch_per_device: f64,
-    /// Samples per epoch (used to convert mini-batch time → epoch time).
-    pub samples_per_epoch: usize,
-    /// Micro-batch-count candidates `M` (filtered to divisors of the
-    /// global mini-batch).
-    pub m_candidates: Vec<usize>,
-    /// Also evaluate plain data parallelism and pick it if faster.
-    pub consider_dp: bool,
-}
+pub use crate::planner::{
+    build_spec, build_spec_plan, evaluate_pipeline, plan_memory, Choice, Options,
+};
 
-impl Default for Options {
-    fn default() -> Self {
-        Options {
-            batch_per_device: 32.0,
-            samples_per_epoch: 50_000,
-            m_candidates: vec![2, 4, 8, 16, 32, 64, 128],
-            consider_dp: true,
-        }
-    }
-}
-
-/// The selected parallelization.
-#[derive(Debug, Clone)]
-pub enum Choice {
-    /// Pipeline parallelism with the given schedule / micro-batching /
-    /// partition.
-    Pipeline {
-        /// Chosen schedule.
-        kind: ScheduleKind,
-        /// Micro-batches per mini-batch.
-        m: usize,
-        /// Micro-batch size (samples).
-        micro: f64,
-        /// The balanced partition.
-        partition: Partition,
-    },
-    /// Data parallelism won (e.g. ResNet-50 on PCIe V100s).
-    DataParallel,
-}
-
-/// A fully evaluated plan.
+/// A fully evaluated plan (seed shape: summary numbers plus a
+/// line-per-candidate exploration log derived from the typed report).
 #[derive(Debug, Clone)]
 pub struct Plan {
     /// What BaPipe chose.
@@ -75,7 +34,10 @@ pub struct Plan {
     pub speedup_over_dp: f64,
     /// Per-stage memory (bytes); one entry (whole net) for DP.
     pub stage_memory: Vec<u64>,
-    /// Exploration log: every candidate evaluated with its epoch time.
+    /// Exploration log, one line per candidate: `epoch …s` when
+    /// simulated, `pruned (lower bound …s)` when branch-and-bound skipped
+    /// it (the default — pass `prune: false` for the seed's exhaustive
+    /// log), or `infeasible`; plus ineligible-kind and DP-baseline lines.
     pub log: Vec<String>,
 }
 
@@ -88,7 +50,9 @@ impl Plan {
                 kind.label(),
                 partition.describe()
             ),
-            Choice::DataParallel => "BaPipe plan: data parallelism (pipeline cannot beat DP here)".to_string(),
+            Choice::DataParallel => {
+                "BaPipe plan: data parallelism (pipeline cannot beat DP here)".to_string()
+            }
         };
         format!(
             "{head}\n  mini-batch {:.4}s, epoch {:.1}s, {:.2}x over DP\n  stage memory: [{}]",
@@ -100,176 +64,25 @@ impl Plan {
     }
 }
 
-/// Build the SimSpec for a full balanced-partition plan, using the
-/// intra-layer fractional stage costs when the flow produced them (the
-/// paper's Section 3.3.2 refinement; communication stays at the integral
-/// boundaries, which the fractional bounds stay within one layer of).
-pub fn build_spec_plan(
-    profile: &Profile,
-    cluster: &Cluster,
-    plan: &PartitionPlan,
-    kind: ScheduleKind,
-    micro: f64,
-    m: usize,
-) -> SimSpec {
-    let mut spec = build_spec(profile, cluster, &plan.partition, kind, micro, m);
-    if let Some(fp) = &plan.frac {
-        let frac = frac_stage_costs(profile, fp, micro);
-        // keep any stage-level floor (FPGA weight-spill penalty) from the
-        // integral costs: the fractional refinement only rebalances compute
-        for (i, (f, b)) in frac.into_iter().enumerate() {
-            spec.fwd[i] = f.max(1e-12);
-            spec.bwd[i] = b.max(1e-12);
+impl From<planner::Plan> for Plan {
+    fn from(p: planner::Plan) -> Plan {
+        Plan {
+            log: p.report.log_lines(),
+            choice: p.choice,
+            minibatch_time: p.minibatch_time,
+            epoch_time: p.epoch_time,
+            dp_epoch_time: p.dp_epoch_time,
+            speedup_over_dp: p.speedup_over_dp,
+            stage_memory: p.stage_memory,
         }
     }
-    spec
 }
 
-/// Build the SimSpec for a (kind, partition, micro) candidate.
-pub fn build_spec(
-    profile: &Profile,
-    cluster: &Cluster,
-    part: &Partition,
-    kind: ScheduleKind,
-    micro: f64,
-    m: usize,
-) -> SimSpec {
-    let costs = stage_costs(profile, cluster, part, micro);
-    let n = part.n_stages();
-    let fwd_xfer: Vec<f64> =
-        (0..n - 1).map(|i| cut_comm_time(profile, cluster, part, micro, i)).collect();
-    SimSpec {
-        kind,
-        m,
-        fwd: costs.iter().map(|c| c.0).collect(),
-        bwd: costs.iter().map(|c| c.1).collect(),
-        update: vec![0.0; n],
-        bwd_xfer: fwd_xfer.clone(), // errors are activation-sized (Section 1)
-        fwd_xfer,
-        exec: cluster.devices.iter().map(|d| d.exec).collect(),
-    }
-}
-
-/// Per-stage memory of a candidate plan.
-pub fn plan_memory(
-    profile: &Profile,
-    kind: ScheduleKind,
-    part: &Partition,
-    micro: f64,
-    m: usize,
-) -> Vec<u64> {
-    let mm = MemoryModel::default();
-    let n = part.n_stages();
-    (0..n)
-        .map(|i| stage_memory_bytes(profile, &mm, kind, n, i, part.stage(i), micro, m))
-        .collect()
-}
-
-/// Does every stage of a candidate fit its device?
-fn fits(profile: &Profile, cluster: &Cluster, kind: ScheduleKind, part: &Partition, micro: f64, m: usize) -> bool {
-    let mm = MemoryModel::default();
-    plan_memory(profile, kind, part, micro, m)
-        .iter()
-        .zip(&cluster.devices)
-        .all(|(&used, d)| used <= mm.usable(d.mem_capacity))
-}
-
-/// Evaluate one fully-specified pipeline candidate. Returns
-/// `(minibatch_time, epoch_time)` or None if infeasible.
-pub fn evaluate_pipeline(
-    net: &Network,
-    cluster: &Cluster,
-    profile: &Profile,
-    kind: ScheduleKind,
-    m: usize,
-    opts: &Options,
-) -> Option<(f64, f64, Partition)> {
-    let n = cluster.len();
-    let global = opts.batch_per_device * n as f64;
-    if m == 0 || (global as usize) % m != 0 {
-        return None;
-    }
-    let micro = global / m as f64;
-    let plan = balanced_partition(net, cluster, profile, kind, micro, m).ok()?;
-    if !fits(profile, cluster, kind, &plan.partition, micro, m) {
-        return None;
-    }
-    let spec = build_spec_plan(profile, cluster, &plan, kind, micro, m);
-    let n_mb = (opts.samples_per_epoch as f64 / global).ceil() as usize;
-    let mb_time = simulate(&spec).makespan;
-    let ep = epoch_time(&spec, n_mb);
-    Some((mb_time, ep, plan.partition))
-}
-
-/// The full BaPipe exploration (Fig. 3).
+/// The full BaPipe exploration (Fig. 3), via the planner. Same selected
+/// plan as the seed exhaustive grid search — pruning and parallelism
+/// never change the reduction result.
 pub fn explore(net: &Network, cluster: &Cluster, profile: &Profile, opts: &Options) -> Plan {
-    let mut log = Vec::new();
-    let mut best: Option<(f64, f64, ScheduleKind, usize, Partition)> = None;
-
-    for kind in ScheduleKind::bapipe_candidates() {
-        if !kind.eligible(cluster) {
-            log.push(format!("{}: ineligible on {}", kind.label(), cluster.describe()));
-            continue;
-        }
-        for &m in &opts.m_candidates {
-            match evaluate_pipeline(net, cluster, profile, kind, m, opts) {
-                Some((mb, ep, part)) => {
-                    log.push(format!("{} M={m}: epoch {:.1}s", kind.label(), ep));
-                    if best.as_ref().map(|b| ep < b.1).unwrap_or(true) {
-                        best = Some((mb, ep, kind, m, part));
-                    }
-                }
-                None => log.push(format!("{} M={m}: infeasible", kind.label())),
-            }
-        }
-    }
-
-    // DP baseline.
-    let dpr = dp::minibatch(profile, cluster, opts.batch_per_device);
-    let dp_epoch = if dpr.fits {
-        dp::epoch_time(profile, cluster, opts.batch_per_device, opts.samples_per_epoch)
-    } else {
-        f64::INFINITY
-    };
-    log.push(format!(
-        "DP B={}: epoch {:.1}s{}",
-        opts.batch_per_device,
-        dp_epoch,
-        if dpr.fits { "" } else { " (out of memory)" }
-    ));
-
-    match best {
-        Some((mb, ep, kind, m, part)) if !(opts.consider_dp && dp_epoch < ep) => {
-            let micro = opts.batch_per_device * cluster.len() as f64 / m as f64;
-            let mem = plan_memory(profile, kind, &part, micro, m);
-            Plan {
-                choice: Choice::Pipeline { kind, m, micro, partition: part },
-                minibatch_time: mb,
-                epoch_time: ep,
-                dp_epoch_time: dp_epoch,
-                speedup_over_dp: dp_epoch / ep,
-                stage_memory: mem,
-                log,
-            }
-        }
-        _ => {
-            let mm = MemoryModel::data_parallel();
-            let mem = vec![crate::partition::memfit::dp_memory_bytes(
-                profile,
-                &mm,
-                opts.batch_per_device,
-            )];
-            Plan {
-                choice: Choice::DataParallel,
-                minibatch_time: dpr.minibatch_time,
-                epoch_time: dp_epoch,
-                dp_epoch_time: dp_epoch,
-                speedup_over_dp: 1.0,
-                stage_memory: mem,
-                log,
-            }
-        }
-    }
+    planner::explore(net, cluster, profile, opts).into()
 }
 
 /// GPipe baseline: fill-drain schedule, **BaPipe's partition** (the paper
@@ -280,17 +93,7 @@ pub fn plan_gpipe(
     profile: &Profile,
     opts: &Options,
 ) -> Option<(f64, usize)> {
-    let mut best: Option<(f64, usize)> = None;
-    for &m in &opts.m_candidates {
-        if let Some((_, ep, _)) =
-            evaluate_pipeline(net, cluster, profile, ScheduleKind::GPipe, m, opts)
-        {
-            if best.map(|b| ep < b.0).unwrap_or(true) {
-                best = Some((ep, m));
-            }
-        }
-    }
-    best
+    planner::plan_gpipe(net, cluster, profile, opts)
 }
 
 /// PipeDream baseline: inter-batch 1F1B with weight stashing, its own
@@ -302,25 +105,7 @@ pub fn plan_pipedream(
     profile: &Profile,
     opts: &Options,
 ) -> Option<(f64, f64)> {
-    let cuts = net.legal_cuts();
-    let mut b = opts.batch_per_device;
-    while b >= 1.0 {
-        let comm = |stage: usize, cut_layer: usize| -> f64 {
-            let bytes = profile.cut_bytes(cut_layer) as f64 * b;
-            cluster.link(stage.min(cluster.len() - 2)).xfer_time(bytes) * 2.0
-        };
-        let part =
-            crate::partition::interlayer::dp_optimal(profile, cluster, &cuts, b, Some(&comm))
-                .ok()?;
-        if fits(profile, cluster, ScheduleKind::PipeDream, &part, b, 1) {
-            let spec = build_spec(profile, cluster, &part, ScheduleKind::PipeDream, b, 1);
-            let n_mb = (opts.samples_per_epoch as f64 / b).ceil() as usize;
-            let ep = epoch_time(&spec, n_mb);
-            return Some((ep, b));
-        }
-        b /= 2.0;
-    }
-    None
+    planner::plan_pipedream(net, cluster, profile, opts)
 }
 
 #[cfg(test)]
@@ -329,6 +114,7 @@ mod tests {
     use crate::cluster::presets;
     use crate::model::zoo;
     use crate::profile::analytical;
+    use crate::schedule::ScheduleKind;
 
     fn opts(b: f64) -> Options {
         Options { batch_per_device: b, samples_per_epoch: 8192, ..Default::default() }
@@ -441,5 +227,20 @@ mod tests {
         // async kinds logged as ineligible on GPUs
         assert!(plan.log.iter().any(|l| l.contains("1F1B-AS: ineligible")));
         assert!(plan.log.iter().any(|l| l.contains("DP B=32")));
+    }
+
+    #[test]
+    fn facade_matches_planner_exactly() {
+        // The compat façade must report the same plan the planner built.
+        let net = zoo::vgg16(224);
+        let cl = presets::v100_cluster(4);
+        let prof = analytical::profile(&net, &cl);
+        let o = opts(32.0);
+        let a = explore(&net, &cl, &prof, &o);
+        let b = crate::planner::explore(&net, &cl, &prof, &o);
+        assert_eq!(a.choice, b.choice);
+        assert_eq!(a.epoch_time, b.epoch_time);
+        assert_eq!(a.stage_memory, b.stage_memory);
+        assert_eq!(a.log, b.report.log_lines());
     }
 }

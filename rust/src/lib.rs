@@ -5,11 +5,12 @@
 //! Pallas stack:
 //!
 //! * **L3 (this crate)** — the paper's contribution: automatic exploration
-//!   of pipeline *scheduling* ([`schedule`], [`explorer`]) and *balanced
-//!   partition* ([`partition`]), a discrete-event cluster simulator
-//!   ([`sim`]), and a real multi-threaded pipeline training engine
-//!   ([`pipeline`]) executing AOT-compiled XLA stage programs via
-//!   [`runtime`].
+//!   of pipeline *scheduling* ([`schedule`]) and *balanced partition*
+//!   ([`partition`]) by the typed, parallel [`planner`] (with [`explorer`]
+//!   as its seed-compatible façade), a discrete-event cluster simulator
+//!   ([`sim`]), and — behind the `pjrt` cargo feature — a real
+//!   multi-threaded pipeline training engine (`pipeline`) executing
+//!   AOT-compiled XLA stage programs via `runtime`.
 //! * **L2 (python/compile/model.py)** — JAX transformer-LM stage graphs
 //!   (fwd / bwd-with-recompute / adam / init), lowered once to HLO text.
 //! * **L1 (python/compile/kernels/)** — Pallas kernels for the compute
@@ -17,23 +18,33 @@
 //!
 //! Python never runs on the training path: `make artifacts` produces
 //! `artifacts/<model>/*.hlo.txt` + `manifest.json`, and the rust binary is
-//! self-contained afterwards.
+//! self-contained afterwards. Without the `pjrt` feature (the default),
+//! the crate builds with no XLA toolchain at all — the planner, simulator
+//! and every paper-table bench run anywhere.
 //!
 //! ## Quick tour
 //!
 //! ```no_run
-//! use bapipe::{cluster, model, profile, explorer};
+//! use bapipe::{cluster, model, planner, profile};
 //!
 //! // 1. Describe the workload and the cluster.
 //! let net = model::zoo::vgg16(224);
 //! let cl = cluster::presets::v100_cluster(4);
 //! // 2. Profile analytically (or measure real stage executables).
 //! let prof = profile::analytical::profile(&net, &cl);
-//! // 3. Let BaPipe explore schedule x partition x micro-batching.
-//! let plan = explorer::explore(&net, &cl, &prof, &explorer::Options::default());
-//! println!("{}", plan.report());
+//! // 3. Let BaPipe explore schedule x partition x micro-batching —
+//! //    pruned by analytical lower bounds, over 4 worker threads.
+//! let opts = planner::Options { jobs: 4, ..Default::default() };
+//! let plan = planner::explore(&net, &cl, &prof, &opts);
+//! println!("{}", plan.summary());
+//! // 4. The typed report is serializable: this is `bapipe explore --emit`.
+//! std::fs::write("plan.json", plan.to_json().to_string_pretty()).unwrap();
 //! ```
 #![deny(missing_docs)]
+// The cost-model layers pass (profile, cluster, partition, micro, m)
+// tuples through free functions by design — the argument-count lint
+// would force noise structs on a hot, internally-consistent API.
+#![allow(clippy::too_many_arguments)]
 
 pub mod cluster;
 pub mod collective;
@@ -43,8 +54,11 @@ pub mod explorer;
 pub mod metrics;
 pub mod model;
 pub mod partition;
+#[cfg(feature = "pjrt")]
 pub mod pipeline;
+pub mod planner;
 pub mod profile;
+#[cfg(feature = "pjrt")]
 pub mod runtime;
 pub mod schedule;
 pub mod sim;

@@ -2,18 +2,22 @@
 //!
 //! Subcommands:
 //!   explore   — run the Fig.-3 auto-exploration on a zoo model + cluster
+//!               (--jobs N parallel evaluation, --emit plan.json artifact,
+//!               --permute device-order search, --no-prune exhaustive)
 //!   partition — show the balanced partition for a model/cluster
 //!   simulate  — DES one schedule and print its timeline (Figs. 4–6)
-//!   train     — real pipeline training over AOT artifacts
-//!   dp        — real data-parallel baseline training
-//!   profile   — measured per-stage times of an artifact bundle
+//!   train     — real pipeline training over AOT artifacts  [pjrt feature]
+//!   dp        — real data-parallel baseline training        [pjrt feature]
+//!   profile   — measured per-stage times of an artifact bundle [pjrt]
 
 use bapipe::cluster::{presets, Cluster};
 use bapipe::config::TrainConfig;
-use bapipe::explorer;
 use bapipe::model::zoo;
+#[cfg(feature = "pjrt")]
 use bapipe::pipeline::{dp_engine, training};
+use bapipe::planner;
 use bapipe::profile::analytical;
+#[cfg(feature = "pjrt")]
 use bapipe::runtime::Runtime;
 use bapipe::schedule::ScheduleKind;
 use bapipe::sim::{engine as des, timeline};
@@ -48,17 +52,27 @@ fn main() -> bapipe::Result<()> {
                 .ok_or_else(|| anyhow::anyhow!("unknown model `{model}`"))?;
             let cl = cluster_by_name(&args.get_str("cluster", "v100"), args.get_usize("n", 4));
             let prof = analytical::profile(&net, &cl);
-            let opts = explorer::Options {
+            let opts = planner::Options {
                 batch_per_device: args.get_f64("batch", 32.0),
                 samples_per_epoch: args.get_usize("samples", 50_000),
+                jobs: args.get_usize("jobs", 1),
+                prune: !args.has_flag("no-prune"),
+                permute_devices: args.has_flag("permute"),
                 ..Default::default()
             };
-            let plan = explorer::explore(&net, &cl, &prof, &opts);
+            let plan = planner::explore(&net, &cl, &prof, &opts);
             println!("== exploration log ==");
-            for l in &plan.log {
+            for l in plan.report.log_lines() {
                 println!("  {l}");
             }
-            println!("\n{}", plan.report());
+            println!("\n{}", plan.summary());
+            if let Some(path) = args.opt_str("emit") {
+                // emit_json re-parses what it serialized and verifies the
+                // round-trip before handing the text out.
+                let text = plan.emit_json()?;
+                std::fs::write(path, &text)?;
+                println!("\nwrote {path} ({} bytes, round-trip verified)", text.len());
+            }
         }
         "partition" => {
             let model = args.get_str("model", "vgg16");
@@ -110,6 +124,7 @@ fn main() -> bapipe::Result<()> {
             );
             println!("{}", timeline::render(&r, n, args.get_usize("width", 100)));
         }
+        #[cfg(feature = "pjrt")]
         "train" => {
             let mut cfg = match args.opt_str("config") {
                 Some(path) => TrainConfig::load(path)?,
@@ -131,6 +146,7 @@ fn main() -> bapipe::Result<()> {
                 report.tokens_per_sec, report.total_secs
             );
         }
+        #[cfg(feature = "pjrt")]
         "dp" => {
             let mut cfg = TrainConfig::default();
             if let Some(a) = args.opt_str("artifacts") {
@@ -144,6 +160,7 @@ fn main() -> bapipe::Result<()> {
             }
             println!("throughput {:.1} tokens/s", rep.tokens_per_sec);
         }
+        #[cfg(feature = "pjrt")]
         "profile" => {
             let dir = args.get_str("artifacts", "artifacts/lm10m-s4-b4");
             let rt = Runtime::load(&dir)?;
@@ -153,12 +170,21 @@ fn main() -> bapipe::Result<()> {
                 println!("  stage {i}: fwd {:.2} ms, bwd {:.2} ms", f * 1e3, b * 1e3);
             }
         }
+        #[cfg(not(feature = "pjrt"))]
+        "train" | "dp" | "profile" => {
+            anyhow::bail!(
+                "`{cmd}` needs the real XLA/PJRT engine; rebuild with \
+                 `cargo build --release --features pjrt` (see rust/vendor/xla)"
+            );
+        }
         _ => {
             println!(
                 "bapipe — balanced pipeline parallelism for DNN training\n\n\
                  usage: bapipe <explore|partition|simulate|train|dp|profile> [--key value ...]\n\
                  examples:\n\
                    bapipe explore --model vgg16 --cluster v100 --n 4 --batch 32\n\
+                   bapipe explore --model resnet50 --cluster fpga-mixed --n 4 --batch 4 \\\n\
+                       --jobs 8 --permute --emit plan.json\n\
                    bapipe simulate --schedule 1f1b-so --n 3 --m 8\n\
                    bapipe train --artifacts artifacts/lm10m-s4-b4 --schedule 1f1b --m 8 --steps 50\n\
                    bapipe dp --artifacts artifacts/lm10m-s4-b4 --replicas 2 --steps 20"

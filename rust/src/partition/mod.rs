@@ -126,19 +126,34 @@ pub struct PartitionPlan {
     pub notes: Vec<String>,
 }
 
-/// The complete Fig.-3 balanced-partition flow.
-///
-/// `micro` is the micro-batch size used for balancing; `m` the number of
-/// micro-batches per mini-batch (memory fine-tune needs the schedule's
-/// stash depths).
-pub fn balanced_partition(
+/// The schedule-independent result of the first three Fig.-3 passes
+/// (inter-layer DP, coarse-grained restriction, intra-layer fractional
+/// refinement). Only the final memory fine-tune consults the schedule
+/// kind (stash depths / weight versions), so this seed can be computed
+/// once per `micro` and shared across every schedule candidate — which
+/// is what the planner's `EvalCache` does.
+#[derive(Debug, Clone)]
+pub struct BalanceSeed {
+    /// Partition after passes 1–3 (before the memory fine-tune).
+    pub partition: Partition,
+    /// Fractional refinement (intra-layer partition), if applied.
+    pub frac: Option<intralayer::FracPartition>,
+    /// Activation threshold `a_th` (bytes) if the coarse-grained pass ran.
+    pub coarse_threshold: Option<f64>,
+    /// The cut set the memory fine-tune must stay on (coarse if it ran).
+    pub active_cuts: Vec<usize>,
+    /// Flow notes so far (which passes fired).
+    pub notes: Vec<String>,
+}
+
+/// Passes 1–3 of the Fig.-3 flow: everything that does not depend on the
+/// schedule kind or micro-batch count. See [`balanced_partition`].
+pub fn balance_stages(
     net: &crate::model::Network,
     cluster: &Cluster,
     profile: &Profile,
-    kind: ScheduleKind,
     micro: f64,
-    m: usize,
-) -> crate::Result<PartitionPlan> {
+) -> crate::Result<BalanceSeed> {
     let mut notes = Vec::new();
     let cuts = net.legal_cuts();
     anyhow::ensure!(
@@ -202,13 +217,35 @@ pub fn balanced_partition(
         }
     }
 
-    // 4. Memory fine-tune (stays on the active cut set — coarse if it ran).
-    let active_cuts = if coarse_threshold.is_some() {
-        coarse::allowed_cuts(profile, &cuts, coarse_threshold.unwrap())
-    } else {
-        cuts.clone()
+    // The memory fine-tune must stay on the active cut set (coarse if it
+    // ran).
+    let active_cuts = match coarse_threshold {
+        Some(a_th) => coarse::allowed_cuts(profile, &cuts, a_th),
+        None => cuts,
     };
-    let fitted = memfit::fit_memory(profile, cluster, part, kind, micro, m, &active_cuts)?;
+    Ok(BalanceSeed { partition: part, frac, coarse_threshold, active_cuts, notes })
+}
+
+/// Pass 4 of the Fig.-3 flow: fine-tune a [`BalanceSeed`] for the memory
+/// footprint of one schedule kind / micro-batch count.
+pub fn finish_partition(
+    cluster: &Cluster,
+    profile: &Profile,
+    seed: &BalanceSeed,
+    kind: ScheduleKind,
+    micro: f64,
+    m: usize,
+) -> crate::Result<PartitionPlan> {
+    let mut notes = seed.notes.clone();
+    let fitted = memfit::fit_memory(
+        profile,
+        cluster,
+        seed.partition.clone(),
+        kind,
+        micro,
+        m,
+        &seed.active_cuts,
+    )?;
     if fitted.moved > 0 {
         notes.push(format!("memfit: moved {} boundary layers", fitted.moved));
     }
@@ -216,7 +253,31 @@ pub fn balanced_partition(
 
     let costs = stage_costs(profile, cluster, &part, micro);
     let max_stage_time = costs.iter().map(|(f, b)| f + b).fold(0.0, f64::max);
-    Ok(PartitionPlan { partition: part, frac, coarse_threshold, max_stage_time, notes })
+    Ok(PartitionPlan {
+        partition: part,
+        frac: seed.frac.clone(),
+        coarse_threshold: seed.coarse_threshold,
+        max_stage_time,
+        notes,
+    })
+}
+
+/// The complete Fig.-3 balanced-partition flow.
+///
+/// `micro` is the micro-batch size used for balancing; `m` the number of
+/// micro-batches per mini-batch (memory fine-tune needs the schedule's
+/// stash depths). Equivalent to [`balance_stages`] followed by
+/// [`finish_partition`].
+pub fn balanced_partition(
+    net: &crate::model::Network,
+    cluster: &Cluster,
+    profile: &Profile,
+    kind: ScheduleKind,
+    micro: f64,
+    m: usize,
+) -> crate::Result<PartitionPlan> {
+    let seed = balance_stages(net, cluster, profile, micro)?;
+    finish_partition(cluster, profile, &seed, kind, micro, m)
 }
 
 #[cfg(test)]

@@ -1,0 +1,142 @@
+//! Closed-form lower bounds on simulated schedules — the analytical side
+//! of the planner's branch-and-bound.
+//!
+//! For every schedule kind the DES executes, each stage `i` must (a) wait
+//! for micro-batch 0's forward to traverse stages `0..i`, (b) perform all
+//! `M` forwards and `M` backwards itself, and (c) after its final
+//! backward, let the error traverse stages `i-1..0` backwards. With
+//! per-stage costs `f_j` / `b_j` this yields the critical-path bound
+//!
+//! ```text
+//! makespan ≥ max_i ( Σ_{j<i} f_j  +  M·(f_i + b_i)  +  Σ_{j<i} b_j )
+//! ```
+//!
+//! which ignores all communication (transfers only add time) and holds
+//! for FBP-AS as well, whose slots cost `f + b` regardless of occupancy
+//! (Table 1). On the Tables 1–2 uniform setting the bound is exactly
+//! `(M+N−1)(F+B)` — the overlapped-communication mini-batch time — so it
+//! is tight precisely where the paper's model is.
+//!
+//! A candidate whose *lower bound* on epoch time already exceeds the
+//! incumbent's *simulated* epoch time provably cannot win, and the DES
+//! run is skipped.
+
+use crate::schedule::ScheduleKind;
+use crate::sim::engine::SimSpec;
+
+/// Provable lower bound on `simulate(spec).makespan` (communication-free
+/// critical path; see module docs).
+pub fn makespan_lower_bound(spec: &SimSpec) -> f64 {
+    let n = spec.n();
+    let m = spec.m as f64;
+    let mut prefix_fwd = 0.0;
+    let mut prefix_bwd = 0.0;
+    let mut best = 0.0f64;
+    for i in 0..n {
+        let fb = spec.fwd[i] + spec.bwd[i];
+        best = best.max(prefix_fwd + m * fb + prefix_bwd);
+        prefix_fwd += spec.fwd[i];
+        prefix_bwd += spec.bwd[i];
+    }
+    best
+}
+
+/// Provable lower bound on `epoch_time(spec, n_minibatches)`.
+///
+/// Intra-batch schedules drain between mini-batches, so the epoch is an
+/// exact multiple of the makespan. PipeDream pipelines across
+/// mini-batches: its steady period is at least the bottleneck stage's
+/// `f + b`.
+pub fn epoch_lower_bound(spec: &SimSpec, n_minibatches: usize) -> f64 {
+    let one = makespan_lower_bound(spec);
+    match spec.kind {
+        ScheduleKind::PipeDream => {
+            let max_fb = spec
+                .fwd
+                .iter()
+                .zip(&spec.bwd)
+                .map(|(f, b)| f + b)
+                .fold(0.0, f64::max);
+            one + max_fb * spec.m as f64 * n_minibatches.saturating_sub(1) as f64
+        }
+        _ => one * n_minibatches as f64,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::ExecMode;
+    use crate::sim::engine::{epoch_time, simulate};
+    use crate::util::prop::{check, ensure, Config};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn tight_on_uniform_overlapped_setting() {
+        // Table 1: 1F1B-AS mini-batch time is (M+N-1)(F+B); the bound
+        // must equal it when communication is free.
+        let spec = SimSpec::uniform(ScheduleKind::OneFOneBAs, 4, 16, 1.0, 2.0, 0.0, ExecMode::Async);
+        let lb = makespan_lower_bound(&spec);
+        assert!((lb - (16.0 + 4.0 - 1.0) * 3.0).abs() < 1e-12);
+        let des = simulate(&spec).makespan;
+        assert!((des - lb).abs() < 1e-9, "DES {des} vs bound {lb}");
+    }
+
+    #[test]
+    fn bound_never_exceeds_des_property() {
+        // Randomized heterogeneous specs across every kind: the bound
+        // must stay below the DES makespan, and the epoch bound below the
+        // DES epoch.
+        let kinds = ScheduleKind::all();
+        check(
+            &Config { cases: 80, seed: 0xB0_07D5, max_size: 24 },
+            |g| {
+                let n = g.usize_in(1, 5);
+                let m = g.usize_in(1, 24);
+                let kind = kinds[g.usize_in(0, kinds.len())];
+                let exec = match kind.required_exec() {
+                    Some(e) => e,
+                    None => {
+                        if g.usize_in(0, 2) == 0 {
+                            ExecMode::Sync
+                        } else {
+                            ExecMode::Async
+                        }
+                    }
+                };
+                let mut spec = SimSpec::uniform(kind, n, m, 1.0, 1.0, 0.0, exec);
+                let seed = g.usize_in(0, 1 << 30) as u64;
+                let mut r = Rng::new(seed);
+                for i in 0..n {
+                    spec.fwd[i] = 0.05 + r.f64() * 3.0;
+                    spec.bwd[i] = 0.05 + r.f64() * 3.0;
+                }
+                for i in 0..n.saturating_sub(1) {
+                    spec.fwd_xfer[i] = r.f64() * 1.5;
+                    spec.bwd_xfer[i] = r.f64() * 1.5;
+                }
+                spec
+            },
+            |spec| {
+                let des = simulate(spec).makespan;
+                let lb = makespan_lower_bound(spec);
+                ensure(
+                    lb <= des * (1.0 + 1e-9),
+                    format!("bound {lb} exceeds DES {des} for {:?} n={} m={}", spec.kind, spec.n(), spec.m),
+                )?;
+                let ep = epoch_time(spec, 5);
+                let elb = epoch_lower_bound(spec, 5);
+                ensure(
+                    elb <= ep * (1.0 + 1e-9),
+                    format!("epoch bound {elb} exceeds DES epoch {ep} for {:?}", spec.kind),
+                )
+            },
+        );
+    }
+
+    #[test]
+    fn single_stage_bound_is_exact() {
+        let spec = SimSpec::uniform(ScheduleKind::OneFOneBSno, 1, 4, 1.0, 2.0, 0.0, ExecMode::Sync);
+        assert!((makespan_lower_bound(&spec) - 12.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,177 @@
+//! Memoization of balanced-partition work across candidates.
+//!
+//! Two levels, matching what actually varies:
+//!
+//! 1. **Balance seed** (passes 1–3 of Fig. 3: inter-layer DP, coarse
+//!    restriction, intra-layer refinement) depends only on `micro` — it
+//!    is computed once per micro-batch size and shared across *every*
+//!    schedule kind. This is the expensive part (the `O(N·C²)` DP).
+//! 2. **Finished partition** (pass 4: memory fine-tune) depends on the
+//!    schedule only through its Tables 1–2 memory rows, so kinds in the
+//!    same [`ScheduleKind::memory_class`] share the finished plan too.
+//!
+//! Failures are cached like successes: an infeasible seed is infeasible
+//! for every kind at that `micro`.
+//!
+//! [`ScheduleKind::memory_class`]: crate::schedule::ScheduleKind::memory_class
+
+use super::space::Candidate;
+use crate::cluster::Cluster;
+use crate::model::Network;
+use crate::partition::{balance_stages, finish_partition, BalanceSeed, PartitionPlan};
+use crate::profile::Profile;
+use std::collections::HashMap;
+
+/// Key of a balance seed: permutation × micro-batch size. `micro` enters
+/// as raw bits — the grid produces exact binary fractions, so bit
+/// equality is value equality here.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+struct SeedKey {
+    perm: usize,
+    micro_bits: u64,
+}
+
+/// Key of a finished partition: seed key × memory class × M.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+struct PlanKey {
+    seed: SeedKey,
+    memory_class: u8,
+    m: usize,
+}
+
+/// Memoizing store for balanced partitions (and their failures).
+#[derive(Debug, Default)]
+pub struct EvalCache {
+    seeds: HashMap<SeedKey, Result<BalanceSeed, String>>,
+    plans: HashMap<PlanKey, Result<PartitionPlan, String>>,
+    /// Requests answered from either cache level.
+    pub hits: usize,
+    /// Requests that ran partition passes (seed or fine-tune).
+    pub misses: usize,
+}
+
+impl EvalCache {
+    /// Empty cache.
+    pub fn new() -> EvalCache {
+        EvalCache::default()
+    }
+
+    /// The balanced partition for `cand`: balance seed computed once per
+    /// `(perm, micro)`, memory fine-tune once per `(memory class, m)` on
+    /// top of it. `cluster`/`profile` must be the views matching
+    /// `cand.perm`.
+    pub fn partition(
+        &mut self,
+        net: &Network,
+        cluster: &Cluster,
+        profile: &Profile,
+        cand: &Candidate,
+    ) -> Result<PartitionPlan, String> {
+        let seed_key = SeedKey { perm: cand.perm, micro_bits: cand.micro.to_bits() };
+        let plan_key =
+            PlanKey { seed: seed_key, memory_class: cand.kind.memory_class(), m: cand.m };
+        if let Some(found) = self.plans.get(&plan_key) {
+            self.hits += 1;
+            return found.clone();
+        }
+        let seed = match self.seeds.get(&seed_key) {
+            Some(cached) => {
+                self.hits += 1;
+                cached.clone()
+            }
+            None => {
+                self.misses += 1;
+                let computed = balance_stages(net, cluster, profile, cand.micro)
+                    .map_err(|e| e.to_string());
+                self.seeds.insert(seed_key, computed.clone());
+                computed
+            }
+        };
+        let finished = match seed {
+            Ok(seed) => {
+                self.misses += 1;
+                finish_partition(cluster, profile, &seed, cand.kind, cand.micro, cand.m)
+                    .map_err(|e| e.to_string())
+            }
+            Err(e) => Err(e),
+        };
+        self.plans.insert(plan_key, finished.clone());
+        finished
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::presets;
+    use crate::model::zoo;
+    use crate::partition::balanced_partition;
+    use crate::profile::analytical;
+    use crate::schedule::ScheduleKind;
+
+    fn cand(kind: ScheduleKind, m: usize, micro: f64) -> Candidate {
+        Candidate { kind, m, micro, perm: 0 }
+    }
+
+    #[test]
+    fn seed_shared_across_kinds_plan_shared_across_classes() {
+        let net = zoo::vgg16(224);
+        let cl = presets::v100_cluster(4);
+        let prof = analytical::profile(&net, &cl);
+        let mut cache = EvalCache::new();
+        // First request: seed miss + fine-tune miss.
+        let a = cache
+            .partition(&net, &cl, &prof, &cand(ScheduleKind::OneFOneBSno, 16, 8.0))
+            .unwrap();
+        assert_eq!((cache.hits, cache.misses), (0, 2));
+        // Other kind, same micro: seed HIT, fine-tune miss (new class).
+        let b = cache
+            .partition(&net, &cl, &prof, &cand(ScheduleKind::OneFOneBSo, 16, 8.0))
+            .unwrap();
+        assert_eq!((cache.hits, cache.misses), (1, 3));
+        // Same memory class as the first request: full plan HIT.
+        let c = cache
+            .partition(&net, &cl, &prof, &cand(ScheduleKind::OneFOneBAs, 16, 8.0))
+            .unwrap();
+        assert_eq!((cache.hits, cache.misses), (2, 3));
+        assert_eq!(a.partition, c.partition);
+        // Different micro: everything fresh.
+        cache
+            .partition(&net, &cl, &prof, &cand(ScheduleKind::OneFOneBSno, 32, 4.0))
+            .unwrap();
+        assert_eq!((cache.hits, cache.misses), (2, 5));
+        // Memory is ample here, so both classes agree on the partition.
+        assert_eq!(a.partition, b.partition);
+    }
+
+    #[test]
+    fn cached_partition_matches_direct_call() {
+        let net = zoo::resnet50(224);
+        let cl = presets::v100_cluster(4);
+        let prof = analytical::profile(&net, &cl);
+        let mut cache = EvalCache::new();
+        let via_cache = cache
+            .partition(&net, &cl, &prof, &cand(ScheduleKind::OneFOneBSo, 16, 8.0))
+            .unwrap();
+        let direct =
+            balanced_partition(&net, &cl, &prof, ScheduleKind::OneFOneBSo, 8.0, 16).unwrap();
+        assert_eq!(via_cache.partition, direct.partition);
+        assert_eq!(via_cache.max_stage_time, direct.max_stage_time);
+        assert_eq!(via_cache.notes, direct.notes);
+    }
+
+    #[test]
+    fn failures_are_cached_too() {
+        // A model too large for one 16 GB V100 fails the memory fine-tune.
+        let net = zoo::gnmt_l(158);
+        let cl = presets::v100_cluster(1);
+        let prof = analytical::profile(&net, &cl);
+        let mut cache = EvalCache::new();
+        let c = cand(ScheduleKind::OneFOneBSno, 2, 16.0);
+        assert!(cache.partition(&net, &cl, &prof, &c).is_err());
+        let (h1, m1) = (cache.hits, cache.misses);
+        assert!(cache.partition(&net, &cl, &prof, &c).is_err());
+        assert_eq!(cache.hits, h1 + 1, "second failure must be a cache hit");
+        assert_eq!(cache.misses, m1);
+    }
+}

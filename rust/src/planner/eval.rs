@@ -1,0 +1,200 @@
+//! Candidate evaluation: balanced partition → `SimSpec` → feasibility →
+//! discrete-event simulation. The spec builders moved here from the seed
+//! `explorer` (which now re-exports them).
+
+use super::cache::EvalCache;
+use super::space::Candidate;
+use super::Options;
+use crate::cluster::Cluster;
+use crate::model::Network;
+use crate::partition::intralayer::frac_stage_costs;
+use crate::partition::memfit::{stage_memory_bytes, MemoryModel};
+use crate::partition::{
+    balanced_partition, cut_comm_time, stage_costs, Partition, PartitionPlan,
+};
+use crate::profile::Profile;
+use crate::schedule::ScheduleKind;
+use crate::sim::engine::{epoch_from_makespan, simulate, SimSpec};
+
+/// Build the SimSpec for a full balanced-partition plan, using the
+/// intra-layer fractional stage costs when the flow produced them (the
+/// paper's Section 3.3.2 refinement; communication stays at the integral
+/// boundaries, which the fractional bounds stay within one layer of).
+pub fn build_spec_plan(
+    profile: &Profile,
+    cluster: &Cluster,
+    plan: &PartitionPlan,
+    kind: ScheduleKind,
+    micro: f64,
+    m: usize,
+) -> SimSpec {
+    let mut spec = build_spec(profile, cluster, &plan.partition, kind, micro, m);
+    if let Some(fp) = &plan.frac {
+        let frac = frac_stage_costs(profile, fp, micro);
+        // keep any stage-level floor (FPGA weight-spill penalty) from the
+        // integral costs: the fractional refinement only rebalances compute
+        for (i, (f, b)) in frac.into_iter().enumerate() {
+            spec.fwd[i] = f.max(1e-12);
+            spec.bwd[i] = b.max(1e-12);
+        }
+    }
+    spec
+}
+
+/// Build the SimSpec for a (kind, partition, micro) candidate.
+pub fn build_spec(
+    profile: &Profile,
+    cluster: &Cluster,
+    part: &Partition,
+    kind: ScheduleKind,
+    micro: f64,
+    m: usize,
+) -> SimSpec {
+    let costs = stage_costs(profile, cluster, part, micro);
+    let n = part.n_stages();
+    let fwd_xfer: Vec<f64> =
+        (0..n - 1).map(|i| cut_comm_time(profile, cluster, part, micro, i)).collect();
+    SimSpec {
+        kind,
+        m,
+        fwd: costs.iter().map(|c| c.0).collect(),
+        bwd: costs.iter().map(|c| c.1).collect(),
+        update: vec![0.0; n],
+        bwd_xfer: fwd_xfer.clone(), // errors are activation-sized (Section 1)
+        fwd_xfer,
+        exec: cluster.devices.iter().map(|d| d.exec).collect(),
+    }
+}
+
+/// Per-stage memory of a candidate plan.
+pub fn plan_memory(
+    profile: &Profile,
+    kind: ScheduleKind,
+    part: &Partition,
+    micro: f64,
+    m: usize,
+) -> Vec<u64> {
+    let mm = MemoryModel::default();
+    let n = part.n_stages();
+    (0..n)
+        .map(|i| stage_memory_bytes(profile, &mm, kind, n, i, part.stage(i), micro, m))
+        .collect()
+}
+
+/// Does every stage of a candidate fit its device?
+pub fn fits(
+    profile: &Profile,
+    cluster: &Cluster,
+    kind: ScheduleKind,
+    part: &Partition,
+    micro: f64,
+    m: usize,
+) -> bool {
+    let mm = MemoryModel::default();
+    plan_memory(profile, kind, part, micro, m)
+        .iter()
+        .zip(&cluster.devices)
+        .all(|(&used, d)| used <= mm.usable(d.mem_capacity))
+}
+
+/// A candidate that survived phase A: its DES spec, partition and
+/// analytical epoch lower bound.
+#[derive(Debug)]
+pub(crate) struct Prepared {
+    pub spec: SimSpec,
+    pub partition: Partition,
+    pub lb_epoch: f64,
+}
+
+/// Phase A of the exploration for one candidate: divisibility, balanced
+/// partition (memoized through `cache`), memory feasibility, spec
+/// construction and the branch-and-bound lower bound. `Err` carries the
+/// human-readable infeasibility reason.
+pub(crate) fn prepare(
+    net: &Network,
+    cluster: &Cluster,
+    profile: &Profile,
+    cache: &mut EvalCache,
+    cand: &Candidate,
+    global_batch: f64,
+    n_minibatches: usize,
+) -> Result<Prepared, String> {
+    if cand.m == 0 || (global_batch as usize) % cand.m != 0 {
+        return Err(format!("M={} does not divide the global mini-batch {global_batch}", cand.m));
+    }
+    let plan = cache.partition(net, cluster, profile, cand)?;
+    if !fits(profile, cluster, cand.kind, &plan.partition, cand.micro, cand.m) {
+        return Err("stage memory exceeds device capacity".to_string());
+    }
+    let spec = build_spec_plan(profile, cluster, &plan, cand.kind, cand.micro, cand.m);
+    let lb_epoch = super::bounds::epoch_lower_bound(&spec, n_minibatches);
+    Ok(Prepared { spec, partition: plan.partition, lb_epoch })
+}
+
+/// Evaluate one fully-specified pipeline candidate (the seed explorer's
+/// entry point, kept for compatibility and ad-hoc probing). Returns
+/// `(minibatch_time, epoch_time, partition)` or `None` if infeasible.
+pub fn evaluate_pipeline(
+    net: &Network,
+    cluster: &Cluster,
+    profile: &Profile,
+    kind: ScheduleKind,
+    m: usize,
+    opts: &Options,
+) -> Option<(f64, f64, Partition)> {
+    let n = cluster.len();
+    let global = opts.batch_per_device * n as f64;
+    if m == 0 || (global as usize) % m != 0 {
+        return None;
+    }
+    let micro = global / m as f64;
+    let plan = balanced_partition(net, cluster, profile, kind, micro, m).ok()?;
+    if !fits(profile, cluster, kind, &plan.partition, micro, m) {
+        return None;
+    }
+    let spec = build_spec_plan(profile, cluster, &plan, kind, micro, m);
+    let n_mb = (opts.samples_per_epoch as f64 / global).ceil() as usize;
+    let makespan = simulate(&spec).makespan;
+    let ep = epoch_from_makespan(makespan, &spec, n_mb);
+    Some((makespan, ep, plan.partition))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::presets;
+    use crate::model::zoo;
+    use crate::profile::analytical;
+
+    #[test]
+    fn prepare_rejects_non_divisor_m() {
+        let net = zoo::vgg16(224);
+        let cl = presets::v100_cluster(4);
+        let prof = analytical::profile(&net, &cl);
+        let mut cache = EvalCache::new();
+        let cand = Candidate { kind: ScheduleKind::OneFOneBSno, m: 3, micro: 128.0 / 3.0, perm: 0 };
+        let err = prepare(&net, &cl, &prof, &mut cache, &cand, 128.0, 64).unwrap_err();
+        assert!(err.contains("does not divide"), "{err}");
+        assert_eq!(cache.misses, 0, "no partition work for a non-divisor M");
+    }
+
+    #[test]
+    fn prepare_matches_evaluate_pipeline() {
+        let net = zoo::vgg16(224);
+        let cl = presets::v100_cluster(4);
+        let prof = analytical::profile(&net, &cl);
+        let opts = Options { batch_per_device: 32.0, samples_per_epoch: 8192, ..Default::default() };
+        let mut cache = EvalCache::new();
+        let m = 16;
+        let cand = Candidate { kind: ScheduleKind::OneFOneBSo, m, micro: 8.0, perm: 0 };
+        let p = prepare(&net, &cl, &prof, &mut cache, &cand, 128.0, 64).unwrap();
+        let (mb, ep, part) =
+            evaluate_pipeline(&net, &cl, &prof, ScheduleKind::OneFOneBSo, m, &opts).unwrap();
+        assert_eq!(p.partition, part);
+        let makespan = simulate(&p.spec).makespan;
+        assert_eq!(makespan, mb);
+        assert_eq!(epoch_from_makespan(makespan, &p.spec, 64), ep);
+        // the lower bound must hold on its own spec
+        assert!(p.lb_epoch <= ep * (1.0 + 1e-9), "lb {} vs epoch {ep}", p.lb_epoch);
+    }
+}

@@ -1,0 +1,459 @@
+//! The planner: BaPipe's Fig.-3 automatic exploration as a first-class,
+//! typed, parallel subsystem.
+//!
+//! The seed implementation (now the [`crate::explorer`] compat façade)
+//! ran a sequential exhaustive grid search and reported `Vec<String>`
+//! logs. This module restructures that loop into composable parts:
+//!
+//! * [`space::SearchSpace`] — enumerates candidates (schedule kind ×
+//!   micro-batch count × device orderings for heterogeneous clusters);
+//! * [`cache::EvalCache`] — memoizes partition work at the granularity
+//!   it actually varies: the kind-independent balance passes once per
+//!   `micro`, the memory fine-tune once per (Tables 1–2 memory class, M)
+//!   — identical `(kind, micro)` partitions are computed once;
+//! * [`bounds`] — closed-form lower bounds (from the Tables 1–2 model)
+//!   that let a branch-and-bound pass skip discrete-event simulations
+//!   which provably cannot beat the incumbent;
+//! * [`eval`] — candidate → `SimSpec` → DES evaluation;
+//! * [`report`] — the typed [`Evaluation`] / [`ExplorationReport`] /
+//!   [`Plan`] data model, serializable to/from JSON (`plan.json`);
+//! * a scoped-thread parallel evaluator with a *deterministic reduction*:
+//!   the selected plan is independent of thread interleaving, so
+//!   `jobs = 1` and `jobs = 8` return identical plans.
+//!
+//! ```no_run
+//! use bapipe::{cluster, model, planner, profile};
+//!
+//! let net = model::zoo::vgg16(224);
+//! let cl = cluster::presets::v100_cluster(4);
+//! let prof = profile::analytical::profile(&net, &cl);
+//! let opts = planner::Options { jobs: 4, ..Default::default() };
+//! let plan = planner::explore(&net, &cl, &prof, &opts);
+//! println!("{}", plan.summary());
+//! println!("{} DES runs, {} pruned", plan.report.simulated_count, plan.report.pruned_count);
+//! ```
+
+pub mod bounds;
+pub mod cache;
+pub mod eval;
+pub mod report;
+pub mod space;
+
+mod parallel;
+
+pub use cache::EvalCache;
+pub use eval::{build_spec, build_spec_plan, evaluate_pipeline, fits, plan_memory};
+pub use report::{Choice, Evaluation, ExplorationReport, Outcome, Plan};
+pub use space::{Candidate, SearchSpace};
+
+use crate::cluster::Cluster;
+use crate::model::Network;
+use crate::partition::memfit::{dp_memory_bytes, MemoryModel};
+use crate::profile::Profile;
+use crate::schedule::ScheduleKind;
+use crate::sim::dp;
+use crate::sim::engine::{epoch_from_makespan, epoch_time, simulate};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Exploration options (superset of the seed explorer's options; every
+/// addition defaults to the seed behaviour).
+#[derive(Debug, Clone)]
+pub struct Options {
+    /// Per-device batch size `B` (paper's Table 3 notation). The global
+    /// mini-batch entering the pipeline is `B × N`.
+    pub batch_per_device: f64,
+    /// Samples per epoch (used to convert mini-batch time → epoch time).
+    pub samples_per_epoch: usize,
+    /// Micro-batch-count candidates `M` (filtered to divisors of the
+    /// global mini-batch).
+    pub m_candidates: Vec<usize>,
+    /// Also evaluate plain data parallelism and pick it if faster.
+    pub consider_dp: bool,
+    /// Worker threads for the DES evaluation phase (1 = sequential). The
+    /// selected plan is identical for any job count.
+    pub jobs: usize,
+    /// Skip simulations whose analytical lower bound already exceeds the
+    /// incumbent (branch-and-bound). Never changes the selected plan.
+    pub prune: bool,
+    /// On heterogeneous clusters, also search distinct device orderings
+    /// along the pipeline chain (e.g. which FPGA of a VCU129/VCU118 mix
+    /// hosts the first stage).
+    pub permute_devices: bool,
+}
+
+impl Default for Options {
+    fn default() -> Self {
+        Options {
+            batch_per_device: 32.0,
+            samples_per_epoch: 50_000,
+            m_candidates: vec![2, 4, 8, 16, 32, 64, 128],
+            consider_dp: true,
+            jobs: 1,
+            prune: true,
+            permute_devices: false,
+        }
+    }
+}
+
+/// How a candidate fared in phase B (DES / pruning).
+enum PhaseB {
+    Done { minibatch_time: f64, epoch_time: f64 },
+    Pruned { lower_bound: f64 },
+}
+
+/// Monotone atomic `min` over positive f64 values (bit patterns of
+/// non-negative floats order like unsigned integers).
+fn atomic_min_f64(cell: &AtomicU64, value: f64) {
+    let mut cur = cell.load(Ordering::Relaxed);
+    loop {
+        if f64::from_bits(cur) <= value {
+            return;
+        }
+        match cell.compare_exchange_weak(
+            cur,
+            value.to_bits(),
+            Ordering::Relaxed,
+            Ordering::Relaxed,
+        ) {
+            Ok(_) => return,
+            Err(seen) => cur = seen,
+        }
+    }
+}
+
+/// Evaluate every candidate of `space`, returning the typed report (DP
+/// baseline fields left unset — [`explore`] fills them).
+///
+/// Phase A (sequential, deterministic): balanced partitions through the
+/// memoizing [`EvalCache`], feasibility checks, `SimSpec` construction
+/// and analytical lower bounds. Phase B (parallel over `opts.jobs`
+/// scoped threads): DES evaluation in ascending-lower-bound order with a
+/// shared incumbent; a candidate is pruned only when its lower bound
+/// *strictly* exceeds the incumbent, so every pruned candidate is
+/// provably worse than the final best and the reduction (min epoch time,
+/// ties to the earliest candidate in enumeration order) is independent
+/// of thread interleaving.
+pub fn explore_space(
+    net: &Network,
+    cluster: &Cluster,
+    profile: &Profile,
+    space: &SearchSpace,
+    opts: &Options,
+) -> ExplorationReport {
+    let n = cluster.len();
+    let global = space.batch_per_device * n as f64;
+    let n_mb = (opts.samples_per_epoch as f64 / global).ceil() as usize;
+
+    // Per-permutation views of the cluster and profile.
+    let views: Vec<(Cluster, Profile)> = space
+        .device_orders
+        .iter()
+        .map(|ord| space::permuted_view(cluster, profile, ord))
+        .collect();
+
+    let candidates = space.candidates(n);
+
+    // Phase A: partitions (memoized), feasibility, specs, lower bounds.
+    let mut cache = EvalCache::new();
+    let prepared: Vec<Result<eval::Prepared, String>> = candidates
+        .iter()
+        .map(|cand| {
+            let (cl, prof) = &views[cand.perm];
+            eval::prepare(net, cl, prof, &mut cache, cand, global, n_mb)
+        })
+        .collect();
+
+    // Phase B: DES in ascending-lower-bound order (tightens the incumbent
+    // as early as possible), pruned against a shared incumbent.
+    let mut order: Vec<usize> = (0..candidates.len()).filter(|&i| prepared[i].is_ok()).collect();
+    order.sort_by(|&a, &b| {
+        let (la, lb) = match (&prepared[a], &prepared[b]) {
+            (Ok(pa), Ok(pb)) => (pa.lb_epoch, pb.lb_epoch),
+            _ => unreachable!("order only holds feasible candidates"),
+        };
+        la.partial_cmp(&lb).unwrap_or(std::cmp::Ordering::Equal).then(a.cmp(&b))
+    });
+
+    let incumbent = AtomicU64::new(f64::INFINITY.to_bits());
+    let phase_b: Vec<PhaseB> = parallel::run_indexed(opts.jobs, order.len(), |k| {
+        let p = match &prepared[order[k]] {
+            Ok(p) => p,
+            Err(_) => unreachable!("order only holds feasible candidates"),
+        };
+        let best_seen = f64::from_bits(incumbent.load(Ordering::Relaxed));
+        // Strict inequality (an equal-epoch candidate must still be
+        // simulated so the deterministic tie-break can consider it), with
+        // a relative margin so summation-order rounding in the bound can
+        // never prune a candidate the exhaustive search would keep.
+        if opts.prune && p.lb_epoch * (1.0 - 1e-9) > best_seen {
+            return PhaseB::Pruned { lower_bound: p.lb_epoch };
+        }
+        let makespan = simulate(&p.spec).makespan;
+        let ep = epoch_from_makespan(makespan, &p.spec, n_mb);
+        atomic_min_f64(&incumbent, ep);
+        PhaseB::Done { minibatch_time: makespan, epoch_time: ep }
+    });
+
+    // Stitch phase results back into enumeration order.
+    let mut outcomes: Vec<Option<Outcome>> = prepared
+        .iter()
+        .map(|r| match r {
+            Err(reason) => Some(Outcome::Infeasible { reason: reason.clone() }),
+            Ok(_) => None,
+        })
+        .collect();
+    for (k, res) in phase_b.into_iter().enumerate() {
+        let idx = order[k];
+        let p = match &prepared[idx] {
+            Ok(p) => p,
+            Err(_) => unreachable!(),
+        };
+        outcomes[idx] = Some(match res {
+            PhaseB::Done { minibatch_time, epoch_time } => Outcome::Evaluated {
+                minibatch_time,
+                epoch_time,
+                lower_bound: p.lb_epoch,
+                partition: p.partition.clone(),
+            },
+            PhaseB::Pruned { lower_bound } => Outcome::Pruned { lower_bound },
+        });
+    }
+
+    let evaluations: Vec<Evaluation> = candidates
+        .into_iter()
+        .zip(outcomes)
+        .map(|(candidate, outcome)| Evaluation {
+            candidate,
+            outcome: outcome.expect("every candidate received an outcome"),
+        })
+        .collect();
+
+    let simulated_count =
+        evaluations.iter().filter(|e| matches!(e.outcome, Outcome::Evaluated { .. })).count();
+    let pruned_count =
+        evaluations.iter().filter(|e| matches!(e.outcome, Outcome::Pruned { .. })).count();
+
+    ExplorationReport {
+        model: net.describe(),
+        cluster: cluster.describe(),
+        batch_per_device: space.batch_per_device,
+        samples_per_epoch: opts.samples_per_epoch,
+        jobs: opts.jobs.max(1),
+        ineligible: space.ineligible.clone(),
+        notes: space.notes.clone(),
+        evaluations,
+        simulated_count,
+        pruned_count,
+        cache_hits: cache.hits,
+        dp_considered: false,
+        dp_fits: false,
+        dp_minibatch_time: f64::INFINITY,
+        dp_epoch_time: f64::INFINITY,
+    }
+}
+
+/// The full BaPipe exploration (Fig. 3): enumerate the schedule ×
+/// micro-batching space (optionally over device orderings), evaluate
+/// with memoized partitions, branch-and-bound pruning and `opts.jobs`
+/// parallel workers, compare against the data-parallel baseline, and
+/// return the fastest plan with its full typed report.
+pub fn explore(net: &Network, cluster: &Cluster, profile: &Profile, opts: &Options) -> Plan {
+    let space = SearchSpace::bapipe(cluster, opts);
+    let mut report = explore_space(net, cluster, profile, &space, opts);
+
+    // DP baseline (the paper's 1x reference; ResNet-50's winner).
+    let dpr = dp::minibatch(profile, cluster, opts.batch_per_device);
+    let dp_epoch = if dpr.fits {
+        dp::epoch_time(profile, cluster, opts.batch_per_device, opts.samples_per_epoch)
+    } else {
+        f64::INFINITY
+    };
+    report.dp_considered = true;
+    report.dp_fits = dpr.fits;
+    report.dp_minibatch_time = dpr.minibatch_time;
+    report.dp_epoch_time = dp_epoch;
+
+    let best = report.best_evaluation().cloned();
+    match best {
+        Some(ev) => {
+            let (mb, ep, partition) = match ev.outcome {
+                Outcome::Evaluated { minibatch_time, epoch_time, partition, .. } => {
+                    (minibatch_time, epoch_time, partition)
+                }
+                _ => unreachable!("best_evaluation only returns Evaluated entries"),
+            };
+            if opts.consider_dp && dp_epoch < ep {
+                return dp_plan(profile, opts, dpr.minibatch_time, dp_epoch, cluster.len(), report);
+            }
+            let cand = ev.candidate;
+            let (_, prof_view) =
+                space::permuted_view(cluster, profile, &space.device_orders[cand.perm]);
+            let stage_memory =
+                plan_memory(&prof_view, cand.kind, &partition, cand.micro, cand.m);
+            Plan {
+                choice: Choice::Pipeline {
+                    kind: cand.kind,
+                    m: cand.m,
+                    micro: cand.micro,
+                    partition,
+                },
+                device_order: space.device_orders[cand.perm].clone(),
+                minibatch_time: mb,
+                epoch_time: ep,
+                dp_epoch_time: dp_epoch,
+                speedup_over_dp: dp_epoch / ep,
+                stage_memory,
+                report,
+            }
+        }
+        None => dp_plan(profile, opts, dpr.minibatch_time, dp_epoch, cluster.len(), report),
+    }
+}
+
+/// Build the data-parallel fallback plan (pipeline lost or infeasible).
+fn dp_plan(
+    profile: &Profile,
+    opts: &Options,
+    dp_minibatch: f64,
+    dp_epoch: f64,
+    n_devices: usize,
+    report: ExplorationReport,
+) -> Plan {
+    let mm = MemoryModel::data_parallel();
+    let stage_memory = vec![dp_memory_bytes(profile, &mm, opts.batch_per_device)];
+    Plan {
+        choice: Choice::DataParallel,
+        device_order: (0..n_devices).collect(),
+        minibatch_time: dp_minibatch,
+        epoch_time: dp_epoch,
+        dp_epoch_time: dp_epoch,
+        speedup_over_dp: 1.0,
+        stage_memory,
+        report,
+    }
+}
+
+/// GPipe baseline as a [`SearchSpace`] restriction: fill-drain schedule,
+/// **BaPipe's partition** (the paper gives GPipe our partitions since it
+/// has no balancer), best feasible M. Returns `(epoch_time, m)`.
+pub fn plan_gpipe(
+    net: &Network,
+    cluster: &Cluster,
+    profile: &Profile,
+    opts: &Options,
+) -> Option<(f64, usize)> {
+    let space = SearchSpace::restricted(ScheduleKind::GPipe, cluster, opts);
+    let report = explore_space(net, cluster, profile, &space, opts);
+    report.best_evaluation().map(|ev| match &ev.outcome {
+        Outcome::Evaluated { epoch_time, .. } => (*epoch_time, ev.candidate.m),
+        _ => unreachable!("best_evaluation only returns Evaluated entries"),
+    })
+}
+
+/// PipeDream baseline: inter-batch 1F1B with weight stashing, its own
+/// DP-style partitioner (compute+comm, no memory term), per-device batch
+/// halved until the stash fits (the candidate batches come from
+/// [`SearchSpace::pipedream_batches`]). Returns `(epoch_time, batch)`.
+pub fn plan_pipedream(
+    net: &Network,
+    cluster: &Cluster,
+    profile: &Profile,
+    opts: &Options,
+) -> Option<(f64, f64)> {
+    let cuts = net.legal_cuts();
+    for &b in &SearchSpace::pipedream_batches(opts.batch_per_device) {
+        let comm = |stage: usize, cut_layer: usize| -> f64 {
+            let bytes = profile.cut_bytes(cut_layer) as f64 * b;
+            // The partition DP only charges communication on cuts that
+            // have a downstream stage (`stage + 1 < n`), so `stage` is a
+            // real link index — on heterogeneous chains each boundary
+            // must price its *own* link, not a clamped one.
+            cluster.link(stage).xfer_time(bytes) * 2.0
+        };
+        let part =
+            crate::partition::interlayer::dp_optimal(profile, cluster, &cuts, b, Some(&comm))
+                .ok()?;
+        if fits(profile, cluster, ScheduleKind::PipeDream, &part, b, 1) {
+            let spec = build_spec(profile, cluster, &part, ScheduleKind::PipeDream, b, 1);
+            let n_mb = (opts.samples_per_epoch as f64 / b).ceil() as usize;
+            return Some((epoch_time(&spec, n_mb), b));
+        }
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::presets;
+    use crate::model::zoo;
+    use crate::profile::analytical;
+
+    fn opts(b: f64) -> Options {
+        Options { batch_per_device: b, samples_per_epoch: 8192, ..Default::default() }
+    }
+
+    #[test]
+    fn atomic_min_is_monotone() {
+        let cell = AtomicU64::new(f64::INFINITY.to_bits());
+        atomic_min_f64(&cell, 3.5);
+        atomic_min_f64(&cell, 7.0);
+        assert_eq!(f64::from_bits(cell.load(Ordering::Relaxed)), 3.5);
+        atomic_min_f64(&cell, 1.25);
+        assert_eq!(f64::from_bits(cell.load(Ordering::Relaxed)), 1.25);
+    }
+
+    #[test]
+    fn pruning_never_changes_the_plan() {
+        let net = zoo::vgg16(224);
+        let cl = presets::v100_cluster(4);
+        let prof = analytical::profile(&net, &cl);
+        let exhaustive = explore(&net, &cl, &prof, &Options { prune: false, ..opts(32.0) });
+        let pruned = explore(&net, &cl, &prof, &Options { prune: true, ..opts(32.0) });
+        assert_eq!(exhaustive.choice, pruned.choice);
+        assert_eq!(exhaustive.epoch_time, pruned.epoch_time);
+        assert_eq!(exhaustive.report.pruned_count, 0);
+        assert!(pruned.report.simulated_count <= exhaustive.report.simulated_count);
+    }
+
+    #[test]
+    fn cache_shares_partitions_across_kinds() {
+        // The balance seed (passes 1–3) is kind-independent: with two
+        // eligible kinds per cluster, every second candidate's seed is a
+        // cache hit — one hit per M value at minimum.
+        let net = zoo::vgg16(224);
+        let cl = presets::v100_cluster(4);
+        let prof = analytical::profile(&net, &cl);
+        let o = opts(32.0);
+        let plan = explore(&net, &cl, &prof, &o);
+        assert!(
+            plan.report.cache_hits >= o.m_candidates.len() - 1,
+            "expected cache sharing, got {} hits",
+            plan.report.cache_hits
+        );
+    }
+
+    #[test]
+    fn gpipe_restriction_matches_seed_loop() {
+        // The SearchSpace restriction must agree with evaluating the
+        // GPipe kind by hand over the M grid.
+        let net = zoo::vgg16(224);
+        let cl = presets::v100_cluster(4);
+        let prof = analytical::profile(&net, &cl);
+        let o = opts(32.0);
+        let (ep, m) = plan_gpipe(&net, &cl, &prof, &o).unwrap();
+        let mut best: Option<(f64, usize)> = None;
+        for &cand_m in &o.m_candidates {
+            if let Some((_, e, _)) =
+                evaluate_pipeline(&net, &cl, &prof, ScheduleKind::GPipe, cand_m, &o)
+            {
+                if best.map(|(b, _)| e < b).unwrap_or(true) {
+                    best = Some((e, cand_m));
+                }
+            }
+        }
+        let (seed_ep, seed_m) = best.unwrap();
+        assert_eq!(ep, seed_ep);
+        assert_eq!(m, seed_m);
+    }
+}

@@ -1,0 +1,647 @@
+//! The planner's typed result model — candidates' outcomes, the full
+//! exploration report, and the selected plan — plus lossless JSON
+//! serialization for machine-readable `plan.json` artifacts.
+//!
+//! Serialization goes through the in-repo `util::json` value model (the
+//! offline crate set has no serde/serde_json; `Cargo.toml` documents the
+//! substitution). `Plan::to_json` / `Plan::from_json` round-trip every
+//! field, including non-finite epoch times (`∞` ⇔ JSON `null`).
+
+use super::space::Candidate;
+use crate::partition::Partition;
+use crate::schedule::ScheduleKind;
+use crate::util::json::{obj, Json};
+
+/// The selected parallelization.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Choice {
+    /// Pipeline parallelism with the given schedule / micro-batching /
+    /// partition.
+    Pipeline {
+        /// Chosen schedule.
+        kind: ScheduleKind,
+        /// Micro-batches per mini-batch.
+        m: usize,
+        /// Micro-batch size (samples).
+        micro: f64,
+        /// The balanced partition.
+        partition: Partition,
+    },
+    /// Data parallelism won (e.g. ResNet-50 on PCIe V100s).
+    DataParallel,
+}
+
+/// What happened to one candidate.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Outcome {
+    /// Discrete-event simulated.
+    Evaluated {
+        /// Simulated time per (global) mini-batch, seconds.
+        minibatch_time: f64,
+        /// Simulated epoch time, seconds.
+        epoch_time: f64,
+        /// The analytical lower bound that was checked first.
+        lower_bound: f64,
+        /// The balanced partition used.
+        partition: Partition,
+    },
+    /// Skipped: the analytical lower bound already exceeded the
+    /// incumbent's simulated epoch time.
+    Pruned {
+        /// The bound that justified skipping, seconds.
+        lower_bound: f64,
+    },
+    /// Not evaluable (micro-batching, partition or memory infeasibility).
+    Infeasible {
+        /// Human-readable reason.
+        reason: String,
+    },
+}
+
+/// One candidate with its outcome.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Evaluation {
+    /// The search-space point.
+    pub candidate: Candidate,
+    /// How it fared.
+    pub outcome: Outcome,
+}
+
+/// Everything the exploration did, as data (the seed explorer's
+/// `Vec<String>` log is derived from this via
+/// [`ExplorationReport::log_lines`]).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ExplorationReport {
+    /// Workload description (e.g. `VGG-16 @224`).
+    pub model: String,
+    /// Cluster description (e.g. `4x V100`).
+    pub cluster: String,
+    /// Per-device batch size `B`.
+    pub batch_per_device: f64,
+    /// Samples per epoch used for epoch-time conversion.
+    pub samples_per_epoch: usize,
+    /// Worker threads used in the DES phase.
+    pub jobs: usize,
+    /// BaPipe kinds excluded by cluster eligibility.
+    pub ineligible: Vec<ScheduleKind>,
+    /// Search-space notes (e.g. a device-order search that was skipped
+    /// or truncated) — anything the enumeration dropped is recorded here.
+    pub notes: Vec<String>,
+    /// Every candidate in enumeration order with its outcome.
+    pub evaluations: Vec<Evaluation>,
+    /// Candidates that ran the discrete-event simulator.
+    pub simulated_count: usize,
+    /// Candidates skipped by branch-and-bound.
+    pub pruned_count: usize,
+    /// Partition computations answered by the memoizing cache.
+    pub cache_hits: usize,
+    /// Whether the data-parallel baseline was computed (false for
+    /// restricted baseline spaces such as GPipe's).
+    pub dp_considered: bool,
+    /// Whether DP fits device memory.
+    pub dp_fits: bool,
+    /// DP mini-batch time, seconds.
+    pub dp_minibatch_time: f64,
+    /// DP epoch time, seconds (`∞` when DP does not fit).
+    pub dp_epoch_time: f64,
+}
+
+impl ExplorationReport {
+    /// The winning evaluation: minimum simulated epoch time, ties going
+    /// to the earliest candidate in enumeration order — exactly the seed
+    /// explorer's sequential first-strictly-better rule, and independent
+    /// of DES execution order.
+    pub fn best_evaluation(&self) -> Option<&Evaluation> {
+        let mut best: Option<(&Evaluation, f64)> = None;
+        for ev in &self.evaluations {
+            if let Outcome::Evaluated { epoch_time, .. } = ev.outcome {
+                if best.map(|(_, b)| epoch_time < b).unwrap_or(true) {
+                    best = Some((ev, epoch_time));
+                }
+            }
+        }
+        best.map(|(ev, _)| ev)
+    }
+
+    /// Human-readable exploration log in the seed explorer's line format
+    /// (one line per ineligible kind, per candidate, and for the DP
+    /// baseline).
+    pub fn log_lines(&self) -> Vec<String> {
+        let mut lines = Vec::with_capacity(self.evaluations.len() + self.ineligible.len() + 1);
+        lines.extend(self.notes.iter().cloned());
+        for kind in &self.ineligible {
+            lines.push(format!("{}: ineligible on {}", kind.label(), self.cluster));
+        }
+        for ev in &self.evaluations {
+            let c = &ev.candidate;
+            let order = if c.perm > 0 { format!(" [order {}]", c.perm) } else { String::new() };
+            lines.push(match &ev.outcome {
+                Outcome::Evaluated { epoch_time, .. } => {
+                    format!("{} M={}{}: epoch {:.1}s", c.kind.label(), c.m, order, epoch_time)
+                }
+                Outcome::Pruned { lower_bound } => format!(
+                    "{} M={}{}: pruned (lower bound {:.1}s)",
+                    c.kind.label(),
+                    c.m,
+                    order,
+                    lower_bound
+                ),
+                Outcome::Infeasible { .. } => {
+                    format!("{} M={}{}: infeasible", c.kind.label(), c.m, order)
+                }
+            });
+        }
+        if self.dp_considered {
+            lines.push(format!(
+                "DP B={}: epoch {:.1}s{}",
+                self.batch_per_device,
+                self.dp_epoch_time,
+                if self.dp_fits { "" } else { " (out of memory)" }
+            ));
+        }
+        lines
+    }
+
+    /// Serialize to the `plan.json` report object.
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("model", Json::from(self.model.clone())),
+            ("cluster", Json::from(self.cluster.clone())),
+            ("batch_per_device", Json::Num(self.batch_per_device)),
+            ("samples_per_epoch", Json::from(self.samples_per_epoch)),
+            ("jobs", Json::from(self.jobs)),
+            (
+                "ineligible",
+                Json::Arr(self.ineligible.iter().map(|k| Json::from(k.label())).collect()),
+            ),
+            (
+                "notes",
+                Json::Arr(self.notes.iter().map(|n| Json::from(n.clone())).collect()),
+            ),
+            (
+                "evaluations",
+                Json::Arr(self.evaluations.iter().map(evaluation_to_json).collect()),
+            ),
+            ("simulated_count", Json::from(self.simulated_count)),
+            ("pruned_count", Json::from(self.pruned_count)),
+            ("cache_hits", Json::from(self.cache_hits)),
+            ("dp_considered", Json::from(self.dp_considered)),
+            ("dp_fits", Json::from(self.dp_fits)),
+            ("dp_minibatch_time", num_or_null(self.dp_minibatch_time)),
+            ("dp_epoch_time", num_or_null(self.dp_epoch_time)),
+        ])
+    }
+
+    /// Inverse of [`ExplorationReport::to_json`].
+    pub fn from_json(j: &Json) -> crate::Result<ExplorationReport> {
+        let evaluations = j
+            .req_arr("evaluations")
+            .map_err(|e| anyhow::anyhow!("{e}"))?
+            .iter()
+            .map(evaluation_from_json)
+            .collect::<crate::Result<Vec<_>>>()?;
+        let ineligible = j
+            .req_arr("ineligible")
+            .map_err(|e| anyhow::anyhow!("{e}"))?
+            .iter()
+            .map(kind_from_json)
+            .collect::<crate::Result<Vec<_>>>()?;
+        let notes = j
+            .req_arr("notes")
+            .map_err(|e| anyhow::anyhow!("{e}"))?
+            .iter()
+            .map(|v| {
+                v.as_str()
+                    .map(str::to_string)
+                    .ok_or_else(|| anyhow::anyhow!("bad note entry"))
+            })
+            .collect::<crate::Result<Vec<_>>>()?;
+        Ok(ExplorationReport {
+            model: req_str(j, "model")?,
+            cluster: req_str(j, "cluster")?,
+            batch_per_device: req_f64(j, "batch_per_device")?,
+            samples_per_epoch: req_usize(j, "samples_per_epoch")?,
+            jobs: req_usize(j, "jobs")?,
+            ineligible,
+            notes,
+            evaluations,
+            simulated_count: req_usize(j, "simulated_count")?,
+            pruned_count: req_usize(j, "pruned_count")?,
+            cache_hits: req_usize(j, "cache_hits")?,
+            dp_considered: req_bool(j, "dp_considered")?,
+            dp_fits: req_bool(j, "dp_fits")?,
+            dp_minibatch_time: req_f64(j, "dp_minibatch_time")?,
+            dp_epoch_time: req_f64(j, "dp_epoch_time")?,
+        })
+    }
+}
+
+/// A fully evaluated plan — what the seed explorer returned, plus the
+/// typed report and the winning device ordering.
+#[derive(Debug, Clone)]
+pub struct Plan {
+    /// What BaPipe chose.
+    pub choice: Choice,
+    /// Device ordering along the pipeline chain (identity unless
+    /// permutation search found a better heterogeneous layout).
+    pub device_order: Vec<usize>,
+    /// Time per (global) mini-batch, seconds.
+    pub minibatch_time: f64,
+    /// Epoch time, seconds.
+    pub epoch_time: f64,
+    /// Epoch time of the DP baseline (`∞` if DP does not fit memory).
+    pub dp_epoch_time: f64,
+    /// Speedup over the DP baseline.
+    pub speedup_over_dp: f64,
+    /// Per-stage memory (bytes); one entry (whole net) for DP.
+    pub stage_memory: Vec<u64>,
+    /// The full exploration record.
+    pub report: ExplorationReport,
+}
+
+impl Plan {
+    /// One-paragraph human-readable summary (the seed explorer's
+    /// `report()`, extended with search statistics).
+    pub fn summary(&self) -> String {
+        let head = match &self.choice {
+            Choice::Pipeline { kind, m, micro, partition } => format!(
+                "BaPipe plan: {} with M={m} (micro-batch {micro}), partition {}",
+                kind.label(),
+                partition.describe()
+            ),
+            Choice::DataParallel => {
+                "BaPipe plan: data parallelism (pipeline cannot beat DP here)".to_string()
+            }
+        };
+        let order = if self.device_order.windows(2).all(|w| w[0] + 1 == w[1]) {
+            String::new()
+        } else {
+            format!("\n  device order: {:?}", self.device_order)
+        };
+        format!(
+            "{head}\n  mini-batch {:.4}s, epoch {:.1}s, {:.2}x over DP\n  stage memory: [{}]\n  \
+             search: {} simulated, {} pruned, {} infeasible, {} cache hits (jobs {}){order}",
+            self.minibatch_time,
+            self.epoch_time,
+            self.speedup_over_dp,
+            self.stage_memory.iter().map(|&b| crate::util::fmt_bytes(b)).collect::<Vec<_>>().join(", "),
+            self.report.simulated_count,
+            self.report.pruned_count,
+            self.report.evaluations.len()
+                - self.report.simulated_count
+                - self.report.pruned_count,
+            self.report.cache_hits,
+            self.report.jobs,
+        )
+    }
+
+    /// Serialize the whole plan (choice + report) as a `plan.json`
+    /// document.
+    pub fn to_json(&self) -> Json {
+        let choice = match &self.choice {
+            Choice::Pipeline { kind, m, micro, partition } => obj(vec![
+                ("type", Json::from("pipeline")),
+                ("kind", Json::from(kind.label())),
+                ("m", Json::from(*m)),
+                ("micro", Json::Num(*micro)),
+                ("partition", partition_to_json(partition)),
+            ]),
+            Choice::DataParallel => obj(vec![("type", Json::from("data-parallel"))]),
+        };
+        obj(vec![
+            ("format", Json::from("bapipe-plan-v1")),
+            ("choice", choice),
+            (
+                "device_order",
+                Json::Arr(self.device_order.iter().map(|&d| Json::from(d)).collect()),
+            ),
+            ("minibatch_time", num_or_null(self.minibatch_time)),
+            ("epoch_time", num_or_null(self.epoch_time)),
+            ("dp_epoch_time", num_or_null(self.dp_epoch_time)),
+            ("speedup_over_dp", num_or_null(self.speedup_over_dp)),
+            (
+                "stage_memory",
+                Json::Arr(self.stage_memory.iter().map(|&b| Json::Num(b as f64)).collect()),
+            ),
+            ("report", self.report.to_json()),
+        ])
+    }
+
+    /// Serialize to pretty-printed `plan.json` text and verify the
+    /// document round-trips (parse back, compare choice and epoch)
+    /// before handing it out — the single implementation behind the CLI
+    /// `--emit` flag and the examples.
+    pub fn emit_json(&self) -> crate::Result<String> {
+        let text = self.to_json().to_string_pretty();
+        let back = Plan::from_json(&Json::parse(&text).map_err(|e| anyhow::anyhow!("{e}"))?)?;
+        anyhow::ensure!(
+            back.choice == self.choice
+                && back.epoch_time == self.epoch_time
+                && back.report == self.report,
+            "plan.json round-trip mismatch"
+        );
+        Ok(text)
+    }
+
+    /// Inverse of [`Plan::to_json`]; validates structure and rejects
+    /// unknown formats.
+    pub fn from_json(j: &Json) -> crate::Result<Plan> {
+        let format = req_str(j, "format")?;
+        anyhow::ensure!(format == "bapipe-plan-v1", "unknown plan format `{format}`");
+        let cj = j.req("choice").map_err(|e| anyhow::anyhow!("{e}"))?;
+        let choice = match req_str(cj, "type")?.as_str() {
+            "pipeline" => Choice::Pipeline {
+                kind: kind_from_json(cj.req("kind").map_err(|e| anyhow::anyhow!("{e}"))?)?,
+                m: req_usize(cj, "m")?,
+                micro: req_f64(cj, "micro")?,
+                partition: partition_from_json(
+                    cj.req("partition").map_err(|e| anyhow::anyhow!("{e}"))?,
+                )?,
+            },
+            "data-parallel" => Choice::DataParallel,
+            other => anyhow::bail!("unknown choice type `{other}`"),
+        };
+        let device_order = j
+            .req_arr("device_order")
+            .map_err(|e| anyhow::anyhow!("{e}"))?
+            .iter()
+            .map(|v| v.as_usize().ok_or_else(|| anyhow::anyhow!("bad device_order entry")))
+            .collect::<crate::Result<Vec<_>>>()?;
+        let stage_memory = j
+            .req_arr("stage_memory")
+            .map_err(|e| anyhow::anyhow!("{e}"))?
+            .iter()
+            .map(|v| {
+                v.as_i64()
+                    .and_then(|x| u64::try_from(x).ok())
+                    .ok_or_else(|| anyhow::anyhow!("bad stage_memory entry"))
+            })
+            .collect::<crate::Result<Vec<_>>>()?;
+        Ok(Plan {
+            choice,
+            device_order,
+            minibatch_time: req_f64(j, "minibatch_time")?,
+            epoch_time: req_f64(j, "epoch_time")?,
+            dp_epoch_time: req_f64(j, "dp_epoch_time")?,
+            speedup_over_dp: req_f64(j, "speedup_over_dp")?,
+            stage_memory,
+            report: ExplorationReport::from_json(
+                j.req("report").map_err(|e| anyhow::anyhow!("{e}"))?,
+            )?,
+        })
+    }
+}
+
+// ---------------------------------------------------------------- helpers
+
+/// Non-finite floats (∞ when DP is out of memory) become JSON `null`.
+fn num_or_null(v: f64) -> Json {
+    if v.is_finite() {
+        Json::Num(v)
+    } else {
+        Json::Null
+    }
+}
+
+fn req_str(j: &Json, key: &str) -> crate::Result<String> {
+    Ok(j.req_str(key).map_err(|e| anyhow::anyhow!("{e}"))?.to_string())
+}
+
+fn req_usize(j: &Json, key: &str) -> crate::Result<usize> {
+    j.req_usize(key).map_err(|e| anyhow::anyhow!("{e}"))
+}
+
+fn req_bool(j: &Json, key: &str) -> crate::Result<bool> {
+    j.req(key)
+        .map_err(|e| anyhow::anyhow!("{e}"))?
+        .as_bool()
+        .ok_or_else(|| anyhow::anyhow!("field `{key}` is not a bool"))
+}
+
+/// f64 field where JSON `null` encodes `∞`.
+fn req_f64(j: &Json, key: &str) -> crate::Result<f64> {
+    match j.get(key) {
+        None => anyhow::bail!("missing field `{key}`"),
+        Some(Json::Null) => Ok(f64::INFINITY),
+        Some(v) => v.as_f64().ok_or_else(|| anyhow::anyhow!("field `{key}` is not a number")),
+    }
+}
+
+fn kind_from_json(j: &Json) -> crate::Result<ScheduleKind> {
+    let label = j.as_str().ok_or_else(|| anyhow::anyhow!("schedule kind must be a string"))?;
+    ScheduleKind::from_label(label)
+        .ok_or_else(|| anyhow::anyhow!("unknown schedule kind `{label}`"))
+}
+
+fn partition_to_json(p: &Partition) -> Json {
+    obj(vec![("bounds", Json::Arr(p.bounds.iter().map(|&b| Json::from(b)).collect()))])
+}
+
+fn partition_from_json(j: &Json) -> crate::Result<Partition> {
+    let bounds = j
+        .req_arr("bounds")
+        .map_err(|e| anyhow::anyhow!("{e}"))?
+        .iter()
+        .map(|v| v.as_usize().ok_or_else(|| anyhow::anyhow!("bad partition bound")))
+        .collect::<crate::Result<Vec<_>>>()?;
+    anyhow::ensure!(bounds.len() >= 2, "partition needs at least two bounds");
+    anyhow::ensure!(bounds[0] == 0, "partition must start at layer 0");
+    anyhow::ensure!(
+        bounds.windows(2).all(|w| w[0] < w[1]),
+        "partition bounds must be strictly increasing"
+    );
+    let n_layers = *bounds.last().unwrap();
+    Ok(Partition::new(bounds, n_layers))
+}
+
+fn evaluation_to_json(ev: &Evaluation) -> Json {
+    let c = &ev.candidate;
+    let mut pairs = vec![
+        ("kind", Json::from(c.kind.label())),
+        ("m", Json::from(c.m)),
+        ("micro", Json::Num(c.micro)),
+        ("perm", Json::from(c.perm)),
+    ];
+    match &ev.outcome {
+        Outcome::Evaluated { minibatch_time, epoch_time, lower_bound, partition } => {
+            pairs.push(("status", Json::from("evaluated")));
+            pairs.push(("minibatch_time", Json::Num(*minibatch_time)));
+            pairs.push(("epoch_time", Json::Num(*epoch_time)));
+            pairs.push(("lower_bound", Json::Num(*lower_bound)));
+            pairs.push(("partition", partition_to_json(partition)));
+        }
+        Outcome::Pruned { lower_bound } => {
+            pairs.push(("status", Json::from("pruned")));
+            pairs.push(("lower_bound", Json::Num(*lower_bound)));
+        }
+        Outcome::Infeasible { reason } => {
+            pairs.push(("status", Json::from("infeasible")));
+            pairs.push(("reason", Json::from(reason.clone())));
+        }
+    }
+    obj(pairs)
+}
+
+fn evaluation_from_json(j: &Json) -> crate::Result<Evaluation> {
+    let candidate = Candidate {
+        kind: kind_from_json(j.req("kind").map_err(|e| anyhow::anyhow!("{e}"))?)?,
+        m: req_usize(j, "m")?,
+        micro: req_f64(j, "micro")?,
+        perm: req_usize(j, "perm")?,
+    };
+    let outcome = match req_str(j, "status")?.as_str() {
+        "evaluated" => Outcome::Evaluated {
+            minibatch_time: req_f64(j, "minibatch_time")?,
+            epoch_time: req_f64(j, "epoch_time")?,
+            lower_bound: req_f64(j, "lower_bound")?,
+            partition: partition_from_json(
+                j.req("partition").map_err(|e| anyhow::anyhow!("{e}"))?,
+            )?,
+        },
+        "pruned" => Outcome::Pruned { lower_bound: req_f64(j, "lower_bound")? },
+        "infeasible" => Outcome::Infeasible { reason: req_str(j, "reason")? },
+        other => anyhow::bail!("unknown evaluation status `{other}`"),
+    };
+    Ok(Evaluation { candidate, outcome })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_report() -> ExplorationReport {
+        ExplorationReport {
+            model: "VGG-16".into(),
+            cluster: "2x V100".into(),
+            batch_per_device: 32.0,
+            samples_per_epoch: 8192,
+            jobs: 4,
+            ineligible: vec![ScheduleKind::OneFOneBAs, ScheduleKind::FbpAs],
+            notes: vec!["device-order search: identity only (homogeneous cluster)".into()],
+            evaluations: vec![
+                Evaluation {
+                    candidate: Candidate {
+                        kind: ScheduleKind::OneFOneBSno,
+                        m: 4,
+                        micro: 16.0,
+                        perm: 0,
+                    },
+                    outcome: Outcome::Evaluated {
+                        minibatch_time: 0.5,
+                        epoch_time: 64.0,
+                        lower_bound: 60.0,
+                        partition: Partition::new(vec![0, 3, 7], 7),
+                    },
+                },
+                Evaluation {
+                    candidate: Candidate {
+                        kind: ScheduleKind::OneFOneBSo,
+                        m: 8,
+                        micro: 8.0,
+                        perm: 0,
+                    },
+                    outcome: Outcome::Pruned { lower_bound: 70.0 },
+                },
+                Evaluation {
+                    candidate: Candidate {
+                        kind: ScheduleKind::OneFOneBSo,
+                        m: 3,
+                        micro: 64.0 / 3.0,
+                        perm: 0,
+                    },
+                    outcome: Outcome::Infeasible { reason: "M=3 does not divide".into() },
+                },
+            ],
+            simulated_count: 1,
+            pruned_count: 1,
+            cache_hits: 2,
+            dp_considered: true,
+            dp_fits: false,
+            dp_minibatch_time: 1.0,
+            dp_epoch_time: f64::INFINITY,
+        }
+    }
+
+    fn sample_plan() -> Plan {
+        Plan {
+            choice: Choice::Pipeline {
+                kind: ScheduleKind::OneFOneBSno,
+                m: 4,
+                micro: 16.0,
+                partition: Partition::new(vec![0, 3, 7], 7),
+            },
+            device_order: vec![0, 1],
+            minibatch_time: 0.5,
+            epoch_time: 64.0,
+            dp_epoch_time: f64::INFINITY,
+            speedup_over_dp: f64::INFINITY,
+            stage_memory: vec![1 << 30, 2 << 30],
+            report: sample_report(),
+        }
+    }
+
+    #[test]
+    fn plan_round_trips_through_json_with_infinities() {
+        let plan = sample_plan();
+        for text in [plan.to_json().to_string_pretty(), plan.to_json().to_string_compact()] {
+            let parsed = Json::parse(&text).unwrap();
+            let back = Plan::from_json(&parsed).unwrap();
+            assert_eq!(back.choice, plan.choice);
+            assert_eq!(back.device_order, plan.device_order);
+            assert_eq!(back.minibatch_time, plan.minibatch_time);
+            assert_eq!(back.epoch_time, plan.epoch_time);
+            assert!(back.dp_epoch_time.is_infinite());
+            assert!(back.speedup_over_dp.is_infinite());
+            assert_eq!(back.stage_memory, plan.stage_memory);
+            assert_eq!(back.report, plan.report);
+        }
+    }
+
+    #[test]
+    fn data_parallel_choice_round_trips() {
+        let mut plan = sample_plan();
+        plan.choice = Choice::DataParallel;
+        let back = Plan::from_json(&Json::parse(&plan.to_json().to_string_compact()).unwrap())
+            .unwrap();
+        assert_eq!(back.choice, Choice::DataParallel);
+    }
+
+    #[test]
+    fn unknown_format_rejected() {
+        let mut j = sample_plan().to_json();
+        if let Json::Obj(m) = &mut j {
+            m.insert("format".into(), Json::from("bapipe-plan-v999"));
+        }
+        assert!(Plan::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn log_lines_match_seed_format() {
+        let lines = sample_report().log_lines();
+        assert!(lines.iter().any(|l| l == "1F1B-AS: ineligible on 2x V100"), "{lines:?}");
+        assert!(lines.iter().any(|l| l == "1F1B-SNO M=4: epoch 64.0s"), "{lines:?}");
+        assert!(lines.iter().any(|l| l.contains("1F1B-SO M=8: pruned")), "{lines:?}");
+        assert!(lines.iter().any(|l| l == "1F1B-SO M=3: infeasible"), "{lines:?}");
+        assert!(
+            lines.iter().any(|l| l == "DP B=32: epoch infs (out of memory)"),
+            "{lines:?}"
+        );
+    }
+
+    #[test]
+    fn best_evaluation_prefers_earlier_on_ties() {
+        let mut r = sample_report();
+        r.evaluations.push(Evaluation {
+            candidate: Candidate { kind: ScheduleKind::OneFOneBSo, m: 16, micro: 4.0, perm: 0 },
+            outcome: Outcome::Evaluated {
+                minibatch_time: 0.5,
+                epoch_time: 64.0, // ties the first entry
+                lower_bound: 60.0,
+                partition: Partition::new(vec![0, 2, 7], 7),
+            },
+        });
+        let best = r.best_evaluation().unwrap();
+        assert_eq!(best.candidate.kind, ScheduleKind::OneFOneBSno);
+        assert_eq!(best.candidate.m, 4);
+    }
+}

@@ -1,0 +1,314 @@
+//! Search-space enumeration: which `(schedule kind, micro-batch count,
+//! device ordering)` triples the planner considers.
+//!
+//! The space is data, not control flow: baselines restrict it (GPipe is
+//! the same machinery over a single kind) instead of reimplementing the
+//! exploration loop, and heterogeneous FPGA mixes can widen it with
+//! distinct device orderings along the pipeline chain.
+
+use super::Options;
+use crate::cluster::Cluster;
+use crate::profile::Profile;
+use crate::schedule::ScheduleKind;
+use std::collections::BTreeSet;
+
+/// Most device orderings explored on a heterogeneous cluster (distinct
+/// name-sequences of a 6-board mix already stay below this).
+pub const MAX_DEVICE_ORDERS: usize = 64;
+
+/// One point of the search space.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Candidate {
+    /// Schedule to run.
+    pub kind: ScheduleKind,
+    /// Micro-batches per mini-batch.
+    pub m: usize,
+    /// Micro-batch size in samples (global mini-batch / `m`).
+    pub micro: f64,
+    /// Index into [`SearchSpace::device_orders`].
+    pub perm: usize,
+}
+
+/// The enumerable exploration space.
+#[derive(Debug, Clone)]
+pub struct SearchSpace {
+    /// Kinds to evaluate, in canonical (tie-break) order.
+    pub kinds: Vec<ScheduleKind>,
+    /// BaPipe kinds excluded by cluster eligibility (reported, not
+    /// enumerated — e.g. async schedules on a GPU cluster).
+    pub ineligible: Vec<ScheduleKind>,
+    /// Micro-batch-count grid.
+    pub m_grid: Vec<usize>,
+    /// Per-device batch size `B`; the global mini-batch is `B × N`.
+    pub batch_per_device: f64,
+    /// Device orderings to try; entry 0 is always the identity.
+    pub device_orders: Vec<Vec<usize>>,
+    /// Search-space construction notes (e.g. a requested permutation
+    /// search that was skipped or capped) — surfaced in the report so a
+    /// dropped search dimension is never silent.
+    pub notes: Vec<String>,
+}
+
+impl SearchSpace {
+    /// The paper's Fig.-3 space: every eligible BaPipe schedule kind ×
+    /// the M grid (× device orderings when `opts.permute_devices`).
+    pub fn bapipe(cluster: &Cluster, opts: &Options) -> SearchSpace {
+        let mut kinds = Vec::new();
+        let mut ineligible = Vec::new();
+        for kind in ScheduleKind::bapipe_candidates() {
+            if kind.eligible(cluster) {
+                kinds.push(kind);
+            } else {
+                ineligible.push(kind);
+            }
+        }
+        let (device_orders, notes) = device_orders(cluster, opts.permute_devices);
+        SearchSpace {
+            kinds,
+            ineligible,
+            m_grid: opts.m_candidates.clone(),
+            batch_per_device: opts.batch_per_device,
+            device_orders,
+            notes,
+        }
+    }
+
+    /// A single-kind restriction (baselines — e.g. GPipe over the same M
+    /// grid with BaPipe's balanced partitions).
+    pub fn restricted(kind: ScheduleKind, cluster: &Cluster, opts: &Options) -> SearchSpace {
+        SearchSpace {
+            kinds: vec![kind],
+            ineligible: Vec::new(),
+            m_grid: opts.m_candidates.clone(),
+            batch_per_device: opts.batch_per_device,
+            device_orders: vec![(0..cluster.len()).collect()],
+            notes: Vec::new(),
+        }
+    }
+
+    /// PipeDream's per-device batch candidates: `b, b/2, b/4, …` down to
+    /// one sample (the paper halves the batch until the weight stash
+    /// fits).
+    pub fn pipedream_batches(batch_per_device: f64) -> Vec<f64> {
+        let mut out = Vec::new();
+        let mut b = batch_per_device;
+        while b >= 1.0 {
+            out.push(b);
+            b /= 2.0;
+        }
+        out
+    }
+
+    /// All candidates in deterministic enumeration order (device order,
+    /// then kind, then M). This order is the reduction tie-break: among
+    /// equal epoch times the earliest candidate wins, matching the seed
+    /// explorer's first-strictly-better sequential rule.
+    pub fn candidates(&self, n_devices: usize) -> Vec<Candidate> {
+        let global = self.batch_per_device * n_devices as f64;
+        let mut out = Vec::with_capacity(self.device_orders.len() * self.kinds.len() * self.m_grid.len());
+        for (perm, _) in self.device_orders.iter().enumerate() {
+            for &kind in &self.kinds {
+                for &m in &self.m_grid {
+                    let micro = if m == 0 { 0.0 } else { global / m as f64 };
+                    out.push(Candidate { kind, m, micro, perm });
+                }
+            }
+        }
+        out
+    }
+}
+
+/// The device orderings to explore (plus construction notes): identity
+/// always; on a heterogeneous cluster with permutation search enabled,
+/// every *distinct* device-name sequence (permuting two identical boards
+/// changes nothing), capped at [`MAX_DEVICE_ORDERS`]. A requested search
+/// that is skipped or capped is reported in the notes — never dropped
+/// silently.
+fn device_orders(cluster: &Cluster, permute: bool) -> (Vec<Vec<usize>>, Vec<String>) {
+    let n = cluster.len();
+    let identity: Vec<usize> = (0..n).collect();
+    if !permute {
+        return (vec![identity], Vec::new());
+    }
+    if cluster.is_homogeneous() || n < 2 {
+        return (
+            vec![identity],
+            vec!["device-order search: identity only (homogeneous cluster)".to_string()],
+        );
+    }
+    if n > 8 {
+        return (
+            vec![identity],
+            vec![format!(
+                "device-order search SKIPPED: {n} devices exceed the {}-device permutation limit",
+                8
+            )],
+        );
+    }
+    let mut seen: BTreeSet<Vec<String>> = BTreeSet::new();
+    let mut out = Vec::new();
+    let mut capped = false;
+    let mut perm = identity;
+    loop {
+        let names: Vec<String> =
+            perm.iter().map(|&i| cluster.devices[i].name.clone()).collect();
+        if seen.insert(names) {
+            out.push(perm.clone());
+            if out.len() >= MAX_DEVICE_ORDERS {
+                capped = true;
+                break;
+            }
+        }
+        if !next_permutation(&mut perm) {
+            break;
+        }
+    }
+    let mut notes = vec![format!("device-order search: {} distinct orderings", out.len())];
+    if capped {
+        notes.push(format!(
+            "device-order search TRUNCATED at {MAX_DEVICE_ORDERS} orderings (lexicographically \
+             first; more distinct layouts exist)"
+        ));
+    }
+    (out, notes)
+}
+
+/// Advance `a` to its next lexicographic permutation; false when `a` was
+/// already the last one.
+fn next_permutation(a: &mut [usize]) -> bool {
+    if a.len() < 2 {
+        return false;
+    }
+    let mut i = a.len() - 1;
+    while i > 0 && a[i - 1] >= a[i] {
+        i -= 1;
+    }
+    if i == 0 {
+        return false;
+    }
+    let mut j = a.len() - 1;
+    while a[j] <= a[i - 1] {
+        j -= 1;
+    }
+    a.swap(i - 1, j);
+    a[i..].reverse();
+    true
+}
+
+/// The cluster and profile as seen when devices are laid out along the
+/// chain in `order` (links are properties of the chain slots and stay
+/// put; per-device profile rows travel with their device).
+pub fn permuted_view(cluster: &Cluster, profile: &Profile, order: &[usize]) -> (Cluster, Profile) {
+    assert_eq!(order.len(), cluster.len(), "order must cover every device");
+    let devices = order.iter().map(|&i| cluster.devices[i].clone()).collect();
+    let cl = Cluster::new(devices, cluster.links.clone());
+    let per_device = order.iter().map(|&i| profile.per_device[i].clone()).collect();
+    let prof = Profile {
+        model: profile.model.clone(),
+        dtype_bytes: profile.dtype_bytes,
+        per_device,
+    };
+    (cl, prof)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::presets;
+    use crate::model::zoo;
+    use crate::profile::analytical;
+
+    #[test]
+    fn bapipe_space_splits_eligibility() {
+        let gpu = presets::v100_cluster(4);
+        let s = SearchSpace::bapipe(&gpu, &Options::default());
+        assert_eq!(s.kinds, vec![ScheduleKind::OneFOneBSno, ScheduleKind::OneFOneBSo]);
+        assert_eq!(s.ineligible, vec![ScheduleKind::OneFOneBAs, ScheduleKind::FbpAs]);
+        let fpga = presets::fpga_cluster(&["VCU118"; 2]);
+        let s = SearchSpace::bapipe(&fpga, &Options::default());
+        assert_eq!(s.kinds, vec![ScheduleKind::OneFOneBAs, ScheduleKind::FbpAs]);
+    }
+
+    #[test]
+    fn candidates_enumerate_kind_major_then_m() {
+        let cl = presets::v100_cluster(2);
+        let s = SearchSpace::bapipe(&cl, &Options::default());
+        let cands = s.candidates(2);
+        assert_eq!(cands.len(), 2 * s.m_grid.len());
+        assert_eq!(cands[0].kind, ScheduleKind::OneFOneBSno);
+        assert_eq!(cands[0].m, 2);
+        assert_eq!(cands[0].micro, 32.0); // global 64 / m 2
+        assert_eq!(cands[s.m_grid.len()].kind, ScheduleKind::OneFOneBSo);
+    }
+
+    #[test]
+    fn homogeneous_cluster_has_identity_order_only() {
+        let cl = presets::v100_cluster(4);
+        let o = Options { permute_devices: true, ..Default::default() };
+        let s = SearchSpace::bapipe(&cl, &o);
+        assert_eq!(s.device_orders, vec![vec![0, 1, 2, 3]]);
+        assert!(s.notes.iter().any(|n| n.contains("homogeneous")), "{:?}", s.notes);
+    }
+
+    #[test]
+    fn oversized_permutation_request_is_noted_not_silent() {
+        let mut boards = vec!["VCU129"; 5];
+        boards.extend(vec!["VCU118"; 5]);
+        let cl = presets::fpga_cluster(&boards);
+        let o = Options { permute_devices: true, ..Default::default() };
+        let s = SearchSpace::bapipe(&cl, &o);
+        assert_eq!(s.device_orders.len(), 1, "10 devices: identity only");
+        assert!(
+            s.notes.iter().any(|n| n.contains("SKIPPED")),
+            "a dropped search dimension must be reported: {:?}",
+            s.notes
+        );
+    }
+
+    #[test]
+    fn mixed_cluster_orders_are_distinct_name_sequences() {
+        let cl = presets::fpga_cluster(&["VCU129", "VCU129", "VCU118", "VCU118"]);
+        let o = Options { permute_devices: true, ..Default::default() };
+        let s = SearchSpace::bapipe(&cl, &o);
+        // 4!/(2!·2!) = 6 distinct sequences, identity first.
+        assert_eq!(s.device_orders.len(), 6);
+        assert_eq!(s.device_orders[0], vec![0, 1, 2, 3]);
+        let mut seqs = BTreeSet::new();
+        for ord in &s.device_orders {
+            let names: Vec<&str> = ord.iter().map(|&i| cl.devices[i].name.as_str()).collect();
+            assert!(seqs.insert(names.join("|")), "duplicate ordering {ord:?}");
+        }
+    }
+
+    #[test]
+    fn next_permutation_walks_all() {
+        let mut a = vec![0usize, 1, 2];
+        let mut count = 1;
+        while next_permutation(&mut a) {
+            count += 1;
+        }
+        assert_eq!(count, 6);
+        assert_eq!(a, vec![2, 1, 0]);
+    }
+
+    #[test]
+    fn permuted_view_moves_profile_rows_with_devices() {
+        let net = zoo::vgg16(224);
+        let cl = presets::fpga_cluster(&["VCU129", "VCU118"]);
+        let prof = analytical::profile(&net, &cl);
+        let (cl2, prof2) = permuted_view(&cl, &prof, &[1, 0]);
+        assert_eq!(cl2.devices[0].name, "VCU118");
+        assert_eq!(cl2.devices[1].name, "VCU129");
+        // row 0 of the view is the VCU118 row of the original
+        assert_eq!(prof2.per_device[0][0].fwd, prof.per_device[1][0].fwd);
+        assert_eq!(prof2.per_device[1][3].bwd, prof.per_device[0][3].bwd);
+        // links unchanged
+        assert_eq!(cl2.links.len(), 1);
+    }
+
+    #[test]
+    fn pipedream_batches_halve_to_one() {
+        assert_eq!(SearchSpace::pipedream_batches(8.0), vec![8.0, 4.0, 2.0, 1.0]);
+        assert_eq!(SearchSpace::pipedream_batches(0.5), Vec::<f64>::new());
+    }
+}

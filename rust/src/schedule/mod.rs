@@ -90,6 +90,48 @@ impl ScheduleKind {
         }
     }
 
+    /// Memory-equivalence class: kinds with identical Tables 1–2 memory
+    /// rows (same [`ScheduleKind::stash_depth`] and
+    /// [`ScheduleKind::weight_versions`] for every `(n, i, m)`). The
+    /// balanced-partition flow consults the schedule only through those
+    /// two rows (the memory fine-tune), so two kinds in one class always
+    /// produce the same partition for the same `(micro, m)` — the
+    /// planner's `EvalCache` keys on this class to share partition work.
+    pub fn memory_class(&self) -> u8 {
+        match self {
+            ScheduleKind::OneFOneBAs | ScheduleKind::OneFOneBSno => 0,
+            ScheduleKind::FbpAs | ScheduleKind::OneFOneBSo => 1,
+            ScheduleKind::GPipe => 2,
+            ScheduleKind::PipeDream => 3,
+        }
+    }
+
+    /// Inverse of [`ScheduleKind::label`] — used when deserializing plan
+    /// artifacts (`plan.json`).
+    pub fn from_label(label: &str) -> Option<ScheduleKind> {
+        match label {
+            "1F1B-AS" => Some(ScheduleKind::OneFOneBAs),
+            "FBP-AS" => Some(ScheduleKind::FbpAs),
+            "1F1B-SNO" => Some(ScheduleKind::OneFOneBSno),
+            "1F1B-SO" => Some(ScheduleKind::OneFOneBSo),
+            "GPipe" => Some(ScheduleKind::GPipe),
+            "PipeDream" => Some(ScheduleKind::PipeDream),
+            _ => None,
+        }
+    }
+
+    /// Every kind, for label round-trips and property tests.
+    pub fn all() -> [ScheduleKind; 6] {
+        [
+            ScheduleKind::OneFOneBAs,
+            ScheduleKind::FbpAs,
+            ScheduleKind::OneFOneBSno,
+            ScheduleKind::OneFOneBSo,
+            ScheduleKind::GPipe,
+            ScheduleKind::PipeDream,
+        ]
+    }
+
     /// Short name used in reports (matches the paper's Table 3 labels).
     pub fn label(&self) -> &'static str {
         match self {
@@ -208,5 +250,39 @@ mod tests {
         assert_eq!(ScheduleKind::FbpAs.label(), "FBP-AS");
         assert_eq!(ScheduleKind::OneFOneBSno.label(), "1F1B-SNO");
         assert_eq!(ScheduleKind::OneFOneBSo.label(), "1F1B-SO");
+    }
+
+    #[test]
+    fn labels_round_trip() {
+        for kind in ScheduleKind::all() {
+            assert_eq!(ScheduleKind::from_label(kind.label()), Some(kind));
+        }
+        assert_eq!(ScheduleKind::from_label("nope"), None);
+    }
+
+    #[test]
+    fn memory_class_implies_identical_memory_rows() {
+        // The planner's partition cache relies on this: same class ⇒ same
+        // stash depth and weight versions everywhere.
+        let kinds = ScheduleKind::all();
+        for a in kinds {
+            for b in kinds {
+                if a.memory_class() != b.memory_class() {
+                    continue;
+                }
+                for n in 1..=6usize {
+                    for i in 0..n {
+                        for m in 1..=32usize {
+                            assert_eq!(
+                                a.stash_depth(n, i, m),
+                                b.stash_depth(n, i, m),
+                                "{a:?} vs {b:?} at n={n} i={i} m={m}"
+                            );
+                            assert_eq!(a.weight_versions(n, i), b.weight_versions(n, i));
+                        }
+                    }
+                }
+            }
+        }
     }
 }

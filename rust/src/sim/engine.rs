@@ -263,7 +263,13 @@ pub fn simulate(spec: &SimSpec) -> SimResult {
 /// clean multiple; PipeDream pipelines *across* mini-batches — its fill
 /// cost is paid once and the steady period is the bottleneck-stage time.
 pub fn epoch_time(spec: &SimSpec, n_minibatches: usize) -> f64 {
-    let one = simulate(spec).makespan;
+    epoch_from_makespan(simulate(spec).makespan, spec, n_minibatches)
+}
+
+/// [`epoch_time`] when the one-mini-batch makespan is already known —
+/// lets the planner reuse a single DES run for both the mini-batch and
+/// the epoch figure instead of simulating twice.
+pub fn epoch_from_makespan(one: f64, spec: &SimSpec, n_minibatches: usize) -> f64 {
     match spec.kind {
         ScheduleKind::PipeDream => {
             let n = spec.n();

@@ -1,0 +1,202 @@
+//! Planner guarantees, end to end:
+//!
+//! * branch-and-bound pruning is *sound* — the pruned search returns the
+//!   exact plan of the exhaustive search while running strictly fewer
+//!   discrete-event simulations (VGG-16/4×V100 and the paper's other
+//!   preset scenarios);
+//! * the parallel evaluator is *deterministic* — `jobs = 1` and
+//!   `jobs = 8` select identical plans (property-tested over random
+//!   scenarios via `util::prop`);
+//! * `plan.json` artifacts round-trip losslessly;
+//! * device-order permutation search only ever improves a heterogeneous
+//!   plan.
+
+use bapipe::cluster::presets;
+use bapipe::model::zoo;
+use bapipe::planner::{self, Options, Outcome};
+use bapipe::profile::analytical;
+use bapipe::util::json::Json;
+use bapipe::util::prop::{check, ensure, Config};
+
+fn opts(batch: f64) -> Options {
+    Options { batch_per_device: batch, samples_per_epoch: 8192, ..Default::default() }
+}
+
+#[test]
+fn pruned_search_equals_exhaustive_on_vgg16_4xv100() {
+    let net = zoo::vgg16(224);
+    let cl = presets::v100_cluster(4);
+    let prof = analytical::profile(&net, &cl);
+
+    let exhaustive =
+        planner::explore(&net, &cl, &prof, &Options { prune: false, ..opts(32.0) });
+    let pruned = planner::explore(&net, &cl, &prof, &Options { prune: true, ..opts(32.0) });
+
+    assert_eq!(exhaustive.choice, pruned.choice, "pruning changed the selected plan");
+    assert_eq!(exhaustive.epoch_time, pruned.epoch_time);
+    assert_eq!(exhaustive.minibatch_time, pruned.minibatch_time);
+    assert_eq!(exhaustive.stage_memory, pruned.stage_memory);
+
+    assert_eq!(exhaustive.report.pruned_count, 0);
+    assert!(
+        pruned.report.pruned_count > 0,
+        "expected branch-and-bound to skip some DES runs:\n{}",
+        pruned.report.log_lines().join("\n")
+    );
+    assert!(
+        pruned.report.simulated_count < exhaustive.report.simulated_count,
+        "pruned search must run strictly fewer simulations ({} vs {})",
+        pruned.report.simulated_count,
+        exhaustive.report.simulated_count
+    );
+    // every pruned candidate's bound must exceed the winner's epoch time
+    for ev in &pruned.report.evaluations {
+        if let Outcome::Pruned { lower_bound } = ev.outcome {
+            assert!(
+                lower_bound >= pruned.epoch_time,
+                "pruned candidate {:?} M={} had bound {lower_bound} below best {}",
+                ev.candidate.kind,
+                ev.candidate.m,
+                pruned.epoch_time
+            );
+        }
+    }
+}
+
+#[test]
+fn pruned_search_equals_exhaustive_on_paper_presets() {
+    // The paper's other preset scenarios: ResNet-50 on 8 V100 (degenerates
+    // to DP) and ResNet-50 on the mixed VCU129/VCU118 FPGA testbed.
+    let scenarios: Vec<(&str, bapipe::cluster::Cluster, f64, bool)> = vec![
+        ("resnet50", presets::v100_cluster(8), 32.0, true),
+        (
+            "resnet50",
+            presets::fpga_cluster(&["VCU129", "VCU129", "VCU118", "VCU118"]),
+            4.0,
+            false,
+        ),
+        ("vgg16", presets::fpga_cluster(&["VCU129", "VCU118"]), 4.0, false),
+    ];
+    for (model, cl, batch, consider_dp) in scenarios {
+        let net = zoo::by_name(model).unwrap();
+        let prof = analytical::profile(&net, &cl);
+        let base = Options { consider_dp, ..opts(batch) };
+        let exhaustive =
+            planner::explore(&net, &cl, &prof, &Options { prune: false, ..base.clone() });
+        let pruned = planner::explore(&net, &cl, &prof, &Options { prune: true, ..base });
+        assert_eq!(
+            exhaustive.choice,
+            pruned.choice,
+            "{model} on {}: pruning changed the plan",
+            cl.describe()
+        );
+        assert_eq!(exhaustive.epoch_time, pruned.epoch_time);
+        assert!(
+            pruned.report.simulated_count <= exhaustive.report.simulated_count,
+            "{model} on {}",
+            cl.describe()
+        );
+    }
+}
+
+#[test]
+fn parallel_jobs_select_identical_plans_property() {
+    // util::prop over random (model, cluster size, batch) scenarios: the
+    // scoped-thread evaluator's reduction must be interleaving-free.
+    let models = ["vgg16", "resnet50", "gnmt8", "alexnet"];
+    check(
+        &Config { cases: 10, seed: 0xBA_51C0DE, max_size: 8 },
+        |g| {
+            let model = models[g.usize_in(0, models.len())];
+            let n = [2usize, 4][g.usize_in(0, 2)];
+            let batch = [16.0, 32.0][g.usize_in(0, 2)];
+            (model, n, batch)
+        },
+        |&(model, n, batch)| {
+            let net = zoo::by_name(model).unwrap();
+            let cl = presets::v100_cluster(n);
+            let prof = analytical::profile(&net, &cl);
+            let serial =
+                planner::explore(&net, &cl, &prof, &Options { jobs: 1, ..opts(batch) });
+            let parallel =
+                planner::explore(&net, &cl, &prof, &Options { jobs: 8, ..opts(batch) });
+            ensure(
+                serial.choice == parallel.choice,
+                format!(
+                    "{model} on {n} V100 at B={batch}: jobs=1 chose {:?}, jobs=8 chose {:?}",
+                    serial.choice, parallel.choice
+                ),
+            )?;
+            ensure(
+                serial.epoch_time == parallel.epoch_time,
+                format!(
+                    "{model} on {n} V100 at B={batch}: epoch {} vs {}",
+                    serial.epoch_time, parallel.epoch_time
+                ),
+            )?;
+            ensure(
+                serial.report.cache_hits == parallel.report.cache_hits,
+                "phase A is sequential; cache hits must match".to_string(),
+            )
+        },
+    );
+}
+
+#[test]
+fn emitted_plan_round_trips() {
+    let net = zoo::vgg16(224);
+    let cl = presets::v100_cluster(4);
+    let prof = analytical::profile(&net, &cl);
+    let plan = planner::explore(&net, &cl, &prof, &Options { jobs: 2, ..opts(32.0) });
+
+    // emit_json is the CLI `--emit` path: serialize + self-verify.
+    let text = plan.emit_json().unwrap();
+    assert_eq!(text, plan.to_json().to_string_pretty());
+    let back = planner::Plan::from_json(&Json::parse(&text).unwrap()).unwrap();
+    assert_eq!(back.choice, plan.choice);
+    assert_eq!(back.device_order, plan.device_order);
+    assert_eq!(back.epoch_time, plan.epoch_time);
+    assert_eq!(back.stage_memory, plan.stage_memory);
+    assert_eq!(back.report, plan.report);
+    // and the serialized form is stable (parse → emit → identical text)
+    assert_eq!(back.to_json().to_string_pretty(), text);
+
+    // a DataParallel outcome round-trips too (ResNet-50 on 8 V100)
+    let net = zoo::resnet50(224);
+    let cl = presets::v100_cluster(8);
+    let prof = analytical::profile(&net, &cl);
+    let plan = planner::explore(&net, &cl, &prof, &opts(32.0));
+    assert_eq!(plan.choice, planner::Choice::DataParallel);
+    let back =
+        planner::Plan::from_json(&Json::parse(&plan.to_json().to_string_compact()).unwrap())
+            .unwrap();
+    assert_eq!(back.choice, plan.choice);
+    assert_eq!(back.report, plan.report);
+}
+
+#[test]
+fn permutation_search_only_improves_heterogeneous_plans() {
+    let net = zoo::vgg16(224);
+    let cl = presets::fpga_cluster(&["VCU118", "VCU129"]);
+    let prof = analytical::profile(&net, &cl);
+    let base = Options { consider_dp: false, ..opts(4.0) };
+    let identity = planner::explore(&net, &cl, &prof, &base);
+    let permuted = planner::explore(
+        &net,
+        &cl,
+        &prof,
+        &Options { permute_devices: true, jobs: 4, ..base },
+    );
+    assert!(
+        permuted.epoch_time <= identity.epoch_time,
+        "widening the space cannot hurt: {} vs {}",
+        permuted.epoch_time,
+        identity.epoch_time
+    );
+    // the chosen order is a permutation of the devices
+    let mut order = permuted.device_order.clone();
+    order.sort_unstable();
+    assert_eq!(order, vec![0, 1]);
+    // and the permuted search covered both orderings in its report
+    assert!(permuted.report.evaluations.iter().any(|e| e.candidate.perm == 1));
+}

@@ -1,0 +1,129 @@
+//! Minimal, offline-friendly stand-in for the `anyhow` crate.
+//!
+//! The bapipe repository builds against an offline crate set, so this
+//! vendored implementation provides the (small) `anyhow` surface the
+//! codebase actually uses:
+//!
+//! * [`Error`] — an opaque, `Send + Sync` error value built from any
+//!   message or any `std::error::Error`;
+//! * [`Result`] — `std::result::Result` defaulted to [`Error`];
+//! * [`anyhow!`], [`bail!`], [`ensure!`] — the three construction macros.
+//!
+//! Mirroring the real crate, [`Error`] deliberately does **not**
+//! implement `std::error::Error`, which is what makes the blanket
+//! `From<E: std::error::Error>` conversion (and therefore `?`) possible.
+
+use std::fmt;
+
+/// An opaque error: a rendered message, optionally with the `Display`
+/// chain of the source error it was converted from.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Build an error from anything printable (the real crate's
+    /// `Error::msg`).
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { msg: message.to_string() }
+    }
+
+    /// Append context, rendered as `context: original` like the real
+    /// crate's single-line `{:#}` format.
+    pub fn context<C: fmt::Display>(self, context: C) -> Error {
+        Error { msg: format!("{context}: {}", self.msg) }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Error {
+        Error { msg: e.to_string() }
+    }
+}
+
+/// `std::result::Result` with the error type defaulted to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Construct an [`Error`] from a format string (or any printable value).
+#[macro_export]
+macro_rules! anyhow {
+    ($fmt:literal $(, $($arg:tt)*)?) => {
+        $crate::Error::msg(::std::format!($fmt $(, $($arg)*)?))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+/// Return early with an [`Error`] built like [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)+) => {
+        return ::std::result::Result::Err($crate::anyhow!($($arg)+))
+    };
+}
+
+/// Return early with an [`Error`] when the condition does not hold.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::Error::msg(::std::concat!(
+                "condition failed: `",
+                ::std::stringify!($cond),
+                "`"
+            )));
+        }
+    };
+    ($cond:expr, $($arg:tt)+) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::anyhow!($($arg)+));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails(flag: bool) -> Result<u32> {
+        ensure!(!flag, "flag was {}", flag);
+        Ok(7)
+    }
+
+    fn bails() -> Result<()> {
+        bail!("bailed with {}", 42);
+    }
+
+    fn io_err() -> Result<String> {
+        let s = std::fs::read_to_string("/definitely/not/a/file")?;
+        Ok(s)
+    }
+
+    #[test]
+    fn macros_and_conversions() {
+        assert_eq!(fails(false).unwrap(), 7);
+        let e = fails(true).unwrap_err();
+        assert_eq!(e.to_string(), "flag was true");
+        assert_eq!(bails().unwrap_err().to_string(), "bailed with 42");
+        assert!(io_err().is_err());
+        let e = anyhow!("plain {}", "fmt");
+        assert_eq!(format!("{e:?}"), "plain fmt");
+        assert_eq!(e.context("while testing").to_string(), "while testing: plain fmt");
+    }
+}

@@ -1,0 +1,18 @@
+//! Placeholder for the real `xla` (xla-rs) PJRT bindings.
+//!
+//! The `bapipe` crate gates every XLA/PJRT-dependent module (`runtime`,
+//! `pipeline`) behind the off-by-default `pjrt` cargo feature so the
+//! planner/simulator stack builds and tests on machines without a PJRT
+//! toolchain. Enabling `pjrt` pulls in this package; since the container
+//! image does not ship the real bindings, that is a hard error with a
+//! pointer at the fix rather than hundreds of confusing resolve errors.
+//!
+//! To actually enable the real engine, replace this directory with a
+//! checkout of xla-rs (github.com/LaurentMazare/xla-rs) — the `bapipe`
+//! sources compile against its public API unchanged — and build with
+//! `cargo build --release --features pjrt`.
+
+compile_error!(
+    "the `pjrt` feature requires the real xla-rs bindings and a PJRT toolchain; \
+     replace rust/vendor/xla with an xla-rs checkout, or build without `--features pjrt`"
+);
