@@ -10,20 +10,30 @@ use bapipe::planner::{self, Options};
 use bapipe::partition::interlayer;
 use bapipe::profile::analytical;
 use bapipe::schedule::ScheduleKind;
-use bapipe::sim::engine::{simulate, SimSpec};
+use bapipe::sim::engine::{simulate, simulate_fast, SimArena, SimSpec};
 use bapipe::util::benchkit::bench;
 use bapipe::util::json::Json;
 
 fn main() {
-    // DES: a large schedule (8 stages, 256 micro-batches = 4k+ ops).
+    // DES: a large schedule (8 stages, 256 micro-batches = 4k+ ops) —
+    // the trace-producing path, then the planner's trace-free fast path
+    // over a reused arena (see benches/planner_scale.rs for the tracked
+    // seed-vs-fast numbers).
     let spec = SimSpec::uniform(ScheduleKind::OneFOneBSo, 8, 256, 1e-3, 2e-3, 0.2e-3, ExecMode::Sync);
     bench("des/1f1b-so n=8 m=256", 3, 20, || {
         std::hint::black_box(simulate(&spec).makespan);
+    });
+    let mut arena = SimArena::new();
+    bench("des/fast 1f1b-so n=8 m=256", 3, 20, || {
+        std::hint::black_box(simulate_fast(&spec, &mut arena).makespan);
     });
     let spec_fbp =
         SimSpec::uniform(ScheduleKind::FbpAs, 8, 256, 1e-3, 2e-3, 0.2e-3, ExecMode::Async);
     bench("des/fbp-as n=8 m=256", 3, 20, || {
         std::hint::black_box(simulate(&spec_fbp).makespan);
+    });
+    bench("des/fast fbp-as n=8 m=256", 3, 20, || {
+        std::hint::black_box(simulate_fast(&spec_fbp, &mut arena).makespan);
     });
 
     // Partitioner: DP-optimal over ResNet-50's 52 layers, 8 stages.

@@ -33,13 +33,25 @@
 //! // 2. Profile analytically (or measure real stage executables).
 //! let prof = profile::analytical::profile(&net, &cl);
 //! // 3. Let BaPipe explore schedule x partition x micro-batching —
-//! //    pruned by analytical lower bounds, over 4 worker threads.
-//! let opts = planner::Options { jobs: 4, ..Default::default() };
+//! //    pruned by analytical lower bounds, phases A (partition DPs) and
+//! //    B (trace-free SoA DES over per-worker arenas) both fanned out
+//! //    over 4 worker threads, with adaptive M bisection around the
+//! //    incumbent.
+//! let opts = planner::Options { jobs: 4, adaptive_m: true, ..Default::default() };
 //! let plan = planner::explore(&net, &cl, &prof, &opts);
 //! println!("{}", plan.summary());
 //! // 4. The typed report is serializable: this is `bapipe explore --emit`.
 //! std::fs::write("plan.json", plan.to_json().to_string_pretty()).unwrap();
+//! // 5. Compare two artifacts (`bapipe plan diff old.json new.json`).
+//! let diff = planner::diff::compare(&plan, &plan);
+//! assert!(diff.same_choice);
 //! ```
+//!
+//! The simulator itself has two entry points: `sim::engine::simulate_full`
+//! (event traces for timelines and figures) and the allocation-free
+//! `sim::engine::simulate_fast` over a reusable `sim::engine::SimArena`
+//! — bit-exact with each other and with the retained seed oracle
+//! `sim::engine::simulate_reference`.
 #![deny(missing_docs)]
 // The cost-model layers pass (profile, cluster, partition, micro, m)
 // tuples through free functions by design — the argument-count lint

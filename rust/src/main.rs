@@ -2,8 +2,11 @@
 //!
 //! Subcommands:
 //!   explore   — run the Fig.-3 auto-exploration on a zoo model + cluster
-//!               (--jobs N parallel evaluation, --emit plan.json artifact,
-//!               --permute device-order search, --no-prune exhaustive)
+//!               (--jobs N parallel phases A+B, --emit plan.json artifact,
+//!               --permute device-order search, --no-prune exhaustive,
+//!               --adaptive-m incumbent-bisection M refinement)
+//!   plan      — plan.json artifact tooling: `plan diff <a> <b>` compares
+//!               winner, time deltas and stage-boundary moves
 //!   partition — show the balanced partition for a model/cluster
 //!   simulate  — DES one schedule and print its timeline (Figs. 4–6)
 //!   train     — real pipeline training over AOT artifacts  [pjrt feature]
@@ -58,6 +61,7 @@ fn main() -> bapipe::Result<()> {
                 jobs: args.get_usize("jobs", 1),
                 prune: !args.has_flag("no-prune"),
                 permute_devices: args.has_flag("permute"),
+                adaptive_m: args.has_flag("adaptive-m"),
                 ..Default::default()
             };
             let plan = planner::explore(&net, &cl, &prof, &opts);
@@ -72,6 +76,32 @@ fn main() -> bapipe::Result<()> {
                 let text = plan.emit_json()?;
                 std::fs::write(path, &text)?;
                 println!("\nwrote {path} ({} bytes, round-trip verified)", text.len());
+            }
+        }
+        "plan" => {
+            let sub = args.positional.get(1).map(String::as_str).unwrap_or("");
+            match sub {
+                "diff" => {
+                    let (path_a, path_b) =
+                        match (args.positional.get(2), args.positional.get(3)) {
+                            (Some(a), Some(b)) => (a, b),
+                            _ => anyhow::bail!(
+                                "usage: bapipe plan diff <a.json> <b.json>"
+                            ),
+                        };
+                    let load = |path: &str| -> bapipe::Result<planner::Plan> {
+                        let text = std::fs::read_to_string(path)
+                            .map_err(|e| anyhow::anyhow!("reading {path}: {e}"))?;
+                        let json = bapipe::util::json::Json::parse(&text)
+                            .map_err(|e| anyhow::anyhow!("parsing {path}: {e}"))?;
+                        planner::Plan::from_json(&json)
+                            .map_err(|e| anyhow::anyhow!("loading {path}: {e}"))
+                    };
+                    let a = load(path_a)?;
+                    let b = load(path_b)?;
+                    println!("{}", planner::diff::compare(&a, &b).render());
+                }
+                other => anyhow::bail!("unknown plan subcommand `{other}` (expected: diff)"),
             }
         }
         "partition" => {
@@ -180,11 +210,12 @@ fn main() -> bapipe::Result<()> {
         _ => {
             println!(
                 "bapipe — balanced pipeline parallelism for DNN training\n\n\
-                 usage: bapipe <explore|partition|simulate|train|dp|profile> [--key value ...]\n\
+                 usage: bapipe <explore|plan|partition|simulate|train|dp|profile> [--key value ...]\n\
                  examples:\n\
                    bapipe explore --model vgg16 --cluster v100 --n 4 --batch 32\n\
                    bapipe explore --model resnet50 --cluster fpga-mixed --n 4 --batch 4 \\\n\
-                       --jobs 8 --permute --emit plan.json\n\
+                       --jobs 8 --permute --adaptive-m --emit plan.json\n\
+                   bapipe plan diff old-plan.json new-plan.json\n\
                    bapipe simulate --schedule 1f1b-so --n 3 --m 8\n\
                    bapipe train --artifacts artifacts/lm10m-s4-b4 --schedule 1f1b --m 8 --steps 50\n\
                    bapipe dp --artifacts artifacts/lm10m-s4-b4 --replicas 2 --steps 20"

@@ -15,12 +15,14 @@
 //!
 //! [`ScheduleKind::memory_class`]: crate::schedule::ScheduleKind::memory_class
 
+use super::parallel;
 use super::space::Candidate;
 use crate::cluster::Cluster;
 use crate::model::Network;
 use crate::partition::{balance_stages, finish_partition, BalanceSeed, PartitionPlan};
 use crate::profile::Profile;
-use std::collections::HashMap;
+use crate::schedule::ScheduleKind;
+use std::collections::{HashMap, HashSet};
 
 /// Key of a balance seed: permutation × micro-batch size. `micro` enters
 /// as raw bits — the grid produces exact binary fractions, so bit
@@ -98,6 +100,89 @@ impl EvalCache {
         self.plans.insert(plan_key, finished.clone());
         finished
     }
+
+    /// Fan the partition work of `candidates` out over `jobs` workers,
+    /// filling both cache levels ahead of the per-candidate pass: first
+    /// the balance-seed DPs (one per distinct `(perm, micro)` — phase A's
+    /// dominant cost, the `O(N·C²)` inter-layer DP), then the memory
+    /// fine-tunes (one per distinct `(seed, memory class, M)`; the
+    /// fine-tune consults the schedule kind only through its memory
+    /// class, so the first candidate's kind stands in for the class).
+    ///
+    /// Deterministic by construction: work lists are in first-appearance
+    /// order of `candidates`, each entry is an independent pure
+    /// computation, and results are inserted after the parallel batch in
+    /// list order — cache contents, `hits` and `misses` are identical for
+    /// every `jobs` value. Candidates whose `m` does not divide
+    /// `global_batch` are skipped, exactly like the per-candidate pass
+    /// rejects them before consulting the cache. `views[p]` must be the
+    /// permuted `(cluster, profile)` view for permutation index `p`.
+    pub fn prewarm(
+        &mut self,
+        net: &Network,
+        views: &[(Cluster, Profile)],
+        candidates: &[Candidate],
+        global_batch: f64,
+        jobs: usize,
+    ) {
+        let divisible = |c: &&Candidate| super::eval::divides_global(global_batch, c.m);
+
+        // Seed work list: distinct (perm, micro), first-appearance order.
+        let mut seed_keys: Vec<SeedKey> = Vec::new();
+        let mut seen_seeds: HashSet<SeedKey> = self.seeds.keys().copied().collect();
+        for c in candidates.iter().filter(divisible) {
+            let key = SeedKey { perm: c.perm, micro_bits: c.micro.to_bits() };
+            if seen_seeds.insert(key) {
+                seed_keys.push(key);
+            }
+        }
+        let seeds = parallel::run_indexed(jobs, seed_keys.len(), |k| {
+            let key = &seed_keys[k];
+            let (cl, prof) = &views[key.perm];
+            balance_stages(net, cl, prof, f64::from_bits(key.micro_bits))
+                .map_err(|e| e.to_string())
+        });
+        for (key, res) in seed_keys.iter().zip(seeds) {
+            self.misses += 1;
+            self.seeds.insert(*key, res);
+        }
+
+        // Fine-tune work list: distinct plan keys, first-appearance order.
+        let mut plan_work: Vec<(PlanKey, ScheduleKind)> = Vec::new();
+        let mut seen_plans: HashSet<PlanKey> = self.plans.keys().copied().collect();
+        for c in candidates.iter().filter(divisible) {
+            let seed = SeedKey { perm: c.perm, micro_bits: c.micro.to_bits() };
+            let key = PlanKey { seed, memory_class: c.kind.memory_class(), m: c.m };
+            if seen_plans.insert(key) {
+                plan_work.push((key, c.kind));
+            }
+        }
+        let seeds_done = &self.seeds;
+        let plans = parallel::run_indexed(jobs, plan_work.len(), |k| {
+            let (key, kind) = &plan_work[k];
+            let (cl, prof) = &views[key.seed.perm];
+            match seeds_done.get(&key.seed).expect("seed prewarmed above") {
+                Ok(seed) => finish_partition(
+                    cl,
+                    prof,
+                    seed,
+                    *kind,
+                    f64::from_bits(key.seed.micro_bits),
+                    key.m,
+                )
+                .map_err(|e| e.to_string()),
+                Err(e) => Err(e.clone()),
+            }
+        });
+        for ((key, _), res) in plan_work.iter().zip(plans) {
+            // an Err seed runs no fine-tune pass — not a miss, like the
+            // sequential path
+            if matches!(self.seeds.get(&key.seed), Some(Ok(_))) {
+                self.misses += 1;
+            }
+            self.plans.insert(*key, res);
+        }
+    }
 }
 
 #[cfg(test)]
@@ -158,6 +243,41 @@ mod tests {
         assert_eq!(via_cache.partition, direct.partition);
         assert_eq!(via_cache.max_stage_time, direct.max_stage_time);
         assert_eq!(via_cache.notes, direct.notes);
+    }
+
+    #[test]
+    fn prewarm_fills_both_levels_deterministically() {
+        let net = zoo::vgg16(224);
+        let cl = presets::v100_cluster(4);
+        let prof = analytical::profile(&net, &cl);
+        let views = vec![crate::planner::space::permuted_view(&cl, &prof, &[0, 1, 2, 3])];
+        let ms = [2usize, 4, 8, 3]; // 3 does not divide 128 → skipped
+        let cands: Vec<Candidate> = ms
+            .iter()
+            .flat_map(|&m| {
+                [ScheduleKind::OneFOneBSno, ScheduleKind::OneFOneBSo].map(|kind| Candidate {
+                    kind,
+                    m,
+                    micro: 128.0 / m as f64,
+                    perm: 0,
+                })
+            })
+            .collect();
+        for jobs in [1usize, 4] {
+            let mut warm = EvalCache::new();
+            warm.prewarm(&net, &views, &cands, 128.0, jobs);
+            // 3 distinct micros → 3 seed passes; × 2 memory classes → 6
+            // fine-tune passes; no hits yet
+            assert_eq!((warm.hits, warm.misses), (0, 9), "jobs={jobs}");
+            let mut cold = EvalCache::new();
+            for c in cands.iter().filter(|c| 128 % c.m == 0) {
+                let a = warm.partition(&net, &cl, &prof, c).unwrap();
+                let b = cold.partition(&net, &cl, &prof, c).unwrap();
+                assert_eq!(a.partition, b.partition, "jobs={jobs} m={} {:?}", c.m, c.kind);
+            }
+            // every post-prewarm request is answered from the cache
+            assert_eq!((warm.hits, warm.misses), (6, 9), "jobs={jobs}");
+        }
     }
 
     #[test]

@@ -1,0 +1,239 @@
+//! Comparison of two serialized `plan.json` artifacts — the typed model
+//! behind `bapipe plan diff <a.json> <b.json>`.
+//!
+//! The diff answers the three questions an operator has when a plan
+//! artifact changes between runs (new profile, new cluster, new planner
+//! version): did the *winner* change, by how much did the predicted
+//! times move, and which stage boundaries shifted where.
+
+use super::report::{Choice, Plan};
+
+/// One moved stage boundary between two same-depth partitions.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BoundaryMove {
+    /// Index into `Partition::bounds` (0 = start of stage 0).
+    pub boundary: usize,
+    /// Layer index the boundary sits at in plan A.
+    pub from: usize,
+    /// Layer index the boundary sits at in plan B.
+    pub to: usize,
+}
+
+/// The structured difference between two plans (A → B).
+#[derive(Debug, Clone)]
+pub struct PlanDiff {
+    /// Human-readable winner of plan A.
+    pub choice_a: String,
+    /// Human-readable winner of plan B.
+    pub choice_b: String,
+    /// Did both plans select the same parallelization (schedule, M,
+    /// micro-batch size and partition, or DP on both sides)?
+    pub same_choice: bool,
+    /// `B − A` mini-batch time, seconds (negative = B is faster).
+    pub minibatch_delta: f64,
+    /// `B − A` epoch time, seconds (negative = B is faster).
+    pub epoch_delta: f64,
+    /// `B / A` epoch-time ratio.
+    pub epoch_ratio: f64,
+    /// Boundaries that moved, when both sides are pipelines of the same
+    /// stage count.
+    pub boundary_moves: Vec<BoundaryMove>,
+    /// Why boundaries were not compared stage-by-stage (mode or stage
+    /// count mismatch), when they were not.
+    pub partition_note: Option<String>,
+    /// Did the winning device ordering change?
+    pub device_order_changed: bool,
+}
+
+/// One-line human description of a plan's choice.
+fn describe_choice(choice: &Choice) -> String {
+    match choice {
+        Choice::Pipeline { kind, m, micro, partition } => format!(
+            "{} M={m} (micro-batch {micro}) partition {}",
+            kind.label(),
+            partition.describe()
+        ),
+        Choice::DataParallel => "data-parallel".to_string(),
+    }
+}
+
+/// Compare two plans (A → B).
+pub fn compare(a: &Plan, b: &Plan) -> PlanDiff {
+    let mut boundary_moves = Vec::new();
+    let mut partition_note = None;
+    match (&a.choice, &b.choice) {
+        (Choice::Pipeline { partition: pa, .. }, Choice::Pipeline { partition: pb, .. }) => {
+            if pa.n_stages() == pb.n_stages() {
+                for (i, (&la, &lb)) in pa.bounds.iter().zip(&pb.bounds).enumerate() {
+                    if la != lb {
+                        boundary_moves.push(BoundaryMove { boundary: i, from: la, to: lb });
+                    }
+                }
+            } else {
+                partition_note = Some(format!(
+                    "stage counts differ ({} vs {}); boundaries not comparable",
+                    pa.n_stages(),
+                    pb.n_stages()
+                ));
+            }
+        }
+        (Choice::DataParallel, Choice::DataParallel) => {}
+        _ => {
+            partition_note =
+                Some("parallelization modes differ; boundaries not comparable".to_string())
+        }
+    }
+    PlanDiff {
+        choice_a: describe_choice(&a.choice),
+        choice_b: describe_choice(&b.choice),
+        same_choice: a.choice == b.choice,
+        minibatch_delta: b.minibatch_time - a.minibatch_time,
+        epoch_delta: b.epoch_time - a.epoch_time,
+        epoch_ratio: b.epoch_time / a.epoch_time,
+        boundary_moves,
+        partition_note,
+        device_order_changed: a.device_order != b.device_order,
+    }
+}
+
+impl PlanDiff {
+    /// Render the diff as the CLI's multi-line report.
+    pub fn render(&self) -> String {
+        let mut lines = vec![
+            format!("plan A: {}", self.choice_a),
+            format!("plan B: {}", self.choice_b),
+            format!(
+                "winner: {}",
+                if self.same_choice { "identical" } else { "CHANGED" }
+            ),
+            format!(
+                "mini-batch: {:+.6}s  epoch: {:+.3}s  (B/A {:.4}x)",
+                self.minibatch_delta, self.epoch_delta, self.epoch_ratio
+            ),
+        ];
+        match (&self.partition_note, self.boundary_moves.is_empty()) {
+            (Some(note), _) => lines.push(format!("boundaries: {note}")),
+            (None, true) => lines.push("boundaries: unchanged".to_string()),
+            (None, false) => {
+                for mv in &self.boundary_moves {
+                    lines.push(format!(
+                        "boundary {}: layer {} -> {}",
+                        mv.boundary, mv.from, mv.to
+                    ));
+                }
+            }
+        }
+        if self.device_order_changed {
+            lines.push("device order: CHANGED".to_string());
+        }
+        lines.join("\n")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::partition::Partition;
+    use crate::planner::report::ExplorationReport;
+    use crate::schedule::ScheduleKind;
+
+    fn report() -> ExplorationReport {
+        ExplorationReport {
+            model: "VGG-16".into(),
+            cluster: "4x V100".into(),
+            batch_per_device: 32.0,
+            samples_per_epoch: 8192,
+            jobs: 1,
+            ineligible: Vec::new(),
+            notes: Vec::new(),
+            evaluations: Vec::new(),
+            simulated_count: 0,
+            pruned_count: 0,
+            cache_hits: 0,
+            dp_considered: false,
+            dp_fits: false,
+            dp_minibatch_time: f64::INFINITY,
+            dp_epoch_time: f64::INFINITY,
+        }
+    }
+
+    fn pipeline_plan(m: usize, bounds: Vec<usize>, epoch: f64) -> Plan {
+        let n_layers = *bounds.last().unwrap();
+        Plan {
+            choice: Choice::Pipeline {
+                kind: ScheduleKind::OneFOneBSo,
+                m,
+                micro: 128.0 / m as f64,
+                partition: Partition::new(bounds, n_layers),
+            },
+            device_order: vec![0, 1],
+            minibatch_time: epoch / 64.0,
+            epoch_time: epoch,
+            dp_epoch_time: f64::INFINITY,
+            speedup_over_dp: f64::INFINITY,
+            stage_memory: vec![1 << 30; 2],
+            report: report(),
+        }
+    }
+
+    #[test]
+    fn identical_plans_diff_clean() {
+        let a = pipeline_plan(16, vec![0, 5, 12], 64.0);
+        let d = compare(&a, &a);
+        assert!(d.same_choice);
+        assert_eq!(d.epoch_delta, 0.0);
+        assert_eq!(d.epoch_ratio, 1.0);
+        assert!(d.boundary_moves.is_empty());
+        assert!(d.partition_note.is_none());
+        assert!(!d.device_order_changed);
+        assert!(d.render().contains("winner: identical"));
+        assert!(d.render().contains("boundaries: unchanged"));
+    }
+
+    #[test]
+    fn boundary_moves_and_deltas_reported() {
+        let a = pipeline_plan(16, vec![0, 5, 12], 64.0);
+        let b = pipeline_plan(16, vec![0, 7, 12], 60.0);
+        let d = compare(&a, &b);
+        assert!(!d.same_choice, "partition changed");
+        assert_eq!(
+            d.boundary_moves,
+            vec![BoundaryMove { boundary: 1, from: 5, to: 7 }]
+        );
+        assert_eq!(d.epoch_delta, -4.0);
+        assert!((d.epoch_ratio - 60.0 / 64.0).abs() < 1e-12);
+        let text = d.render();
+        assert!(text.contains("winner: CHANGED"), "{text}");
+        assert!(text.contains("boundary 1: layer 5 -> 7"), "{text}");
+    }
+
+    #[test]
+    fn mode_mismatch_is_noted() {
+        let a = pipeline_plan(16, vec![0, 5, 12], 64.0);
+        let mut b = pipeline_plan(16, vec![0, 5, 12], 80.0);
+        b.choice = Choice::DataParallel;
+        let d = compare(&a, &b);
+        assert!(!d.same_choice);
+        assert!(d.partition_note.as_deref().unwrap().contains("modes differ"));
+        assert!(d.render().contains("modes differ"));
+    }
+
+    #[test]
+    fn stage_count_mismatch_is_noted() {
+        let a = pipeline_plan(16, vec![0, 5, 12], 64.0);
+        let b = pipeline_plan(16, vec![0, 4, 8, 12], 64.0);
+        let d = compare(&a, &b);
+        assert!(d.boundary_moves.is_empty());
+        assert!(d.partition_note.as_deref().unwrap().contains("stage counts differ"));
+    }
+
+    #[test]
+    fn device_order_change_flagged() {
+        let a = pipeline_plan(16, vec![0, 5, 12], 64.0);
+        let mut b = a.clone();
+        b.device_order = vec![1, 0];
+        let d = compare(&a, &b);
+        assert!(d.device_order_changed);
+        assert!(d.render().contains("device order: CHANGED"));
+    }
+}

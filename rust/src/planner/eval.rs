@@ -97,6 +97,14 @@ pub fn fits(
         .all(|(&used, d)| used <= mm.usable(d.mem_capacity))
 }
 
+/// Does micro-batch count `m` evenly divide the global mini-batch? The
+/// single source of truth for the planner's divisibility rule — the
+/// phase-A prewarm skip-set and the per-candidate rejection in
+/// [`prepare`] must always agree.
+pub(crate) fn divides_global(global_batch: f64, m: usize) -> bool {
+    m != 0 && (global_batch as usize) % m == 0
+}
+
 /// A candidate that survived phase A: its DES spec, partition and
 /// analytical epoch lower bound.
 #[derive(Debug)]
@@ -119,7 +127,7 @@ pub(crate) fn prepare(
     global_batch: f64,
     n_minibatches: usize,
 ) -> Result<Prepared, String> {
-    if cand.m == 0 || (global_batch as usize) % cand.m != 0 {
+    if !divides_global(global_batch, cand.m) {
         return Err(format!("M={} does not divide the global mini-batch {global_batch}", cand.m));
     }
     let plan = cache.partition(net, cluster, profile, cand)?;

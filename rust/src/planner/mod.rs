@@ -10,16 +10,24 @@
 //! * [`cache::EvalCache`] — memoizes partition work at the granularity
 //!   it actually varies: the kind-independent balance passes once per
 //!   `micro`, the memory fine-tune once per (Tables 1–2 memory class, M)
-//!   — identical `(kind, micro)` partitions are computed once;
+//!   — identical `(kind, micro)` partitions are computed once, and
+//!   [`EvalCache::prewarm`] fans both batches out over `jobs` workers
+//!   (phase A is parallel, not just the DES phase);
 //! * [`bounds`] — closed-form lower bounds (from the Tables 1–2 model)
 //!   that let a branch-and-bound pass skip discrete-event simulations
 //!   which provably cannot beat the incumbent;
-//! * [`eval`] — candidate → `SimSpec` → DES evaluation;
+//! * [`eval`] — candidate → `SimSpec` → DES evaluation, on the
+//!   trace-free [`crate::sim::engine::simulate_fast`] path with one
+//!   reusable `SimArena` per worker thread;
 //! * [`report`] — the typed [`Evaluation`] / [`ExplorationReport`] /
 //!   [`Plan`] data model, serializable to/from JSON (`plan.json`);
+//! * [`diff`] — structured comparison of two `plan.json` artifacts
+//!   (`bapipe plan diff`);
 //! * a scoped-thread parallel evaluator with a *deterministic reduction*:
 //!   the selected plan is independent of thread interleaving, so
-//!   `jobs = 1` and `jobs = 8` return identical plans.
+//!   `jobs = 1` and `jobs = 8` return identical plans — and, behind
+//!   [`Options::adaptive_m`], an incumbent-bisecting refinement of the M
+//!   grid that only ever adds evaluations.
 //!
 //! ```no_run
 //! use bapipe::{cluster, model, planner, profile};
@@ -35,6 +43,7 @@
 
 pub mod bounds;
 pub mod cache;
+pub mod diff;
 pub mod eval;
 pub mod report;
 pub mod space;
@@ -42,6 +51,7 @@ pub mod space;
 mod parallel;
 
 pub use cache::EvalCache;
+pub use diff::{BoundaryMove, PlanDiff};
 pub use eval::{build_spec, build_spec_plan, evaluate_pipeline, fits, plan_memory};
 pub use report::{Choice, Evaluation, ExplorationReport, Outcome, Plan};
 pub use space::{Candidate, SearchSpace};
@@ -52,7 +62,7 @@ use crate::partition::memfit::{dp_memory_bytes, MemoryModel};
 use crate::profile::Profile;
 use crate::schedule::ScheduleKind;
 use crate::sim::dp;
-use crate::sim::engine::{epoch_from_makespan, epoch_time, simulate};
+use crate::sim::engine::{epoch_from_makespan, epoch_time, simulate_fast, SimArena};
 use std::sync::atomic::{AtomicU64, Ordering};
 
 /// Exploration options (superset of the seed explorer's options; every
@@ -79,6 +89,12 @@ pub struct Options {
     /// along the pipeline chain (e.g. which FPGA of a VCU129/VCU118 mix
     /// hosts the first stage).
     pub permute_devices: bool,
+    /// After the fixed M grid, bisect the micro-batch count around the
+    /// incumbent (divisors of the global mini-batch between the winner
+    /// and its evaluated neighbours, repeatedly). Only ever *adds*
+    /// evaluations, so the refined plan is never worse than the fixed
+    /// grid's.
+    pub adaptive_m: bool,
 }
 
 impl Default for Options {
@@ -91,6 +107,7 @@ impl Default for Options {
             jobs: 1,
             prune: true,
             permute_devices: false,
+            adaptive_m: false,
         }
     }
 }
@@ -124,21 +141,45 @@ fn atomic_min_f64(cell: &AtomicU64, value: f64) {
 /// Evaluate every candidate of `space`, returning the typed report (DP
 /// baseline fields left unset — [`explore`] fills them).
 ///
-/// Phase A (sequential, deterministic): balanced partitions through the
-/// memoizing [`EvalCache`], feasibility checks, `SimSpec` construction
-/// and analytical lower bounds. Phase B (parallel over `opts.jobs`
-/// scoped threads): DES evaluation in ascending-lower-bound order with a
-/// shared incumbent; a candidate is pruned only when its lower bound
-/// *strictly* exceeds the incumbent, so every pruned candidate is
-/// provably worse than the final best and the reduction (min epoch time,
-/// ties to the earliest candidate in enumeration order) is independent
-/// of thread interleaving.
+/// Phase A (parallel over `opts.jobs`, deterministic): the balance-seed
+/// DPs and memory fine-tunes fan out through [`EvalCache::prewarm`] —
+/// work lists and result insertion are in first-appearance order, so
+/// cache contents and statistics are independent of the job count — then
+/// feasibility checks, `SimSpec` construction and analytical lower
+/// bounds per candidate against the warm cache. Phase B (parallel over
+/// `opts.jobs` scoped threads, one reusable DES arena per worker): DES
+/// evaluation in ascending-lower-bound order with a shared incumbent; a
+/// candidate is pruned only when its lower bound *strictly* exceeds the
+/// incumbent, so every pruned candidate is provably worse than the final
+/// best and the reduction (min epoch time, ties to the earliest
+/// candidate in enumeration order) is independent of thread
+/// interleaving.
 pub fn explore_space(
     net: &Network,
     cluster: &Cluster,
     profile: &Profile,
     space: &SearchSpace,
     opts: &Options,
+) -> ExplorationReport {
+    let mut cache = EvalCache::new();
+    explore_space_with(net, cluster, profile, space, opts, &mut cache, f64::INFINITY)
+}
+
+/// [`explore_space`] against a caller-owned cache and a pre-seeded
+/// incumbent epoch time: the adaptive M refinement threads one cache
+/// through all its rounds and starts each round's branch-and-bound at
+/// the best epoch already simulated (a candidate pruned against it is
+/// provably worse than a recorded evaluation, so the merged selection is
+/// unchanged). `cache_hits` in the returned report counts this call's
+/// hits only.
+fn explore_space_with(
+    net: &Network,
+    cluster: &Cluster,
+    profile: &Profile,
+    space: &SearchSpace,
+    opts: &Options,
+    cache: &mut EvalCache,
+    incumbent_seed: f64,
 ) -> ExplorationReport {
     let n = cluster.len();
     let global = space.batch_per_device * n as f64;
@@ -153,13 +194,18 @@ pub fn explore_space(
 
     let candidates = space.candidates(n);
 
-    // Phase A: partitions (memoized), feasibility, specs, lower bounds.
-    let mut cache = EvalCache::new();
+    // Phase A: partitions — the balance-seed DPs and memory fine-tunes
+    // fan out over `opts.jobs` workers ([`EvalCache::prewarm`], results
+    // landing in deterministic first-appearance order) — then
+    // feasibility, spec construction and lower bounds per candidate (all
+    // cache reads).
+    let hits_before = cache.hits;
+    cache.prewarm(net, &views, &candidates, global, opts.jobs);
     let prepared: Vec<Result<eval::Prepared, String>> = candidates
         .iter()
         .map(|cand| {
             let (cl, prof) = &views[cand.perm];
-            eval::prepare(net, cl, prof, &mut cache, cand, global, n_mb)
+            eval::prepare(net, cl, prof, cache, cand, global, n_mb)
         })
         .collect();
 
@@ -174,25 +220,28 @@ pub fn explore_space(
         la.partial_cmp(&lb).unwrap_or(std::cmp::Ordering::Equal).then(a.cmp(&b))
     });
 
-    let incumbent = AtomicU64::new(f64::INFINITY.to_bits());
-    let phase_b: Vec<PhaseB> = parallel::run_indexed(opts.jobs, order.len(), |k| {
-        let p = match &prepared[order[k]] {
-            Ok(p) => p,
-            Err(_) => unreachable!("order only holds feasible candidates"),
-        };
-        let best_seen = f64::from_bits(incumbent.load(Ordering::Relaxed));
-        // Strict inequality (an equal-epoch candidate must still be
-        // simulated so the deterministic tie-break can consider it), with
-        // a relative margin so summation-order rounding in the bound can
-        // never prune a candidate the exhaustive search would keep.
-        if opts.prune && p.lb_epoch * (1.0 - 1e-9) > best_seen {
-            return PhaseB::Pruned { lower_bound: p.lb_epoch };
-        }
-        let makespan = simulate(&p.spec).makespan;
-        let ep = epoch_from_makespan(makespan, &p.spec, n_mb);
-        atomic_min_f64(&incumbent, ep);
-        PhaseB::Done { minibatch_time: makespan, epoch_time: ep }
-    });
+    let incumbent = AtomicU64::new(incumbent_seed.to_bits());
+    let phase_b: Vec<PhaseB> =
+        parallel::run_indexed_with(opts.jobs, order.len(), SimArena::new, |arena, k| {
+            let p = match &prepared[order[k]] {
+                Ok(p) => p,
+                Err(_) => unreachable!("order only holds feasible candidates"),
+            };
+            let best_seen = f64::from_bits(incumbent.load(Ordering::Relaxed));
+            // Strict inequality (an equal-epoch candidate must still be
+            // simulated so the deterministic tie-break can consider it), with
+            // a relative margin so summation-order rounding in the bound can
+            // never prune a candidate the exhaustive search would keep.
+            if opts.prune && p.lb_epoch * (1.0 - 1e-9) > best_seen {
+                return PhaseB::Pruned { lower_bound: p.lb_epoch };
+            }
+            // Trace-free DES over the worker's reused arena: bit-exact
+            // with `simulate_full`, no per-candidate allocation.
+            let makespan = simulate_fast(&p.spec, arena).makespan;
+            let ep = epoch_from_makespan(makespan, &p.spec, n_mb);
+            atomic_min_f64(&incumbent, ep);
+            PhaseB::Done { minibatch_time: makespan, epoch_time: ep }
+        });
 
     // Stitch phase results back into enumeration order.
     let mut outcomes: Vec<Option<Outcome>> = prepared
@@ -244,7 +293,7 @@ pub fn explore_space(
         evaluations,
         simulated_count,
         pruned_count,
-        cache_hits: cache.hits,
+        cache_hits: cache.hits - hits_before,
         dp_considered: false,
         dp_fits: false,
         dp_minibatch_time: f64::INFINITY,
@@ -252,14 +301,114 @@ pub fn explore_space(
     }
 }
 
+/// Most bisection rounds of the adaptive M refinement (each round adds at
+/// most two new M values around the incumbent).
+const ADAPTIVE_M_ROUNDS: usize = 8;
+
+/// The divisor in the *open* interval `(lo, hi)` closest to its midpoint
+/// that has not been tried yet (ties to the smaller M).
+fn bisect_divisor(
+    divisors: &[usize],
+    tried: &std::collections::BTreeSet<usize>,
+    lo: usize,
+    hi: usize,
+) -> Option<usize> {
+    if hi <= lo + 1 {
+        return None;
+    }
+    let mid = (lo + hi) / 2;
+    divisors
+        .iter()
+        .copied()
+        .filter(|d| *d > lo && *d < hi && !tried.contains(d))
+        .min_by_key(|d| (d.abs_diff(mid), *d))
+}
+
+/// Adaptive M-grid refinement ([`Options::adaptive_m`]): repeatedly
+/// bisect the micro-batch-count axis around the incumbent — the divisor
+/// of the global mini-batch closest to the midpoint between the winning
+/// M and its nearest evaluated neighbour on each side (the full divisor
+/// axis when the incumbent sits on the grid edge) — and merge the new
+/// evaluations into `report`. Purely additive: every fixed-grid
+/// evaluation is retained and ties keep the earlier candidate, so the
+/// refined selection is never worse than the fixed grid's.
+fn refine_m(
+    net: &Network,
+    cluster: &Cluster,
+    profile: &Profile,
+    space: &SearchSpace,
+    opts: &Options,
+    report: &mut ExplorationReport,
+) {
+    let global = (space.batch_per_device * cluster.len() as f64) as usize;
+    if global == 0 {
+        return;
+    }
+    let divisors: Vec<usize> = (1..=global).filter(|d| global % d == 0).collect();
+    // One cache across every round; each round's branch-and-bound starts
+    // at the best epoch already recorded, so new candidates that provably
+    // cannot win are pruned instead of simulated.
+    let mut cache = EvalCache::new();
+    for round in 0..ADAPTIVE_M_ROUNDS {
+        let Some(best) = report.best_evaluation() else { return };
+        let best_m = best.candidate.m;
+        let best_epoch = match &best.outcome {
+            Outcome::Evaluated { epoch_time, .. } => *epoch_time,
+            _ => unreachable!("best_evaluation only returns Evaluated entries"),
+        };
+        let tried: std::collections::BTreeSet<usize> =
+            report.evaluations.iter().map(|e| e.candidate.m).collect();
+        // When the incumbent sits on a grid edge, widen to a synthetic
+        // bound just *outside* the divisor axis so the open interval of
+        // `bisect_divisor` can still reach the untried endpoints M=1 and
+        // M=global.
+        let below = tried.range(..best_m).next_back().copied().unwrap_or(0);
+        let above = tried.range(best_m + 1..).next().copied().unwrap_or(global + 1);
+        let mut new_ms: Vec<usize> = Vec::new();
+        for (lo, hi) in [(below, best_m), (best_m, above)] {
+            if let Some(m) = bisect_divisor(&divisors, &tried, lo, hi) {
+                if !new_ms.contains(&m) {
+                    new_ms.push(m);
+                }
+            }
+        }
+        if new_ms.is_empty() {
+            return;
+        }
+        new_ms.sort_unstable();
+        let sub_space = SearchSpace {
+            kinds: space.kinds.clone(),
+            ineligible: Vec::new(), // already reported by the grid pass
+            m_grid: new_ms.clone(),
+            batch_per_device: space.batch_per_device,
+            device_orders: space.device_orders.clone(),
+            notes: Vec::new(),
+        };
+        let sub =
+            explore_space_with(net, cluster, profile, &sub_space, opts, &mut cache, best_epoch);
+        report.notes.push(format!(
+            "adaptive-M round {}: bisected to M={new_ms:?} around incumbent M={best_m}",
+            round + 1
+        ));
+        report.evaluations.extend(sub.evaluations);
+        report.simulated_count += sub.simulated_count;
+        report.pruned_count += sub.pruned_count;
+        report.cache_hits += sub.cache_hits;
+    }
+}
+
 /// The full BaPipe exploration (Fig. 3): enumerate the schedule ×
 /// micro-batching space (optionally over device orderings), evaluate
 /// with memoized partitions, branch-and-bound pruning and `opts.jobs`
-/// parallel workers, compare against the data-parallel baseline, and
+/// parallel workers (phases A *and* B), optionally refine the M grid
+/// around the incumbent, compare against the data-parallel baseline, and
 /// return the fastest plan with its full typed report.
 pub fn explore(net: &Network, cluster: &Cluster, profile: &Profile, opts: &Options) -> Plan {
     let space = SearchSpace::bapipe(cluster, opts);
     let mut report = explore_space(net, cluster, profile, &space, opts);
+    if opts.adaptive_m {
+        refine_m(net, cluster, profile, &space, opts, &mut report);
+    }
 
     // DP baseline (the paper's 1x reference; ResNet-50's winner).
     let dpr = dp::minibatch(profile, cluster, opts.batch_per_device);
@@ -401,6 +550,53 @@ mod tests {
         assert_eq!(f64::from_bits(cell.load(Ordering::Relaxed)), 3.5);
         atomic_min_f64(&cell, 1.25);
         assert_eq!(f64::from_bits(cell.load(Ordering::Relaxed)), 1.25);
+    }
+
+    #[test]
+    fn bisect_divisor_picks_midmost_untried() {
+        use std::collections::BTreeSet;
+        let global = 128usize;
+        let divisors: Vec<usize> = (1..=global).filter(|d| global % d == 0).collect();
+        let tried: BTreeSet<usize> = [2, 4, 8, 16, 32, 64, 128].into_iter().collect();
+        // (16, 32) holds no divisor of 128 strictly inside → nothing to try
+        assert_eq!(bisect_divisor(&divisors, &tried, 16, 32), None);
+        // (16, 64) with 32 untried: midpoint 40, closest inside divisor 32
+        let tried2: BTreeSet<usize> = [2, 4, 8, 16, 64, 128].into_iter().collect();
+        assert_eq!(bisect_divisor(&divisors, &tried2, 16, 64), Some(32));
+        // degenerate interval
+        assert_eq!(bisect_divisor(&divisors, &tried, 8, 9), None);
+        // (1, 4): the only divisor strictly inside is 2
+        let none_tried = BTreeSet::new();
+        assert_eq!(bisect_divisor(&divisors, &none_tried, 1, 4), Some(2));
+        // edge-of-grid synthetic bounds (0 and global+1) make the axis
+        // endpoints reachable: M=1 below the smallest tried M…
+        let tried3: BTreeSet<usize> = [2, 4].into_iter().collect();
+        assert_eq!(bisect_divisor(&divisors, &tried3, 0, 2), Some(1));
+        // …and M=global above the largest tried M
+        let tried4: BTreeSet<usize> = [2, 4, 8, 16, 32, 64].into_iter().collect();
+        assert_eq!(bisect_divisor(&divisors, &tried4, 64, 129), Some(128));
+    }
+
+    #[test]
+    fn adaptive_m_never_worse_and_purely_additive() {
+        let net = zoo::vgg16(224);
+        let cl = presets::v100_cluster(4);
+        let prof = analytical::profile(&net, &cl);
+        let fixed = explore(&net, &cl, &prof, &opts(32.0));
+        let adaptive =
+            explore(&net, &cl, &prof, &Options { adaptive_m: true, ..opts(32.0) });
+        assert!(
+            adaptive.epoch_time <= fixed.epoch_time,
+            "adaptive {} vs fixed {}",
+            adaptive.epoch_time,
+            fixed.epoch_time
+        );
+        // the fixed grid's evaluations are all retained, in order, at the
+        // front of the refined report
+        assert_eq!(
+            &adaptive.report.evaluations[..fixed.report.evaluations.len()],
+            &fixed.report.evaluations[..]
+        );
     }
 
     #[test]

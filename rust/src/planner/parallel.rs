@@ -12,24 +12,42 @@ where
     T: Send,
     F: Fn(usize) -> T + Sync,
 {
+    run_indexed_with(jobs, n, || (), |_: &mut (), i| f(i))
+}
+
+/// [`run_indexed`] with per-worker scratch state: every worker thread
+/// builds one `S` via `init` and threads it through all the indices it
+/// claims. This is how each DES evaluator worker owns a reusable
+/// [`crate::sim::engine::SimArena`] — results must not depend on which
+/// worker (and therefore which scratch) served an index.
+pub(crate) fn run_indexed_with<S, T, I, F>(jobs: usize, n: usize, init: I, f: F) -> Vec<T>
+where
+    T: Send,
+    I: Fn() -> S + Sync,
+    F: Fn(&mut S, usize) -> T + Sync,
+{
     if n == 0 {
         return Vec::new();
     }
     let jobs = jobs.max(1).min(n);
     if jobs == 1 {
-        return (0..n).map(f).collect();
+        let mut state = init();
+        return (0..n).map(|i| f(&mut state, i)).collect();
     }
     let next = AtomicUsize::new(0);
     let slots: Vec<Mutex<Option<T>>> = (0..n).map(|_| Mutex::new(None)).collect();
     std::thread::scope(|scope| {
         for _ in 0..jobs {
-            scope.spawn(|| loop {
-                let i = next.fetch_add(1, Ordering::Relaxed);
-                if i >= n {
-                    break;
+            scope.spawn(|| {
+                let mut state = init();
+                loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    let value = f(&mut state, i);
+                    *slots[i].lock().expect("result slot poisoned") = Some(value);
                 }
-                let value = f(i);
-                *slots[i].lock().expect("result slot poisoned") = Some(value);
             });
         }
     });
@@ -59,6 +77,23 @@ mod tests {
     fn empty_and_single() {
         assert_eq!(run_indexed(4, 0, |i| i), Vec::<usize>::new());
         assert_eq!(run_indexed(4, 1, |i| i + 10), vec![10]);
+    }
+
+    #[test]
+    fn per_worker_state_is_threaded_through() {
+        for jobs in [1usize, 3, 8] {
+            let out = run_indexed_with(
+                jobs,
+                25,
+                || 0usize,
+                |served, i| {
+                    *served += 1; // per-worker scratch accumulates
+                    assert!(*served >= 1);
+                    i * 2
+                },
+            );
+            assert_eq!(out, (0..25).map(|i| i * 2).collect::<Vec<_>>(), "jobs={jobs}");
+        }
     }
 
     #[test]

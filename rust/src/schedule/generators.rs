@@ -9,24 +9,33 @@ use super::{Op, ScheduleKind, StageProgram};
 /// Generate the op sequence for stage `i` (0-based) of `n` stages with
 /// `m` micro-batches per mini-batch.
 pub fn program(kind: ScheduleKind, n: usize, i: usize, m: usize) -> StageProgram {
+    let mut ops = Vec::with_capacity(2 * m + 1);
+    program_into(kind, n, i, m, &mut ops);
+    StageProgram { ops }
+}
+
+/// [`program`] into a caller-provided buffer (ops are appended; the
+/// buffer is not cleared). This is the allocation-free entry point the
+/// simulator's reusable [`crate::sim::engine::SimArena`] builds its flat
+/// per-stage op table from.
+pub fn program_into(kind: ScheduleKind, n: usize, i: usize, m: usize, ops: &mut Vec<Op>) {
     assert!(n >= 1 && i < n && m >= 1, "program({kind:?}, n={n}, i={i}, m={m})");
     match kind {
         ScheduleKind::OneFOneBAs | ScheduleKind::OneFOneBSno => {
-            one_f_one_b(n - i, m, true)
+            one_f_one_b(n - i, m, true, ops)
         }
-        ScheduleKind::OneFOneBSo => one_f_one_b((2 * (n - i)).min(m.max(1)), m, true),
-        ScheduleKind::GPipe => gpipe(m),
-        ScheduleKind::PipeDream => one_f_one_b(n - i, m, false),
-        ScheduleKind::FbpAs => fbp(n, i, m),
+        ScheduleKind::OneFOneBSo => one_f_one_b((2 * (n - i)).min(m.max(1)), m, true, ops),
+        ScheduleKind::GPipe => gpipe(m, ops),
+        ScheduleKind::PipeDream => one_f_one_b(n - i, m, false, ops),
+        ScheduleKind::FbpAs => fbp(n, i, m, ops),
     }
 }
 
 /// Classic 1F1B at warm-up depth `w`: `w` forwards, then alternate
 /// backward/forward, then drain backwards; `update` appends the
 /// mini-batch optimizer step (intra-batch schedules only).
-fn one_f_one_b(w: usize, m: usize, update: bool) -> StageProgram {
+fn one_f_one_b(w: usize, m: usize, update: bool, ops: &mut Vec<Op>) {
     let w = w.min(m).max(1);
-    let mut ops = Vec::with_capacity(2 * m + 1);
     for k in 0..w {
         ops.push(Op::Fwd { mb: k });
     }
@@ -40,13 +49,11 @@ fn one_f_one_b(w: usize, m: usize, update: bool) -> StageProgram {
     if update {
         ops.push(Op::Update);
     }
-    StageProgram { ops }
 }
 
 /// GPipe fill-drain: all forwards (0..m), then all backwards in reverse
 /// micro-batch order (the last forward's activations unwind first).
-fn gpipe(m: usize) -> StageProgram {
-    let mut ops = Vec::with_capacity(2 * m + 1);
+fn gpipe(m: usize, ops: &mut Vec<Op>) {
     for k in 0..m {
         ops.push(Op::Fwd { mb: k });
     }
@@ -54,7 +61,6 @@ fn gpipe(m: usize) -> StageProgram {
         ops.push(Op::Bwd { mb: k });
     }
     ops.push(Op::Update);
-    StageProgram { ops }
 }
 
 /// FBP-AS (FPDeep): forward and backward streams run concurrently on the
@@ -62,9 +68,8 @@ fn gpipe(m: usize) -> StageProgram {
 /// `t < m`) and backward of micro-batch `t - o_i` (once non-negative),
 /// where `o_i = 2·(n-1-i)+1` is the round-trip distance from stage `i` to
 /// the last stage and back.
-fn fbp(n: usize, i: usize, m: usize) -> StageProgram {
+fn fbp(n: usize, i: usize, m: usize, ops: &mut Vec<Op>) {
     let o = 2 * (n - 1 - i) + 1;
-    let mut ops = Vec::new();
     // last backward (mb m-1) lands in slot m-1+o
     for t in 0..m + o {
         let f = if t < m { Some(t) } else { None };
@@ -77,7 +82,6 @@ fn fbp(n: usize, i: usize, m: usize) -> StageProgram {
         }
     }
     ops.push(Op::Update);
-    StageProgram { ops }
 }
 
 /// Structural invariants every stage program must satisfy — used by unit
@@ -226,6 +230,26 @@ mod tests {
                 )
             },
         );
+    }
+
+    #[test]
+    fn program_into_appends_and_matches_program() {
+        // The buffer entry point appends (existing content survives) and
+        // produces exactly the ops of `program` for every kind.
+        for kind in [
+            ScheduleKind::OneFOneBAs,
+            ScheduleKind::FbpAs,
+            ScheduleKind::OneFOneBSno,
+            ScheduleKind::OneFOneBSo,
+            ScheduleKind::GPipe,
+            ScheduleKind::PipeDream,
+        ] {
+            let mut buf = vec![Op::Update];
+            program_into(kind, 4, 1, 8, &mut buf);
+            let p = program(kind, 4, 1, 8);
+            assert_eq!(buf[0], Op::Update, "{kind:?}");
+            assert_eq!(&buf[1..], &p.ops[..], "{kind:?}");
+        }
     }
 
     #[test]

@@ -13,6 +13,20 @@
 //! The 1F1B-SNO vs 1F1B-SO contrast of Table 2 *emerges* from these rules
 //! plus the warm-up depths — there is no schedule-specific timing code —
 //! and the analytical-vs-DES cross-check tests hold both sides honest.
+//!
+//! Two execution paths share one ready-list core over flat
+//! structure-of-arrays state ([`SimArena`]):
+//!
+//! * [`simulate_fast`] — trace-free, allocation-free across calls with a
+//!   reused arena; the planner's hot path.
+//! * [`simulate_full`] (= [`simulate`]) — additionally materializes the
+//!   event trace for timelines, figures and tests, pre-sized to the
+//!   exact op count.
+//!
+//! The seed round-robin polling implementation is retained as
+//! [`simulate_reference`]: an independent oracle the SoA core must match
+//! bit-exactly (property-tested below) and the baseline
+//! `benches/planner_scale.rs` measures the fast path against.
 
 use crate::cluster::ExecMode;
 use crate::schedule::{generators, Op, ScheduleKind, StageProgram};
@@ -93,8 +107,334 @@ pub struct SimResult {
     pub events: Vec<Executed>,
 }
 
-/// Simulate one mini-batch of `spec.kind` on the given cost model.
+/// Trace-free aggregate outputs of [`simulate_fast`].
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FastResult {
+    /// Mini-batch makespan (s).
+    pub makespan: f64,
+    /// Mean idle fraction across stages (the pipeline-bubble rate).
+    pub bubble_fraction: f64,
+}
+
+/// Reusable scratch state for the SoA simulator core: the per-stage op
+/// table flattened into one buffer, and every `n × m` dependency array
+/// flattened row-major (`stage * m + mb`). One arena per evaluator
+/// worker thread makes the planner's inner DES loop allocation-free —
+/// buffers keep their capacity across [`simulate_fast`] calls.
+#[derive(Debug, Default)]
+pub struct SimArena {
+    /// All stage programs, concatenated (`ops_bounds` delimits stages).
+    ops: Vec<Op>,
+    /// `n + 1` offsets into `ops`; stage `i` owns `ops_bounds[i]..ops_bounds[i+1]`.
+    ops_bounds: Vec<usize>,
+    /// When stage `i`'s forward input for micro-batch `k` is ready (NaN = not yet).
+    f_arrival: Vec<f64>,
+    /// When stage `i`'s backward input for micro-batch `k` is ready (NaN = not yet).
+    b_arrival: Vec<f64>,
+    /// Has stage `i` completed the forward of micro-batch `k`?
+    f_done: Vec<bool>,
+    cursor: Vec<f64>,
+    busy: Vec<f64>,
+    pc: Vec<usize>,
+    f_chan_free: Vec<f64>,
+    b_chan_free: Vec<f64>,
+    in_flight: Vec<usize>,
+    peak_in_flight: Vec<usize>,
+    /// Work list of stages whose next op may have become ready.
+    ready: Vec<usize>,
+    /// Is the stage already on the work list?
+    queued: Vec<bool>,
+}
+
+impl SimArena {
+    /// Empty arena; buffers grow to fit the first simulated spec and are
+    /// reused afterwards.
+    pub fn new() -> SimArena {
+        SimArena::default()
+    }
+
+    /// Per-stage peak in-flight micro-batches of the **last** simulation
+    /// run through this arena (the fast path's counterpart of
+    /// [`SimResult::peak_in_flight`], exposed by borrow to stay
+    /// allocation-free).
+    pub fn peak_in_flight(&self) -> &[usize] {
+        &self.peak_in_flight
+    }
+
+    /// Size and initialize every buffer for `spec`, keeping capacity.
+    fn reset(&mut self, spec: &SimSpec) {
+        let n = spec.n();
+        let m = spec.m;
+        self.ops.clear();
+        self.ops_bounds.clear();
+        self.ops_bounds.push(0);
+        for i in 0..n {
+            generators::program_into(spec.kind, n, i, m, &mut self.ops);
+            self.ops_bounds.push(self.ops.len());
+        }
+        self.f_arrival.clear();
+        self.f_arrival.resize(n * m, f64::NAN);
+        self.b_arrival.clear();
+        self.b_arrival.resize(n * m, f64::NAN);
+        self.f_done.clear();
+        self.f_done.resize(n * m, false);
+        // Stage 0's forward inputs are local; the last stage starts
+        // backward from its own loss.
+        for k in 0..m {
+            self.f_arrival[k] = 0.0;
+            self.b_arrival[(n - 1) * m + k] = 0.0;
+        }
+        self.cursor.clear();
+        self.cursor.resize(n, 0.0);
+        self.busy.clear();
+        self.busy.resize(n, 0.0);
+        self.pc.clear();
+        self.pc.resize(n, 0);
+        self.f_chan_free.clear();
+        self.f_chan_free.resize(n.saturating_sub(1), 0.0);
+        self.b_chan_free.clear();
+        self.b_chan_free.resize(n.saturating_sub(1), 0.0);
+        self.in_flight.clear();
+        self.in_flight.resize(n, 0);
+        self.peak_in_flight.clear();
+        self.peak_in_flight.resize(n, 0);
+        self.ready.clear();
+        self.ready.extend(0..n);
+        self.queued.clear();
+        self.queued.resize(n, true);
+    }
+}
+
+/// Where executed ops go: a no-op for the fast path, a pre-sized
+/// `Vec<Executed>` for the full path. Monomorphized, so the fast path
+/// compiles to no trace code at all.
+trait Sink {
+    /// Called once, after the op table is built, with the exact op count.
+    fn pre_size(&mut self, total_ops: usize);
+    /// Record one executed op.
+    fn record(&mut self, stage: usize, op: Op, start: f64, end: f64);
+}
+
+/// The trace-free sink.
+struct NoTrace;
+
+impl Sink for NoTrace {
+    #[inline]
+    fn pre_size(&mut self, _total_ops: usize) {}
+    #[inline]
+    fn record(&mut self, _stage: usize, _op: Op, _start: f64, _end: f64) {}
+}
+
+impl Sink for Vec<Executed> {
+    fn pre_size(&mut self, total_ops: usize) {
+        self.reserve(total_ops);
+    }
+    #[inline]
+    fn record(&mut self, stage: usize, op: Op, start: f64, end: f64) {
+        self.push(Executed { stage, op, start, end });
+    }
+}
+
+/// Op duration under the spec's cost model. FBP slots cost F+B regardless
+/// of occupancy (statically partitioned DSP engines — Section 3.2.1 /
+/// Table 1).
+fn op_duration(spec: &SimSpec, i: usize, op: &Op) -> f64 {
+    match spec.kind {
+        ScheduleKind::FbpAs => match op {
+            Op::Update => spec.update[i],
+            _ => spec.fwd[i] + spec.bwd[i],
+        },
+        _ => match op {
+            Op::Fwd { .. } => spec.fwd[i],
+            Op::Bwd { .. } => spec.bwd[i],
+            Op::FwdBwd { .. } => spec.fwd[i] + spec.bwd[i],
+            Op::Update => spec.update[i],
+        },
+    }
+}
+
+/// Shared ready-list core of [`simulate_fast`] / [`simulate_full`].
+///
+/// A stage leaves the work list when its next op is blocked on a
+/// neighbour's data and re-enters only when that neighbour produces
+/// something for it, so total scheduling work is `O(total ops)` — the
+/// seed's round-robin polling re-scanned every stage per round
+/// (worst-case quadratic at large `n·m`). Every timing expression is
+/// copied verbatim from [`simulate_reference`]: op times are pure
+/// dataflow (they depend only on arrivals and the stage's own cursor, in
+/// program order), so the execution order difference cannot change any
+/// computed value — the agreement is bit-exact, and property-tested.
+///
+/// Returns `(makespan, bubble_fraction)`; per-stage peaks stay in the
+/// arena.
+fn run_core<S: Sink>(spec: &SimSpec, arena: &mut SimArena, sink: &mut S) -> (f64, f64) {
+    let n = spec.n();
+    assert!(n >= 1);
+    assert_eq!(spec.bwd.len(), n);
+    assert_eq!(spec.update.len(), n);
+    assert_eq!(spec.exec.len(), n);
+    assert_eq!(spec.fwd_xfer.len(), n - 1);
+    assert_eq!(spec.bwd_xfer.len(), n - 1);
+    let m = spec.m;
+    arena.reset(spec);
+    let total_ops = *arena.ops_bounds.last().unwrap();
+    sink.pre_size(total_ops);
+
+    let mut executed = 0usize;
+    while let Some(i) = arena.ready.pop() {
+        arena.queued[i] = false;
+        let lo = arena.ops_bounds[i];
+        let stage_len = arena.ops_bounds[i + 1] - lo;
+        let row = i * m;
+        while arena.pc[i] < stage_len {
+            let op = arena.ops[lo + arena.pc[i]];
+            // dependency check → earliest data-ready time
+            let ready_at: Option<f64> = match op {
+                Op::Fwd { mb } => {
+                    let a = arena.f_arrival[row + mb];
+                    if a.is_nan() {
+                        None
+                    } else {
+                        Some(a)
+                    }
+                }
+                Op::Bwd { mb } => {
+                    if !arena.f_done[row + mb] {
+                        None
+                    } else {
+                        let a = arena.b_arrival[row + mb];
+                        if a.is_nan() {
+                            None
+                        } else {
+                            Some(a)
+                        }
+                    }
+                }
+                Op::FwdBwd { fwd_mb, bwd_mb } => {
+                    let fa = arena.f_arrival[row + fwd_mb];
+                    let ba = arena.b_arrival[row + bwd_mb];
+                    let f_ok = arena.f_done[row + bwd_mb] || fwd_mb == bwd_mb;
+                    if fa.is_nan() || ba.is_nan() || !f_ok {
+                        None
+                    } else {
+                        Some(fa.max(ba))
+                    }
+                }
+                Op::Update => Some(arena.cursor[i]),
+            };
+            let Some(data_ready) = ready_at else { break };
+            let start = arena.cursor[i].max(data_ready);
+            let dur = op_duration(spec, i, &op);
+            let end = start + dur;
+            arena.cursor[i] = end;
+            arena.busy[i] += dur;
+            sink.record(i, op, start, end);
+            // produce outputs (transfers serialize on the edge channel)
+            let fwd_mb_done = match op {
+                Op::Fwd { mb } => Some(mb),
+                Op::FwdBwd { fwd_mb, .. } => Some(fwd_mb),
+                _ => None,
+            };
+            if let Some(mb) = fwd_mb_done {
+                arena.f_done[row + mb] = true;
+                arena.in_flight[i] += 1;
+                arena.peak_in_flight[i] = arena.peak_in_flight[i].max(arena.in_flight[i]);
+                if i + 1 < n {
+                    let x = spec.fwd_xfer[i];
+                    let free = arena.f_chan_free[i];
+                    let arr = match spec.exec[i] {
+                        ExecMode::Sync => end.max(free) + x,
+                        // streamed during the op when the channel allows
+                        ExecMode::Async => end.max(start.max(free) + x),
+                    };
+                    arena.f_chan_free[i] = arr;
+                    arena.f_arrival[(i + 1) * m + mb] = arr;
+                    if !arena.queued[i + 1] {
+                        arena.queued[i + 1] = true;
+                        arena.ready.push(i + 1);
+                    }
+                }
+            }
+            let bwd_mb_done = match op {
+                Op::Bwd { mb } => Some(mb),
+                Op::FwdBwd { bwd_mb, .. } => Some(bwd_mb),
+                _ => None,
+            };
+            if let Some(mb) = bwd_mb_done {
+                arena.in_flight[i] = arena.in_flight[i].saturating_sub(1);
+                if i > 0 {
+                    let x = spec.bwd_xfer[i - 1];
+                    let free = arena.b_chan_free[i - 1];
+                    let arr = match spec.exec[i] {
+                        ExecMode::Sync => end.max(free) + x,
+                        ExecMode::Async => end.max(start.max(free) + x),
+                    };
+                    arena.b_chan_free[i - 1] = arr;
+                    arena.b_arrival[(i - 1) * m + mb] = arr;
+                    if !arena.queued[i - 1] {
+                        arena.queued[i - 1] = true;
+                        arena.ready.push(i - 1);
+                    }
+                }
+            }
+            arena.pc[i] += 1;
+            executed += 1;
+        }
+    }
+    assert_eq!(
+        executed, total_ops,
+        "schedule deadlock: {:?} n={n} m={m} (pc={:?})",
+        spec.kind, arena.pc
+    );
+
+    let makespan = arena.cursor.iter().cloned().fold(0.0, f64::max);
+    let bubble = if makespan > 0.0 {
+        (0..n).map(|i| 1.0 - arena.busy[i] / makespan).sum::<f64>() / n as f64
+    } else {
+        0.0
+    };
+    (makespan, bubble)
+}
+
+/// Simulate one mini-batch without materializing an event trace — the
+/// planner's hot path. Bit-exact with [`simulate_full`] (and with the
+/// seed [`simulate_reference`]) on makespan, bubble fraction and
+/// per-stage peak in-flight; the peaks are readable from
+/// [`SimArena::peak_in_flight`] after the call.
+pub fn simulate_fast(spec: &SimSpec, arena: &mut SimArena) -> FastResult {
+    let (makespan, bubble_fraction) = run_core(spec, arena, &mut NoTrace);
+    FastResult { makespan, bubble_fraction }
+}
+
+/// Simulate one mini-batch with the full event trace (timelines, figures,
+/// tests). The trace is pre-sized to the exact op count and returned
+/// ordered by stage, then start time.
+pub fn simulate_full(spec: &SimSpec) -> SimResult {
+    let mut arena = SimArena::new();
+    let mut events: Vec<Executed> = Vec::new();
+    let (makespan, bubble_fraction) = run_core(spec, &mut arena, &mut events);
+    events.sort_by(|a, b| (a.stage, a.start).partial_cmp(&(b.stage, b.start)).unwrap());
+    SimResult {
+        makespan,
+        bubble_fraction,
+        peak_in_flight: arena.peak_in_flight().to_vec(),
+        events,
+    }
+}
+
+/// Simulate one mini-batch of `spec.kind` on the given cost model (the
+/// trace-producing [`simulate_full`] path; callers that only need the
+/// aggregates should prefer [`simulate_fast`] with a reused [`SimArena`]).
 pub fn simulate(spec: &SimSpec) -> SimResult {
+    simulate_full(spec)
+}
+
+/// The seed implementation: round-robin polling over nested per-stage
+/// vectors, always materializing the trace. Retained verbatim as an
+/// independent oracle for the SoA ready-list core (the bit-exactness
+/// property test below) and as the measured baseline in
+/// `benches/planner_scale.rs` / `BENCH_planner.json`.
+pub fn simulate_reference(spec: &SimSpec) -> SimResult {
     let n = spec.n();
     assert!(n >= 1);
     assert_eq!(spec.bwd.len(), n);
@@ -130,23 +470,6 @@ pub fn simulate(spec: &SimSpec) -> SimResult {
     let mut events: Vec<Executed> = Vec::new();
     let mut in_flight = vec![0usize; n];
     let mut peak_in_flight = vec![0usize; n];
-
-    // FBP slots cost F+B regardless of occupancy (statically partitioned
-    // DSP engines — Section 3.2.1 / Table 1).
-    let op_duration = |i: usize, op: &Op| -> f64 {
-        match spec.kind {
-            ScheduleKind::FbpAs => match op {
-                Op::Update => spec.update[i],
-                _ => spec.fwd[i] + spec.bwd[i],
-            },
-            _ => match op {
-                Op::Fwd { .. } => spec.fwd[i],
-                Op::Bwd { .. } => spec.bwd[i],
-                Op::FwdBwd { .. } => spec.fwd[i] + spec.bwd[i],
-                Op::Update => spec.update[i],
-            },
-        }
-    };
 
     let total_ops: usize = programs.iter().map(|p| p.ops.len()).sum();
     let mut executed = 0usize;
@@ -191,7 +514,7 @@ pub fn simulate(spec: &SimSpec) -> SimResult {
                 };
                 let Some(data_ready) = ready else { break };
                 let start = cursor[i].max(data_ready);
-                let dur = op_duration(i, &op);
+                let dur = op_duration(spec, i, &op);
                 let end = start + dur;
                 cursor[i] = end;
                 busy[i] += dur;
@@ -462,5 +785,117 @@ mod tests {
                 assert!(w[1].start >= w[0].end - 1e-12, "overlap at stage {i}");
             }
         }
+    }
+
+    #[test]
+    fn full_trace_is_sorted_by_stage_then_start_and_matches_reference() {
+        // Regression for the documented events contract: the returned
+        // trace is ordered by stage, then time — for every kind, and
+        // identical to the seed implementation's trace.
+        for (kind, exec) in [
+            (ScheduleKind::OneFOneBAs, ExecMode::Async),
+            (ScheduleKind::FbpAs, ExecMode::Async),
+            (ScheduleKind::OneFOneBSno, ExecMode::Sync),
+            (ScheduleKind::OneFOneBSo, ExecMode::Sync),
+            (ScheduleKind::GPipe, ExecMode::Sync),
+            (ScheduleKind::PipeDream, ExecMode::Sync),
+        ] {
+            let spec = SimSpec::uniform(kind, 4, 6, 1.0, 2.0, 0.3, exec);
+            let r = simulate_full(&spec);
+            for w in r.events.windows(2) {
+                assert!(
+                    (w[0].stage, w[0].start) <= (w[1].stage, w[1].start),
+                    "{kind:?}: events out of (stage, time) order: {:?} then {:?}",
+                    w[0],
+                    w[1]
+                );
+            }
+            assert_eq!(r.events, simulate_reference(&spec).events, "{kind:?}");
+        }
+    }
+
+    #[test]
+    fn fast_full_and_reference_agree_bit_exactly_property() {
+        // The SoA ready-list core — trace-free and trace-producing — must
+        // agree with the seed polling oracle *bit-exactly* on makespan,
+        // bubble_fraction and peak_in_flight, across every ScheduleKind
+        // and mixed Sync/Async exec modes. The arena is reused across all
+        // cases, so buffer re-initialization is exercised too.
+        use crate::util::prop::{check, ensure, Config};
+        use crate::util::rng::Rng;
+        let kinds = ScheduleKind::all();
+        let mut arena = SimArena::new();
+        check(
+            &Config { cases: 150, seed: 0x50_AFA57, max_size: 28 },
+            |g| {
+                let n = g.usize_in(1, 7);
+                let m = g.usize_in(1, 28);
+                let kind = kinds[g.usize_in(0, kinds.len())];
+                let mut spec = SimSpec::uniform(kind, n, m, 1.0, 1.0, 0.0, ExecMode::Sync);
+                let seed = g.usize_in(0, 1 << 30) as u64;
+                let mut r = Rng::new(seed);
+                for i in 0..n {
+                    spec.fwd[i] = 0.01 + r.f64() * 2.0;
+                    spec.bwd[i] = 0.01 + r.f64() * 3.0;
+                    spec.update[i] = if r.f64() < 0.5 { 0.0 } else { r.f64() * 0.3 };
+                    // per-stage mixed exec: the transfer rules are
+                    // per-producer, independent of the schedule kind
+                    spec.exec[i] =
+                        if r.f64() < 0.5 { ExecMode::Sync } else { ExecMode::Async };
+                }
+                for i in 0..n.saturating_sub(1) {
+                    spec.fwd_xfer[i] = r.f64() * 1.2;
+                    spec.bwd_xfer[i] = r.f64() * 1.2;
+                }
+                spec
+            },
+            |spec| {
+                let reference = simulate_reference(spec);
+                let full = simulate_full(spec);
+                let fast = simulate_fast(spec, &mut arena);
+                ensure(
+                    fast.makespan == reference.makespan,
+                    format!("fast makespan {} != ref {}", fast.makespan, reference.makespan),
+                )?;
+                ensure(
+                    fast.bubble_fraction == reference.bubble_fraction,
+                    format!(
+                        "fast bubble {} != ref {}",
+                        fast.bubble_fraction, reference.bubble_fraction
+                    ),
+                )?;
+                ensure(
+                    arena.peak_in_flight() == &reference.peak_in_flight[..],
+                    format!(
+                        "fast peaks {:?} != ref {:?}",
+                        arena.peak_in_flight(),
+                        reference.peak_in_flight
+                    ),
+                )?;
+                ensure(
+                    full.makespan == reference.makespan
+                        && full.bubble_fraction == reference.bubble_fraction
+                        && full.peak_in_flight == reference.peak_in_flight,
+                    "full aggregates differ from reference".to_string(),
+                )?;
+                ensure(full.events == reference.events, "traces differ".to_string())
+            },
+        );
+    }
+
+    #[test]
+    fn arena_reuse_across_shapes_is_clean() {
+        // big → small → big: state from a previous run must not leak.
+        let mut arena = SimArena::new();
+        let big =
+            SimSpec::uniform(ScheduleKind::OneFOneBSo, 6, 32, 1.0, 2.0, 0.1, ExecMode::Sync);
+        let small = SimSpec::uniform(ScheduleKind::GPipe, 2, 3, 1.0, 1.0, 0.2, ExecMode::Sync);
+        let b1 = simulate_fast(&big, &mut arena);
+        let s = simulate_fast(&small, &mut arena);
+        let s_full = simulate_full(&small);
+        assert_eq!(s.makespan, s_full.makespan);
+        assert_eq!(arena.peak_in_flight(), &s_full.peak_in_flight[..]);
+        let b2 = simulate_fast(&big, &mut arena);
+        assert_eq!(b1, b2);
     }
 }

@@ -9,4 +9,4 @@ pub mod dp;
 pub mod engine;
 pub mod timeline;
 
-pub use engine::{simulate, SimResult, SimSpec};
+pub use engine::{simulate, simulate_fast, simulate_full, FastResult, SimArena, SimResult, SimSpec};

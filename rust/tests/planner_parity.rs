@@ -6,7 +6,11 @@
 //!   preset scenarios);
 //! * the parallel evaluator is *deterministic* — `jobs = 1` and
 //!   `jobs = 8` select identical plans (property-tested over random
-//!   scenarios via `util::prop`);
+//!   scenarios via `util::prop`), with *both* phases parallel: the
+//!   phase-A balance-seed/fine-tune fan-out (including device-order
+//!   permutations) and the phase-B DES fan-out, at 64-stage scale;
+//! * adaptive M refinement never selects a worse plan than the fixed
+//!   grid (zoo models);
 //! * `plan.json` artifacts round-trip losslessly;
 //! * device-order permutation search only ever improves a heterogeneous
 //!   plan.
@@ -136,9 +140,128 @@ fn parallel_jobs_select_identical_plans_property() {
             )?;
             ensure(
                 serial.report.cache_hits == parallel.report.cache_hits,
-                "phase A is sequential; cache hits must match".to_string(),
+                "phase A's prewarm is deterministic; cache hits must match".to_string(),
             )
         },
+    );
+}
+
+#[test]
+fn parallel_phase_a_parity_with_permutations() {
+    // Phase A (balance-seed DP + memory fine-tune) fans out over --jobs
+    // too; device-order permutations multiply its work list. Everything
+    // observable must be independent of the job count — including the
+    // cache statistics (the prewarm work lists are in first-appearance
+    // order) and the per-candidate feasibility outcomes.
+    let net = zoo::vgg16(224);
+    let cl = presets::fpga_cluster(&["VCU129", "VCU129", "VCU118", "VCU118"]);
+    let prof = analytical::profile(&net, &cl);
+    let base = Options { consider_dp: false, permute_devices: true, ..opts(4.0) };
+    let serial = planner::explore(&net, &cl, &prof, &Options { jobs: 1, ..base.clone() });
+    let parallel = planner::explore(&net, &cl, &prof, &Options { jobs: 8, ..base });
+    assert_eq!(serial.choice, parallel.choice);
+    assert_eq!(serial.epoch_time, parallel.epoch_time);
+    assert_eq!(serial.minibatch_time, parallel.minibatch_time);
+    assert_eq!(serial.device_order, parallel.device_order);
+    assert_eq!(serial.report.cache_hits, parallel.report.cache_hits);
+    // permutation search actually widened phase A (6 distinct orderings)
+    assert!(serial.report.evaluations.iter().any(|e| e.candidate.perm > 0));
+    // phase-A outcomes (infeasibility) are decided before the DES race
+    // and must match candidate-for-candidate
+    assert_eq!(serial.report.evaluations.len(), parallel.report.evaluations.len());
+    for (a, b) in serial.report.evaluations.iter().zip(&parallel.report.evaluations) {
+        assert_eq!(a.candidate, b.candidate);
+        assert_eq!(
+            matches!(a.outcome, Outcome::Infeasible { .. }),
+            matches!(b.outcome, Outcome::Infeasible { .. }),
+            "feasibility flipped for {:?} M={}",
+            a.candidate.kind,
+            a.candidate.m
+        );
+    }
+}
+
+#[test]
+fn sixty_four_stage_stress_parity() {
+    // The ROADMAP "Scale" scenario: a 64-stage synthetic cluster at
+    // M=512 (a debug-build-sized slice of `benches/planner_scale.rs`:
+    // 70-layer GNMT-L, three M values). Phase A runs one O(N·C²) DP per
+    // distinct micro; phase B runs ~65k-op DES traces. jobs=1 and jobs=8
+    // must select identical plans (--permute included: on a homogeneous
+    // chain it degenerates to the identity ordering, recorded in the
+    // notes).
+    let net = zoo::by_name("gnmt-l64").unwrap();
+    let cl = presets::v100_cluster(64);
+    let prof = analytical::profile(&net, &cl);
+    let base = Options {
+        batch_per_device: 8.0, // global mini-batch 512
+        samples_per_epoch: 4096,
+        m_candidates: vec![64, 256, 512],
+        consider_dp: false,
+        permute_devices: true,
+        ..Default::default()
+    };
+    let serial = planner::explore(&net, &cl, &prof, &Options { jobs: 1, ..base.clone() });
+    let parallel = planner::explore(&net, &cl, &prof, &Options { jobs: 8, ..base });
+    assert_eq!(serial.choice, parallel.choice, "64-stage plans diverged across job counts");
+    assert_eq!(serial.epoch_time, parallel.epoch_time);
+    assert_eq!(serial.report.cache_hits, parallel.report.cache_hits);
+    assert!(
+        serial.report.evaluations.iter().any(|e| e.candidate.m == 512),
+        "M=512 candidates must be enumerated"
+    );
+    assert!(
+        serial.report.notes.iter().any(|n| n.contains("SKIPPED") || n.contains("identity")),
+        "homogeneous permutation request must be noted: {:?}",
+        serial.report.notes
+    );
+}
+
+#[test]
+fn adaptive_m_never_worse_than_fixed_grid_on_zoo_models() {
+    for (model, n, batch) in
+        [("vgg16", 4usize, 32.0), ("resnet50", 4, 32.0), ("alexnet", 2, 16.0), ("gnmt8", 4, 16.0)]
+    {
+        let net = zoo::by_name(model).unwrap();
+        let cl = presets::v100_cluster(n);
+        let prof = analytical::profile(&net, &cl);
+        let base = Options { consider_dp: false, ..opts(batch) };
+        let fixed = planner::explore(&net, &cl, &prof, &base);
+        let adaptive =
+            planner::explore(&net, &cl, &prof, &Options { adaptive_m: true, ..base });
+        assert!(
+            adaptive.epoch_time <= fixed.epoch_time,
+            "{model} on {n} V100: adaptive {} worse than fixed {}",
+            adaptive.epoch_time,
+            fixed.epoch_time
+        );
+    }
+
+    // A non-power-of-two global mini-batch (4 × 12 = 48) over a sparse
+    // grid gives the bisection real work: divisors 3, 4, 6, 12, 16, 24
+    // sit untried between the grid points.
+    let net = zoo::by_name("vgg16").unwrap();
+    let cl = presets::v100_cluster(4);
+    let prof = analytical::profile(&net, &cl);
+    let base = Options {
+        batch_per_device: 12.0,
+        samples_per_epoch: 8192,
+        m_candidates: vec![2, 8, 48],
+        consider_dp: false,
+        ..Default::default()
+    };
+    let fixed = planner::explore(&net, &cl, &prof, &base);
+    let adaptive =
+        planner::explore(&net, &cl, &prof, &Options { adaptive_m: true, ..base });
+    assert!(adaptive.epoch_time <= fixed.epoch_time);
+    assert!(
+        adaptive.report.evaluations.len() > fixed.report.evaluations.len(),
+        "bisection should add candidates between the sparse grid points"
+    );
+    assert!(
+        adaptive.report.notes.iter().any(|n| n.contains("adaptive-M")),
+        "refinement rounds must be recorded in the notes: {:?}",
+        adaptive.report.notes
     );
 }
 
