@@ -8,7 +8,7 @@ use bapipe::collective::ring::{make_ring, ring_allreduce};
 use bapipe::model::zoo;
 use bapipe::planner::{self, Options};
 use bapipe::partition::interlayer;
-use bapipe::profile::analytical;
+use bapipe::profile::{analytical, RangeCost};
 use bapipe::schedule::ScheduleKind;
 use bapipe::sim::engine::{simulate, simulate_fast, SimArena, SimSpec};
 use bapipe::util::benchkit::bench;
@@ -36,14 +36,30 @@ fn main() {
         std::hint::black_box(simulate_fast(&spec_fbp, &mut arena).makespan);
     });
 
-    // Partitioner: DP-optimal over ResNet-50's 52 layers, 8 stages.
+    // Partitioner: DP-optimal over ResNet-50's 52 layers, 8 stages —
+    // the dp_partition trajectory: the seed's O(N·C²·L) reference loop,
+    // then the prefix + monotone path `dp_optimal` now runs (table-build
+    // included, then amortized over a shared RangeCost as the planner
+    // does). 64-stage numbers land in BENCH_planner.json
+    // (benches/planner_scale.rs).
     let net = zoo::resnet50(224);
     let cl = presets::v100_cluster(8);
     let prof = analytical::profile(&net, &cl);
     let cuts = net.legal_cuts();
+    bench("partition/dp-reference resnet50 n=8", 3, 20, || {
+        std::hint::black_box(
+            interlayer::dp_optimal_reference(&prof, &cl, &cuts, 4.0, None).unwrap(),
+        );
+    });
     bench("partition/dp-optimal resnet50 n=8", 3, 20, || {
         std::hint::black_box(
             interlayer::dp_optimal(&prof, &cl, &cuts, 4.0, None).unwrap(),
+        );
+    });
+    let rc = RangeCost::build(&prof);
+    bench("partition/dp-optimal(shared tables) resnet50 n=8", 3, 20, || {
+        std::hint::black_box(
+            interlayer::dp_optimal_rc(&rc, &cl, &cuts, 4.0, None).unwrap(),
         );
     });
 

@@ -30,13 +30,19 @@
 //! // 1. Describe the workload and the cluster.
 //! let net = model::zoo::vgg16(224);
 //! let cl = cluster::presets::v100_cluster(4);
-//! // 2. Profile analytically (or measure real stage executables).
+//! // 2. Profile analytically (or measure real stage executables). The
+//! //    partition hot path runs on `profile::RangeCost` prefix tables —
+//! //    O(1) per layer-range cost probe, one table set per cluster view
+//! //    shared across every micro-batch size.
 //! let prof = profile::analytical::profile(&net, &cl);
 //! // 3. Let BaPipe explore schedule x partition x micro-batching —
+//! //    prefix-table + monotone-crossing partition DPs (O(N·C·log C)
+//! //    against `dp_optimal_reference`, the retained seed oracle),
 //! //    pruned by analytical lower bounds, phases A (partition DPs) and
 //! //    B (trace-free SoA DES over per-worker arenas) both fanned out
 //! //    over 4 worker threads, with adaptive M bisection around the
-//! //    incumbent.
+//! //    incumbent. `planner::store` persists the partition cache across
+//! //    invocations (`bapipe explore --plan-cache`).
 //! let opts = planner::Options { jobs: 4, adaptive_m: true, ..Default::default() };
 //! let plan = planner::explore(&net, &cl, &prof, &opts);
 //! println!("{}", plan.summary());

@@ -4,7 +4,10 @@
 //!   explore   — run the Fig.-3 auto-exploration on a zoo model + cluster
 //!               (--jobs N parallel phases A+B, --emit plan.json artifact,
 //!               --permute device-order search, --no-prune exhaustive,
-//!               --adaptive-m incumbent-bisection M refinement)
+//!               --adaptive-m incumbent-bisection M refinement,
+//!               --plan-cache path: persist/restore the partition cache
+//!               keyed on a (model, cluster) fingerprint so repeated
+//!               invocations skip phase A entirely)
 //!   plan      — plan.json artifact tooling: `plan diff <a> <b>` compares
 //!               winner, time deltas and stage-boundary moves
 //!   partition — show the balanced partition for a model/cluster
@@ -64,7 +67,31 @@ fn main() -> bapipe::Result<()> {
                 adaptive_m: args.has_flag("adaptive-m"),
                 ..Default::default()
             };
-            let plan = planner::explore(&net, &cl, &prof, &opts);
+            let plan = match args.opt_str("plan-cache") {
+                Some(path) => {
+                    // Cross-scenario cache: restore the seed/plan maps when
+                    // the (model, cluster) fingerprint and device-order
+                    // space match, persist the (possibly grown) cache after.
+                    let fp = planner::store::fingerprint(&net, &cl, &prof);
+                    let space = planner::SearchSpace::bapipe(&cl, &opts);
+                    let mut cache = match planner::store::load(path, &fp, &space.device_orders)
+                    {
+                        planner::store::CacheLoad::Loaded(cache) => {
+                            println!("plan cache: restored {path} (fingerprint {fp})");
+                            cache
+                        }
+                        planner::store::CacheLoad::Fresh(reason) => {
+                            println!("plan cache: {reason}; computing from scratch");
+                            planner::EvalCache::new()
+                        }
+                    };
+                    let plan = planner::explore_with_cache(&net, &cl, &prof, &opts, &mut cache);
+                    planner::store::save(path, &cache, &fp, &space.device_orders)?;
+                    println!("plan cache: saved {path}");
+                    plan
+                }
+                None => planner::explore(&net, &cl, &prof, &opts),
+            };
             println!("== exploration log ==");
             for l in plan.report.log_lines() {
                 println!("  {l}");
@@ -215,6 +242,8 @@ fn main() -> bapipe::Result<()> {
                    bapipe explore --model vgg16 --cluster v100 --n 4 --batch 32\n\
                    bapipe explore --model resnet50 --cluster fpga-mixed --n 4 --batch 4 \\\n\
                        --jobs 8 --permute --adaptive-m --emit plan.json\n\
+                   bapipe explore --model gnmt-l128 --cluster v100 --n 64 \\\n\
+                       --plan-cache plan-cache.json   # 2nd run skips phase A\n\
                    bapipe plan diff old-plan.json new-plan.json\n\
                    bapipe simulate --schedule 1f1b-so --n 3 --m 8\n\
                    bapipe train --artifacts artifacts/lm10m-s4-b4 --schedule 1f1b --m 8 --steps 50\n\

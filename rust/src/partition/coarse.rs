@@ -3,19 +3,19 @@
 //! cuts to edges whose activation size is below the threshold `a_th`, so
 //! the coarse network "no longer suffers from a communication bottleneck".
 
-use crate::profile::Profile;
+use crate::profile::range::CostModel;
 
 /// Filter `cuts` down to edges whose per-sample activation bytes are at
 /// most `a_th` bytes.
-pub fn allowed_cuts(profile: &Profile, cuts: &[usize], a_th: f64) -> Vec<usize> {
-    cuts.iter().copied().filter(|&c| (profile.cut_bytes(c) as f64) <= a_th).collect()
+pub fn allowed_cuts<C: CostModel>(costs: &C, cuts: &[usize], a_th: f64) -> Vec<usize> {
+    cuts.iter().copied().filter(|&c| (costs.cut_bytes(c) as f64) <= a_th).collect()
 }
 
 /// The smallest `a_th` that still leaves at least `need` cut points —
 /// used when the ideal threshold is infeasible and we must trade some
 /// communication overlap for feasibility.
-pub fn relax_threshold(profile: &Profile, cuts: &[usize], need: usize) -> Option<f64> {
-    let mut sizes: Vec<f64> = cuts.iter().map(|&c| profile.cut_bytes(c) as f64).collect();
+pub fn relax_threshold<C: CostModel>(costs: &C, cuts: &[usize], need: usize) -> Option<f64> {
+    let mut sizes: Vec<f64> = cuts.iter().map(|&c| costs.cut_bytes(c) as f64).collect();
     if sizes.len() < need {
         return None;
     }

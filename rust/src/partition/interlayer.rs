@@ -9,36 +9,55 @@
 //! * [`dp_optimal`] — exact min-max-stage-cost dynamic program over legal
 //!   cuts (the PipeDream-style DP, extended with per-device times for
 //!   heterogeneous clusters and an optional per-cut communication cost).
+//!
+//! The DP runs on [`RangeCost`] prefix tables (O(1) per range probe —
+//! PipeDream's prefix-sum trick) and, when the previous DP row is
+//! non-decreasing over the probe domain, replaces the inner `i` scan with
+//! an `O(log C)` crossing search (the monotonicity structure DAPPLE's
+//! planner exploits): `cost(d, i, j)` is non-increasing in `i` while
+//! `dp[d-1][i]` is non-decreasing, so the min-of-max sits at their
+//! crossing. Row monotonicity holds for homogeneous device rows without
+//! per-cut costs but can fail on heterogeneous clusters or j-dependent
+//! cut costs, so it is *checked on the computed values* and failing rows
+//! fall back to the exact linear scan — still O(1) per probe. Overall:
+//! `O(N·C·log C)` typical, `O(N·C²)` worst case, vs the seed's
+//! `O(N·C²·L)`.
+//!
+//! The seed's triple loop is retained verbatim as
+//! [`dp_optimal_reference`], the bit-exactness oracle and perf baseline
+//! (the same pattern as `sim::engine::simulate_reference`).
 
 use super::Partition;
 use crate::cluster::Cluster;
+use crate::profile::range::{CostModel, RangeCost};
 use crate::profile::Profile;
 
-/// Eq. 1: ideal per-stage time given whole-network times per device.
-pub fn eq1_ideal_time(profile: &Profile) -> f64 {
-    let inv_sum: f64 = (0..profile.n_devices()).map(|d| 1.0 / profile.whole_net_time(d)).sum();
-    1.0 / inv_sum
+/// Eq. 1: ideal per-stage time given whole-network times per device. On a
+/// [`RangeCost`] the per-device whole-network times are precomputed at
+/// build, so this is O(N) (the `Profile` path re-sums every layer).
+pub fn eq1_ideal_time<C: CostModel>(costs: &C) -> f64 {
+    costs.eq1_ideal_time()
 }
 
 /// Per-layer (fwd+bwd) time on device `d` at micro-batch `micro`.
-fn layer_time(profile: &Profile, d: usize, l: usize, micro: f64) -> f64 {
-    profile.fwd_time(d, l, l + 1, micro) + profile.bwd_time(d, l, l + 1, micro)
+fn layer_time<C: CostModel>(costs: &C, d: usize, l: usize, micro: f64) -> f64 {
+    costs.fwd_time(d, l, l + 1, micro) + costs.bwd_time(d, l, l + 1, micro)
 }
 
 /// Greedy seed: walk the layers, assigning to device `d` until its stage
 /// time reaches the Eq.-1 share, cutting at the nearest legal cut.
-pub fn seed_partition(
-    profile: &Profile,
+pub fn seed_partition<C: CostModel>(
+    costs: &C,
     cluster: &Cluster,
     cuts: &[usize],
     micro: f64,
 ) -> crate::Result<Partition> {
     let n = cluster.len();
-    let l_total = profile.n_layers();
+    let l_total = costs.n_layers();
     if n == 1 {
         return Ok(Partition::new(vec![0, l_total], l_total));
     }
-    let t_ideal = eq1_ideal_time(profile) * micro;
+    let t_ideal = eq1_ideal_time(costs) * micro;
     let mut bounds = vec![0usize];
     let mut lo = 0usize;
     for d in 0..n - 1 {
@@ -46,7 +65,7 @@ pub fn seed_partition(
         let mut acc = 0.0;
         let mut l = lo;
         while l < l_total && acc < t_ideal {
-            acc += layer_time(profile, d, l, micro);
+            acc += layer_time(costs, d, l, micro);
             l += 1;
         }
         // snap: nearest legal cut boundary b (cut after layer c means bound c+1)
@@ -92,8 +111,8 @@ fn snap_to_cut(
 }
 
 /// Max per-stage (F+B) time of a partition.
-pub fn max_stage_time(
-    profile: &Profile,
+pub fn max_stage_time<C: CostModel>(
+    costs: &C,
     part: &Partition,
     micro: f64,
     comm: Option<&dyn Fn(usize) -> f64>,
@@ -101,8 +120,8 @@ pub fn max_stage_time(
     (0..part.n_stages())
         .map(|i| {
             let r = part.stage(i);
-            let t = profile.fwd_time(i, r.start, r.end, micro)
-                + profile.bwd_time(i, r.start, r.end, micro);
+            let t = costs.fwd_time(i, r.start, r.end, micro)
+                + costs.bwd_time(i, r.start, r.end, micro);
             let c = comm.map(|f| if i + 1 < part.n_stages() { f(i) } else { 0.0 }).unwrap_or(0.0);
             t + c
         })
@@ -111,15 +130,15 @@ pub fn max_stage_time(
 
 /// Iterative refinement: move stage boundaries to adjacent legal cuts
 /// while the max stage time decreases.
-pub fn refine(
-    profile: &Profile,
+pub fn refine<C: CostModel>(
+    costs: &C,
     part: Partition,
     cuts: &[usize],
     micro: f64,
 ) -> Partition {
     let legal: std::collections::BTreeSet<usize> = cuts.iter().map(|&c| c + 1).collect();
     let mut best = part;
-    let mut best_t = max_stage_time(profile, &best, micro, None);
+    let mut best_t = max_stage_time(costs, &best, micro, None);
     loop {
         let mut improved = false;
         for bi in 1..best.bounds.len() - 1 {
@@ -138,7 +157,7 @@ pub fn refine(
                 let mut b2 = best.bounds.clone();
                 b2[bi] = nb;
                 let cand_part = Partition::new(b2, *best.bounds.last().unwrap());
-                let t = max_stage_time(profile, &cand_part, micro, None);
+                let t = max_stage_time(costs, &cand_part, micro, None);
                 if t < best_t - 1e-15 {
                     best = cand_part;
                     best_t = t;
@@ -152,8 +171,41 @@ pub fn refine(
     }
 }
 
+/// Candidate boundaries of the DP: 0, each cut+1 inside `(0, L)`, L.
+/// `cuts` are assumed ascending (as `Network::legal_cuts` produces).
+fn breakpoints(cuts: &[usize], l_total: usize) -> Vec<usize> {
+    let mut bpts: Vec<usize> = std::iter::once(0)
+        .chain(cuts.iter().map(|&c| c + 1).filter(|&b| b > 0 && b < l_total))
+        .chain(std::iter::once(l_total))
+        .collect();
+    bpts.dedup();
+    bpts
+}
+
+/// Walk the back-pointer table into a [`Partition`].
+fn reconstruct(
+    back: &[Vec<usize>],
+    bpts: &[usize],
+    n: usize,
+    k: usize,
+    l_total: usize,
+) -> Partition {
+    let mut bounds = vec![l_total];
+    let mut j = k - 1;
+    for d in (0..n).rev() {
+        let i = back[d][j];
+        bounds.push(bpts[i]);
+        j = i;
+    }
+    bounds.reverse();
+    Partition::new(bounds, l_total)
+}
+
 /// Exact DP over legal cuts minimizing the maximum per-stage cost, with an
-/// optional extra cost per cut (communication). `O(N · C²)` for C cuts.
+/// optional extra cost per cut (communication). Builds the prefix tables
+/// once and runs the prefix + monotone path (`O(N·C·log C)` typical —
+/// see the module docs); callers already holding a [`RangeCost`] should
+/// use [`dp_optimal_rc`] to share the tables across calls.
 pub fn dp_optimal(
     profile: &Profile,
     cluster: &Cluster,
@@ -161,25 +213,61 @@ pub fn dp_optimal(
     micro: f64,
     cut_cost: Option<&dyn Fn(usize, usize) -> f64>, // (stage, cut_layer) -> secs
 ) -> crate::Result<Partition> {
+    let rc = RangeCost::build(profile);
+    dp_optimal_rc(&rc, cluster, cuts, micro, cut_cost)
+}
+
+/// [`dp_optimal`] against caller-owned prefix tables: the planner builds
+/// one [`RangeCost`] per permuted cluster view and threads it through
+/// every balance-seed DP of the micro grid.
+pub fn dp_optimal_rc(
+    rc: &RangeCost,
+    cluster: &Cluster,
+    cuts: &[usize],
+    micro: f64,
+    cut_cost: Option<&dyn Fn(usize, usize) -> f64>,
+) -> crate::Result<Partition> {
+    dp_fast(rc, cluster, cuts, micro, cut_cost, true)
+}
+
+/// The prefix-table DP with the monotone crossing search disabled: the
+/// seed's exact triple loop at O(1) per probe (`O(N·C²)`). Kept public so
+/// the benches can report the seed → prefix → monotone trajectory and the
+/// parity tests can pin all three to identical partitions.
+pub fn dp_optimal_prefix(
+    rc: &RangeCost,
+    cluster: &Cluster,
+    cuts: &[usize],
+    micro: f64,
+    cut_cost: Option<&dyn Fn(usize, usize) -> f64>,
+) -> crate::Result<Partition> {
+    dp_fast(rc, cluster, cuts, micro, cut_cost, false)
+}
+
+/// The seed implementation, retained verbatim as the bit-exactness oracle
+/// and perf baseline: the `O(N·C²)`-probe triple loop whose cost closure
+/// re-sums the layer slice on every probe (`O(N·C²·L)` total when called
+/// with a `Profile`).
+pub fn dp_optimal_reference<C: CostModel>(
+    costs: &C,
+    cluster: &Cluster,
+    cuts: &[usize],
+    micro: f64,
+    cut_cost: Option<&dyn Fn(usize, usize) -> f64>,
+) -> crate::Result<Partition> {
     let n = cluster.len();
-    let l_total = profile.n_layers();
+    let l_total = costs.n_layers();
     if n == 1 {
         return Ok(Partition::new(vec![0, l_total], l_total));
     }
-    // candidate boundaries: 0, each cut+1, L
-    let mut bpts: Vec<usize> = std::iter::once(0)
-        .chain(cuts.iter().map(|&c| c + 1).filter(|&b| b > 0 && b < l_total))
-        .chain(std::iter::once(l_total))
-        .collect();
-    bpts.dedup();
+    let bpts = breakpoints(cuts, l_total);
     let k = bpts.len();
     anyhow::ensure!(k >= n + 1, "not enough cut points ({}) for {} stages", k - 2, n);
 
     // stage cost of device d covering bpts[a]..bpts[b]
     let cost = |d: usize, a: usize, b: usize| -> f64 {
         let (lo, hi) = (bpts[a], bpts[b]);
-        let mut t =
-            profile.fwd_time(d, lo, hi, micro) + profile.bwd_time(d, lo, hi, micro);
+        let mut t = costs.fwd_time(d, lo, hi, micro) + costs.bwd_time(d, lo, hi, micro);
         if d + 1 < n {
             if let Some(cc) = cut_cost {
                 t += cc(d, hi - 1);
@@ -211,16 +299,146 @@ pub fn dp_optimal(
         }
     }
     anyhow::ensure!(dp[n - 1][k - 1] < INF, "DP found no feasible partition");
-    // reconstruct
-    let mut bounds = vec![l_total];
-    let mut j = k - 1;
-    for d in (0..n).rev() {
-        let i = back[d][j];
-        bounds.push(bpts[i]);
-        j = i;
+    Ok(reconstruct(&back, &bpts, n, k, l_total))
+}
+
+/// The reference linear scan over one `(d, j)` cell: smallest argmin of
+/// `max(prev[i], cost(d, i, j))` over `i ∈ [d, j)`.
+fn argmin_scan(
+    prev: &[f64],
+    cost: &impl Fn(usize, usize, usize) -> f64,
+    d: usize,
+    j: usize,
+) -> (usize, f64) {
+    let mut best = f64::INFINITY;
+    let mut bi = usize::MAX;
+    for i in d..j {
+        let c = prev[i].max(cost(d, i, j));
+        if c < best {
+            best = c;
+            bi = i;
+        }
     }
-    bounds.reverse();
-    Ok(Partition::new(bounds, l_total))
+    (bi, best)
+}
+
+/// The O(log C) crossing search over one `(d, j)` cell. Sound only when
+/// `prev` is non-decreasing over `[d, j)` (checked by the caller):
+/// `cost(d, ·, j)` is non-increasing in `i` (prefix differences of
+/// non-negative per-layer costs — monotone in FP, not just in exact
+/// arithmetic), so `max(prev[i], cost)` falls until the crossing and
+/// rises after it, and the minimum sits at the crossing index `i*` or at
+/// `i* − 1`. Ties resolve to the smallest index (extended leftward across
+/// exact-value plateaus) so the selected back-pointer matches the linear
+/// scan's first-minimum rule bit-for-bit.
+fn argmin_crossing(
+    prev: &[f64],
+    cost: &impl Fn(usize, usize, usize) -> f64,
+    d: usize,
+    j: usize,
+) -> (usize, f64) {
+    // Smallest i in [d, j) with prev[i] >= cost(d, i, j); `j` = no crossing.
+    let (mut lo, mut hi) = (d, j);
+    while lo < hi {
+        let mid = lo + (hi - lo) / 2;
+        if prev[mid] >= cost(d, mid, j) {
+            hi = mid;
+        } else {
+            lo = mid + 1;
+        }
+    }
+    let istar = lo;
+    let mut bi = usize::MAX;
+    let mut best = f64::INFINITY;
+    if istar < j {
+        bi = istar;
+        best = prev[istar].max(cost(d, istar, j));
+    }
+    if istar > d {
+        let i = istar - 1;
+        let v = prev[i].max(cost(d, i, j));
+        if v <= best {
+            // ties go to the smaller index, like the linear scan
+            bi = i;
+            best = v;
+        }
+    }
+    while bi > d && prev[bi - 1].max(cost(d, bi - 1, j)) == best {
+        bi -= 1;
+    }
+    (bi, best)
+}
+
+/// The prefix-table DP (shared body of [`dp_optimal_rc`] and
+/// [`dp_optimal_prefix`]). Rolls the DP table two rows at a time; per
+/// row, the previous row is checked for monotonicity over the probe
+/// domain and the inner loop picks the crossing search or the exact scan
+/// accordingly.
+fn dp_fast(
+    rc: &RangeCost,
+    cluster: &Cluster,
+    cuts: &[usize],
+    micro: f64,
+    cut_cost: Option<&dyn Fn(usize, usize) -> f64>,
+    monotone: bool,
+) -> crate::Result<Partition> {
+    let n = cluster.len();
+    let l_total = rc.n_layers();
+    if n == 1 {
+        return Ok(Partition::new(vec![0, l_total], l_total));
+    }
+    let bpts = breakpoints(cuts, l_total);
+    let k = bpts.len();
+    anyhow::ensure!(k >= n + 1, "not enough cut points ({}) for {} stages", k - 2, n);
+
+    // stage cost of device d covering bpts[a]..bpts[b] — O(1) per probe
+    let cost = |d: usize, a: usize, b: usize| -> f64 {
+        let (lo, hi) = (bpts[a], bpts[b]);
+        let mut t = rc.fwd_time(d, lo, hi, micro) + rc.bwd_time(d, lo, hi, micro);
+        if d + 1 < n {
+            if let Some(cc) = cut_cost {
+                t += cc(d, hi - 1);
+            }
+        }
+        t
+    };
+
+    // The crossing search additionally needs cost(d, ·, j) non-increasing
+    // in i, which holds exactly when every prefix addend was non-negative
+    // at table build (always true for analytical profiles; a pathological
+    // caller-built profile clears the flag and keeps the exact scan).
+    let monotone = monotone && rc.costs_monotone();
+
+    const INF: f64 = f64::INFINITY;
+    let mut back = vec![vec![usize::MAX; k]; n];
+    let mut prev = vec![INF; k];
+    for j in 1..k {
+        prev[j] = cost(0, 0, j);
+        back[0][j] = 0;
+    }
+    let mut cur = vec![INF; k];
+    for d in 1..n {
+        cur.fill(INF);
+        // Probe domain of row d: i ∈ [d, k-2]. Homogeneous device rows
+        // without per-cut costs are provably non-decreasing (shrinking
+        // the covered span cannot raise the optimal bottleneck);
+        // heterogeneous rows or j-dependent cut costs can break this, so
+        // the check runs on the actual values and a failing row keeps the
+        // exact scan.
+        let row_monotone = monotone && (d..k - 2).all(|i| prev[i] <= prev[i + 1]);
+        for j in d + 1..k {
+            let (bi, bv) = if row_monotone {
+                argmin_crossing(&prev, &cost, d, j)
+            } else {
+                argmin_scan(&prev, &cost, d, j)
+            };
+            cur[j] = bv;
+            back[d][j] = bi;
+        }
+        std::mem::swap(&mut prev, &mut cur);
+    }
+    anyhow::ensure!(prev[k - 1] < INF, "DP found no feasible partition");
+    Ok(reconstruct(&back, &bpts, n, k, l_total))
 }
 
 #[cfg(test)]
@@ -341,5 +559,104 @@ mod tests {
                 )
             },
         );
+    }
+
+    #[test]
+    fn prefix_and_monotone_match_reference_on_random_heterogeneous() {
+        // Random per-device layer times (independent across devices —
+        // this exercises the non-monotone fallback rows as well as the
+        // crossing search) must yield the exact partition the reference
+        // triple loop selects, for all three implementations.
+        check(
+            &Config { cases: 40, seed: 0xD0_0DC0DE, max_size: 16 },
+            |g| {
+                let l = g.usize_in(4, 14);
+                let n = g.usize_in(2, l.min(5));
+                let times: Vec<Vec<f64>> = (0..n)
+                    .map(|_| (0..l).map(|_| g.f64_in(0.05, 10.0)).collect())
+                    .collect();
+                (l, n, times)
+            },
+            |(l, n, times)| {
+                let net = zoo::mlp(&vec![8u64; l + 1]);
+                let cl = presets::v100_cluster(*n);
+                let mut prof = analytical::profile(&net, &cl);
+                for d in 0..*n {
+                    for (i, t) in times[d].iter().enumerate() {
+                        prof.per_device[d][i].fwd = *t;
+                        prof.per_device[d][i].bwd = 0.7 * *t;
+                        prof.per_device[d][i].half_sat = 0.0;
+                    }
+                }
+                let cuts = net.legal_cuts();
+                let rc = RangeCost::build(&prof);
+                let reference = dp_optimal_reference(&prof, &cl, &cuts, 2.0, None).unwrap();
+                let prefix = dp_optimal_prefix(&rc, &cl, &cuts, 2.0, None).unwrap();
+                let fast = dp_optimal_rc(&rc, &cl, &cuts, 2.0, None).unwrap();
+                ensure(
+                    prefix.bounds == reference.bounds,
+                    format!("prefix {:?} != reference {:?}", prefix.bounds, reference.bounds),
+                )?;
+                ensure(
+                    fast.bounds == reference.bounds,
+                    format!("monotone {:?} != reference {:?}", fast.bounds, reference.bounds),
+                )
+            },
+        );
+    }
+
+    #[test]
+    fn negative_cost_profile_disables_crossing_search() {
+        // A pathological profile (e.g. a noisy measured fit producing a
+        // negative fixed cost) breaks the cost-side monotonicity the
+        // crossing search needs; RangeCost records that at build and the
+        // DP must keep the exact scan — still matching the oracle loop.
+        let net = zoo::mlp(&[16u64; 7]); // 6 linear layers
+        let cl = presets::v100_cluster(3);
+        let mut prof = analytical::profile(&net, &cl);
+        assert!(RangeCost::build(&prof).costs_monotone());
+        prof.per_device[1][2].fwd_fixed = -5e-4;
+        let rc = RangeCost::build(&prof);
+        assert!(!rc.costs_monotone());
+        let cuts = net.legal_cuts();
+        let oracle = dp_optimal_reference(&rc, &cl, &cuts, 4.0, None).unwrap();
+        let fast = dp_optimal_rc(&rc, &cl, &cuts, 4.0, None).unwrap();
+        assert_eq!(oracle.bounds, fast.bounds);
+    }
+
+    #[test]
+    fn monotone_dp_handles_cut_costs() {
+        // Per-cut communication costs depend on j (the cut layer), which
+        // breaks row monotonicity in general — the runtime check must
+        // route those rows to the exact scan and still match the oracle
+        // triple loop probe for probe (same prefix tables, so the
+        // partitions are bit-identical by construction of the search).
+        let net = zoo::vgg16(224);
+        let cl = presets::v100_cluster(4);
+        let prof = analytical::profile(&net, &cl);
+        let cuts = net.legal_cuts();
+        let rc = RangeCost::build(&prof);
+        for micro in [1.0, 8.0] {
+            let comm = |stage: usize, cut_layer: usize| -> f64 {
+                let bytes = prof.cut_bytes(cut_layer) as f64 * micro;
+                cl.link(stage).xfer_time(bytes) * 2.0
+            };
+            let oracle = dp_optimal_reference(&rc, &cl, &cuts, micro, Some(&comm)).unwrap();
+            let fast = dp_optimal_rc(&rc, &cl, &cuts, micro, Some(&comm)).unwrap();
+            assert_eq!(oracle.bounds, fast.bounds, "micro {micro}");
+            // and across cost backings the selected partitions are
+            // equally optimal (summation order may break exact ties)
+            let seed = dp_optimal_reference(&prof, &cl, &cuts, micro, Some(&comm)).unwrap();
+            let t_of = |p: &Partition| {
+                let comm_of = |i: usize| comm(i, p.bounds[i + 1] - 1);
+                max_stage_time(&prof, p, micro, Some(&comm_of))
+            };
+            let t_seed = t_of(&seed);
+            let t_fast = t_of(&fast);
+            assert!(
+                (t_seed - t_fast).abs() <= 1e-9 * t_seed.max(t_fast),
+                "micro {micro}: {t_fast} vs {t_seed}"
+            );
+        }
     }
 }

@@ -7,7 +7,7 @@
 
 use super::Partition;
 use crate::cluster::Cluster;
-use crate::profile::Profile;
+use crate::profile::range::CostModel;
 
 /// A fractional partition: stage `i` owns the continuous layer interval
 /// `[x[i], x[i+1])` where layer `l`'s interior corresponds to `[l, l+1)`.
@@ -22,14 +22,20 @@ pub struct FracPartition {
 }
 
 /// Stage time under a fractional boundary vector (per micro-batch).
-fn stage_time_frac(profile: &Profile, d: usize, lo: f64, hi: f64, micro: f64) -> f64 {
-    let (f, b) = frac_fwd_bwd(profile, d, lo, hi, micro);
+fn stage_time_frac<C: CostModel>(costs: &C, d: usize, lo: f64, hi: f64, micro: f64) -> f64 {
+    let (f, b) = frac_fwd_bwd(costs, d, lo, hi, micro);
     f + b
 }
 
 /// (fwd, bwd) time of the fractional interval `[lo, hi)` on device `d`.
-pub fn frac_fwd_bwd(profile: &Profile, d: usize, lo: f64, hi: f64, micro: f64) -> (f64, f64) {
-    let l_total = profile.n_layers();
+pub fn frac_fwd_bwd<C: CostModel>(
+    costs: &C,
+    d: usize,
+    lo: f64,
+    hi: f64,
+    micro: f64,
+) -> (f64, f64) {
+    let l_total = costs.n_layers();
     let mut f = 0.0;
     let mut b = 0.0;
     let mut l = lo.floor() as usize;
@@ -37,8 +43,8 @@ pub fn frac_fwd_bwd(profile: &Profile, d: usize, lo: f64, hi: f64, micro: f64) -
         let seg_lo = lo.max(l as f64);
         let seg_hi = hi.min((l + 1) as f64);
         let frac = (seg_hi - seg_lo).max(0.0);
-        f += profile.fwd_time(d, l, l + 1, micro) * frac;
-        b += profile.bwd_time(d, l, l + 1, micro) * frac;
+        f += costs.fwd_time(d, l, l + 1, micro) * frac;
+        b += costs.bwd_time(d, l, l + 1, micro) * frac;
         l += 1;
     }
     (f, b)
@@ -46,20 +52,20 @@ pub fn frac_fwd_bwd(profile: &Profile, d: usize, lo: f64, hi: f64, micro: f64) -
 
 /// Per-stage (fwd, bwd) costs of a fractional partition — feeds the DES
 /// the same way `partition::stage_costs` does for integral partitions.
-pub fn frac_stage_costs(
-    profile: &Profile,
+pub fn frac_stage_costs<C: CostModel>(
+    costs: &C,
     fp: &FracPartition,
     micro: f64,
 ) -> Vec<(f64, f64)> {
     let n = fp.x.len() - 1;
-    (0..n).map(|d| frac_fwd_bwd(profile, d, fp.x[d], fp.x[d + 1], micro)).collect()
+    (0..n).map(|d| frac_fwd_bwd(costs, d, fp.x[d], fp.x[d + 1], micro)).collect()
 }
 
 /// Imbalance of a boundary vector: `max/min − 1` over stage times.
-fn imbalance(profile: &Profile, x: &[f64], micro: f64) -> f64 {
+fn imbalance<C: CostModel>(costs: &C, x: &[f64], micro: f64) -> f64 {
     let n = x.len() - 1;
     let times: Vec<f64> =
-        (0..n).map(|d| stage_time_frac(profile, d, x[d], x[d + 1], micro)).collect();
+        (0..n).map(|d| stage_time_frac(costs, d, x[d], x[d + 1], micro)).collect();
     let max = times.iter().cloned().fold(0.0, f64::max);
     let min = times.iter().cloned().fold(f64::INFINITY, f64::min);
     if min <= 0.0 {
@@ -72,21 +78,21 @@ fn imbalance(profile: &Profile, x: &[f64], micro: f64) -> f64 {
 /// Refine an integral partition into a balanced fractional one: bisection
 /// on the common stage time `T`, greedily advancing each boundary until
 /// its stage reaches `T`.
-pub fn refine_fractional(
-    profile: &Profile,
+pub fn refine_fractional<C: CostModel>(
+    costs: &C,
     cluster: &Cluster,
     part: &Partition,
     micro: f64,
 ) -> FracPartition {
     let n = cluster.len();
-    let l_total = profile.n_layers() as f64;
+    let l_total = costs.n_layers() as f64;
     let x0: Vec<f64> = part.bounds.iter().map(|&b| b as f64).collect();
-    let before = imbalance(profile, &x0, micro);
+    let before = imbalance(costs, &x0, micro);
 
     // Bisection on T: find T such that consuming T per stage exactly
     // exhausts the layer interval.
     let total_each: Vec<f64> =
-        (0..n).map(|d| stage_time_frac(profile, d, 0.0, l_total, micro)).collect();
+        (0..n).map(|d| stage_time_frac(costs, d, 0.0, l_total, micro)).collect();
     let mut t_lo = 0.0;
     let mut t_hi = total_each.iter().cloned().fold(0.0, f64::max);
     let consumed = |t: f64| -> (f64, Vec<f64>) {
@@ -97,12 +103,12 @@ pub fn refine_fractional(
             let start = pos;
             let mut lo = start;
             let mut hi = l_total;
-            if stage_time_frac(profile, d, start, l_total, micro) <= t {
+            if stage_time_frac(costs, d, start, l_total, micro) <= t {
                 pos = l_total;
             } else {
                 for _ in 0..60 {
                     let mid = 0.5 * (lo + hi);
-                    if stage_time_frac(profile, d, start, mid, micro) < t {
+                    if stage_time_frac(costs, d, start, mid, micro) < t {
                         lo = mid;
                     } else {
                         hi = mid;
@@ -132,7 +138,7 @@ pub fn refine_fractional(
             best_x[i] = best_x[i - 1];
         }
     }
-    let after = imbalance(profile, &best_x, micro);
+    let after = imbalance(costs, &best_x, micro);
     FracPartition { x: best_x, imbalance_before: before, imbalance_after: after.min(before) }
 }
 

@@ -4,7 +4,7 @@
 
 use super::Partition;
 use crate::cluster::Cluster;
-use crate::profile::Profile;
+use crate::profile::range::CostModel;
 use crate::schedule::ScheduleKind;
 
 /// Constants of the memory model (per-device overheads beyond raw tensors).
@@ -47,8 +47,11 @@ impl MemoryModel {
 
 /// Peak memory (bytes) of stage `i` of `n` under schedule `kind` with
 /// micro-batch size `micro` and `m` micro-batches per mini-batch.
-pub fn stage_memory_bytes(
-    profile: &Profile,
+/// Generic over [`CostModel`]: byte-range queries are bit-exact between
+/// `Profile` sums and `RangeCost` prefix differences, so the fine-tune's
+/// decisions are identical for either backing.
+pub fn stage_memory_bytes<C: CostModel>(
+    costs: &C,
     mm: &MemoryModel,
     kind: ScheduleKind,
     n: usize,
@@ -57,31 +60,31 @@ pub fn stage_memory_bytes(
     micro: f64,
     m: usize,
 ) -> u64 {
-    let w = profile.param_bytes(range.start, range.end);
-    let params = w / profile.dtype_bytes;
+    let w = costs.param_bytes(range.start, range.end);
+    let params = w / costs.dtype_bytes();
     // working weights + gradient accumulator + stashed versions
     let weights = (2 + kind.weight_versions(n, i)) as u64 * w;
     let opt = params * mm.optimizer_bytes_per_param;
     let comm = params * mm.comm_bytes_per_param;
     // activation stash: per in-flight micro-batch, everything BP needs
     let stash =
-        kind.stash_depth(n, i, m) as u64 * (profile.stash_bytes(range.start, range.end) as f64 * micro) as u64;
+        kind.stash_depth(n, i, m) as u64 * (costs.stash_bytes(range.start, range.end) as f64 * micro) as u64;
     // boundary I/O buffers (double-buffered in and out)
-    let io = 2 * (profile.stage_in_bytes(range.start) as f64 * micro) as u64
-        + 2 * (profile.cut_bytes(range.end - 1) as f64 * micro) as u64;
+    let io = 2 * (costs.stage_in_bytes(range.start) as f64 * micro) as u64
+        + 2 * (costs.cut_bytes(range.end - 1) as f64 * micro) as u64;
     weights + opt + comm + stash + io
 }
 
 /// Memory of the whole net on one device under data parallelism with
 /// per-device batch `b` (baseline; stores *all* activations of a batch).
-pub fn dp_memory_bytes(profile: &Profile, mm: &MemoryModel, b: f64) -> u64 {
-    let l = profile.n_layers();
-    let w = profile.param_bytes(0, l);
-    let params = w / profile.dtype_bytes;
+pub fn dp_memory_bytes<C: CostModel>(costs: &C, mm: &MemoryModel, b: f64) -> u64 {
+    let l = costs.n_layers();
+    let w = costs.param_bytes(0, l);
+    let params = w / costs.dtype_bytes();
     let weights = 2 * w;
     let opt = params * mm.optimizer_bytes_per_param;
     let comm = params * mm.comm_bytes_per_param;
-    let stash = (profile.stash_bytes(0, l) as f64 * b) as u64;
+    let stash = (costs.stash_bytes(0, l) as f64 * b) as u64;
     weights + opt + comm + stash
 }
 
@@ -97,8 +100,8 @@ pub struct FitResult {
 /// Fine-tune `part` until every stage fits its device (or fail). Boundary
 /// moves stay on legal cuts (`cuts` are layer indices after which cutting
 /// is allowed).
-pub fn fit_memory(
-    profile: &Profile,
+pub fn fit_memory<C: CostModel>(
+    costs: &C,
     cluster: &Cluster,
     part: Partition,
     kind: ScheduleKind,
@@ -111,10 +114,10 @@ pub fn fit_memory(
     let n = part.n_stages();
     let mut cur = part;
     let mut moved = 0usize;
-    let max_moves = 4 * profile.n_layers();
+    let max_moves = 4 * costs.n_layers();
 
     let usage = |p: &Partition, i: usize| -> i64 {
-        let used = stage_memory_bytes(profile, &mm, kind, n, i, p.stage(i), micro, m);
+        let used = stage_memory_bytes(costs, &mm, kind, n, i, p.stage(i), micro, m);
         used as i64 - mm.usable(cluster.devices[i].mem_capacity) as i64
     };
 

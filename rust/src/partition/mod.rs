@@ -16,7 +16,7 @@ pub mod intralayer;
 pub mod memfit;
 
 use crate::cluster::{Cluster, ExecMode};
-use crate::profile::Profile;
+use crate::profile::range::{CostModel, RangeCost};
 use crate::schedule::ScheduleKind;
 
 /// A partition of layers `0..L` into contiguous stages. `bounds` has
@@ -68,9 +68,11 @@ impl Partition {
 /// the device's on-chip capacity, weights stream from DDR every
 /// micro-batch and the stage becomes weight-bandwidth-bound (the Table 6
 /// effect; Section 4.3 "guarantee weights of each stage are stored in
-/// on-chip memory as much as possible").
-pub fn stage_costs(
-    profile: &Profile,
+/// on-chip memory as much as possible"). Generic over [`CostModel`]: the
+/// planner passes [`RangeCost`] prefix tables (O(1) per range), ad-hoc
+/// callers a bare `&Profile`.
+pub fn stage_costs<C: CostModel>(
+    costs: &C,
     cluster: &Cluster,
     part: &Partition,
     micro: f64,
@@ -80,10 +82,10 @@ pub fn stage_costs(
         .map(|i| {
             let r = part.stage(i);
             let dev = &cluster.devices[i];
-            let mut f = profile.fwd_time(i, r.start, r.end, micro);
-            let mut b = profile.bwd_time(i, r.start, r.end, micro);
+            let mut f = costs.fwd_time(i, r.start, r.end, micro);
+            let mut b = costs.bwd_time(i, r.start, r.end, micro);
             if dev.exec == ExecMode::Async && dev.onchip_capacity > 0 {
-                let w_bytes = profile.param_bytes(r.start, r.end) as f64;
+                let w_bytes = costs.param_bytes(r.start, r.end) as f64;
                 // ~75% of BRAM/URAM usable for weights (rest: buffers).
                 if w_bytes > 0.75 * dev.onchip_capacity as f64 {
                     // Weight streaming from DDR bounds each pass.
@@ -99,15 +101,15 @@ pub fn stage_costs(
 
 /// Communication time (seconds) to ship one micro-batch's activations
 /// across the cut after stage `i` (same-size errors flow back in BP).
-pub fn cut_comm_time(
-    profile: &Profile,
+pub fn cut_comm_time<C: CostModel>(
+    costs: &C,
     cluster: &Cluster,
     part: &Partition,
     micro: f64,
     i: usize,
 ) -> f64 {
     let cut_layer = part.bounds[i + 1] - 1;
-    let bytes = profile.cut_bytes(cut_layer) as f64 * micro;
+    let bytes = costs.cut_bytes(cut_layer) as f64 * micro;
     cluster.link(i).xfer_time(bytes)
 }
 
@@ -148,10 +150,28 @@ pub struct BalanceSeed {
 
 /// Passes 1–3 of the Fig.-3 flow: everything that does not depend on the
 /// schedule kind or micro-batch count. See [`balanced_partition`].
+///
+/// Builds the [`RangeCost`] prefix tables once and runs the whole flow on
+/// them; callers that already hold tables for this profile (the planner's
+/// phase-A prewarm shares one set per permuted view across the entire
+/// micro grid) should use [`balance_stages_rc`].
 pub fn balance_stages(
     net: &crate::model::Network,
     cluster: &Cluster,
-    profile: &Profile,
+    profile: &crate::profile::Profile,
+    micro: f64,
+) -> crate::Result<BalanceSeed> {
+    let rc = RangeCost::build(profile);
+    balance_stages_rc(net, cluster, &rc, micro)
+}
+
+/// [`balance_stages`] against caller-owned prefix tables: every range
+/// probe of the inter-layer DP, the communication-bound test, the coarse
+/// restriction and the fractional refinement is O(1).
+pub fn balance_stages_rc(
+    net: &crate::model::Network,
+    cluster: &Cluster,
+    rc: &RangeCost,
     micro: f64,
 ) -> crate::Result<BalanceSeed> {
     let mut notes = Vec::new();
@@ -165,7 +185,7 @@ pub fn balance_stages(
 
     // 1. Inter-layer partition (Eq. 1 seed + refinement; DP-optimal is
     //    equivalent here and used as the implementation).
-    let mut part = interlayer::dp_optimal(profile, cluster, &cuts, micro, None)?;
+    let mut part = interlayer::dp_optimal_rc(rc, cluster, &cuts, micro, None)?;
     notes.push(format!("inter-layer: {}", part.describe()));
 
     // 2. Communication bottleneck? (Fig. 3 decision diamond.) On sync
@@ -173,10 +193,10 @@ pub fn balance_stages(
     //    per micro-batch, so the round trip is what competes with F+B.
     let duplex_factor = if cluster.all_async() { 1.0 } else { 2.0 };
     let is_comm_bound = |p: &Partition| -> bool {
-        let costs = stage_costs(profile, cluster, p, micro);
+        let costs = stage_costs(rc, cluster, p, micro);
         let max_comp = costs.iter().map(|(f, b)| f + b).fold(0.0, f64::max);
         (0..p.n_stages() - 1)
-            .map(|i| duplex_factor * cut_comm_time(profile, cluster, p, micro, i))
+            .map(|i| duplex_factor * cut_comm_time(rc, cluster, p, micro, i))
             .fold(0.0, f64::max)
             > max_comp
     };
@@ -185,18 +205,18 @@ pub fn balance_stages(
     if cluster.len() > 1 && is_comm_bound(&part) {
         // Coarse-grained partition: restrict cuts to edges whose
         // activation is below a_th, then repartition (Section 3.3.3).
-        let costs = stage_costs(profile, cluster, &part, micro);
+        let costs = stage_costs(rc, cluster, &part, micro);
         let t_target = costs.iter().map(|(f, b)| f + b).fold(0.0, f64::max);
         let min_bw = cluster.links.iter().map(|l| l.bandwidth).fold(f64::INFINITY, f64::min);
         let a_th = t_target * min_bw / (duplex_factor * micro); // bytes per sample
-        let coarse_cuts = coarse::allowed_cuts(profile, &cuts, a_th);
+        let coarse_cuts = coarse::allowed_cuts(rc, &cuts, a_th);
         anyhow::ensure!(
             coarse_cuts.len() + 1 >= cluster.len(),
             "coarse partition infeasible: only {} cuts below a_th for {} stages",
             coarse_cuts.len(),
             cluster.len()
         );
-        part = interlayer::dp_optimal(profile, cluster, &coarse_cuts, micro, None)?;
+        part = interlayer::dp_optimal_rc(rc, cluster, &coarse_cuts, micro, None)?;
         coarse_threshold = Some(a_th);
         notes.push(format!("coarse (a_th={:.0} B/sample): {}", a_th, part.describe()));
     }
@@ -207,7 +227,7 @@ pub fn balance_stages(
     //    GPU clusters (boundary-layer tensor slice).
     let mut frac = None;
     if cluster.len() > 1 && !is_comm_bound(&part) {
-        let fp = intralayer::refine_fractional(profile, cluster, &part, micro);
+        let fp = intralayer::refine_fractional(rc, cluster, &part, micro);
         if fp.imbalance_after < fp.imbalance_before - 1e-9 {
             notes.push(format!(
                 "intra-layer: imbalance {:.4} → {:.4}",
@@ -220,17 +240,19 @@ pub fn balance_stages(
     // The memory fine-tune must stay on the active cut set (coarse if it
     // ran).
     let active_cuts = match coarse_threshold {
-        Some(a_th) => coarse::allowed_cuts(profile, &cuts, a_th),
+        Some(a_th) => coarse::allowed_cuts(rc, &cuts, a_th),
         None => cuts,
     };
     Ok(BalanceSeed { partition: part, frac, coarse_threshold, active_cuts, notes })
 }
 
 /// Pass 4 of the Fig.-3 flow: fine-tune a [`BalanceSeed`] for the memory
-/// footprint of one schedule kind / micro-batch count.
-pub fn finish_partition(
+/// footprint of one schedule kind / micro-batch count. Generic over
+/// [`CostModel`] — byte-range queries are bit-exact between `Profile`
+/// and [`RangeCost`], so both backings finish to identical partitions.
+pub fn finish_partition<C: CostModel>(
     cluster: &Cluster,
-    profile: &Profile,
+    costs: &C,
     seed: &BalanceSeed,
     kind: ScheduleKind,
     micro: f64,
@@ -238,7 +260,7 @@ pub fn finish_partition(
 ) -> crate::Result<PartitionPlan> {
     let mut notes = seed.notes.clone();
     let fitted = memfit::fit_memory(
-        profile,
+        costs,
         cluster,
         seed.partition.clone(),
         kind,
@@ -251,8 +273,8 @@ pub fn finish_partition(
     }
     let part = fitted.partition;
 
-    let costs = stage_costs(profile, cluster, &part, micro);
-    let max_stage_time = costs.iter().map(|(f, b)| f + b).fold(0.0, f64::max);
+    let stage = stage_costs(costs, cluster, &part, micro);
+    let max_stage_time = stage.iter().map(|(f, b)| f + b).fold(0.0, f64::max);
     Ok(PartitionPlan {
         partition: part,
         frac: seed.frac.clone(),
@@ -271,13 +293,14 @@ pub fn finish_partition(
 pub fn balanced_partition(
     net: &crate::model::Network,
     cluster: &Cluster,
-    profile: &Profile,
+    profile: &crate::profile::Profile,
     kind: ScheduleKind,
     micro: f64,
     m: usize,
 ) -> crate::Result<PartitionPlan> {
-    let seed = balance_stages(net, cluster, profile, micro)?;
-    finish_partition(cluster, profile, &seed, kind, micro, m)
+    let rc = RangeCost::build(profile);
+    let seed = balance_stages_rc(net, cluster, &rc, micro)?;
+    finish_partition(cluster, &rc, &seed, kind, micro, m)
 }
 
 #[cfg(test)]

@@ -13,15 +13,29 @@
 //! Failures are cached like successes: an infeasible seed is infeasible
 //! for every kind at that `micro`.
 //!
+//! Every partition pass runs on [`RangeCost`] prefix tables — built once
+//! per profile view and shared across the whole micro grid (the tables
+//! are micro-independent) — so the sequential path, the parallel prewarm
+//! and a cache restored from disk all produce bit-identical plans.
+//!
+//! The cache also serializes: [`EvalCache::to_json`] /
+//! [`EvalCache::from_json`] persist both levels keyed by a scenario
+//! fingerprint, which is how `bapipe explore --plan-cache` skips phase A
+//! entirely on repeated invocations (see [`super::store`]).
+//!
 //! [`ScheduleKind::memory_class`]: crate::schedule::ScheduleKind::memory_class
 
 use super::parallel;
+use super::report;
 use super::space::Candidate;
 use crate::cluster::Cluster;
 use crate::model::Network;
-use crate::partition::{balance_stages, finish_partition, BalanceSeed, PartitionPlan};
+use crate::partition::intralayer::FracPartition;
+use crate::partition::{balance_stages_rc, finish_partition, BalanceSeed, PartitionPlan};
+use crate::profile::range::RangeCost;
 use crate::profile::Profile;
 use crate::schedule::ScheduleKind;
+use crate::util::json::{obj, Json};
 use std::collections::{HashMap, HashSet};
 
 /// Key of a balance seed: permutation × micro-batch size. `micro` enters
@@ -76,6 +90,10 @@ impl EvalCache {
             self.hits += 1;
             return found.clone();
         }
+        // One prefix-table build serves both passes; using the tables on
+        // the miss path keeps the sequential flow bit-identical to the
+        // parallel prewarm (which shares one table set per view).
+        let rc = RangeCost::build(profile);
         let seed = match self.seeds.get(&seed_key) {
             Some(cached) => {
                 self.hits += 1;
@@ -83,7 +101,7 @@ impl EvalCache {
             }
             None => {
                 self.misses += 1;
-                let computed = balance_stages(net, cluster, profile, cand.micro)
+                let computed = balance_stages_rc(net, cluster, &rc, cand.micro)
                     .map_err(|e| e.to_string());
                 self.seeds.insert(seed_key, computed.clone());
                 computed
@@ -92,7 +110,7 @@ impl EvalCache {
         let finished = match seed {
             Ok(seed) => {
                 self.misses += 1;
-                finish_partition(cluster, profile, &seed, cand.kind, cand.micro, cand.m)
+                finish_partition(cluster, &rc, &seed, cand.kind, cand.micro, cand.m)
                     .map_err(|e| e.to_string())
             }
             Err(e) => Err(e),
@@ -136,18 +154,9 @@ impl EvalCache {
                 seed_keys.push(key);
             }
         }
-        let seeds = parallel::run_indexed(jobs, seed_keys.len(), |k| {
-            let key = &seed_keys[k];
-            let (cl, prof) = &views[key.perm];
-            balance_stages(net, cl, prof, f64::from_bits(key.micro_bits))
-                .map_err(|e| e.to_string())
-        });
-        for (key, res) in seed_keys.iter().zip(seeds) {
-            self.misses += 1;
-            self.seeds.insert(*key, res);
-        }
 
-        // Fine-tune work list: distinct plan keys, first-appearance order.
+        // Fine-tune work list: distinct plan keys, first-appearance order
+        // (depends only on the keys, so it is known before the seeds run).
         let mut plan_work: Vec<(PlanKey, ScheduleKind)> = Vec::new();
         let mut seen_plans: HashSet<PlanKey> = self.plans.keys().copied().collect();
         for c in candidates.iter().filter(divisible) {
@@ -157,14 +166,46 @@ impl EvalCache {
                 plan_work.push((key, c.kind));
             }
         }
+
+        // One prefix-table set per permuted view *with work*, shared by
+        // every balance-seed DP and memory fine-tune on that view across
+        // the whole micro grid (the tables are micro-independent: batch
+        // scaling enters as a multiplier on the slope prefixes). A fully
+        // warm cache — the `--plan-cache` reuse path — builds none.
+        let mut used = vec![false; views.len()];
+        for key in &seed_keys {
+            used[key.perm] = true;
+        }
+        for (key, _) in &plan_work {
+            used[key.seed.perm] = true;
+        }
+        let rcs: Vec<Option<RangeCost>> = views
+            .iter()
+            .zip(&used)
+            .map(|((_, prof), &u)| if u { Some(RangeCost::build(prof)) } else { None })
+            .collect();
+        let rc_of =
+            |perm: usize| rcs[perm].as_ref().expect("tables built for every perm with work");
+
+        let seeds = parallel::run_indexed(jobs, seed_keys.len(), |k| {
+            let key = &seed_keys[k];
+            let (cl, _) = &views[key.perm];
+            balance_stages_rc(net, cl, rc_of(key.perm), f64::from_bits(key.micro_bits))
+                .map_err(|e| e.to_string())
+        });
+        for (key, res) in seed_keys.iter().zip(seeds) {
+            self.misses += 1;
+            self.seeds.insert(*key, res);
+        }
+
         let seeds_done = &self.seeds;
         let plans = parallel::run_indexed(jobs, plan_work.len(), |k| {
             let (key, kind) = &plan_work[k];
-            let (cl, prof) = &views[key.seed.perm];
+            let (cl, _) = &views[key.seed.perm];
             match seeds_done.get(&key.seed).expect("seed prewarmed above") {
                 Ok(seed) => finish_partition(
                     cl,
-                    prof,
+                    rc_of(key.seed.perm),
                     seed,
                     *kind,
                     f64::from_bits(key.seed.micro_bits),
@@ -183,6 +224,256 @@ impl EvalCache {
             self.plans.insert(*key, res);
         }
     }
+
+    /// Serialize both cache levels for cross-invocation reuse (`bapipe
+    /// explore --plan-cache`). Entries are emitted in sorted key order so
+    /// the document is deterministic; `fingerprint` ties the cache to one
+    /// `(model, cluster)` scenario and `device_orders` pins the meaning
+    /// of the `perm` indices.
+    pub fn to_json(&self, fingerprint: &str, device_orders: &[Vec<usize>]) -> Json {
+        let mut seeds: Vec<(&SeedKey, &Result<BalanceSeed, String>)> = self.seeds.iter().collect();
+        seeds.sort_by_key(|(k, _)| (k.perm, k.micro_bits));
+        let mut plans: Vec<(&PlanKey, &Result<PartitionPlan, String>)> =
+            self.plans.iter().collect();
+        plans.sort_by_key(|(k, _)| (k.seed.perm, k.seed.micro_bits, k.memory_class, k.m));
+        obj(vec![
+            ("format", Json::from(PLAN_CACHE_FORMAT)),
+            ("fingerprint", Json::from(fingerprint)),
+            (
+                "device_orders",
+                Json::Arr(
+                    device_orders
+                        .iter()
+                        .map(|o| Json::Arr(o.iter().map(|&d| Json::from(d)).collect()))
+                        .collect(),
+                ),
+            ),
+            (
+                "seeds",
+                Json::Arr(seeds.into_iter().map(|(k, r)| seed_entry_to_json(k, r)).collect()),
+            ),
+            (
+                "plans",
+                Json::Arr(plans.into_iter().map(|(k, r)| plan_entry_to_json(k, r)).collect()),
+            ),
+        ])
+    }
+
+    /// Inverse of [`EvalCache::to_json`]. Rejects a document whose
+    /// format, fingerprint or device-order space does not match the
+    /// current scenario — a stale cache must never poison a different
+    /// exploration (hit/miss statistics restart at zero).
+    pub fn from_json(
+        j: &Json,
+        fingerprint: &str,
+        device_orders: &[Vec<usize>],
+    ) -> crate::Result<EvalCache> {
+        let format = report::req_str(j, "format")?;
+        anyhow::ensure!(format == PLAN_CACHE_FORMAT, "unknown plan-cache format `{format}`");
+        let fp = report::req_str(j, "fingerprint")?;
+        anyhow::ensure!(
+            fp == fingerprint,
+            "fingerprint mismatch (cache {fp}, scenario {fingerprint})"
+        );
+        let orders = j
+            .req_arr("device_orders")
+            .map_err(|e| anyhow::anyhow!("{e}"))?
+            .iter()
+            .map(|o| {
+                o.as_arr()
+                    .ok_or_else(|| anyhow::anyhow!("bad device order"))?
+                    .iter()
+                    .map(|v| v.as_usize().ok_or_else(|| anyhow::anyhow!("bad device index")))
+                    .collect::<crate::Result<Vec<usize>>>()
+            })
+            .collect::<crate::Result<Vec<Vec<usize>>>>()?;
+        anyhow::ensure!(
+            orders == device_orders,
+            "device-order space changed; cached permutation indices would not line up"
+        );
+        let mut cache = EvalCache::new();
+        for e in j.req_arr("seeds").map_err(|e| anyhow::anyhow!("{e}"))? {
+            let (key, res) = seed_entry_from_json(e)?;
+            cache.seeds.insert(key, res);
+        }
+        for e in j.req_arr("plans").map_err(|e| anyhow::anyhow!("{e}"))? {
+            let (key, res) = plan_entry_from_json(e)?;
+            cache.plans.insert(key, res);
+        }
+        Ok(cache)
+    }
+}
+
+/// On-disk format tag of the persisted plan cache.
+pub const PLAN_CACHE_FORMAT: &str = "bapipe-plan-cache-v1";
+
+// ------------------------------------------- plan-cache (de)serialization
+
+fn string_list(j: &Json, key: &str) -> crate::Result<Vec<String>> {
+    j.req_arr(key)
+        .map_err(|e| anyhow::anyhow!("{e}"))?
+        .iter()
+        .map(|v| v.as_str().map(str::to_string).ok_or_else(|| anyhow::anyhow!("bad `{key}` entry")))
+        .collect()
+}
+
+fn usize_list(j: &Json, key: &str) -> crate::Result<Vec<usize>> {
+    j.req_arr(key)
+        .map_err(|e| anyhow::anyhow!("{e}"))?
+        .iter()
+        .map(|v| v.as_usize().ok_or_else(|| anyhow::anyhow!("bad `{key}` entry")))
+        .collect()
+}
+
+fn frac_to_json(fp: &FracPartition) -> Json {
+    obj(vec![
+        ("x", Json::Arr(fp.x.iter().map(|&v| Json::Num(v)).collect())),
+        ("imbalance_before", report::num_or_null(fp.imbalance_before)),
+        ("imbalance_after", report::num_or_null(fp.imbalance_after)),
+    ])
+}
+
+fn frac_from_json(j: &Json) -> crate::Result<FracPartition> {
+    let x = j
+        .req_arr("x")
+        .map_err(|e| anyhow::anyhow!("{e}"))?
+        .iter()
+        .map(|v| v.as_f64().ok_or_else(|| anyhow::anyhow!("bad fractional boundary")))
+        .collect::<crate::Result<Vec<f64>>>()?;
+    Ok(FracPartition {
+        x,
+        imbalance_before: report::req_f64(j, "imbalance_before")?,
+        imbalance_after: report::req_f64(j, "imbalance_after")?,
+    })
+}
+
+/// The fields `BalanceSeed` and `PartitionPlan` share (partition,
+/// optional frac, optional coarse threshold, notes) — one serializer core
+/// so a future field can't be added to one side and silently dropped by
+/// the other. Key order in the emitted object is irrelevant: `obj` sorts.
+fn flow_core_to_json(
+    partition: &crate::partition::Partition,
+    frac: &Option<FracPartition>,
+    coarse_threshold: Option<f64>,
+    notes: &[String],
+) -> Vec<(&'static str, Json)> {
+    let mut pairs = vec![
+        ("partition", report::partition_to_json(partition)),
+        ("notes", Json::Arr(notes.iter().map(|n| Json::from(n.clone())).collect())),
+    ];
+    if let Some(fp) = frac {
+        pairs.push(("frac", frac_to_json(fp)));
+    }
+    if let Some(th) = coarse_threshold {
+        pairs.push(("coarse_threshold", Json::Num(th)));
+    }
+    pairs
+}
+
+type FlowCore = (crate::partition::Partition, Option<FracPartition>, Option<f64>, Vec<String>);
+
+fn flow_core_from_json(j: &Json) -> crate::Result<FlowCore> {
+    let partition =
+        report::partition_from_json(j.req("partition").map_err(|e| anyhow::anyhow!("{e}"))?)?;
+    let frac = match j.get("frac") {
+        Some(f) => Some(frac_from_json(f)?),
+        None => None,
+    };
+    let coarse_threshold = j.get("coarse_threshold").and_then(|v| v.as_f64());
+    Ok((partition, frac, coarse_threshold, string_list(j, "notes")?))
+}
+
+fn seed_to_json(s: &BalanceSeed) -> Json {
+    let mut pairs = flow_core_to_json(&s.partition, &s.frac, s.coarse_threshold, &s.notes);
+    pairs.push((
+        "active_cuts",
+        Json::Arr(s.active_cuts.iter().map(|&c| Json::from(c)).collect()),
+    ));
+    obj(pairs)
+}
+
+fn seed_from_json(j: &Json) -> crate::Result<BalanceSeed> {
+    let (partition, frac, coarse_threshold, notes) = flow_core_from_json(j)?;
+    Ok(BalanceSeed {
+        partition,
+        frac,
+        coarse_threshold,
+        active_cuts: usize_list(j, "active_cuts")?,
+        notes,
+    })
+}
+
+fn plan_to_json(p: &PartitionPlan) -> Json {
+    let mut pairs = flow_core_to_json(&p.partition, &p.frac, p.coarse_threshold, &p.notes);
+    pairs.push(("max_stage_time", Json::Num(p.max_stage_time)));
+    obj(pairs)
+}
+
+fn plan_from_json(j: &Json) -> crate::Result<PartitionPlan> {
+    let (partition, frac, coarse_threshold, notes) = flow_core_from_json(j)?;
+    Ok(PartitionPlan {
+        partition,
+        frac,
+        coarse_threshold,
+        max_stage_time: report::req_f64(j, "max_stage_time")?,
+        notes,
+    })
+}
+
+fn seed_entry_to_json(k: &SeedKey, r: &Result<BalanceSeed, String>) -> Json {
+    let mut pairs = vec![
+        ("perm", Json::from(k.perm)),
+        ("micro", Json::Num(f64::from_bits(k.micro_bits))),
+    ];
+    match r {
+        Ok(s) => pairs.push(("seed", seed_to_json(s))),
+        Err(e) => pairs.push(("error", Json::from(e.clone()))),
+    }
+    obj(pairs)
+}
+
+fn seed_entry_from_json(j: &Json) -> crate::Result<(SeedKey, Result<BalanceSeed, String>)> {
+    let key = SeedKey {
+        perm: report::req_usize(j, "perm")?,
+        micro_bits: report::req_f64(j, "micro")?.to_bits(),
+    };
+    let res = match j.get("seed") {
+        Some(s) => Ok(seed_from_json(s)?),
+        None => Err(report::req_str(j, "error")?),
+    };
+    Ok((key, res))
+}
+
+fn plan_entry_to_json(k: &PlanKey, r: &Result<PartitionPlan, String>) -> Json {
+    let mut pairs = vec![
+        ("perm", Json::from(k.seed.perm)),
+        ("micro", Json::Num(f64::from_bits(k.seed.micro_bits))),
+        ("memory_class", Json::from(k.memory_class as usize)),
+        ("m", Json::from(k.m)),
+    ];
+    match r {
+        Ok(p) => pairs.push(("plan", plan_to_json(p))),
+        Err(e) => pairs.push(("error", Json::from(e.clone()))),
+    }
+    obj(pairs)
+}
+
+fn plan_entry_from_json(j: &Json) -> crate::Result<(PlanKey, Result<PartitionPlan, String>)> {
+    let memory_class = u8::try_from(report::req_usize(j, "memory_class")?)
+        .map_err(|_| anyhow::anyhow!("memory_class out of range"))?;
+    let key = PlanKey {
+        seed: SeedKey {
+            perm: report::req_usize(j, "perm")?,
+            micro_bits: report::req_f64(j, "micro")?.to_bits(),
+        },
+        memory_class,
+        m: report::req_usize(j, "m")?,
+    };
+    let res = match j.get("plan") {
+        Some(p) => Ok(plan_from_json(p)?),
+        None => Err(report::req_str(j, "error")?),
+    };
+    Ok((key, res))
 }
 
 #[cfg(test)]
@@ -278,6 +569,59 @@ mod tests {
             // every post-prewarm request is answered from the cache
             assert_eq!((warm.hits, warm.misses), (6, 9), "jobs={jobs}");
         }
+    }
+
+    #[test]
+    fn plan_cache_round_trips_through_json() {
+        let net = zoo::vgg16(224);
+        let cl = presets::v100_cluster(4);
+        let prof = analytical::profile(&net, &cl);
+        let mut cache = EvalCache::new();
+        let c1 = cand(ScheduleKind::OneFOneBSno, 16, 8.0);
+        let c2 = cand(ScheduleKind::OneFOneBSo, 32, 4.0);
+        let a1 = cache.partition(&net, &cl, &prof, &c1).unwrap();
+        let a2 = cache.partition(&net, &cl, &prof, &c2).unwrap();
+
+        let orders = vec![vec![0usize, 1, 2, 3]];
+        let text = cache.to_json("fp123", &orders).to_string_pretty();
+        let mut restored =
+            EvalCache::from_json(&Json::parse(&text).unwrap(), "fp123", &orders).unwrap();
+        // every request is answered from the restored cache: no partition
+        // pass runs (this is what lets --plan-cache skip phase A)
+        let b1 = restored.partition(&net, &cl, &prof, &c1).unwrap();
+        let b2 = restored.partition(&net, &cl, &prof, &c2).unwrap();
+        assert_eq!((restored.hits, restored.misses), (2, 0));
+        assert_eq!(a1.partition, b1.partition);
+        assert_eq!(a1.max_stage_time, b1.max_stage_time);
+        assert_eq!(a1.notes, b1.notes);
+        assert_eq!(a2.partition, b2.partition);
+        // the document itself is stable (deterministic entry order)
+        assert_eq!(restored.to_json("fp123", &orders).to_string_pretty(), text);
+
+        // wrong fingerprint or a changed device-order space is rejected
+        assert!(EvalCache::from_json(&Json::parse(&text).unwrap(), "other", &orders).is_err());
+        let other_orders = vec![vec![0usize, 1, 2, 3], vec![1, 0, 2, 3]];
+        assert!(
+            EvalCache::from_json(&Json::parse(&text).unwrap(), "fp123", &other_orders).is_err()
+        );
+    }
+
+    #[test]
+    fn plan_cache_preserves_failures() {
+        // A cached infeasibility must survive the round trip: the restored
+        // cache answers it as a hit without re-running the fine-tune.
+        let net = zoo::gnmt_l(158);
+        let cl = presets::v100_cluster(1);
+        let prof = analytical::profile(&net, &cl);
+        let mut cache = EvalCache::new();
+        let c = cand(ScheduleKind::OneFOneBSno, 2, 16.0);
+        assert!(cache.partition(&net, &cl, &prof, &c).is_err());
+        let orders = vec![vec![0usize]];
+        let text = cache.to_json("fp", &orders).to_string_compact();
+        let mut restored =
+            EvalCache::from_json(&Json::parse(&text).unwrap(), "fp", &orders).unwrap();
+        assert!(restored.partition(&net, &cl, &prof, &c).is_err());
+        assert_eq!((restored.hits, restored.misses), (1, 0), "cached failure must be a hit");
     }
 
     #[test]

@@ -12,7 +12,13 @@
 //!   `micro`, the memory fine-tune once per (Tables 1–2 memory class, M)
 //!   — identical `(kind, micro)` partitions are computed once, and
 //!   [`EvalCache::prewarm`] fans both batches out over `jobs` workers
-//!   (phase A is parallel, not just the DES phase);
+//!   (phase A is parallel, not just the DES phase) with one
+//!   [`crate::profile::RangeCost`] prefix-table set per permuted view
+//!   shared across the whole micro grid;
+//! * [`store`] — cross-scenario persistence of the cache keyed on a
+//!   `(model, cluster)` fingerprint (`bapipe explore --plan-cache`): a
+//!   repeated invocation restores both cache levels and skips phase A
+//!   entirely;
 //! * [`bounds`] — closed-form lower bounds (from the Tables 1–2 model)
 //!   that let a branch-and-bound pass skip discrete-event simulations
 //!   which provably cannot beat the incumbent;
@@ -47,6 +53,7 @@ pub mod diff;
 pub mod eval;
 pub mod report;
 pub mod space;
+pub mod store;
 
 mod parallel;
 
@@ -338,6 +345,7 @@ fn refine_m(
     profile: &Profile,
     space: &SearchSpace,
     opts: &Options,
+    cache: &mut EvalCache,
     report: &mut ExplorationReport,
 ) {
     let global = (space.batch_per_device * cluster.len() as f64) as usize;
@@ -345,10 +353,10 @@ fn refine_m(
         return;
     }
     let divisors: Vec<usize> = (1..=global).filter(|d| global % d == 0).collect();
-    // One cache across every round; each round's branch-and-bound starts
-    // at the best epoch already recorded, so new candidates that provably
-    // cannot win are pruned instead of simulated.
-    let mut cache = EvalCache::new();
+    // One cache across every round (the caller's — so `--plan-cache`
+    // persists the refinement work too); each round's branch-and-bound
+    // starts at the best epoch already recorded, so new candidates that
+    // provably cannot win are pruned instead of simulated.
     for round in 0..ADAPTIVE_M_ROUNDS {
         let Some(best) = report.best_evaluation() else { return };
         let best_m = best.candidate.m;
@@ -385,7 +393,7 @@ fn refine_m(
             notes: Vec::new(),
         };
         let sub =
-            explore_space_with(net, cluster, profile, &sub_space, opts, &mut cache, best_epoch);
+            explore_space_with(net, cluster, profile, &sub_space, opts, cache, best_epoch);
         report.notes.push(format!(
             "adaptive-M round {}: bisected to M={new_ms:?} around incumbent M={best_m}",
             round + 1
@@ -404,16 +412,35 @@ fn refine_m(
 /// around the incumbent, compare against the data-parallel baseline, and
 /// return the fastest plan with its full typed report.
 pub fn explore(net: &Network, cluster: &Cluster, profile: &Profile, opts: &Options) -> Plan {
+    let mut cache = EvalCache::new();
+    explore_with_cache(net, cluster, profile, opts, &mut cache)
+}
+
+/// [`explore`] against a caller-owned [`EvalCache`]: a cache restored
+/// from disk (`bapipe explore --plan-cache`, [`store`]) answers every
+/// phase-A partition request without running a single balance-seed DP or
+/// memory fine-tune, and the cache accumulates this run's work — grid
+/// pass and adaptive-M rounds alike — for the caller to persist.
+pub fn explore_with_cache(
+    net: &Network,
+    cluster: &Cluster,
+    profile: &Profile,
+    opts: &Options,
+    cache: &mut EvalCache,
+) -> Plan {
     let space = SearchSpace::bapipe(cluster, opts);
-    let mut report = explore_space(net, cluster, profile, &space, opts);
+    let mut report =
+        explore_space_with(net, cluster, profile, &space, opts, cache, f64::INFINITY);
     if opts.adaptive_m {
-        refine_m(net, cluster, profile, &space, opts, &mut report);
+        refine_m(net, cluster, profile, &space, opts, cache, &mut report);
     }
 
-    // DP baseline (the paper's 1x reference; ResNet-50's winner).
+    // DP baseline (the paper's 1x reference; ResNet-50's winner). The
+    // mini-batch model runs once; the epoch conversion reuses it instead
+    // of re-summing the whole-network profile a second time.
     let dpr = dp::minibatch(profile, cluster, opts.batch_per_device);
     let dp_epoch = if dpr.fits {
-        dp::epoch_time(profile, cluster, opts.batch_per_device, opts.samples_per_epoch)
+        dp::epoch_from(&dpr, cluster, opts.batch_per_device, opts.samples_per_epoch)
     } else {
         f64::INFINITY
     };

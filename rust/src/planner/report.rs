@@ -393,9 +393,10 @@ impl Plan {
 }
 
 // ---------------------------------------------------------------- helpers
+// (shared with the plan-cache serialization in `super::cache`)
 
 /// Non-finite floats (∞ when DP is out of memory) become JSON `null`.
-fn num_or_null(v: f64) -> Json {
+pub(crate) fn num_or_null(v: f64) -> Json {
     if v.is_finite() {
         Json::Num(v)
     } else {
@@ -403,11 +404,11 @@ fn num_or_null(v: f64) -> Json {
     }
 }
 
-fn req_str(j: &Json, key: &str) -> crate::Result<String> {
+pub(crate) fn req_str(j: &Json, key: &str) -> crate::Result<String> {
     Ok(j.req_str(key).map_err(|e| anyhow::anyhow!("{e}"))?.to_string())
 }
 
-fn req_usize(j: &Json, key: &str) -> crate::Result<usize> {
+pub(crate) fn req_usize(j: &Json, key: &str) -> crate::Result<usize> {
     j.req_usize(key).map_err(|e| anyhow::anyhow!("{e}"))
 }
 
@@ -419,7 +420,7 @@ fn req_bool(j: &Json, key: &str) -> crate::Result<bool> {
 }
 
 /// f64 field where JSON `null` encodes `∞`.
-fn req_f64(j: &Json, key: &str) -> crate::Result<f64> {
+pub(crate) fn req_f64(j: &Json, key: &str) -> crate::Result<f64> {
     match j.get(key) {
         None => anyhow::bail!("missing field `{key}`"),
         Some(Json::Null) => Ok(f64::INFINITY),
@@ -433,11 +434,11 @@ fn kind_from_json(j: &Json) -> crate::Result<ScheduleKind> {
         .ok_or_else(|| anyhow::anyhow!("unknown schedule kind `{label}`"))
 }
 
-fn partition_to_json(p: &Partition) -> Json {
+pub(crate) fn partition_to_json(p: &Partition) -> Json {
     obj(vec![("bounds", Json::Arr(p.bounds.iter().map(|&b| Json::from(b)).collect()))])
 }
 
-fn partition_from_json(j: &Json) -> crate::Result<Partition> {
+pub(crate) fn partition_from_json(j: &Json) -> crate::Result<Partition> {
     let bounds = j
         .req_arr("bounds")
         .map_err(|e| anyhow::anyhow!("{e}"))?

@@ -1,0 +1,171 @@
+//! Cross-scenario plan-cache persistence: fingerprint a `(model,
+//! cluster)` scenario, save the [`EvalCache`]'s seed/plan maps next to it
+//! and restore them on the next CLI invocation — a warm cache answers
+//! every phase-A request (balance-seed DPs *and* memory fine-tunes) from
+//! memory, so `bapipe explore --plan-cache plan-cache.json` skips phase A
+//! entirely when the scenario is unchanged.
+//!
+//! The fingerprint hashes everything the partition passes consume: the
+//! full per-device per-layer profile (times, parameter/activation/stash
+//! sizes, saturation points), the device specs, the link parameters and
+//! the legal cut set. Any change — a different model, a resized cluster,
+//! retuned device constants, even a single layer's cut-legality — changes
+//! the fingerprint and the stale cache is rejected (never silently
+//! reused). The device-order list is stored alongside so `perm` indices
+//! keep their meaning across invocations; a run with a different
+//! `--permute` setting rejects the cache the same way.
+
+use super::cache::EvalCache;
+use crate::cluster::{Cluster, ExecMode};
+use crate::model::Network;
+use crate::profile::Profile;
+use crate::util::json::Json;
+
+/// 64-bit FNV-1a over a canonical byte stream.
+struct Fnv1a(u64);
+
+impl Fnv1a {
+    fn new() -> Fnv1a {
+        Fnv1a(0xcbf2_9ce4_8422_2325)
+    }
+    fn bytes(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.0 ^= b as u64;
+            self.0 = self.0.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+    fn u64(&mut self, v: u64) {
+        self.bytes(&v.to_le_bytes());
+    }
+    fn f64(&mut self, v: f64) {
+        self.u64(v.to_bits());
+    }
+    fn str(&mut self, s: &str) {
+        self.u64(s.len() as u64);
+        self.bytes(s.as_bytes());
+    }
+}
+
+/// Fingerprint of one `(model, cluster)` scenario — the key a persisted
+/// plan cache is valid for (see module docs for what it covers).
+pub fn fingerprint(net: &Network, cluster: &Cluster, profile: &Profile) -> String {
+    let mut h = Fnv1a::new();
+    h.str(&net.name);
+    h.u64(net.len() as u64);
+    for c in net.legal_cuts() {
+        h.u64(c as u64);
+    }
+    h.str(&profile.model);
+    h.u64(profile.dtype_bytes);
+    h.u64(profile.n_devices() as u64);
+    h.u64(profile.n_layers() as u64);
+    for row in &profile.per_device {
+        for c in row {
+            h.f64(c.fwd);
+            h.f64(c.bwd);
+            h.f64(c.fwd_fixed);
+            h.f64(c.bwd_fixed);
+            h.u64(c.params);
+            h.u64(c.act_in_elems);
+            h.u64(c.act_out_elems);
+            h.u64(c.stash_elems);
+            h.f64(c.half_sat);
+        }
+    }
+    for d in &cluster.devices {
+        h.str(&d.name);
+        h.f64(d.peak_flops);
+        h.f64(d.mem_bw);
+        h.u64(d.mem_capacity);
+        h.u64(d.onchip_capacity);
+        h.f64(d.onchip_bw);
+        h.u64(matches!(d.exec, ExecMode::Async) as u64);
+        h.f64(d.batch_half_sat);
+        h.u64(d.dsp_slices);
+    }
+    for l in &cluster.links {
+        h.f64(l.bandwidth);
+        h.f64(l.latency);
+    }
+    format!("{:016x}", h.0)
+}
+
+/// Outcome of [`load`]: a usable cache, or the reason to start fresh.
+pub enum CacheLoad {
+    /// The on-disk cache matched the scenario and was restored.
+    Loaded(EvalCache),
+    /// No usable cache (missing file, parse failure, or a fingerprint /
+    /// device-order mismatch); carries the human-readable reason.
+    Fresh(String),
+}
+
+/// Load a plan cache from `path` if it matches `fingerprint` and
+/// `device_orders`. Never fails hard: any problem degrades to
+/// [`CacheLoad::Fresh`] with the reason, and the exploration recomputes.
+pub fn load(path: &str, fingerprint: &str, device_orders: &[Vec<usize>]) -> CacheLoad {
+    let text = match std::fs::read_to_string(path) {
+        Ok(t) => t,
+        Err(_) => return CacheLoad::Fresh(format!("no plan cache at {path}")),
+    };
+    let json = match Json::parse(&text) {
+        Ok(j) => j,
+        Err(e) => return CacheLoad::Fresh(format!("unreadable plan cache {path}: {e}")),
+    };
+    match EvalCache::from_json(&json, fingerprint, device_orders) {
+        Ok(cache) => CacheLoad::Loaded(cache),
+        Err(e) => CacheLoad::Fresh(format!("stale plan cache {path}: {e}")),
+    }
+}
+
+/// Persist `cache` to `path`, keyed by `fingerprint` / `device_orders`.
+pub fn save(
+    path: &str,
+    cache: &EvalCache,
+    fingerprint: &str,
+    device_orders: &[Vec<usize>],
+) -> crate::Result<()> {
+    let text = cache.to_json(fingerprint, device_orders).to_string_pretty();
+    std::fs::write(path, text).map_err(|e| anyhow::anyhow!("writing plan cache {path}: {e}"))?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::presets;
+    use crate::model::zoo;
+    use crate::profile::analytical;
+
+    #[test]
+    fn fingerprint_is_stable_and_discriminating() {
+        let net = zoo::vgg16(224);
+        let cl = presets::v100_cluster(4);
+        let prof = analytical::profile(&net, &cl);
+        let fp = fingerprint(&net, &cl, &prof);
+        assert_eq!(fp.len(), 16);
+        assert_eq!(fp, fingerprint(&net, &cl, &prof), "same inputs, same fingerprint");
+
+        // different model
+        let net2 = zoo::resnet50(224);
+        let prof2 = analytical::profile(&net2, &cl);
+        assert_ne!(fp, fingerprint(&net2, &cl, &prof2));
+
+        // different cluster size
+        let cl8 = presets::v100_cluster(8);
+        let prof8 = analytical::profile(&net, &cl8);
+        assert_ne!(fp, fingerprint(&net, &cl8, &prof8));
+
+        // same shapes, retuned profile constant
+        let mut prof3 = prof.clone();
+        prof3.per_device[0][0].fwd *= 1.5;
+        assert_ne!(fp, fingerprint(&net, &cl, &prof3));
+    }
+
+    #[test]
+    fn missing_file_degrades_to_fresh() {
+        match load("/nonexistent/bapipe-plan-cache.json", "00", &[vec![0]]) {
+            CacheLoad::Fresh(reason) => assert!(reason.contains("no plan cache"), "{reason}"),
+            CacheLoad::Loaded(_) => panic!("must not load a missing file"),
+        }
+    }
+}

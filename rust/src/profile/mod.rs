@@ -8,9 +8,17 @@
 //!   run on hardware we don't have.
 //! * [`measured`] — times real per-stage HLO executables on the CPU PJRT
 //!   client (used by the real engine's planner).
+//!
+//! [`range::RangeCost`] precomputes prefix tables over a profile so the
+//! partition hot path answers any layer-range cost in O(1); every
+//! partition pass is generic over the [`range::CostModel`] trait that
+//! both `Profile` and `RangeCost` implement.
 
 pub mod analytical;
 pub mod measured;
+pub mod range;
+
+pub use range::{CostModel, RangeCost};
 
 use crate::cluster::Cluster;
 

@@ -1,0 +1,356 @@
+//! Prefix-table range costs: the O(1) cost oracle the partition hot path
+//! runs on.
+//!
+//! `Profile::fwd_time`/`bwd_time` re-sum a layer slice on every call, so
+//! the inter-layer partition DP — which probes `O(N·C²)` `(i, j)` ranges
+//! per balance seed — was `O(N·C²·L)`. [`RangeCost`] precomputes, per
+//! device, prefix sums over the per-layer costs so any range query is two
+//! loads and a subtract.
+//!
+//! The per-layer time model is `fixed + var·micro/eff(micro)` with the
+//! saturating utilization curve `eff = micro/(micro + half_sat)`, which
+//! expands to `(fixed + var·half_sat) + var·micro` — affine in `micro`.
+//! So **one** table set (a micro-independent *constant* prefix plus a
+//! *slope* prefix multiplied by `micro` at query time) serves every
+//! micro-batch size: the planner's phase-A prewarm builds one `RangeCost`
+//! per permuted cluster view and shares it across the whole micro grid.
+//!
+//! Byte quantities (parameter/stash prefixes, per-layer activation
+//! tables) are integers, so their prefix-difference queries are
+//! *bit-exact* with `Profile`'s direct sums. Time queries agree with the
+//! direct sums to rounding (the algebra is exact; only the FP summation
+//! order differs) — the DP parity against the retained
+//! [`dp_optimal_reference`] oracle is property-tested in
+//! `tests/planner_parity.rs`.
+//!
+//! [`dp_optimal_reference`]: crate::partition::interlayer::dp_optimal_reference
+
+use super::Profile;
+
+/// The cost queries the balanced-partition flow consumes, abstracted over
+/// the backing store: [`Profile`] answers them by summing layer slices
+/// (`O(L)` per range), [`RangeCost`] from prefix tables (`O(1)`). Every
+/// partition pass is generic over this trait, so the planner threads one
+/// prefix-table set through the whole flow while ad-hoc callers keep
+/// passing a bare `&Profile`.
+pub trait CostModel {
+    /// Number of layers.
+    fn n_layers(&self) -> usize;
+    /// Number of devices.
+    fn n_devices(&self) -> usize;
+    /// Bytes per element at training precision.
+    fn dtype_bytes(&self) -> u64;
+    /// Forward time of layers `lo..hi` on device `dev` at micro-batch
+    /// size `micro`.
+    fn fwd_time(&self, dev: usize, lo: usize, hi: usize, micro: f64) -> f64;
+    /// Backward time of layers `lo..hi` on device `dev` at micro-batch
+    /// size `micro`.
+    fn bwd_time(&self, dev: usize, lo: usize, hi: usize, micro: f64) -> f64;
+    /// Parameter bytes of layers `lo..hi`.
+    fn param_bytes(&self, lo: usize, hi: usize) -> u64;
+    /// Stash bytes per sample for BP across layers `lo..hi`.
+    fn stash_bytes(&self, lo: usize, hi: usize) -> u64;
+    /// Bytes crossing the cut after layer `i` for one sample.
+    fn cut_bytes(&self, i: usize) -> u64;
+    /// Input activation bytes of layer `lo` for one sample.
+    fn stage_in_bytes(&self, lo: usize) -> u64;
+    /// Whole-network (fwd+bwd) time of one sample on device `dev` — the
+    /// `T_n` of Eq. 1.
+    fn whole_net_time(&self, dev: usize) -> f64;
+
+    /// Forward + backward time of layers `lo..hi` on device `dev`.
+    fn fb_time(&self, dev: usize, lo: usize, hi: usize, micro: f64) -> f64 {
+        self.fwd_time(dev, lo, hi, micro) + self.bwd_time(dev, lo, hi, micro)
+    }
+
+    /// Eq. 1: the harmonic-mean ideal per-stage time. On a [`RangeCost`]
+    /// the whole-network times are precomputed at build, so this is
+    /// `O(N)` instead of the `O(N·L)` re-summation `Profile` performs.
+    fn eq1_ideal_time(&self) -> f64 {
+        let inv_sum: f64 = (0..self.n_devices()).map(|d| 1.0 / self.whole_net_time(d)).sum();
+        1.0 / inv_sum
+    }
+}
+
+impl CostModel for Profile {
+    fn n_layers(&self) -> usize {
+        Profile::n_layers(self)
+    }
+    fn n_devices(&self) -> usize {
+        Profile::n_devices(self)
+    }
+    fn dtype_bytes(&self) -> u64 {
+        self.dtype_bytes
+    }
+    fn fwd_time(&self, dev: usize, lo: usize, hi: usize, micro: f64) -> f64 {
+        Profile::fwd_time(self, dev, lo, hi, micro)
+    }
+    fn bwd_time(&self, dev: usize, lo: usize, hi: usize, micro: f64) -> f64 {
+        Profile::bwd_time(self, dev, lo, hi, micro)
+    }
+    fn param_bytes(&self, lo: usize, hi: usize) -> u64 {
+        Profile::param_bytes(self, lo, hi)
+    }
+    fn stash_bytes(&self, lo: usize, hi: usize) -> u64 {
+        Profile::stash_bytes(self, lo, hi)
+    }
+    fn cut_bytes(&self, i: usize) -> u64 {
+        Profile::cut_bytes(self, i)
+    }
+    fn stage_in_bytes(&self, lo: usize) -> u64 {
+        Profile::stage_in_bytes(self, lo)
+    }
+    fn whole_net_time(&self, dev: usize) -> f64 {
+        Profile::whole_net_time(self, dev)
+    }
+}
+
+/// Prefix tables over a [`Profile`]: per-`(device, micro)` range costs in
+/// O(1), with one table set serving every `micro` (see module docs).
+/// Flat row-major layout (`device × (L+1)`) keeps a device's prefixes on
+/// consecutive cache lines during the DP's inner loop.
+#[derive(Debug, Clone)]
+pub struct RangeCost {
+    n_devices: usize,
+    n_layers: usize,
+    dtype_bytes: u64,
+    /// Per-device prefixes of the micro-independent forward term
+    /// (`fwd_fixed + fwd·half_sat`), length `n_devices · (L+1)`.
+    fwd_const: Vec<f64>,
+    /// Per-device prefixes of the forward slope (`fwd`), multiplied by
+    /// `micro` at query time.
+    fwd_slope: Vec<f64>,
+    /// Backward analogue of `fwd_const`.
+    bwd_const: Vec<f64>,
+    /// Backward analogue of `fwd_slope`.
+    bwd_slope: Vec<f64>,
+    /// Parameter-count prefix (device-independent), length `L+1`.
+    params: Vec<u64>,
+    /// Stash-element prefix, length `L+1`.
+    stash: Vec<u64>,
+    /// Per-layer input activation elements (point lookups).
+    act_in: Vec<u64>,
+    /// Per-layer output activation elements (point lookups).
+    act_out: Vec<u64>,
+    /// Per-device whole-network (fwd+bwd) time at micro-batch 1, computed
+    /// once at build — Eq. 1 consumers stop re-summing the profile.
+    whole_net: Vec<f64>,
+    /// Every per-layer cost addend was non-negative at build, so every
+    /// prefix array is non-decreasing and range costs are non-increasing
+    /// in `lo` — the structural half of the monotone DP's soundness
+    /// argument. A profile with a negative cost (e.g. a noisy measured
+    /// fit) clears this and the DP keeps the exact linear scan.
+    costs_monotone: bool,
+}
+
+impl RangeCost {
+    /// Build the tables from a profile: `O(N·L)` once, `O(1)` per query
+    /// afterwards.
+    pub fn build(profile: &Profile) -> RangeCost {
+        let n = Profile::n_devices(profile);
+        let l = Profile::n_layers(profile);
+        let stride = l + 1;
+        let mut fwd_const = vec![0.0; n * stride];
+        let mut fwd_slope = vec![0.0; n * stride];
+        let mut bwd_const = vec![0.0; n * stride];
+        let mut bwd_slope = vec![0.0; n * stride];
+        let mut costs_monotone = true;
+        for (d, row) in profile.per_device.iter().enumerate() {
+            let base = d * stride;
+            for (i, c) in row.iter().enumerate() {
+                // half_sat <= 0 means eff = 1 (no saturation term).
+                let sat = if c.half_sat > 0.0 { c.half_sat } else { 0.0 };
+                let fc = c.fwd_fixed + c.fwd * sat;
+                let bc = c.bwd_fixed + c.bwd * sat;
+                costs_monotone &= fc >= 0.0 && bc >= 0.0 && c.fwd >= 0.0 && c.bwd >= 0.0;
+                fwd_const[base + i + 1] = fwd_const[base + i] + fc;
+                fwd_slope[base + i + 1] = fwd_slope[base + i] + c.fwd;
+                bwd_const[base + i + 1] = bwd_const[base + i] + bc;
+                bwd_slope[base + i + 1] = bwd_slope[base + i] + c.bwd;
+            }
+        }
+        let mut params = vec![0u64; stride];
+        let mut stash = vec![0u64; stride];
+        let mut act_in = vec![0u64; l];
+        let mut act_out = vec![0u64; l];
+        for (i, c) in profile.per_device[0].iter().enumerate() {
+            params[i + 1] = params[i] + c.params;
+            stash[i + 1] = stash[i] + c.stash_elems;
+            act_in[i] = c.act_in_elems;
+            act_out[i] = c.act_out_elems;
+        }
+        let mut rc = RangeCost {
+            n_devices: n,
+            n_layers: l,
+            dtype_bytes: profile.dtype_bytes,
+            fwd_const,
+            fwd_slope,
+            bwd_const,
+            bwd_slope,
+            params,
+            stash,
+            act_in,
+            act_out,
+            whole_net: Vec::new(),
+            costs_monotone,
+        };
+        rc.whole_net = (0..n)
+            .map(|d| {
+                CostModel::fwd_time(&rc, d, 0, l, 1.0) + CostModel::bwd_time(&rc, d, 0, l, 1.0)
+            })
+            .collect();
+        rc
+    }
+
+    /// True when every per-layer cost addend was non-negative at build
+    /// (always the case for the analytical profiler), which makes every
+    /// range cost non-increasing in `lo` — the precondition the DP's
+    /// monotone crossing search needs on the cost side. `false` routes
+    /// the DP to the exact linear scan.
+    pub fn costs_monotone(&self) -> bool {
+        self.costs_monotone
+    }
+
+    #[inline]
+    fn base(&self, dev: usize) -> usize {
+        dev * (self.n_layers + 1)
+    }
+}
+
+impl CostModel for RangeCost {
+    fn n_layers(&self) -> usize {
+        self.n_layers
+    }
+    fn n_devices(&self) -> usize {
+        self.n_devices
+    }
+    fn dtype_bytes(&self) -> u64 {
+        self.dtype_bytes
+    }
+    #[inline]
+    fn fwd_time(&self, dev: usize, lo: usize, hi: usize, micro: f64) -> f64 {
+        let b = self.base(dev);
+        (self.fwd_const[b + hi] - self.fwd_const[b + lo])
+            + micro * (self.fwd_slope[b + hi] - self.fwd_slope[b + lo])
+    }
+    #[inline]
+    fn bwd_time(&self, dev: usize, lo: usize, hi: usize, micro: f64) -> f64 {
+        let b = self.base(dev);
+        (self.bwd_const[b + hi] - self.bwd_const[b + lo])
+            + micro * (self.bwd_slope[b + hi] - self.bwd_slope[b + lo])
+    }
+    fn param_bytes(&self, lo: usize, hi: usize) -> u64 {
+        (self.params[hi] - self.params[lo]) * self.dtype_bytes
+    }
+    fn stash_bytes(&self, lo: usize, hi: usize) -> u64 {
+        (self.stash[hi] - self.stash[lo]) * self.dtype_bytes
+    }
+    fn cut_bytes(&self, i: usize) -> u64 {
+        self.act_out[i] * self.dtype_bytes
+    }
+    fn stage_in_bytes(&self, lo: usize) -> u64 {
+        self.act_in[lo] * self.dtype_bytes
+    }
+    fn whole_net_time(&self, dev: usize) -> f64 {
+        self.whole_net[dev]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::presets;
+    use crate::model::zoo;
+    use crate::profile::analytical;
+    use crate::util::rng::Rng;
+
+    fn close(a: f64, b: f64) -> bool {
+        let scale = a.abs().max(b.abs()).max(1e-300);
+        (a - b).abs() / scale < 1e-12
+    }
+
+    #[test]
+    fn byte_queries_bit_exact_with_profile() {
+        let net = zoo::vgg16(224);
+        let cl = presets::v100_cluster(2);
+        let p = analytical::profile(&net, &cl);
+        let rc = RangeCost::build(&p);
+        let l = p.n_layers();
+        for lo in 0..l {
+            for hi in lo..=l {
+                assert_eq!(CostModel::param_bytes(&rc, lo, hi), p.param_bytes(lo, hi));
+                assert_eq!(CostModel::stash_bytes(&rc, lo, hi), p.stash_bytes(lo, hi));
+            }
+            assert_eq!(CostModel::cut_bytes(&rc, lo), p.cut_bytes(lo));
+            assert_eq!(CostModel::stage_in_bytes(&rc, lo), p.stage_in_bytes(lo));
+        }
+    }
+
+    #[test]
+    fn time_queries_match_profile_across_micros() {
+        // The affine decomposition is algebraically exact; random ranges
+        // and micro-batch sizes must agree to rounding.
+        let net = zoo::resnet50(224);
+        let cl = presets::fpga_cluster(&["VCU129", "VCU118"]);
+        let p = analytical::profile(&net, &cl);
+        let rc = RangeCost::build(&p);
+        let l = p.n_layers();
+        let mut r = Rng::new(0xC0_57);
+        for _ in 0..500 {
+            let lo = (r.f64() * l as f64) as usize % l;
+            let hi = lo + 1 + (r.f64() * (l - lo) as f64) as usize;
+            let hi = hi.min(l);
+            let d = if r.f64() < 0.5 { 0 } else { 1 };
+            let micro = [1.0, 2.0, 8.0, 32.0, 128.0][(r.f64() * 5.0) as usize % 5];
+            let (a, b) = (CostModel::fwd_time(&rc, d, lo, hi, micro), p.fwd_time(d, lo, hi, micro));
+            assert!(close(a, b), "fwd d={d} {lo}..{hi} micro={micro}: {a} vs {b}");
+            let (a, b) = (CostModel::bwd_time(&rc, d, lo, hi, micro), p.bwd_time(d, lo, hi, micro));
+            assert!(close(a, b), "bwd d={d} {lo}..{hi} micro={micro}: {a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn whole_net_and_eq1_precomputed() {
+        let net = zoo::vgg16(224);
+        let cl = presets::fpga_cluster(&["VCU129", "VCU118", "VCU118"]);
+        let p = analytical::profile(&net, &cl);
+        let rc = RangeCost::build(&p);
+        for d in 0..p.n_devices() {
+            assert!(close(CostModel::whole_net_time(&rc, d), p.whole_net_time(d)), "dev {d}");
+        }
+        assert!(close(
+            CostModel::eq1_ideal_time(&rc),
+            crate::partition::interlayer::eq1_ideal_time(&p)
+        ));
+    }
+
+    #[test]
+    fn range_times_monotone_in_lo() {
+        // cost(lo, hi) must be non-increasing as lo grows — in FP, not
+        // just in exact arithmetic (prefixes of non-negative addends are
+        // monotone arrays, so the differences are ordered). The monotone
+        // DP's binary search relies on this.
+        let net = zoo::by_name("gnmt-l64").unwrap();
+        let cl = presets::v100_cluster(4);
+        let p = analytical::profile(&net, &cl);
+        let rc = RangeCost::build(&p);
+        let l = p.n_layers();
+        for micro in [1.0, 8.0] {
+            for lo in 0..l - 1 {
+                let a = CostModel::fb_time(&rc, 0, lo, l, micro);
+                let b = CostModel::fb_time(&rc, 0, lo + 1, l, micro);
+                assert!(b <= a, "lo={lo}: {b} > {a}");
+            }
+        }
+    }
+
+    #[test]
+    fn empty_range_is_zero() {
+        let net = zoo::mlp(&[8, 8]);
+        let cl = presets::v100_cluster(1);
+        let p = analytical::profile(&net, &cl);
+        let rc = RangeCost::build(&p);
+        assert_eq!(CostModel::fwd_time(&rc, 0, 1, 1, 4.0), 0.0);
+        assert_eq!(CostModel::param_bytes(&rc, 1, 1), 0);
+    }
+}

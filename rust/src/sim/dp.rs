@@ -64,12 +64,18 @@ pub fn minibatch(profile: &Profile, cluster: &Cluster, b: f64) -> DpResult {
     DpResult { minibatch_time: compute + allreduce, compute, allreduce, memory, fits }
 }
 
+/// Epoch time from an already-computed [`minibatch`] result — callers
+/// holding a `DpResult` (the planner computes one for the feasibility
+/// check) convert it without re-summing the whole-network profile.
+pub fn epoch_from(r: &DpResult, cluster: &Cluster, b: f64, samples: usize) -> f64 {
+    let global_batch = b * cluster.len() as f64;
+    (samples as f64 / global_batch).ceil() * r.minibatch_time
+}
+
 /// Epoch time for `samples` training samples at per-device batch `b`.
 pub fn epoch_time(profile: &Profile, cluster: &Cluster, b: f64, samples: usize) -> f64 {
     let r = minibatch(profile, cluster, b);
-    let global_batch = b * cluster.len() as f64;
-    let n_mb = (samples as f64 / global_batch).ceil();
-    n_mb * r.minibatch_time
+    epoch_from(&r, cluster, b, samples)
 }
 
 #[cfg(test)]

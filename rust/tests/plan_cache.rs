@@ -1,0 +1,117 @@
+//! Cross-scenario plan cache (`bapipe explore --plan-cache`), end to end:
+//!
+//! * a cache persisted after one exploration and restored for an
+//!   identical `(model, cluster)` scenario answers **every** phase-A
+//!   partition request from memory (zero misses — phase A is skipped),
+//!   and the exploration selects a bit-identical plan;
+//! * the `(model, cluster)` fingerprint gates reuse: a different model
+//!   (or cluster, or device-order space) rejects the cache instead of
+//!   silently poisoning the search.
+
+use bapipe::cluster::presets;
+use bapipe::model::zoo;
+use bapipe::planner::{self, store, EvalCache, Options, SearchSpace};
+use bapipe::profile::analytical;
+
+#[test]
+fn plan_cache_skips_phase_a_on_reuse() {
+    let net = zoo::vgg16(224);
+    let cl = presets::v100_cluster(4);
+    let prof = analytical::profile(&net, &cl);
+    let opts =
+        Options { batch_per_device: 32.0, samples_per_epoch: 8192, ..Default::default() };
+    let fp = store::fingerprint(&net, &cl, &prof);
+    let space = SearchSpace::bapipe(&cl, &opts);
+
+    let path = std::env::temp_dir().join("bapipe-plan-cache-test.json");
+    let path = path.to_str().unwrap().to_string();
+    let _ = std::fs::remove_file(&path);
+
+    // First run: cold cache — phase A computes the seeds and fine-tunes.
+    let mut cold = EvalCache::new();
+    let first = planner::explore_with_cache(&net, &cl, &prof, &opts, &mut cold);
+    assert!(cold.misses > 0, "cold run must run partition passes");
+    store::save(&path, &cold, &fp, &space.device_orders).unwrap();
+
+    // Second run: the restored cache answers every phase-A request.
+    let mut warm = match store::load(&path, &fp, &space.device_orders) {
+        store::CacheLoad::Loaded(cache) => cache,
+        store::CacheLoad::Fresh(why) => panic!("expected the cache to load: {why}"),
+    };
+    let second = planner::explore_with_cache(&net, &cl, &prof, &opts, &mut warm);
+    assert_eq!(warm.misses, 0, "phase A must be skipped entirely on reuse");
+    assert!(warm.hits > 0);
+    assert_eq!(first.choice, second.choice);
+    assert_eq!(first.epoch_time, second.epoch_time);
+    assert_eq!(first.minibatch_time, second.minibatch_time);
+    assert_eq!(first.stage_memory, second.stage_memory);
+    assert_eq!(
+        first.report.evaluations, second.report.evaluations,
+        "per-candidate outcomes must be bit-identical across cache reuse"
+    );
+
+    // A different scenario computes a different fingerprint and rejects
+    // the persisted cache.
+    let net2 = zoo::resnet50(224);
+    let prof2 = analytical::profile(&net2, &cl);
+    let fp2 = store::fingerprint(&net2, &cl, &prof2);
+    assert_ne!(fp, fp2, "distinct scenarios must fingerprint differently");
+    match store::load(&path, &fp2, &space.device_orders) {
+        store::CacheLoad::Fresh(reason) => {
+            assert!(reason.contains("stale"), "unexpected reason: {reason}")
+        }
+        store::CacheLoad::Loaded(_) => panic!("a stale cache must not load"),
+    }
+
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn plan_cache_round_trips_heterogeneous_permuted_scenario() {
+    // Permutation search stores per-`perm` entries; the persisted
+    // device-order list pins their meaning. A run with a different
+    // --permute setting (different order space) must reject the cache.
+    let net = zoo::vgg16(224);
+    let cl = presets::fpga_cluster(&["VCU129", "VCU118"]);
+    let prof = analytical::profile(&net, &cl);
+    let opts = Options {
+        batch_per_device: 4.0,
+        samples_per_epoch: 8192,
+        consider_dp: false,
+        permute_devices: true,
+        ..Default::default()
+    };
+    let fp = store::fingerprint(&net, &cl, &prof);
+    let space = SearchSpace::bapipe(&cl, &opts);
+    assert!(space.device_orders.len() > 1, "heterogeneous pair has 2 orderings");
+
+    let path = std::env::temp_dir().join("bapipe-plan-cache-perm-test.json");
+    let path = path.to_str().unwrap().to_string();
+    let _ = std::fs::remove_file(&path);
+
+    let mut cold = EvalCache::new();
+    let first = planner::explore_with_cache(&net, &cl, &prof, &opts, &mut cold);
+    store::save(&path, &cold, &fp, &space.device_orders).unwrap();
+
+    let mut warm = match store::load(&path, &fp, &space.device_orders) {
+        store::CacheLoad::Loaded(cache) => cache,
+        store::CacheLoad::Fresh(why) => panic!("expected the cache to load: {why}"),
+    };
+    let second = planner::explore_with_cache(&net, &cl, &prof, &opts, &mut warm);
+    assert_eq!(warm.misses, 0);
+    assert_eq!(first.choice, second.choice);
+    assert_eq!(first.device_order, second.device_order);
+    assert_eq!(first.epoch_time, second.epoch_time);
+
+    // identity-only run (no --permute): different order space → fresh
+    let identity_space =
+        SearchSpace::bapipe(&cl, &Options { permute_devices: false, ..opts });
+    match store::load(&path, &fp, &identity_space.device_orders) {
+        store::CacheLoad::Fresh(reason) => {
+            assert!(reason.contains("stale"), "unexpected reason: {reason}")
+        }
+        store::CacheLoad::Loaded(_) => panic!("mismatched order space must not load"),
+    }
+
+    let _ = std::fs::remove_file(&path);
+}

@@ -17,8 +17,11 @@
 
 use bapipe::cluster::presets;
 use bapipe::model::zoo;
+use bapipe::partition::interlayer::{
+    dp_optimal_prefix, dp_optimal_rc, dp_optimal_reference, max_stage_time,
+};
 use bapipe::planner::{self, Options, Outcome};
-use bapipe::profile::analytical;
+use bapipe::profile::{analytical, RangeCost};
 use bapipe::util::json::Json;
 use bapipe::util::prop::{check, ensure, Config};
 
@@ -295,6 +298,77 @@ fn emitted_plan_round_trips() {
             .unwrap();
     assert_eq!(back.choice, plan.choice);
     assert_eq!(back.report, plan.report);
+}
+
+#[test]
+fn prefix_monotone_dp_bit_exact_with_reference() {
+    // The PR's oracle guarantee, swept across zoo models × homogeneous
+    // and heterogeneous clusters × the micro grid × with/without per-cut
+    // communication costs:
+    //
+    // 1. against the retained seed triple loop (`dp_optimal_reference`)
+    //    evaluated over the *same* prefix tables, both the prefix scan
+    //    and the monotone crossing search select bit-identical partitions
+    //    (provable: identical cost values, identical tie-breaking);
+    // 2. across cost backings (`Profile` re-summation vs prefix
+    //    differences) the selected partitions attain the same optimal
+    //    max-stage cost — summation order may break *exact* ties between
+    //    equally-optimal partitions (GNMT's uniform layer chain ties
+    //    constantly), so the value, not the bounds, is the invariant.
+    let clusters = [
+        presets::v100_cluster(4),
+        presets::v100_cluster(8),
+        presets::fpga_cluster(&["VCU129", "VCU118"]),
+        presets::fpga_cluster(&["VCU129", "VCU129", "VCU118", "VCU118"]),
+    ];
+    for model in ["vgg16", "resnet50", "gnmt8", "alexnet", "gnmt-l64"] {
+        let net = zoo::by_name(model).unwrap();
+        let cuts = net.legal_cuts();
+        for cl in &clusters {
+            if cuts.len() + 1 < cl.len() {
+                continue; // not enough cut points for this many stages
+            }
+            let prof = analytical::profile(&net, cl);
+            let rc = RangeCost::build(&prof);
+            for micro in [1.0f64, 4.0, 32.0] {
+                for with_cut_cost in [false, true] {
+                    let comm = |stage: usize, cut_layer: usize| -> f64 {
+                        let bytes = prof.cut_bytes(cut_layer) as f64 * micro;
+                        cl.link(stage).xfer_time(bytes) * 2.0
+                    };
+                    let cc: Option<&dyn Fn(usize, usize) -> f64> =
+                        if with_cut_cost { Some(&comm) } else { None };
+                    let ctx = format!(
+                        "{model} on {} micro={micro} cut_cost={with_cut_cost}",
+                        cl.describe()
+                    );
+
+                    let oracle = dp_optimal_reference(&rc, cl, &cuts, micro, cc).unwrap();
+                    let prefix = dp_optimal_prefix(&rc, cl, &cuts, micro, cc).unwrap();
+                    let fast = dp_optimal_rc(&rc, cl, &cuts, micro, cc).unwrap();
+                    assert_eq!(oracle.bounds, prefix.bounds, "prefix vs oracle: {ctx}");
+                    assert_eq!(oracle.bounds, fast.bounds, "monotone vs oracle: {ctx}");
+
+                    let seed = dp_optimal_reference(&prof, cl, &cuts, micro, cc).unwrap();
+                    let t_of = |p: &bapipe::partition::Partition| {
+                        let comm_of = |i: usize| {
+                            if with_cut_cost {
+                                comm(i, p.bounds[i + 1] - 1)
+                            } else {
+                                0.0
+                            }
+                        };
+                        max_stage_time(&prof, p, micro, Some(&comm_of))
+                    };
+                    let (t_seed, t_fast) = (t_of(&seed), t_of(&fast));
+                    assert!(
+                        (t_seed - t_fast).abs() <= 1e-9 * t_seed.max(t_fast),
+                        "optimal value diverged across backings: {t_fast} vs {t_seed} ({ctx})"
+                    );
+                }
+            }
+        }
+    }
 }
 
 #[test]
