@@ -72,7 +72,7 @@ fn main() {
 
     // Phase A in isolation: the balance-seed DPs + memory fine-tunes that
     // `EvalCache::prewarm` fans out per distinct (perm, micro) work item.
-    let space = SearchSpace::bapipe(&cl, &mk_opts(1));
+    let space = SearchSpace::bapipe(&net, &cl, &prof, &mk_opts(1));
     let views: Vec<_> =
         space.device_orders.iter().map(|o| permuted_view(&cl, &prof, o)).collect();
     let cands = space.candidates(stages);
@@ -152,6 +152,58 @@ fn main() {
         plan1.report.evaluations.len()
     );
 
+    // ---- Device-order neighbourhood search on a heterogeneous
+    // 16-device GPU mix (the axis the planner hard-skipped above 8
+    // devices): identity alternates V100/P100, so the search has real
+    // work — and jobs=1 vs jobs=8 must land on identical plans.
+    let het_n = 16usize;
+    let het_cl = presets::gpu_mixed_cluster(het_n);
+    let het_model = "vgg16";
+    let het_net = zoo::by_name(het_model).unwrap();
+    let het_prof = analytical::profile(&het_net, &het_cl);
+    let het_budget = if quick { 160 } else { 512 };
+    let mk_het = |jobs: usize| Options {
+        batch_per_device: 8.0,
+        samples_per_epoch: 4096,
+        consider_dp: false,
+        permute_devices: true,
+        order_search: true,
+        order_budget: het_budget,
+        jobs,
+        ..Default::default()
+    };
+    let os1 = bench("planner/order-search 16-device jobs=1", aw, ai, || {
+        std::hint::black_box(
+            planner::explore(&het_net, &het_cl, &het_prof, &mk_het(1)).epoch_time,
+        );
+    });
+    let os8 = bench("planner/order-search 16-device jobs=8", aw, ai, || {
+        std::hint::black_box(
+            planner::explore(&het_net, &het_cl, &het_prof, &mk_het(8)).epoch_time,
+        );
+    });
+    let het_plan = planner::explore(&het_net, &het_cl, &het_prof, &mk_het(1));
+    let het_plan8 = planner::explore(&het_net, &het_cl, &het_prof, &mk_het(8));
+    assert_eq!(het_plan.choice, het_plan8.choice, "order search must be jobs-independent");
+    assert_eq!(het_plan.device_order, het_plan8.device_order);
+    let het_identity = planner::explore(
+        &het_net,
+        &het_cl,
+        &het_prof,
+        &Options { permute_devices: false, ..mk_het(1) },
+    );
+    let het_orders =
+        het_plan.report.evaluations.iter().map(|e| e.candidate.perm).max().unwrap_or(0) + 1;
+    let non_identity = het_plan.device_order != (0..het_n).collect::<Vec<usize>>();
+    println!(
+        "  order search ({het_n}-device gpu-mixed, budget {het_budget}): epoch {:.1}s vs \
+         identity {:.1}s ({} orders evaluated, winner {})",
+        het_plan.epoch_time,
+        het_identity.epoch_time,
+        het_orders,
+        if non_identity { "non-identity" } else { "identity" },
+    );
+
     // ---- Emit the measured trajectory.
     let doc = obj(vec![
         ("bench", Json::from("planner_scale")),
@@ -190,6 +242,25 @@ fn main() {
                 ("monotone_ms", Json::Num(dp_mono.p50 * 1e3)),
                 ("speedup_reference_over_prefix", Json::Num(dp_ref.p50 / dp_pre.p50)),
                 ("speedup_reference_over_monotone", Json::Num(dp_speedup)),
+            ]),
+        ),
+        (
+            "order_search",
+            obj(vec![
+                ("devices", Json::from(het_n)),
+                ("model", Json::from(het_model)),
+                ("cluster", Json::from(het_cl.describe())),
+                ("budget", Json::from(het_budget)),
+                ("jobs1_ms", Json::Num(os1.p50 * 1e3)),
+                ("jobs8_ms", Json::Num(os8.p50 * 1e3)),
+                ("orders_evaluated", Json::from(het_orders)),
+                ("epoch_s", Json::Num(het_plan.epoch_time)),
+                ("identity_epoch_s", Json::Num(het_identity.epoch_time)),
+                (
+                    "speedup_over_identity",
+                    Json::Num(het_identity.epoch_time / het_plan.epoch_time),
+                ),
+                ("non_identity_winner", Json::from(non_identity)),
             ]),
         ),
         (

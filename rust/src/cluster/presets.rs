@@ -40,6 +40,34 @@ pub fn v100_cluster(n: usize) -> Cluster {
     Cluster::homogeneous(v100(), pcie_gen3_x16(), n)
 }
 
+/// NVIDIA P100 (16 GB), fp32 training — the previous-generation board of
+/// the heterogeneous GPU mixes (the §4.3 placement axis on GPU racks:
+/// mixed-generation clusters are the common datacenter reality).
+pub fn p100() -> Device {
+    Device {
+        name: "P100".into(),
+        peak_flops: 9.5e12,           // fp32 CUDA-core peak (GP100)
+        mem_bw: 720e9,                // HBM2, first generation
+        mem_capacity: 16 * GIB,
+        onchip_capacity: 0,
+        onchip_bw: 0.0,
+        exec: ExecMode::Sync,
+        batch_half_sat: 4.0,
+        dsp_slices: 0,
+    }
+}
+
+/// Heterogeneous GPU chain alternating V100 (even slots) and P100 (odd
+/// slots) on PCIe gen3 x16 — the ≥16-device scenario class the
+/// device-order neighbourhood search targets: the alternating identity
+/// layout interleaves fast and slow boards, so sorted layouts beat it.
+pub fn gpu_mixed_cluster(n: usize) -> Cluster {
+    let devices: Vec<Device> =
+        (0..n).map(|i| if i % 2 == 0 { v100() } else { p100() }).collect();
+    let links = vec![pcie_gen3_x16(); n.saturating_sub(1)];
+    Cluster::new(devices, links)
+}
+
 /// FPDeep-style FPGA compute peak: `dsp` MACs/cycle at `mhz` MHz, 2 FLOPs
 /// per MAC (fp16 DSP packing).
 fn fpga_peak(dsp: u64, mhz: f64) -> f64 {
@@ -145,6 +173,19 @@ mod tests {
     #[should_panic(expected = "unknown FPGA board")]
     fn unknown_board_rejected() {
         fpga_cluster(&["VCU999"]);
+    }
+
+    #[test]
+    fn gpu_mixed_cluster_alternates_generations() {
+        let c = gpu_mixed_cluster(16);
+        assert_eq!(c.len(), 16);
+        assert!(!c.is_homogeneous());
+        assert!(!c.all_async(), "GPU mixes stay on the sync schedules");
+        for (i, d) in c.devices.iter().enumerate() {
+            assert_eq!(d.name, if i % 2 == 0 { "V100" } else { "P100" }, "slot {i}");
+        }
+        assert!(p100().peak_flops < v100().peak_flops);
+        assert_eq!(c.links.len(), 15);
     }
 
     #[test]

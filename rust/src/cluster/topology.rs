@@ -49,6 +49,25 @@ impl Cluster {
         self.devices.windows(2).all(|w| w[0].name == w[1].name)
     }
 
+    /// Dense device-name ids in first-appearance order along the chain:
+    /// `ids[i] == ids[j]` iff devices `i` and `j` are the same model. The
+    /// planner keys device-order dedup and probe memos on these, so the
+    /// equivalence ("permuting two identical boards changes nothing") is
+    /// defined in exactly one place.
+    pub fn name_ids(&self) -> Vec<usize> {
+        let mut names: Vec<&str> = Vec::new();
+        self.devices
+            .iter()
+            .map(|d| match names.iter().position(|&n| n == d.name) {
+                Some(i) => i,
+                None => {
+                    names.push(&d.name);
+                    names.len() - 1
+                }
+            })
+            .collect()
+    }
+
     /// Can this cluster run asynchronous schedules (all devices Async)?
     pub fn all_async(&self) -> bool {
         self.devices.iter().all(|d| d.exec == ExecMode::Async)
@@ -126,6 +145,13 @@ mod tests {
     fn wrong_link_count() {
         let d = presets::v100();
         Cluster::new(vec![d.clone(), d], vec![]);
+    }
+
+    #[test]
+    fn name_ids_are_first_appearance_dense() {
+        let c = presets::fpga_cluster(&["VCU129", "VCU118", "VCU129", "VCU118"]);
+        assert_eq!(c.name_ids(), vec![0, 1, 0, 1]);
+        assert_eq!(presets::v100_cluster(3).name_ids(), vec![0, 0, 0]);
     }
 
     #[test]

@@ -42,7 +42,11 @@
 //! //    B (trace-free SoA DES over per-worker arenas) both fanned out
 //! //    over 4 worker threads, with adaptive M bisection around the
 //! //    incumbent. `planner::store` persists the partition cache across
-//! //    invocations (`bapipe explore --plan-cache`).
+//! //    invocations (`bapipe explore --plan-cache`). On heterogeneous
+//! //    clusters `permute_devices` widens the space with device
+//! //    orderings: exhaustive up to 8 devices, and past that the
+//! //    `planner::orders` neighbourhood search (`order_search`) —
+//! //    seeded heuristic layouts hill-climbed under a probe budget.
 //! let opts = planner::Options { jobs: 4, adaptive_m: true, ..Default::default() };
 //! let plan = planner::explore(&net, &cl, &prof, &opts);
 //! println!("{}", plan.summary());

@@ -3,7 +3,8 @@
 //! Subcommands:
 //!   explore   — run the Fig.-3 auto-exploration on a zoo model + cluster
 //!               (--jobs N parallel phases A+B, --emit plan.json artifact,
-//!               --permute device-order search, --no-prune exhaustive,
+//!               --permute device-order search, --order-search/--order-budget
+//!               neighbourhood search past 8 devices, --no-prune exhaustive,
 //!               --adaptive-m incumbent-bisection M refinement,
 //!               --plan-cache path: persist/restore the partition cache
 //!               keyed on a (model, cluster) fingerprint so repeated
@@ -40,8 +41,11 @@ fn cluster_by_name(name: &str, n: usize) -> Cluster {
             boards.extend(vec!["VCU118"; n - n / 2]);
             presets::fpga_cluster(&boards)
         }
+        "gpu-mixed" => presets::gpu_mixed_cluster(n),
         "cpu" => presets::cpu_cluster(n),
-        other => panic!("unknown cluster `{other}` (v100|vcu118|vcu129|fpga-mixed|cpu)"),
+        other => {
+            panic!("unknown cluster `{other}` (v100|vcu118|vcu129|fpga-mixed|gpu-mixed|cpu)")
+        }
     }
 }
 
@@ -64,6 +68,9 @@ fn main() -> bapipe::Result<()> {
                 jobs: args.get_usize("jobs", 1),
                 prune: !args.has_flag("no-prune"),
                 permute_devices: args.has_flag("permute"),
+                order_search: args.has_flag("order-search"),
+                order_budget: args
+                    .get_usize("order-budget", planner::orders::ORDER_BUDGET_DEFAULT),
                 adaptive_m: args.has_flag("adaptive-m"),
                 ..Default::default()
             };
@@ -73,7 +80,7 @@ fn main() -> bapipe::Result<()> {
                     // the (model, cluster) fingerprint and device-order
                     // space match, persist the (possibly grown) cache after.
                     let fp = planner::store::fingerprint(&net, &cl, &prof);
-                    let space = planner::SearchSpace::bapipe(&cl, &opts);
+                    let space = planner::SearchSpace::bapipe(&net, &cl, &prof, &opts);
                     let mut cache = match planner::store::load(path, &fp, &space.device_orders)
                     {
                         planner::store::CacheLoad::Loaded(cache) => {
@@ -85,7 +92,12 @@ fn main() -> bapipe::Result<()> {
                             planner::EvalCache::new()
                         }
                     };
-                    let plan = planner::explore_with_cache(&net, &cl, &prof, &opts, &mut cache);
+                    // Reuse the space built for cache validation: past 8
+                    // devices its construction ran the budgeted order
+                    // discovery, which must not run twice.
+                    let plan = planner::explore_with_cache_in_space(
+                        &net, &cl, &prof, &space, &opts, &mut cache,
+                    );
                     planner::store::save(path, &cache, &fp, &space.device_orders)?;
                     println!("plan cache: saved {path}");
                     plan
@@ -242,6 +254,9 @@ fn main() -> bapipe::Result<()> {
                    bapipe explore --model vgg16 --cluster v100 --n 4 --batch 32\n\
                    bapipe explore --model resnet50 --cluster fpga-mixed --n 4 --batch 4 \\\n\
                        --jobs 8 --permute --adaptive-m --emit plan.json\n\
+                   bapipe explore --model vgg16 --cluster gpu-mixed --n 16 --batch 8 \\\n\
+                       --jobs 8 --permute --order-search --order-budget 512\n\
+                       # past 8 devices: neighbourhood search over device orderings\n\
                    bapipe explore --model gnmt-l128 --cluster v100 --n 64 \\\n\
                        --plan-cache plan-cache.json   # 2nd run skips phase A\n\
                    bapipe plan diff old-plan.json new-plan.json\n\

@@ -18,6 +18,14 @@
 //! are micro-independent) — so the sequential path, the parallel prewarm
 //! and a cache restored from disk all produce bit-identical plans.
 //!
+//! The `perm` component of both keys indexes the search space's device
+//! orderings. Since the neighbourhood search landed ([`super::orders`]),
+//! that list is a *discovered set* past 8 devices — not a fixed
+//! enumeration — so a persisted cache stores the order list alongside the
+//! fingerprint and [`EvalCache::from_json`] rejects any document whose
+//! discovered set differs (the `perm` indices would otherwise point at
+//! different layouts).
+//!
 //! The cache also serializes: [`EvalCache::to_json`] /
 //! [`EvalCache::from_json`] persist both levels keyed by a scenario
 //! fingerprint, which is how `bapipe explore --plan-cache` skips phase A

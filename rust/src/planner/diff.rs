@@ -146,6 +146,7 @@ mod tests {
             jobs: 1,
             ineligible: Vec::new(),
             notes: Vec::new(),
+            order_provenance: Vec::new(),
             evaluations: Vec::new(),
             simulated_count: 0,
             pruned_count: 0,

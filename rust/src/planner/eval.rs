@@ -101,8 +101,14 @@ pub fn fits(
 /// single source of truth for the planner's divisibility rule — the
 /// phase-A prewarm skip-set and the per-candidate rejection in
 /// [`prepare`] must always agree.
+///
+/// The global batch arrives as `B × N` computed in f64, which can land a
+/// hair below the intended integer (7.999999999999999 × 4 =
+/// 31.999999999999996); `as usize` truncation turned that into 31 and
+/// silently rejected every divisor of 32, so the value is *rounded* to
+/// the nearest integer instead.
 pub(crate) fn divides_global(global_batch: f64, m: usize) -> bool {
-    m != 0 && (global_batch as usize) % m == 0
+    m != 0 && (global_batch.round() as usize) % m == 0
 }
 
 /// A candidate that survived phase A: its DES spec, partition and
@@ -151,8 +157,8 @@ pub fn evaluate_pipeline(
     opts: &Options,
 ) -> Option<(f64, f64, Partition)> {
     let n = cluster.len();
-    let global = opts.batch_per_device * n as f64;
-    if m == 0 || (global as usize) % m != 0 {
+    let global = crate::util::canonical_global_batch(opts.batch_per_device, n);
+    if !divides_global(global, m) {
         return None;
     }
     let micro = global / m as f64;
@@ -173,6 +179,21 @@ mod tests {
     use crate::cluster::presets;
     use crate::model::zoo;
     use crate::profile::analytical;
+
+    #[test]
+    fn divisibility_rounds_the_global_batch() {
+        // 7.999999999999999 × 4 = 31.999999999999996: truncation saw 31
+        // (a prime!) and rejected every divisor of the intended batch.
+        let global = 7.999999999999999_f64 * 4.0;
+        assert!(global < 32.0, "the premise: the f64 product lands below 32");
+        assert!(divides_global(global, 32), "M=32 must survive rounding");
+        assert!(divides_global(global, 8));
+        assert!(!divides_global(global, 5), "rounding must not loosen the filter");
+        // exact integers behave as before
+        assert!(divides_global(128.0, 32));
+        assert!(!divides_global(128.0, 3));
+        assert!(!divides_global(128.0, 0), "M=0 never divides");
+    }
 
     #[test]
     fn prepare_rejects_non_divisor_m() {

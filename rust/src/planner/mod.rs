@@ -7,6 +7,13 @@
 //!
 //! * [`space::SearchSpace`] — enumerates candidates (schedule kind ×
 //!   micro-batch count × device orderings for heterogeneous clusters);
+//! * [`orders`] — past the 8-device exhaustive wall, a deterministic
+//!   neighbourhood search over device orderings (`--order-search`):
+//!   heuristic seed layouts hill-climbed by swap / adjacent-insert /
+//!   segment-reverse moves, scored by the phase-A partition DP
+//!   bottleneck under a bounded probe budget, with probes fanned over
+//!   `--jobs` exactly like the prewarm — the discovered set becomes the
+//!   candidate `perm` axis;
 //! * [`cache::EvalCache`] — memoizes partition work at the granularity
 //!   it actually varies: the kind-independent balance passes once per
 //!   `micro`, the memory fine-tune once per (Tables 1–2 memory class, M)
@@ -51,6 +58,7 @@ pub mod bounds;
 pub mod cache;
 pub mod diff;
 pub mod eval;
+pub mod orders;
 pub mod report;
 pub mod space;
 pub mod store;
@@ -96,6 +104,16 @@ pub struct Options {
     /// along the pipeline chain (e.g. which FPGA of a VCU129/VCU118 mix
     /// hosts the first stage).
     pub permute_devices: bool,
+    /// Past 8 devices, replace the (skipped) exhaustive device-order
+    /// enumeration with the [`orders`] neighbourhood search: a heuristic
+    /// seed portfolio hill-climbed under a bounded probe budget. Only
+    /// consulted when `permute_devices` is set; at ≤ 8 devices the
+    /// exhaustive enumeration runs unchanged.
+    pub order_search: bool,
+    /// Probe budget of the neighbourhood search (each probe scores one
+    /// ordering via the phase-A partition DP); usage is reported in the
+    /// search-space notes.
+    pub order_budget: usize,
     /// After the fixed M grid, bisect the micro-batch count around the
     /// incumbent (divisors of the global mini-batch between the winner
     /// and its evaluated neighbours, repeatedly). Only ever *adds*
@@ -114,6 +132,8 @@ impl Default for Options {
             jobs: 1,
             prune: true,
             permute_devices: false,
+            order_search: false,
+            order_budget: orders::ORDER_BUDGET_DEFAULT,
             adaptive_m: false,
         }
     }
@@ -189,7 +209,10 @@ fn explore_space_with(
     incumbent_seed: f64,
 ) -> ExplorationReport {
     let n = cluster.len();
-    let global = space.batch_per_device * n as f64;
+    // Canonical (float-noise-snapped) global batch: micro sizes, the
+    // divisibility filter and the epoch's mini-batch count must all see
+    // the same value (`util::canonical_global_batch`).
+    let global = crate::util::canonical_global_batch(space.batch_per_device, n);
     let n_mb = (opts.samples_per_epoch as f64 / global).ceil() as usize;
 
     // Per-permutation views of the cluster and profile.
@@ -297,6 +320,7 @@ fn explore_space_with(
         jobs: opts.jobs.max(1),
         ineligible: space.ineligible.clone(),
         notes: space.notes.clone(),
+        order_provenance: space.order_provenance.clone(),
         evaluations,
         simulated_count,
         pruned_count,
@@ -348,7 +372,13 @@ fn refine_m(
     cache: &mut EvalCache,
     report: &mut ExplorationReport,
 ) {
-    let global = (space.batch_per_device * cluster.len() as f64) as usize;
+    // Round, never truncate: a global batch computed in f64 can land a
+    // hair below its intended integer (7.999999999999999 × 4 =
+    // 31.999999999999996), and truncating it to 31 would bisect the
+    // divisor axis of the wrong number (see `eval::divides_global`).
+    let global =
+        crate::util::canonical_global_batch(space.batch_per_device, cluster.len()).round()
+            as usize;
     if global == 0 {
         return;
     }
@@ -391,6 +421,7 @@ fn refine_m(
             batch_per_device: space.batch_per_device,
             device_orders: space.device_orders.clone(),
             notes: Vec::new(),
+            order_provenance: Vec::new(), // already reported by the grid pass
         };
         let sub =
             explore_space_with(net, cluster, profile, &sub_space, opts, cache, best_epoch);
@@ -428,11 +459,27 @@ pub fn explore_with_cache(
     opts: &Options,
     cache: &mut EvalCache,
 ) -> Plan {
-    let space = SearchSpace::bapipe(cluster, opts);
+    let space = SearchSpace::bapipe(net, cluster, profile, opts);
+    explore_with_cache_in_space(net, cluster, profile, &space, opts, cache)
+}
+
+/// [`explore_with_cache`] over a caller-built [`SearchSpace`]. The CLI's
+/// `--plan-cache` path builds the space once to validate the persisted
+/// cache against its device-order list; past 8 devices that construction
+/// runs the (budgeted, possibly expensive) `orders` discovery, so the
+/// exploration must reuse the space instead of discovering a second time.
+pub fn explore_with_cache_in_space(
+    net: &Network,
+    cluster: &Cluster,
+    profile: &Profile,
+    space: &SearchSpace,
+    opts: &Options,
+    cache: &mut EvalCache,
+) -> Plan {
     let mut report =
-        explore_space_with(net, cluster, profile, &space, opts, cache, f64::INFINITY);
+        explore_space_with(net, cluster, profile, space, opts, cache, f64::INFINITY);
     if opts.adaptive_m {
-        refine_m(net, cluster, profile, &space, opts, cache, &mut report);
+        refine_m(net, cluster, profile, space, opts, cache, &mut report);
     }
 
     // DP baseline (the paper's 1x reference; ResNet-50's winner). The
@@ -623,6 +670,57 @@ mod tests {
         assert_eq!(
             &adaptive.report.evaluations[..fixed.report.evaluations.len()],
             &fixed.report.evaluations[..]
+        );
+    }
+
+    #[test]
+    fn global_batch_rounds_instead_of_truncating() {
+        // A per-device batch a hair below 8 (as a config file can easily
+        // produce) makes the f64 global batch 31.999999999999996; the old
+        // truncation turned that into 31 and the `% m == 0` filter
+        // rejected every divisor of 32, silently emptying the space.
+        let b = 7.999999999999999_f64;
+        assert!((b * 4.0) < 32.0, "the premise: the product lands below 32");
+        let net = zoo::vgg16(224);
+        let cl = presets::v100_cluster(4);
+        let prof = analytical::profile(&net, &cl);
+        let o = Options {
+            batch_per_device: b,
+            samples_per_epoch: 8192,
+            m_candidates: vec![32],
+            consider_dp: false,
+            ..Default::default()
+        };
+        let plan = explore(&net, &cl, &prof, &o);
+        assert!(
+            matches!(plan.choice, Choice::Pipeline { m: 32, .. }),
+            "M=32 must survive rounding: {:?}",
+            plan.report.log_lines()
+        );
+    }
+
+    #[test]
+    fn adaptive_m_bisects_the_rounded_global_batch() {
+        // refine_m derives the divisor axis from the same near-integer
+        // global batch: rounding gives the divisors of 32 (bisection from
+        // M=32 reaches 16); truncation gave the divisors of 31 (= {1, 31})
+        // and the refinement could only ever try M=1.
+        let net = zoo::vgg16(224);
+        let cl = presets::v100_cluster(4);
+        let prof = analytical::profile(&net, &cl);
+        let o = Options {
+            batch_per_device: 7.999999999999999,
+            samples_per_epoch: 8192,
+            m_candidates: vec![32],
+            consider_dp: false,
+            adaptive_m: true,
+            ..Default::default()
+        };
+        let plan = explore(&net, &cl, &prof, &o);
+        assert!(
+            plan.report.evaluations.iter().any(|e| e.candidate.m == 16),
+            "bisection must walk the divisors of the rounded global batch: {:?}",
+            plan.report.log_lines()
         );
     }
 

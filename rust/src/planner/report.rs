@@ -87,6 +87,11 @@ pub struct ExplorationReport {
     /// Search-space notes (e.g. a device-order search that was skipped
     /// or truncated) — anything the enumeration dropped is recorded here.
     pub notes: Vec<String>,
+    /// Per-device-order provenance when the neighbourhood search
+    /// discovered the order set (one line per `perm` index: which seed or
+    /// restart found it, climb length, bottleneck score). Empty for
+    /// enumerated or identity-only spaces.
+    pub order_provenance: Vec<String>,
     /// Every candidate in enumeration order with its outcome.
     pub evaluations: Vec<Evaluation>,
     /// Candidates that ran the discrete-event simulator.
@@ -127,8 +132,15 @@ impl ExplorationReport {
     /// (one line per ineligible kind, per candidate, and for the DP
     /// baseline).
     pub fn log_lines(&self) -> Vec<String> {
-        let mut lines = Vec::with_capacity(self.evaluations.len() + self.ineligible.len() + 1);
+        let mut lines = Vec::with_capacity(
+            self.evaluations.len()
+                + self.ineligible.len()
+                + self.notes.len()
+                + self.order_provenance.len()
+                + 1,
+        );
         lines.extend(self.notes.iter().cloned());
+        lines.extend(self.order_provenance.iter().cloned());
         for kind in &self.ineligible {
             lines.push(format!("{}: ineligible on {}", kind.label(), self.cluster));
         }
@@ -179,6 +191,12 @@ impl ExplorationReport {
                 Json::Arr(self.notes.iter().map(|n| Json::from(n.clone())).collect()),
             ),
             (
+                "order_provenance",
+                Json::Arr(
+                    self.order_provenance.iter().map(|n| Json::from(n.clone())).collect(),
+                ),
+            ),
+            (
                 "evaluations",
                 Json::Arr(self.evaluations.iter().map(evaluation_to_json).collect()),
             ),
@@ -216,6 +234,21 @@ impl ExplorationReport {
                     .ok_or_else(|| anyhow::anyhow!("bad note entry"))
             })
             .collect::<crate::Result<Vec<_>>>()?;
+        // Lenient: plan.json artifacts emitted before the device-order
+        // search existed have no `order_provenance` key.
+        let order_provenance = match j.get("order_provenance") {
+            None => Vec::new(),
+            Some(v) => v
+                .as_arr()
+                .ok_or_else(|| anyhow::anyhow!("`order_provenance` is not an array"))?
+                .iter()
+                .map(|v| {
+                    v.as_str()
+                        .map(str::to_string)
+                        .ok_or_else(|| anyhow::anyhow!("bad order_provenance entry"))
+                })
+                .collect::<crate::Result<Vec<_>>>()?,
+        };
         Ok(ExplorationReport {
             model: req_str(j, "model")?,
             cluster: req_str(j, "cluster")?,
@@ -224,6 +257,7 @@ impl ExplorationReport {
             jobs: req_usize(j, "jobs")?,
             ineligible,
             notes,
+            order_provenance,
             evaluations,
             simulated_count: req_usize(j, "simulated_count")?,
             pruned_count: req_usize(j, "pruned_count")?,
@@ -519,6 +553,7 @@ mod tests {
             jobs: 4,
             ineligible: vec![ScheduleKind::OneFOneBAs, ScheduleKind::FbpAs],
             notes: vec!["device-order search: identity only (homogeneous cluster)".into()],
+            order_provenance: vec!["order 0 [identity]: bottleneck 1.0000e-3".into()],
             evaluations: vec![
                 Evaluation {
                     candidate: Candidate {
@@ -627,6 +662,29 @@ mod tests {
             lines.iter().any(|l| l == "DP B=32: epoch infs (out of memory)"),
             "{lines:?}"
         );
+    }
+
+    #[test]
+    fn order_provenance_surfaces_in_log_and_parses_leniently() {
+        let r = sample_report();
+        assert!(
+            r.log_lines().iter().any(|l| l.contains("order 0 [identity]")),
+            "per-order provenance must reach the human-readable log"
+        );
+        // round trip keeps it
+        let back = ExplorationReport::from_json(
+            &Json::parse(&r.to_json().to_string_compact()).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(back.order_provenance, r.order_provenance);
+        // pre-order-search artifacts have no `order_provenance` key and
+        // must still load (as empty)
+        let mut j = r.to_json();
+        if let Json::Obj(m) = &mut j {
+            m.remove("order_provenance");
+        }
+        let old = ExplorationReport::from_json(&j).unwrap();
+        assert!(old.order_provenance.is_empty());
     }
 
     #[test]

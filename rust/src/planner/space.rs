@@ -4,10 +4,16 @@
 //! The space is data, not control flow: baselines restrict it (GPipe is
 //! the same machinery over a single kind) instead of reimplementing the
 //! exploration loop, and heterogeneous FPGA mixes can widen it with
-//! distinct device orderings along the pipeline chain.
+//! distinct device orderings along the pipeline chain. The device-order
+//! axis splits at the 8-device wall: up to 8 devices every distinct
+//! device-name sequence is enumerated outright (byte-for-byte the
+//! original behaviour); above that, `--order-search` runs the
+//! [`super::orders`] neighbourhood search instead of the old hard skip.
 
+use super::orders;
 use super::Options;
 use crate::cluster::Cluster;
+use crate::model::Network;
 use crate::profile::Profile;
 use crate::schedule::ScheduleKind;
 use std::collections::BTreeSet;
@@ -47,12 +53,23 @@ pub struct SearchSpace {
     /// search that was skipped or capped) — surfaced in the report so a
     /// dropped search dimension is never silent.
     pub notes: Vec<String>,
+    /// Per-entry provenance of `device_orders` when the neighbourhood
+    /// search produced them (which seed/restart, climb length, score);
+    /// empty for enumerated or identity-only spaces.
+    pub order_provenance: Vec<String>,
 }
 
 impl SearchSpace {
     /// The paper's Fig.-3 space: every eligible BaPipe schedule kind ×
-    /// the M grid (× device orderings when `opts.permute_devices`).
-    pub fn bapipe(cluster: &Cluster, opts: &Options) -> SearchSpace {
+    /// the M grid (× device orderings when `opts.permute_devices` — past
+    /// 8 devices the `net`/`profile`-driven neighbourhood search, when
+    /// `opts.order_search`).
+    pub fn bapipe(
+        net: &Network,
+        cluster: &Cluster,
+        profile: &Profile,
+        opts: &Options,
+    ) -> SearchSpace {
         let mut kinds = Vec::new();
         let mut ineligible = Vec::new();
         for kind in ScheduleKind::bapipe_candidates() {
@@ -62,7 +79,8 @@ impl SearchSpace {
                 ineligible.push(kind);
             }
         }
-        let (device_orders, notes) = device_orders(cluster, opts.permute_devices);
+        let (device_orders, notes, order_provenance) =
+            device_orders(net, cluster, profile, opts);
         SearchSpace {
             kinds,
             ineligible,
@@ -70,6 +88,7 @@ impl SearchSpace {
             batch_per_device: opts.batch_per_device,
             device_orders,
             notes,
+            order_provenance,
         }
     }
 
@@ -83,6 +102,7 @@ impl SearchSpace {
             batch_per_device: opts.batch_per_device,
             device_orders: vec![(0..cluster.len()).collect()],
             notes: Vec::new(),
+            order_provenance: Vec::new(),
         }
     }
 
@@ -104,7 +124,7 @@ impl SearchSpace {
     /// equal epoch times the earliest candidate wins, matching the seed
     /// explorer's first-strictly-better sequential rule.
     pub fn candidates(&self, n_devices: usize) -> Vec<Candidate> {
-        let global = self.batch_per_device * n_devices as f64;
+        let global = crate::util::canonical_global_batch(self.batch_per_device, n_devices);
         let mut out = Vec::with_capacity(self.device_orders.len() * self.kinds.len() * self.m_grid.len());
         for (perm, _) in self.device_orders.iter().enumerate() {
             for &kind in &self.kinds {
@@ -118,45 +138,86 @@ impl SearchSpace {
     }
 }
 
-/// The device orderings to explore (plus construction notes): identity
-/// always; on a heterogeneous cluster with permutation search enabled,
-/// every *distinct* device-name sequence (permuting two identical boards
-/// changes nothing), capped at [`MAX_DEVICE_ORDERS`]. A requested search
-/// that is skipped or capped is reported in the notes — never dropped
-/// silently.
-fn device_orders(cluster: &Cluster, permute: bool) -> (Vec<Vec<usize>>, Vec<String>) {
+/// The device orderings to explore, with construction notes and (for a
+/// neighbourhood search) per-order provenance. Identity always; on a
+/// heterogeneous cluster with permutation search enabled, every
+/// *distinct* device-name sequence (permuting two identical boards
+/// changes nothing), capped at [`MAX_DEVICE_ORDERS`]. Past 8 devices the
+/// factorial walk is replaced by [`orders::discover`] when
+/// `opts.order_search` is set. A requested search that is skipped or
+/// capped is reported in the notes — never dropped silently.
+fn device_orders(
+    net: &Network,
+    cluster: &Cluster,
+    profile: &Profile,
+    opts: &Options,
+) -> (Vec<Vec<usize>>, Vec<String>, Vec<String>) {
     let n = cluster.len();
     let identity: Vec<usize> = (0..n).collect();
-    if !permute {
-        return (vec![identity], Vec::new());
+    if !opts.permute_devices {
+        // An explicitly requested order search still needs the permute
+        // axis on — say so instead of dropping the request silently.
+        let notes = if opts.order_search {
+            vec!["device-order search: --order-search ignored (requires --permute)".to_string()]
+        } else {
+            Vec::new()
+        };
+        return (vec![identity], notes, Vec::new());
     }
     if cluster.is_homogeneous() || n < 2 {
         return (
             vec![identity],
             vec!["device-order search: identity only (homogeneous cluster)".to_string()],
+            Vec::new(),
         );
     }
     if n > 8 {
-        return (
-            vec![identity],
-            vec![format!(
-                "device-order search SKIPPED: {n} devices exceed the {}-device permutation limit",
-                8
-            )],
-        );
+        if !opts.order_search {
+            return (
+                vec![identity],
+                vec![format!(
+                    "device-order search SKIPPED: {n} devices exceed the {}-device permutation \
+                     limit (pass --order-search for the neighbourhood search)",
+                    8
+                )],
+                Vec::new(),
+            );
+        }
+        let d = orders::discover(net, cluster, profile, opts);
+        return (d.orders, d.notes, d.provenance);
     }
-    let mut seen: BTreeSet<Vec<String>> = BTreeSet::new();
+    // Exhaustive walk (n ≤ 8). Dedup on device-name *ids*
+    // ([`Cluster::name_ids`]) packed into one u64 — the seed's
+    // `Vec<String>` key cloned every name on all n! steps (40320
+    // allocations at n = 8 even when only 2 distinct layouts exist). The
+    // walk also exits as soon as every distinct multiset permutation has
+    // been seen instead of grinding out the rest of the factorial tail.
+    // Output is byte-for-byte the original enumeration: same walk, same
+    // first-occurrence order.
+    let ids = cluster.name_ids();
+    let mut counts = vec![0u64; ids.iter().max().map(|&m| m + 1).unwrap_or(0)];
+    for &id in &ids {
+        counts[id] += 1;
+    }
+    // n!/∏ counts! distinct name sequences (n ≤ 8, so u64 is ample).
+    let factorial = |k: u64| (1..=k).product::<u64>();
+    let distinct_total =
+        (factorial(n as u64) / counts.iter().map(|&c| factorial(c)).product::<u64>()) as usize;
+    let mut seen: BTreeSet<u64> = BTreeSet::new();
     let mut out = Vec::new();
     let mut capped = false;
     let mut perm = identity;
     loop {
-        let names: Vec<String> =
-            perm.iter().map(|&i| cluster.devices[i].name.clone()).collect();
-        if seen.insert(names) {
+        // n ≤ 8 positions × ids < 8 → 4 bits per slot packs into a u64
+        let key = perm.iter().fold(0u64, |k, &i| (k << 4) | ids[i] as u64);
+        if seen.insert(key) {
             out.push(perm.clone());
             if out.len() >= MAX_DEVICE_ORDERS {
                 capped = true;
                 break;
+            }
+            if out.len() == distinct_total {
+                break; // multiset exhausted — the factorial tail adds nothing
             }
         }
         if !next_permutation(&mut perm) {
@@ -170,7 +231,7 @@ fn device_orders(cluster: &Cluster, permute: bool) -> (Vec<Vec<usize>>, Vec<Stri
              first; more distinct layouts exist)"
         ));
     }
-    (out, notes)
+    (out, notes, Vec::new())
 }
 
 /// Advance `a` to its next lexicographic permutation; false when `a` was
@@ -218,21 +279,27 @@ mod tests {
     use crate::model::zoo;
     use crate::profile::analytical;
 
+    fn space(cluster: &Cluster, opts: &Options) -> SearchSpace {
+        let net = zoo::vgg16(224);
+        let prof = analytical::profile(&net, cluster);
+        SearchSpace::bapipe(&net, cluster, &prof, opts)
+    }
+
     #[test]
     fn bapipe_space_splits_eligibility() {
         let gpu = presets::v100_cluster(4);
-        let s = SearchSpace::bapipe(&gpu, &Options::default());
+        let s = space(&gpu, &Options::default());
         assert_eq!(s.kinds, vec![ScheduleKind::OneFOneBSno, ScheduleKind::OneFOneBSo]);
         assert_eq!(s.ineligible, vec![ScheduleKind::OneFOneBAs, ScheduleKind::FbpAs]);
         let fpga = presets::fpga_cluster(&["VCU118"; 2]);
-        let s = SearchSpace::bapipe(&fpga, &Options::default());
+        let s = space(&fpga, &Options::default());
         assert_eq!(s.kinds, vec![ScheduleKind::OneFOneBAs, ScheduleKind::FbpAs]);
     }
 
     #[test]
     fn candidates_enumerate_kind_major_then_m() {
         let cl = presets::v100_cluster(2);
-        let s = SearchSpace::bapipe(&cl, &Options::default());
+        let s = space(&cl, &Options::default());
         let cands = s.candidates(2);
         assert_eq!(cands.len(), 2 * s.m_grid.len());
         assert_eq!(cands[0].kind, ScheduleKind::OneFOneBSno);
@@ -245,9 +312,10 @@ mod tests {
     fn homogeneous_cluster_has_identity_order_only() {
         let cl = presets::v100_cluster(4);
         let o = Options { permute_devices: true, ..Default::default() };
-        let s = SearchSpace::bapipe(&cl, &o);
+        let s = space(&cl, &o);
         assert_eq!(s.device_orders, vec![vec![0, 1, 2, 3]]);
         assert!(s.notes.iter().any(|n| n.contains("homogeneous")), "{:?}", s.notes);
+        assert!(s.order_provenance.is_empty());
     }
 
     #[test]
@@ -256,11 +324,46 @@ mod tests {
         boards.extend(vec!["VCU118"; 5]);
         let cl = presets::fpga_cluster(&boards);
         let o = Options { permute_devices: true, ..Default::default() };
-        let s = SearchSpace::bapipe(&cl, &o);
-        assert_eq!(s.device_orders.len(), 1, "10 devices: identity only");
+        let s = space(&cl, &o);
+        assert_eq!(s.device_orders.len(), 1, "10 devices without --order-search: identity only");
         assert!(
             s.notes.iter().any(|n| n.contains("SKIPPED")),
             "a dropped search dimension must be reported: {:?}",
+            s.notes
+        );
+        assert!(
+            s.notes.iter().any(|n| n.contains("--order-search")),
+            "the skip note must name the opt-in flag: {:?}",
+            s.notes
+        );
+    }
+
+    #[test]
+    fn order_search_without_permute_is_noted_not_silent() {
+        let cl = presets::gpu_mixed_cluster(16);
+        let o = Options { order_search: true, ..Default::default() };
+        let s = space(&cl, &o);
+        assert_eq!(s.device_orders.len(), 1, "no --permute: identity only");
+        assert!(
+            s.notes.iter().any(|n| n.contains("requires --permute")),
+            "an ignored --order-search must be reported: {:?}",
+            s.notes
+        );
+    }
+
+    #[test]
+    fn truncated_enumeration_is_noted_not_silent() {
+        // 4 + 4 boards have 8!/(4!·4!) = 70 distinct layouts — above the
+        // 64-order cap, so the enumeration truncates and must say so.
+        let mut boards = vec!["VCU129"; 4];
+        boards.extend(vec!["VCU118"; 4]);
+        let cl = presets::fpga_cluster(&boards);
+        let o = Options { permute_devices: true, ..Default::default() };
+        let s = space(&cl, &o);
+        assert_eq!(s.device_orders.len(), MAX_DEVICE_ORDERS);
+        assert!(
+            s.notes.iter().any(|n| n.contains("TRUNCATED")),
+            "a capped enumeration must be reported: {:?}",
             s.notes
         );
     }
@@ -269,7 +372,7 @@ mod tests {
     fn mixed_cluster_orders_are_distinct_name_sequences() {
         let cl = presets::fpga_cluster(&["VCU129", "VCU129", "VCU118", "VCU118"]);
         let o = Options { permute_devices: true, ..Default::default() };
-        let s = SearchSpace::bapipe(&cl, &o);
+        let s = space(&cl, &o);
         // 4!/(2!·2!) = 6 distinct sequences, identity first.
         assert_eq!(s.device_orders.len(), 6);
         assert_eq!(s.device_orders[0], vec![0, 1, 2, 3]);
@@ -281,6 +384,27 @@ mod tests {
     }
 
     #[test]
+    fn two_distinct_layouts_enumerate_without_walking_the_tail() {
+        // 7 identical boards + 1 different: 8 distinct layouts out of 8!
+        // permutations. The index-dedup walk must find exactly those 8
+        // (first-occurrence order, identity first) and stop early.
+        let mut boards = vec!["VCU118"; 7];
+        boards.push("VCU129");
+        let cl = presets::fpga_cluster(&boards);
+        let o = Options { permute_devices: true, ..Default::default() };
+        let s = space(&cl, &o);
+        assert_eq!(s.device_orders.len(), 8);
+        assert_eq!(s.device_orders[0], (0..8).collect::<Vec<usize>>());
+        // each layout is "the odd board at position p" for a distinct p
+        let positions: BTreeSet<usize> = s
+            .device_orders
+            .iter()
+            .map(|ord| ord.iter().position(|&i| i == 7).unwrap())
+            .collect();
+        assert_eq!(positions.len(), 8);
+    }
+
+    #[test]
     fn next_permutation_walks_all() {
         let mut a = vec![0usize, 1, 2];
         let mut count = 1;
@@ -289,6 +413,31 @@ mod tests {
         }
         assert_eq!(count, 6);
         assert_eq!(a, vec![2, 1, 0]);
+    }
+
+    #[test]
+    fn next_permutation_edge_cases() {
+        // already the last (descending) permutation: false, unchanged
+        let mut d = vec![3usize, 2, 1, 0];
+        assert!(!next_permutation(&mut d));
+        assert_eq!(d, vec![3, 2, 1, 0]);
+        // repeated values: [1, 1] has no successor
+        let mut r = vec![1usize, 1];
+        assert!(!next_permutation(&mut r));
+        assert_eq!(r, vec![1, 1]);
+        // repeated values mid-sequence advance past the duplicates
+        let mut m = vec![0usize, 1, 1];
+        assert!(next_permutation(&mut m));
+        assert_eq!(m, vec![1, 0, 1]);
+        assert!(next_permutation(&mut m));
+        assert_eq!(m, vec![1, 1, 0]);
+        assert!(!next_permutation(&mut m));
+        // degenerate lengths
+        let mut empty: Vec<usize> = vec![];
+        assert!(!next_permutation(&mut empty));
+        let mut one = vec![5usize];
+        assert!(!next_permutation(&mut one));
+        assert_eq!(one, vec![5]);
     }
 
     #[test]

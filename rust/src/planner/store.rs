@@ -13,7 +13,11 @@
 //! the fingerprint and the stale cache is rejected (never silently
 //! reused). The device-order list is stored alongside so `perm` indices
 //! keep their meaning across invocations; a run with a different
-//! `--permute` setting rejects the cache the same way.
+//! `--permute` setting rejects the cache the same way — and past 8
+//! devices the list is the [`crate::planner::orders`] *discovered* set,
+//! so a cache written with `--order-search` (or with a different probe
+//! budget that discovered different layouts) is likewise rejected when
+//! the current discovery differs.
 
 use super::cache::EvalCache;
 use crate::cluster::{Cluster, ExecMode};
@@ -159,6 +163,37 @@ mod tests {
         let mut prof3 = prof.clone();
         prof3.per_device[0][0].fwd *= 1.5;
         assert_ne!(fp, fingerprint(&net, &cl, &prof3));
+    }
+
+    #[test]
+    fn changed_discovered_order_set_degrades_to_fresh() {
+        // Same fingerprint, different device-order set (the neighbourhood
+        // search discovering different layouts): the `perm` indices of the
+        // cached entries would point at different physical layouts, so the
+        // load must reject the document.
+        let net = zoo::vgg16(224);
+        let cl = presets::fpga_cluster(&["VCU129", "VCU118"]);
+        let prof = analytical::profile(&net, &cl);
+        let fp = fingerprint(&net, &cl, &prof);
+        let cache = EvalCache::new();
+        let saved_orders = vec![vec![0usize, 1], vec![1, 0]];
+
+        let path = std::env::temp_dir().join("bapipe-store-order-set-test.json");
+        let path = path.to_str().unwrap().to_string();
+        let _ = std::fs::remove_file(&path);
+        save(&path, &cache, &fp, &saved_orders).unwrap();
+
+        match load(&path, &fp, &[vec![0usize, 1]]) {
+            CacheLoad::Fresh(reason) => {
+                assert!(reason.contains("device-order"), "{reason}")
+            }
+            CacheLoad::Loaded(_) => panic!("a different order set must not load"),
+        }
+        match load(&path, &fp, &saved_orders) {
+            CacheLoad::Loaded(_) => {}
+            CacheLoad::Fresh(reason) => panic!("matching order set must load: {reason}"),
+        }
+        let _ = std::fs::remove_file(&path);
     }
 
     #[test]

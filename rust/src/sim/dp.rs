@@ -41,6 +41,16 @@ pub fn ring_allreduce_time(bytes: f64, n: usize, bw: f64, latency: f64) -> f64 {
 /// non-overlapped gradient all-reduce (GLOO semantics — the paper's
 /// communication backend; Section 4.2.1 notes NCCL was unusable).
 pub fn minibatch(profile: &Profile, cluster: &Cluster, b: f64) -> DpResult {
+    // `Cluster::new` guarantees N-1 links, but a hand-built struct can
+    // carry an empty `links` vec: the min-bandwidth fold below would then
+    // return +∞ and the all-reduce would silently collapse to pure
+    // latency. Fail loudly instead.
+    assert!(
+        cluster.len() <= 1 || !cluster.links.is_empty(),
+        "degenerate topology: {} devices but no links — the all-reduce time would collapse \
+         to pure latency",
+        cluster.len()
+    );
     let l = profile.n_layers();
     // slowest device bounds the synchronized step
     let compute = (0..cluster.len())
@@ -68,7 +78,9 @@ pub fn minibatch(profile: &Profile, cluster: &Cluster, b: f64) -> DpResult {
 /// holding a `DpResult` (the planner computes one for the feasibility
 /// check) convert it without re-summing the whole-network profile.
 pub fn epoch_from(r: &DpResult, cluster: &Cluster, b: f64, samples: usize) -> f64 {
-    let global_batch = b * cluster.len() as f64;
+    // Same canonical global as the pipeline planner: a float-noise batch
+    // must not hand DP one extra mini-batch in the epoch comparison.
+    let global_batch = crate::util::canonical_global_batch(b, cluster.len());
     (samples as f64 / global_batch).ceil() * r.minibatch_time
 }
 
@@ -127,6 +139,16 @@ mod tests {
         assert!(!minibatch(&p, &cl, 32.0).fits);
         let p2 = analytical::profile(&zoo::gnmt_l(32), &cl);
         assert!(minibatch(&p2, &cl, 32.0).fits);
+    }
+
+    #[test]
+    #[should_panic(expected = "degenerate topology")]
+    fn linkless_multi_device_cluster_rejected() {
+        // Bypass `Cluster::new`'s link-count validation the way a careless
+        // literal construction can.
+        let cl = Cluster { devices: vec![presets::v100(), presets::v100()], links: vec![] };
+        let p = analytical::profile(&zoo::resnet50(224), &presets::v100_cluster(2));
+        minibatch(&p, &cl, 8.0);
     }
 
     #[test]

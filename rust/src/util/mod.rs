@@ -12,6 +12,23 @@ pub mod prop;
 pub mod rng;
 pub mod stats;
 
+/// The f64 global mini-batch `B × N`, snapped to the nearest integer when
+/// the product lands within float noise of one (7.999999999999999 × 4 =
+/// 31.999999999999996 means 32): every consumer — the planner's
+/// divisibility filter, micro-batch sizes, mini-batches-per-epoch ceil,
+/// the DP baseline's epoch conversion — must see the *same* value, or a
+/// noisy batch read from a config inflates epoch counts by one whole
+/// mini-batch. Genuinely fractional globals pass through unchanged.
+pub fn canonical_global_batch(batch_per_device: f64, n_devices: usize) -> f64 {
+    let g = batch_per_device * n_devices as f64;
+    let r = g.round();
+    if r > 0.0 && (g - r).abs() < 1e-9 * r {
+        r
+    } else {
+        g
+    }
+}
+
 /// Format a byte count with binary units (`1.50 GiB`).
 pub fn fmt_bytes(b: u64) -> String {
     const UNITS: [&str; 5] = ["B", "KiB", "MiB", "GiB", "TiB"];
@@ -57,6 +74,18 @@ pub fn fmt_params(p: u64) -> String {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn canonical_global_snaps_float_noise_only() {
+        // the PR's motivating input: a hair below 32 snaps to 32
+        let g = canonical_global_batch(7.999999999999999, 4);
+        assert_eq!(g, 32.0);
+        // exact integers are untouched
+        assert_eq!(canonical_global_batch(32.0, 4), 128.0);
+        // genuinely fractional globals pass through
+        assert_eq!(canonical_global_batch(0.3, 4), 0.3 * 4.0);
+        assert_eq!(canonical_global_batch(0.5, 1), 0.5);
+    }
 
     #[test]
     fn bytes_units() {

@@ -1,0 +1,175 @@
+//! Device-order neighbourhood search past the 8-device wall, end to end
+//! (the acceptance criteria of the `planner::orders` subsystem):
+//!
+//! * on a heterogeneous ≥16-device cluster, `--permute --order-search`
+//!   discovers a non-identity ordering whose *evaluated* (DES) epoch time
+//!   beats the identity layout — identity is always enumerated first, so
+//!   ties go to it and a non-identity winner strictly beat it;
+//! * the search is bit-identical across `--jobs 1` and `--jobs 8`
+//!   (probes fan out in first-appearance batches with a deterministic
+//!   reduction, like phase A's prewarm);
+//! * exhaustive enumeration at ≤ 8 devices is byte-for-byte unchanged,
+//!   with or without `--order-search`;
+//! * a persisted plan cache whose discovered order set differs from the
+//!   current discovery is rejected, never silently reused.
+
+use bapipe::cluster::presets;
+use bapipe::model::zoo;
+use bapipe::planner::{self, store, EvalCache, Options, SearchSpace};
+use bapipe::profile::analytical;
+
+fn search_opts() -> Options {
+    Options {
+        batch_per_device: 8.0,
+        samples_per_epoch: 4096,
+        consider_dp: false,
+        permute_devices: true,
+        order_search: true,
+        order_budget: 300,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn neighbourhood_search_beats_identity_on_a_16_device_mix() {
+    // gpu_mixed alternates V100/P100: VGG's heavy adjacent conv layers
+    // cannot all sit on fast boards under the identity layout, so sorted
+    // layouts (in the seed portfolio) win decisively.
+    let net = zoo::vgg16(224);
+    let cl = presets::gpu_mixed_cluster(16);
+    let prof = analytical::profile(&net, &cl);
+    let plan = planner::explore(&net, &cl, &prof, &search_opts());
+
+    let identity: Vec<usize> = (0..16).collect();
+    assert_ne!(
+        plan.device_order, identity,
+        "ties go to the identity ordering (enumerated first), so a non-identity \
+         winner strictly beats it:\n{}",
+        plan.report.log_lines().join("\n")
+    );
+    // the winning order is a permutation of all 16 devices
+    let mut sorted = plan.device_order.clone();
+    sorted.sort_unstable();
+    assert_eq!(sorted, identity);
+
+    // widening the space beats the identity-only exploration outright
+    let id_plan = planner::explore(
+        &net,
+        &cl,
+        &prof,
+        &Options { permute_devices: false, ..search_opts() },
+    );
+    assert!(
+        plan.epoch_time < id_plan.epoch_time,
+        "discovered order must beat identity: {} vs {}",
+        plan.epoch_time,
+        id_plan.epoch_time
+    );
+
+    // the search reports itself: budget usage in the notes, one
+    // provenance line per discovered order
+    assert!(
+        plan.report.notes.iter().any(|n| n.contains("neighbourhood search")),
+        "search notes missing: {:?}",
+        plan.report.notes
+    );
+    let n_orders =
+        plan.report.evaluations.iter().map(|e| e.candidate.perm).max().unwrap_or(0) + 1;
+    assert!(n_orders > 1, "the discovered set must hold more than the identity");
+    assert_eq!(
+        plan.report.order_provenance.len(),
+        n_orders,
+        "one provenance line per discovered order: {:?}",
+        plan.report.order_provenance
+    );
+}
+
+#[test]
+fn order_search_is_bit_identical_across_job_counts() {
+    let net = zoo::vgg16(224);
+    let cl = presets::gpu_mixed_cluster(16);
+    let prof = analytical::profile(&net, &cl);
+    let serial = planner::explore(&net, &cl, &prof, &Options { jobs: 1, ..search_opts() });
+    let parallel = planner::explore(&net, &cl, &prof, &Options { jobs: 8, ..search_opts() });
+    assert_eq!(serial.choice, parallel.choice);
+    assert_eq!(serial.device_order, parallel.device_order);
+    assert_eq!(serial.epoch_time, parallel.epoch_time);
+    assert_eq!(serial.minibatch_time, parallel.minibatch_time);
+    assert_eq!(serial.stage_memory, parallel.stage_memory);
+    // the whole search record matches: discovered orders, provenance,
+    // notes, per-candidate outcomes and cache statistics
+    assert_eq!(serial.report.notes, parallel.report.notes);
+    assert_eq!(serial.report.order_provenance, parallel.report.order_provenance);
+    assert_eq!(serial.report.evaluations, parallel.report.evaluations);
+    assert_eq!(serial.report.cache_hits, parallel.report.cache_hits);
+}
+
+#[test]
+fn exhaustive_enumeration_unchanged_at_8_or_fewer_devices() {
+    // ≤ 8 devices: --order-search must not perturb the exhaustive walk —
+    // same orders, same notes, no provenance.
+    let net = zoo::vgg16(224);
+    let cl = presets::fpga_cluster(&["VCU129", "VCU129", "VCU118", "VCU118"]);
+    let prof = analytical::profile(&net, &cl);
+    let base = Options { permute_devices: true, ..Default::default() };
+    let without = SearchSpace::bapipe(&net, &cl, &prof, &base);
+    let with = SearchSpace::bapipe(
+        &net,
+        &cl,
+        &prof,
+        &Options { order_search: true, order_budget: 64, ..base },
+    );
+    assert_eq!(without.device_orders, with.device_orders);
+    assert_eq!(without.notes, with.notes);
+    assert!(without.order_provenance.is_empty());
+    assert!(with.order_provenance.is_empty());
+    assert_eq!(without.device_orders.len(), 6, "4!/(2!·2!) distinct layouts");
+}
+
+#[test]
+fn plan_cache_with_different_discovered_order_set_is_rejected() {
+    let net = zoo::vgg16(224);
+    let cl = presets::gpu_mixed_cluster(16);
+    let prof = analytical::profile(&net, &cl);
+    let opts = search_opts();
+    let fp = store::fingerprint(&net, &cl, &prof);
+    let searched = SearchSpace::bapipe(&net, &cl, &prof, &opts);
+    assert!(searched.device_orders.len() > 1, "discovery must widen the order set");
+
+    let path = std::env::temp_dir().join("bapipe-order-search-cache-test.json");
+    let path = path.to_str().unwrap().to_string();
+    let _ = std::fs::remove_file(&path);
+
+    let mut cache = EvalCache::new();
+    let first = planner::explore_with_cache(&net, &cl, &prof, &opts, &mut cache);
+    store::save(&path, &cache, &fp, &searched.device_orders).unwrap();
+
+    // a run without --order-search discovers a different (identity-only)
+    // set: the cached `perm` indices would lie, so the cache is rejected
+    let identity_space = SearchSpace::bapipe(
+        &net,
+        &cl,
+        &prof,
+        &Options { order_search: false, ..opts.clone() },
+    );
+    assert_eq!(identity_space.device_orders.len(), 1);
+    match store::load(&path, &fp, &identity_space.device_orders) {
+        store::CacheLoad::Fresh(reason) => {
+            assert!(reason.contains("stale"), "unexpected reason: {reason}")
+        }
+        store::CacheLoad::Loaded(_) => panic!("a mismatched order set must not load"),
+    }
+
+    // the matching discovered set restores and skips phase A entirely
+    let mut warm = match store::load(&path, &fp, &searched.device_orders) {
+        store::CacheLoad::Loaded(cache) => cache,
+        store::CacheLoad::Fresh(why) => panic!("expected the cache to load: {why}"),
+    };
+    let second = planner::explore_with_cache(&net, &cl, &prof, &opts, &mut warm);
+    assert_eq!(warm.misses, 0, "phase A must be skipped on matching discovery");
+    assert_eq!(first.choice, second.choice);
+    assert_eq!(first.device_order, second.device_order);
+    assert_eq!(first.epoch_time, second.epoch_time);
+
+    let _ = std::fs::remove_file(&path);
+}

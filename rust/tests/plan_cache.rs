@@ -21,7 +21,7 @@ fn plan_cache_skips_phase_a_on_reuse() {
     let opts =
         Options { batch_per_device: 32.0, samples_per_epoch: 8192, ..Default::default() };
     let fp = store::fingerprint(&net, &cl, &prof);
-    let space = SearchSpace::bapipe(&cl, &opts);
+    let space = SearchSpace::bapipe(&net, &cl, &prof, &opts);
 
     let path = std::env::temp_dir().join("bapipe-plan-cache-test.json");
     let path = path.to_str().unwrap().to_string();
@@ -82,7 +82,7 @@ fn plan_cache_round_trips_heterogeneous_permuted_scenario() {
         ..Default::default()
     };
     let fp = store::fingerprint(&net, &cl, &prof);
-    let space = SearchSpace::bapipe(&cl, &opts);
+    let space = SearchSpace::bapipe(&net, &cl, &prof, &opts);
     assert!(space.device_orders.len() > 1, "heterogeneous pair has 2 orderings");
 
     let path = std::env::temp_dir().join("bapipe-plan-cache-perm-test.json");
@@ -105,7 +105,7 @@ fn plan_cache_round_trips_heterogeneous_permuted_scenario() {
 
     // identity-only run (no --permute): different order space → fresh
     let identity_space =
-        SearchSpace::bapipe(&cl, &Options { permute_devices: false, ..opts });
+        SearchSpace::bapipe(&net, &cl, &prof, &Options { permute_devices: false, ..opts });
     match store::load(&path, &fp, &identity_space.device_orders) {
         store::CacheLoad::Fresh(reason) => {
             assert!(reason.contains("stale"), "unexpected reason: {reason}")
