@@ -1,5 +1,7 @@
 //! 64-stage planner stress bench (the ROADMAP "Scale" item): DES
-//! fast-path vs the seed simulator at n=8 / m=256, the partition DP
+//! fast-path vs the seed simulator at n=8 / m=256, the batched-family
+//! sweep vs per-candidate `simulate_fast` on a 1024-stage synthetic
+//! pipeline with M up to 4096 (`sim_batch`), the partition DP
 //! trajectory (seed reference loop → prefix tables → prefix + monotone
 //! crossing search) on the 64-stage cut set, the phase-A balance-seed
 //! fan-out and the end-to-end exploration at jobs ∈ {1, 8} on a 64-stage
@@ -21,6 +23,7 @@ use bapipe::planner::space::permuted_view;
 use bapipe::planner::{self, Choice, EvalCache, Options, SearchSpace};
 use bapipe::profile::{analytical, RangeCost};
 use bapipe::schedule::{generators, ScheduleKind};
+use bapipe::sim::batch::FamilySim;
 use bapipe::sim::engine::{simulate_fast, simulate_reference, SimArena, SimSpec};
 use bapipe::util::benchkit::bench;
 use bapipe::util::json::{obj, Json};
@@ -51,6 +54,64 @@ fn main() {
         "  des speedup (seed/fast): {des_speedup:.2}x  \
          ({seed_ns_per_op:.1} -> {fast_ns_per_op:.1} ns/op)"
     );
+
+    // ---- Batched-family DES at 1024-stage scale: one M-grid family
+    // swept through a single `FamilySim` arena pass (table-free
+    // closed-form programs) vs per-candidate `simulate_fast`, which
+    // rebuilds the flat op table for every candidate — ~8.4M ops of
+    // build-and-stream traffic per candidate at n=1024, M=4096.
+    let (bn, bm_grid): (usize, Vec<usize>) =
+        if quick { (128, vec![32, 64, 128]) } else { (1024, vec![512, 1024, 2048, 4096]) };
+    let bm_max = *bm_grid.last().unwrap();
+    let mut base =
+        SimSpec::uniform(ScheduleKind::OneFOneBSo, bn, 1, 1e-3, 2e-3, 0.1e-3, ExecMode::Sync);
+    for i in 0..bn {
+        // deterministic heterogeneity — a few device classes, so the
+        // ready list stays busy instead of lock-stepping
+        base.fwd[i] = 1e-3 * (1.0 + 0.05 * (i % 5) as f64);
+        base.bwd[i] = 2e-3 * (1.0 + 0.04 * (i % 7) as f64);
+    }
+    for i in 0..bn - 1 {
+        base.fwd_xfer[i] = 0.1e-3 * (1.0 + 0.5 * (i % 3) as f64);
+        base.bwd_xfer[i] = base.fwd_xfer[i];
+    }
+    let family: Vec<SimSpec> = bm_grid
+        .iter()
+        .map(|&m| {
+            let mut s = base.clone();
+            s.m = m;
+            s
+        })
+        .collect();
+    // Bit-exactness re-checked at bench scale, once, outside the timed
+    // region (the property suite covers the small shapes).
+    let mut fam = FamilySim::new();
+    {
+        let batch_res = fam.run_grid(&family);
+        let mut check_arena = SimArena::new();
+        for (s, b) in family.iter().zip(&batch_res) {
+            assert_eq!(
+                *b,
+                simulate_fast(s, &mut check_arena),
+                "batched pass diverged from simulate_fast at n={bn} m={}",
+                s.m
+            );
+        }
+    }
+    let (bw, bi) = if quick { (0, 2) } else { (1, 3) };
+    let mut grid_arena = SimArena::new();
+    let sweep_fast =
+        bench(&format!("sim/fast m-grid n={bn} m_max={bm_max}"), bw, bi, || {
+            for s in &family {
+                std::hint::black_box(simulate_fast(s, &mut grid_arena).makespan);
+            }
+        });
+    let sweep_batch =
+        bench(&format!("sim/batch m-grid n={bn} m_max={bm_max}"), bw, bi, || {
+            std::hint::black_box(fam.run_grid(&family).len());
+        });
+    let batch_speedup = sweep_fast.p50 / sweep_batch.p50;
+    println!("  sim_batch speedup (fast/batched) n={bn} m_max={bm_max}: {batch_speedup:.2}x");
 
     // ---- 64-stage synthetic cluster: GNMT-L chain on 64 V100 slots.
     let stages = 64usize;
@@ -221,6 +282,17 @@ fn main() {
             ]),
         ),
         (
+            "sim_batch",
+            obj(vec![
+                ("schedule", Json::from("1F1B-SO")),
+                ("stages", Json::from(bn)),
+                ("m_grid", Json::Arr(bm_grid.iter().map(|&m| Json::from(m)).collect())),
+                ("fast_ms", Json::Num(sweep_fast.p50 * 1e3)),
+                ("batch_ms", Json::Num(sweep_batch.p50 * 1e3)),
+                ("speedup_fast_over_batch", Json::Num(batch_speedup)),
+            ]),
+        ),
+        (
             "phase_a",
             obj(vec![
                 ("stages", Json::from(stages)),
@@ -315,6 +387,23 @@ fn main() {
     if dp_speedup < 5.0 {
         let msg = format!(
             "dp_optimal (prefix+monotone) only {dp_speedup:.2}x over the reference loop (floor: 5x)"
+        );
+        if quick {
+            println!("  WARNING: {msg} — quick mode is noise-prone; run the full bench");
+        } else {
+            panic!("{msg} (measurements preserved in {out})");
+        }
+    }
+
+    // This PR's floor, same pattern: the batched M-grid family sweep must
+    // be at least 3x per-candidate simulate_fast at the 1024-stage /
+    // M=4096 scale — it does strictly less work (no per-candidate op
+    // table or f_done matrix to build and stream, closed-form programs,
+    // stage state held in registers across each program burst).
+    if batch_speedup < 3.0 {
+        let msg = format!(
+            "FamilySim::run_grid only {batch_speedup:.2}x over per-candidate simulate_fast \
+             (floor: 3x)"
         );
         if quick {
             println!("  WARNING: {msg} — quick mode is noise-prone; run the full bench");

@@ -39,8 +39,10 @@
 //! //    prefix-table + monotone-crossing partition DPs (O(N·C·log C)
 //! //    against `dp_optimal_reference`, the retained seed oracle),
 //! //    pruned by analytical lower bounds, phases A (partition DPs) and
-//! //    B (trace-free SoA DES over per-worker arenas) both fanned out
-//! //    over 4 worker threads, with adaptive M bisection around the
+//! //    B (trace-free SoA DES) both fanned out over 4 worker threads —
+//! //    phase B on pooled `sim::batch::FamilySim` simulators that batch
+//! //    a family's whole M grid through one arena and survive across
+//! //    the grid pass and every adaptive M bisection round around the
 //! //    incumbent. `planner::store` persists the partition cache across
 //! //    invocations (`bapipe explore --plan-cache`). On heterogeneous
 //! //    clusters `permute_devices` widens the space with device
@@ -57,10 +59,13 @@
 //! assert!(diff.same_choice);
 //! ```
 //!
-//! The simulator itself has two entry points: `sim::engine::simulate_full`
-//! (event traces for timelines and figures) and the allocation-free
-//! `sim::engine::simulate_fast` over a reusable `sim::engine::SimArena`
-//! — bit-exact with each other and with the retained seed oracle
+//! The simulator itself has three entry points: `sim::engine::simulate_full`
+//! (event traces for timelines and figures), the allocation-free
+//! `sim::engine::simulate_fast` over a reusable `sim::engine::SimArena`,
+//! and `sim::batch::FamilySim` — table-free batched passes over a
+//! candidate family plus incremental re-simulation of perturbed specs
+//! from a checkpoint (the order search's probe path). All are bit-exact
+//! with each other and with the retained seed oracle
 //! `sim::engine::simulate_reference`.
 #![deny(missing_docs)]
 // The cost-model layers pass (profile, cluster, partition, micro, m)

@@ -12,6 +12,7 @@ use crate::partition::memfit::{stage_memory_bytes, MemoryModel};
 use crate::partition::{
     balanced_partition, cut_comm_time, stage_costs, Partition, PartitionPlan,
 };
+use crate::profile::range::CostModel;
 use crate::profile::Profile;
 use crate::schedule::ScheduleKind;
 use crate::sim::engine::{epoch_from_makespan, simulate, SimSpec};
@@ -41,19 +42,24 @@ pub fn build_spec_plan(
     spec
 }
 
-/// Build the SimSpec for a (kind, partition, micro) candidate.
-pub fn build_spec(
-    profile: &Profile,
+/// Build the SimSpec for a (kind, partition, micro) candidate. Generic
+/// over the cost model so the exploration (on a [`Profile`]) and the
+/// order search's DES verification pass (on prebuilt
+/// [`crate::profile::range::RangeCost`] prefix tables) share one builder
+/// — a probe spec and a phase-B spec for the same candidate are
+/// bit-identical by construction.
+pub fn build_spec<C: CostModel>(
+    costs_model: &C,
     cluster: &Cluster,
     part: &Partition,
     kind: ScheduleKind,
     micro: f64,
     m: usize,
 ) -> SimSpec {
-    let costs = stage_costs(profile, cluster, part, micro);
+    let costs = stage_costs(costs_model, cluster, part, micro);
     let n = part.n_stages();
     let fwd_xfer: Vec<f64> =
-        (0..n - 1).map(|i| cut_comm_time(profile, cluster, part, micro, i)).collect();
+        (0..n - 1).map(|i| cut_comm_time(costs_model, cluster, part, micro, i)).collect();
     SimSpec {
         kind,
         m,

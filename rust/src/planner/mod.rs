@@ -30,8 +30,10 @@
 //!   that let a branch-and-bound pass skip discrete-event simulations
 //!   which provably cannot beat the incumbent;
 //! * [`eval`] — candidate → `SimSpec` → DES evaluation, on the
-//!   trace-free [`crate::sim::engine::simulate_fast`] path with one
-//!   reusable `SimArena` per worker thread;
+//!   table-free batched path ([`crate::sim::batch::FamilySim`]) with one
+//!   simulator per worker thread, pooled across the grid pass and every
+//!   adaptive-M round (`parallel::ScratchPool`) and reset between
+//!   rounds so a big early family never pins its peak allocation;
 //! * [`report`] — the typed [`Evaluation`] / [`ExplorationReport`] /
 //!   [`Plan`] data model, serializable to/from JSON (`plan.json`);
 //! * [`diff`] — structured comparison of two `plan.json` artifacts
@@ -76,8 +78,9 @@ use crate::model::Network;
 use crate::partition::memfit::{dp_memory_bytes, MemoryModel};
 use crate::profile::Profile;
 use crate::schedule::ScheduleKind;
+use crate::sim::batch::FamilySim;
 use crate::sim::dp;
-use crate::sim::engine::{epoch_from_makespan, epoch_time, simulate_fast, SimArena};
+use crate::sim::engine::{epoch_from_makespan, epoch_time};
 use std::sync::atomic::{AtomicU64, Ordering};
 
 /// Exploration options (superset of the seed explorer's options; every
@@ -174,7 +177,8 @@ fn atomic_min_f64(cell: &AtomicU64, value: f64) {
 /// cache contents and statistics are independent of the job count — then
 /// feasibility checks, `SimSpec` construction and analytical lower
 /// bounds per candidate against the warm cache. Phase B (parallel over
-/// `opts.jobs` scoped threads, one reusable DES arena per worker): DES
+/// `opts.jobs` scoped threads, one pooled batched simulator per worker —
+/// [`crate::sim::batch::FamilySim`]): DES
 /// evaluation in ascending-lower-bound order with a shared incumbent; a
 /// candidate is pruned only when its lower bound *strictly* exceeds the
 /// incumbent, so every pruned candidate is provably worse than the final
@@ -189,16 +193,19 @@ pub fn explore_space(
     opts: &Options,
 ) -> ExplorationReport {
     let mut cache = EvalCache::new();
-    explore_space_with(net, cluster, profile, space, opts, &mut cache, f64::INFINITY)
+    let mut pool = parallel::ScratchPool::new();
+    explore_space_with(net, cluster, profile, space, opts, &mut cache, &mut pool, f64::INFINITY)
 }
 
-/// [`explore_space`] against a caller-owned cache and a pre-seeded
-/// incumbent epoch time: the adaptive M refinement threads one cache
-/// through all its rounds and starts each round's branch-and-bound at
-/// the best epoch already simulated (a candidate pruned against it is
-/// provably worse than a recorded evaluation, so the merged selection is
-/// unchanged). `cache_hits` in the returned report counts this call's
-/// hits only.
+/// [`explore_space`] against a caller-owned cache, a caller-owned
+/// per-worker simulator pool and a pre-seeded incumbent epoch time: the
+/// adaptive M refinement threads one cache *and one pool* through all its
+/// rounds — worker simulators (and their arenas) are built once per
+/// exploration, not once per round — and starts each round's
+/// branch-and-bound at the best epoch already simulated (a candidate
+/// pruned against it is provably worse than a recorded evaluation, so the
+/// merged selection is unchanged). `cache_hits` in the returned report
+/// counts this call's hits only.
 fn explore_space_with(
     net: &Network,
     cluster: &Cluster,
@@ -206,6 +213,7 @@ fn explore_space_with(
     space: &SearchSpace,
     opts: &Options,
     cache: &mut EvalCache,
+    pool: &mut parallel::ScratchPool<FamilySim>,
     incumbent_seed: f64,
 ) -> ExplorationReport {
     let n = cluster.len();
@@ -250,9 +258,15 @@ fn explore_space_with(
         la.partial_cmp(&lb).unwrap_or(std::cmp::Ordering::Equal).then(a.cmp(&b))
     });
 
+    // This invocation is a new candidate family for the pooled
+    // simulators: drop stale replay checkpoints and release capacity a
+    // bigger earlier round pinned (`FamilySim::begin_family`).
+    let m_max = order.iter().map(|&i| candidates[i].m).max().unwrap_or(1);
+    pool.for_each_mut(|sim| sim.begin_family(n, m_max));
+
     let incumbent = AtomicU64::new(incumbent_seed.to_bits());
     let phase_b: Vec<PhaseB> =
-        parallel::run_indexed_with(opts.jobs, order.len(), SimArena::new, |arena, k| {
+        pool.run(opts.jobs, order.len(), FamilySim::new, |sim, k| {
             let p = match &prepared[order[k]] {
                 Ok(p) => p,
                 Err(_) => unreachable!("order only holds feasible candidates"),
@@ -265,9 +279,10 @@ fn explore_space_with(
             if opts.prune && p.lb_epoch * (1.0 - 1e-9) > best_seen {
                 return PhaseB::Pruned { lower_bound: p.lb_epoch };
             }
-            // Trace-free DES over the worker's reused arena: bit-exact
-            // with `simulate_full`, no per-candidate allocation.
-            let makespan = simulate_fast(&p.spec, arena).makespan;
+            // Table-free batched DES over the worker's pooled simulator:
+            // bit-exact with `simulate_fast`/`simulate_full`, no
+            // per-candidate allocation or op-table build.
+            let makespan = sim.run(&p.spec).makespan;
             let ep = epoch_from_makespan(makespan, &p.spec, n_mb);
             atomic_min_f64(&incumbent, ep);
             PhaseB::Done { minibatch_time: makespan, epoch_time: ep }
@@ -370,6 +385,7 @@ fn refine_m(
     space: &SearchSpace,
     opts: &Options,
     cache: &mut EvalCache,
+    pool: &mut parallel::ScratchPool<FamilySim>,
     report: &mut ExplorationReport,
 ) {
     // Round, never truncate: a global batch computed in f64 can land a
@@ -423,8 +439,9 @@ fn refine_m(
             notes: Vec::new(),
             order_provenance: Vec::new(), // already reported by the grid pass
         };
-        let sub =
-            explore_space_with(net, cluster, profile, &sub_space, opts, cache, best_epoch);
+        let sub = explore_space_with(
+            net, cluster, profile, &sub_space, opts, cache, pool, best_epoch,
+        );
         report.notes.push(format!(
             "adaptive-M round {}: bisected to M={new_ms:?} around incumbent M={best_m}",
             round + 1
@@ -476,10 +493,14 @@ pub fn explore_with_cache_in_space(
     opts: &Options,
     cache: &mut EvalCache,
 ) -> Plan {
+    // One simulator pool for the whole exploration: the grid pass and
+    // every adaptive-M round share per-worker arenas instead of
+    // reallocating them per `explore_space_with` invocation.
+    let mut pool = parallel::ScratchPool::new();
     let mut report =
-        explore_space_with(net, cluster, profile, space, opts, cache, f64::INFINITY);
+        explore_space_with(net, cluster, profile, space, opts, cache, &mut pool, f64::INFINITY);
     if opts.adaptive_m {
-        refine_m(net, cluster, profile, space, opts, cache, &mut report);
+        refine_m(net, cluster, profile, space, opts, cache, &mut pool, &mut report);
     }
 
     // DP baseline (the paper's 1x reference; ResNet-50's winner). The

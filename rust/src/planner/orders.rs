@@ -36,6 +36,15 @@
 //! and the full exploration (phase A prewarm + DES phase B) evaluates
 //! every candidate over it. Identity is always enumerated first, so a
 //! non-identity winner has *strictly* beaten the identity layout.
+//!
+//! Finally, each kept order's provenance line is annotated with a **DES
+//! mini-batch time** from one representative schedule, re-simulated
+//! through a single incremental [`FamilySim`]: successive orders differ
+//! in a handful of stage rows, so most annotations are dirty-row replays
+//! rather than cold passes. The annotation is informational — ranking,
+//! budget accounting and the kept set itself stay a pure function of the
+//! partition-DP bottleneck scores (and of nothing else, so the discovery
+//! remains identical across `--jobs` values).
 
 use super::parallel;
 use super::space::{permuted_view, MAX_DEVICE_ORDERS};
@@ -45,6 +54,8 @@ use crate::model::Network;
 use crate::partition::{cut_comm_time, interlayer, stage_costs};
 use crate::profile::range::RangeCost;
 use crate::profile::Profile;
+use crate::schedule::ScheduleKind;
+use crate::sim::batch::FamilySim;
 use crate::util::rng::Rng;
 use std::cmp::Ordering;
 use std::collections::{HashMap, HashSet};
@@ -387,6 +398,31 @@ pub fn discover(
             orders.push(order.clone());
         }
     }
+    // DES provenance annotation: one representative schedule per kept
+    // order, re-simulated through a single incremental simulator. The
+    // spec builder is the generic [`super::eval::build_spec`] on this
+    // pass's own RangeCost tables, so the annotated time is the same
+    // mini-batch time phase B would compute for that candidate.
+    let des_kind = ScheduleKind::bapipe_candidates()
+        .into_iter()
+        .find(|k| k.eligible(cluster))
+        .unwrap_or(ScheduleKind::GPipe);
+    let m_probe = if ms.is_empty() { 1 } else { ms[ms.len() / 2] };
+    let mut fam = FamilySim::new();
+    let mut annotated = 0usize;
+    for (order, line) in orders.iter().zip(provenance.iter_mut()) {
+        let (cl, prof) = permuted_view(cluster, profile, order);
+        let rc = RangeCost::build(&prof);
+        let Ok(part) = interlayer::dp_optimal_rc(&rc, &cl, &cuts, micro, None) else {
+            line.push_str(", des skipped (infeasible partition)");
+            continue;
+        };
+        let spec = super::eval::build_spec(&rc, &cl, &part, des_kind, micro, m_probe);
+        let mb = fam.resimulate(&spec).makespan;
+        line.push_str(&format!(", des minibatch {mb:.4e}s"));
+        annotated += 1;
+    }
+
     let best = endpoints.iter().map(|e| e.0).fold(id_score, f64::min);
     let notes = vec![
         format!(
@@ -397,6 +433,14 @@ pub fn discover(
             orders.len()
         ),
         format!("device-order search: best bottleneck {best:.4e} vs identity {id_score:.4e}"),
+        format!(
+            "device-order search: DES provenance — {annotated} of {} orders re-simulated at \
+             {} M={m_probe} ({} incremental replays, {} cold passes)",
+            orders.len(),
+            des_kind.label(),
+            fam.stats.incremental_runs,
+            fam.stats.full_runs + fam.stats.fallback_runs
+        ),
     ];
     Discovery { orders, provenance, notes }
 }
@@ -496,6 +540,27 @@ mod tests {
             .map(|o| o.iter().map(|&i| cl.devices[i].name.clone()).collect())
             .collect();
         assert_eq!(keys.len(), d.orders.len(), "discovered orders must be distinct layouts");
+    }
+
+    #[test]
+    fn provenance_lines_carry_des_minibatch_times() {
+        // Every kept order's provenance line (identity included) ends
+        // with a DES mini-batch annotation, and the pass reports its
+        // incremental-vs-cold split in the notes.
+        let cl = presets::gpu_mixed_cluster(10);
+        let net = zoo::vgg16(224);
+        let prof = analytical::profile(&net, &cl);
+        let d = discover(&net, &cl, &prof, &opts(200, 1));
+        assert!(d.orders.len() > 1, "need a non-trivial discovered set");
+        assert_eq!(d.orders.len(), d.provenance.len());
+        for line in &d.provenance {
+            assert!(line.contains(", des minibatch "), "missing DES annotation: {line}");
+        }
+        assert!(
+            d.notes.iter().any(|n| n.contains("DES provenance")),
+            "DES pass must report itself: {:?}",
+            d.notes
+        );
     }
 
     #[test]

@@ -61,6 +61,80 @@ where
         .collect()
 }
 
+/// A pool of per-worker scratch states that *outlives* individual
+/// [`run_indexed_with`]-style invocations: worker `w` always draws slot
+/// `w`, so the grid pass and every adaptive-M round reuse the same
+/// scratch (e.g. one [`crate::sim::batch::FamilySim`] arena per worker)
+/// instead of reallocating it per round. The work distribution, index
+/// ordering and determinism contract are exactly those of
+/// [`run_indexed_with`] — results must not depend on which slot served an
+/// index.
+pub(crate) struct ScratchPool<S> {
+    slots: Vec<Mutex<S>>,
+}
+
+impl<S: Send> ScratchPool<S> {
+    /// Empty pool; slots are created lazily by [`ScratchPool::run`].
+    pub(crate) fn new() -> ScratchPool<S> {
+        ScratchPool { slots: Vec::new() }
+    }
+
+    /// Visit every pooled scratch mutably — maintenance between rounds
+    /// (e.g. releasing arena capacity when the next family is smaller).
+    pub(crate) fn for_each_mut(&mut self, mut f: impl FnMut(&mut S)) {
+        for slot in &mut self.slots {
+            f(slot.get_mut().expect("scratch slot poisoned"));
+        }
+    }
+
+    /// [`run_indexed_with`], but the per-worker scratch comes from (and
+    /// returns to) the pool. `init` only runs when the pool must grow to
+    /// cover `min(jobs, n)` workers.
+    pub(crate) fn run<T, I, F>(&mut self, jobs: usize, n: usize, mut init: I, f: F) -> Vec<T>
+    where
+        T: Send,
+        I: FnMut() -> S,
+        F: Fn(&mut S, usize) -> T + Sync,
+    {
+        if n == 0 {
+            return Vec::new();
+        }
+        let jobs = jobs.max(1).min(n);
+        while self.slots.len() < jobs {
+            self.slots.push(Mutex::new(init()));
+        }
+        if jobs == 1 {
+            let state = self.slots[0].get_mut().expect("scratch slot poisoned");
+            return (0..n).map(|i| f(state, i)).collect();
+        }
+        let next = AtomicUsize::new(0);
+        let out: Vec<Mutex<Option<T>>> = (0..n).map(|_| Mutex::new(None)).collect();
+        std::thread::scope(|scope| {
+            for slot in self.slots.iter().take(jobs) {
+                let (next, out, f) = (&next, &out, &f);
+                scope.spawn(move || {
+                    let mut state = slot.lock().expect("scratch slot poisoned");
+                    loop {
+                        let i = next.fetch_add(1, Ordering::Relaxed);
+                        if i >= n {
+                            break;
+                        }
+                        let value = f(&mut state, i);
+                        *out[i].lock().expect("result slot poisoned") = Some(value);
+                    }
+                });
+            }
+        });
+        out.into_iter()
+            .map(|slot| {
+                slot.into_inner()
+                    .expect("result slot poisoned")
+                    .expect("every index was claimed by a worker")
+            })
+            .collect()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -104,5 +178,42 @@ mod tests {
         for (i, c) in counts.iter().enumerate() {
             assert_eq!(c.load(Ordering::Relaxed), 1, "index {i}");
         }
+    }
+
+    #[test]
+    fn pool_matches_run_indexed_with_and_keeps_order() {
+        for jobs in [1usize, 3, 8, 64] {
+            let mut pool: ScratchPool<usize> = ScratchPool::new();
+            let out = pool.run(jobs, 37, || 0usize, |_, i| i * i);
+            assert_eq!(out, (0..37).map(|i| i * i).collect::<Vec<_>>(), "jobs={jobs}");
+            assert_eq!(pool.run(jobs, 0, || 0usize, |_, i| i), Vec::<usize>::new());
+        }
+    }
+
+    #[test]
+    fn pool_scratch_survives_across_invocations() {
+        // The whole point of the pool: worker scratch accumulates across
+        // rounds instead of being rebuilt per invocation.
+        let mut pool: ScratchPool<usize> = ScratchPool::new();
+        let mut inits = 0usize;
+        for round in 0..5 {
+            let out = pool.run(
+                3,
+                20,
+                || {
+                    inits += 1;
+                    0usize
+                },
+                |served, i| {
+                    *served += 1;
+                    i + round
+                },
+            );
+            assert_eq!(out, (0..20).map(|i| i + round).collect::<Vec<_>>(), "round={round}");
+        }
+        assert_eq!(inits, 3, "slots are created once, on the first round");
+        let mut total = 0usize;
+        pool.for_each_mut(|served| total += *served);
+        assert_eq!(total, 100, "every index of every round hit a pooled slot");
     }
 }

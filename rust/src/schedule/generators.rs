@@ -17,7 +17,10 @@ pub fn program(kind: ScheduleKind, n: usize, i: usize, m: usize) -> StageProgram
 /// [`program`] into a caller-provided buffer (ops are appended; the
 /// buffer is not cleared). This is the allocation-free entry point the
 /// simulator's reusable [`crate::sim::engine::SimArena`] builds its flat
-/// per-stage op table from.
+/// per-stage op table from. Callers that cannot afford the table at all
+/// (the batched simulator at 1024 stages × M=4096) use the closed-form
+/// [`ProgramShape`] view instead, which answers the same sequence in
+/// `O(1)` per op.
 pub fn program_into(kind: ScheduleKind, n: usize, i: usize, m: usize, ops: &mut Vec<Op>) {
     assert!(n >= 1 && i < n && m >= 1, "program({kind:?}, n={n}, i={i}, m={m})");
     match kind {
@@ -82,6 +85,130 @@ fn fbp(n: usize, i: usize, m: usize, ops: &mut Vec<Op>) {
         }
     }
     ops.push(Op::Update);
+}
+
+/// Closed-form view of one stage's program: the schedule generators above
+/// are all affine in `m` (`const + m·slope` phase boundaries), so the
+/// whole sequence can be answered positionally without materializing a
+/// table. [`ProgramShape::op_at`] is `O(1)` per op and
+/// `(0..len()).map(op_at)` is defined to equal [`program`]'s op list
+/// exactly (property-tested below). The batched simulator
+/// (`crate::sim::batch`) walks stages through this view: at 1024 stages ×
+/// M=4096 the explicit table is ~8M ops of build-and-stream traffic *per
+/// candidate*, which this removes entirely.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ProgramShape {
+    /// 1F1B at effective warm-up depth `w` (already clamped to `1..=m`):
+    /// `w` forwards, `2·(m-w)` alternating bwd/fwd slots, `w` drain
+    /// backwards, then the optional update.
+    OneFOneB {
+        /// Clamped warm-up depth.
+        w: usize,
+        /// Micro-batches per mini-batch.
+        m: usize,
+        /// Does the program end with `Op::Update`?
+        update: bool,
+    },
+    /// GPipe fill-drain: `m` forwards, `m` reverse-order backwards, update.
+    GPipe {
+        /// Micro-batches per mini-batch.
+        m: usize,
+    },
+    /// FBP-AS with round-trip offset `o = 2·(n-1-i)+1`; idle gap slots of
+    /// the generator (possible when `o > m`) are skipped, so positions map
+    /// to executed ops only.
+    Fbp {
+        /// Round-trip offset from stage `i` to the last stage and back.
+        o: usize,
+        /// Micro-batches per mini-batch.
+        m: usize,
+    },
+}
+
+impl ProgramShape {
+    /// The shape of stage `i` (0-based) of `n` under `kind` with `m`
+    /// micro-batches — mirrors the [`program_into`] dispatch exactly.
+    pub fn of(kind: ScheduleKind, n: usize, i: usize, m: usize) -> ProgramShape {
+        assert!(n >= 1 && i < n && m >= 1, "shape({kind:?}, n={n}, i={i}, m={m})");
+        match kind {
+            ScheduleKind::OneFOneBAs | ScheduleKind::OneFOneBSno => {
+                ProgramShape::OneFOneB { w: (n - i).min(m).max(1), m, update: true }
+            }
+            ScheduleKind::OneFOneBSo => ProgramShape::OneFOneB {
+                w: (2 * (n - i)).min(m.max(1)).min(m).max(1),
+                m,
+                update: true,
+            },
+            ScheduleKind::PipeDream => {
+                ProgramShape::OneFOneB { w: (n - i).min(m).max(1), m, update: false }
+            }
+            ScheduleKind::GPipe => ProgramShape::GPipe { m },
+            ScheduleKind::FbpAs => ProgramShape::Fbp { o: 2 * (n - 1 - i) + 1, m },
+        }
+    }
+
+    /// Number of ops in the program (gap slots excluded).
+    pub fn len(&self) -> usize {
+        match *self {
+            ProgramShape::OneFOneB { m, update, .. } => 2 * m + update as usize,
+            ProgramShape::GPipe { m } => 2 * m + 1,
+            ProgramShape::Fbp { o, m } => m + o.min(m) + 1,
+        }
+    }
+
+    /// Programs are never empty (`m >= 1`).
+    pub fn is_empty(&self) -> bool {
+        false
+    }
+
+    /// The op at position `pc` (`pc < len()`), equal to `program(..).ops[pc]`.
+    pub fn op_at(&self, pc: usize) -> Op {
+        debug_assert!(pc < self.len());
+        match *self {
+            ProgramShape::OneFOneB { w, m, .. } => {
+                if pc < w {
+                    // warm-up forwards
+                    Op::Fwd { mb: pc }
+                } else if pc < 2 * m - w {
+                    // steady alternation: even offsets drain Bwd{j},
+                    // odd offsets admit Fwd{w+j}
+                    let q = pc - w;
+                    if q % 2 == 0 {
+                        Op::Bwd { mb: q / 2 }
+                    } else {
+                        Op::Fwd { mb: w + q / 2 }
+                    }
+                } else if pc < 2 * m {
+                    // drain backwards: mb = (m-w) + (pc - (2m-w)) = pc - m
+                    Op::Bwd { mb: pc - m }
+                } else {
+                    Op::Update
+                }
+            }
+            ProgramShape::GPipe { m } => {
+                if pc < m {
+                    Op::Fwd { mb: pc }
+                } else if pc < 2 * m {
+                    Op::Bwd { mb: 2 * m - 1 - pc }
+                } else {
+                    Op::Update
+                }
+            }
+            ProgramShape::Fbp { o, m } => {
+                if pc < o.min(m) {
+                    // fwd stream alone until the first backward lands
+                    Op::Fwd { mb: pc }
+                } else if pc < m {
+                    Op::FwdBwd { fwd_mb: pc, bwd_mb: pc - o }
+                } else if pc < m + o.min(m) {
+                    // bwd-only tail: generator slot t = max(m, o) + (pc - m)
+                    Op::Bwd { mb: o.max(m) + (pc - m) - o }
+                } else {
+                    Op::Update
+                }
+            }
+        }
+    }
 }
 
 /// Structural invariants every stage program must satisfy — used by unit
@@ -250,6 +377,45 @@ mod tests {
             assert_eq!(buf[0], Op::Update, "{kind:?}");
             assert_eq!(&buf[1..], &p.ops[..], "{kind:?}");
         }
+    }
+
+    #[test]
+    fn program_shape_equals_table_for_every_kind_property() {
+        // The closed-form positional view must reproduce the generator
+        // table op-for-op: same length, same op at every pc. This is what
+        // lets the batched simulator replace the table entirely.
+        check(
+            &Config { cases: 400, ..Default::default() },
+            |g| {
+                let n = g.usize_in(1, 10);
+                let i = g.usize_in(0, n);
+                let m = g.usize_in(1, 40);
+                let kind = ScheduleKind::all()[g.usize_in(0, 6)];
+                (kind, n, i, m)
+            },
+            |&(kind, n, i, m)| {
+                let table = program(kind, n, i, m);
+                let shape = ProgramShape::of(kind, n, i, m);
+                ensure(
+                    shape.len() == table.ops.len(),
+                    format!(
+                        "{kind:?} n={n} i={i} m={m}: shape len {} != table len {}",
+                        shape.len(),
+                        table.ops.len()
+                    ),
+                )?;
+                for (pc, &op) in table.ops.iter().enumerate() {
+                    ensure(
+                        shape.op_at(pc) == op,
+                        format!(
+                            "{kind:?} n={n} i={i} m={m} pc={pc}: shape {:?} != table {op:?}",
+                            shape.op_at(pc)
+                        ),
+                    )?;
+                }
+                Ok(())
+            },
+        );
     }
 
     #[test]

@@ -1,0 +1,956 @@
+//! Batched-family and incremental discrete-event simulation.
+//!
+//! The planner's exploration axes (M-grids, adaptive-M bisection,
+//! device-order probes) call the simulator with *families* of closely
+//! related specs: same schedule kind and stage count, differing only in
+//! micro-batch count or in a few stages' costs. [`FamilySim`] exploits
+//! that structure two ways, both bit-exact with the engine:
+//!
+//! * **Batched cold passes** ([`FamilySim::run`] / [`FamilySim::run_grid`]):
+//!   the stage program is read through the closed-form
+//!   [`generators::ProgramShape`] view instead of the flat op table
+//!   `SimArena::reset` rebuilds per candidate — at 1024 stages × M=4096
+//!   that table is ~8M ops of build-and-stream traffic *per candidate*.
+//!   The per-kind phase loops also drop the `f_done` gate (the generators
+//!   guarantee a micro-batch's forward precedes its backward within a
+//!   stage program — [`generators::validate`] — so the gate is
+//!   structurally true whenever it is evaluated) and keep each stage's
+//!   cursor/busy/channel state in registers across its program burst.
+//! * **Incremental re-simulation** ([`FamilySim::resimulate`]): a
+//!   checkpoint of the last full timeline plus a dirty-row mask derived
+//!   from the spec diff. Only dirty rows replay; clean rows keep their
+//!   checkpointed timings, with their input rows *bit-verified* against
+//!   the checkpoint afterwards. Any mismatch grows the dirty set and
+//!   replays again; past `2·dirty > n` the pass falls back to a cold run.
+//!
+//! Why the accepted incremental state is exact: op times are pure
+//! dataflow (each op's time is a function of its input arrivals and the
+//! stage's own cursor in program order), so the timing equations have a
+//! unique solution. The accepted state satisfies every equation — dirty
+//! rows are freshly computed from their inputs, and each clean row's
+//! inputs are bit-identical to the checkpoint, under which its
+//! checkpointed outputs were computed — so it *is* the full-run solution.
+//! The property tests below pin all of this against `simulate_reference`.
+//!
+//! Every timing expression is copied verbatim from `engine::run_core`;
+//! execution order cannot change any computed value (same pure-dataflow
+//! argument the engine itself relies on), so agreement is bit-exact, not
+//! approximate.
+
+use crate::cluster::ExecMode;
+use crate::schedule::generators::ProgramShape;
+use crate::sim::engine::{FastResult, SimArena, SimSpec};
+
+/// `begin_family` releases arena capacity when the retained `n × m`
+/// working set exceeds this multiple of the incoming family's need.
+const SHRINK_HYSTERESIS: usize = 4;
+
+/// Counters exposing which path each [`FamilySim`] call took — the
+/// incremental machinery's hit rate is workload-dependent, so tests and
+/// diagnostics read it here instead of guessing.
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct BatchStats {
+    /// Cold batched passes (including the first pass after a shape change).
+    pub full_runs: usize,
+    /// Incremental replays accepted by the bit-exact fixpoint check.
+    pub incremental_runs: usize,
+    /// Replays abandoned for a cold pass because the dirty set grew past
+    /// half the rows.
+    pub fallback_runs: usize,
+    /// Fixpoint rounds that had to grow the dirty set and replay again.
+    pub fixpoint_rounds: usize,
+}
+
+/// Full post-run timeline state of one spec, for incremental replays.
+#[derive(Debug, Clone)]
+struct Checkpoint {
+    spec: SimSpec,
+    f_arrival: Vec<f64>,
+    b_arrival: Vec<f64>,
+    cursor: Vec<f64>,
+    busy: Vec<f64>,
+    f_chan_free: Vec<f64>,
+    b_chan_free: Vec<f64>,
+    peak_in_flight: Vec<usize>,
+}
+
+impl Checkpoint {
+    fn capture(spec: &SimSpec, a: &SimArena) -> Checkpoint {
+        Checkpoint {
+            spec: spec.clone(),
+            f_arrival: a.f_arrival.clone(),
+            b_arrival: a.b_arrival.clone(),
+            cursor: a.cursor.clone(),
+            busy: a.busy.clone(),
+            f_chan_free: a.f_chan_free.clone(),
+            b_chan_free: a.b_chan_free.clone(),
+            peak_in_flight: a.peak_in_flight.clone(),
+        }
+    }
+
+    fn refresh(&mut self, spec: &SimSpec, a: &SimArena) {
+        self.spec.clone_from(spec);
+        self.f_arrival.clone_from(&a.f_arrival);
+        self.b_arrival.clone_from(&a.b_arrival);
+        self.cursor.clone_from(&a.cursor);
+        self.busy.clone_from(&a.busy);
+        self.f_chan_free.clone_from(&a.f_chan_free);
+        self.b_chan_free.clone_from(&a.b_chan_free);
+        self.peak_in_flight.clone_from(&a.peak_in_flight);
+    }
+}
+
+/// A reusable batched/incremental simulator for one candidate family at a
+/// time: owns a [`SimArena`], an optional replay [`Checkpoint`] and the
+/// [`BatchStats`] counters. One per planner worker; `begin_family`
+/// (called between families) drops the checkpoint and releases oversized
+/// capacity via [`SimArena::shrink_to`].
+#[derive(Debug, Default)]
+pub struct FamilySim {
+    arena: SimArena,
+    ckpt: Option<Checkpoint>,
+    dirty: Vec<bool>,
+    /// Path counters for the lifetime of this value.
+    pub stats: BatchStats,
+}
+
+impl FamilySim {
+    /// Empty simulator; buffers grow to fit the first family and are
+    /// reused afterwards.
+    pub fn new() -> FamilySim {
+        FamilySim::default()
+    }
+
+    /// Per-stage peak in-flight micro-batches of the last call, like
+    /// [`SimArena::peak_in_flight`].
+    pub fn peak_in_flight(&self) -> &[usize] {
+        self.arena.peak_in_flight()
+    }
+
+    /// The owned arena (capacity inspection).
+    pub fn arena(&self) -> &SimArena {
+        &self.arena
+    }
+
+    /// Start a new candidate family of up to `n × m_max` timeline cells:
+    /// drops the replay checkpoint (a different family's state can never
+    /// seed a replay) and shrinks the arena when the retained capacity
+    /// exceeds [`SHRINK_HYSTERESIS`]× the new working set — so one huge
+    /// probe does not pin its peak allocation for the rest of a run.
+    pub fn begin_family(&mut self, n: usize, m_max: usize) {
+        self.ckpt = None;
+        let need = (n * m_max).max(1);
+        if self.arena.cells_capacity() > SHRINK_HYSTERESIS * need {
+            self.arena.shrink_to(n, m_max.max(1));
+        }
+    }
+
+    /// One cold batched pass: bit-exact with `simulate_fast` (and thus
+    /// with `simulate_reference`) on makespan, bubble fraction and
+    /// per-stage peaks, but table-free — the program is read through
+    /// [`ProgramShape`]. Does not touch the replay checkpoint.
+    pub fn run(&mut self, spec: &SimSpec) -> FastResult {
+        self.stats.full_runs += 1;
+        let (makespan, bubble_fraction) = run_cold(&mut self.arena, spec);
+        FastResult { makespan, bubble_fraction }
+    }
+
+    /// Sweep a whole family (same kind and stage count, e.g. an M-grid)
+    /// through one arena: sizes the arena once for the family's largest
+    /// member, then runs each spec cold.
+    pub fn run_grid(&mut self, family: &[SimSpec]) -> Vec<FastResult> {
+        let Some(first) = family.first() else { return Vec::new() };
+        let n = first.n();
+        for s in family {
+            assert_eq!(s.n(), n, "run_grid: mixed stage counts in one family");
+            assert_eq!(s.kind, first.kind, "run_grid: mixed schedule kinds in one family");
+        }
+        let m_max = family.iter().map(|s| s.m).max().unwrap_or(1);
+        self.begin_family(n, m_max);
+        family.iter().map(|s| self.run(s)).collect()
+    }
+
+    /// Re-simulate `spec` against the previous `resimulate` call's
+    /// checkpoint: rows whose parameters differ (compute costs, exec
+    /// mode, or the transfer costs of the edges they produce into) are
+    /// replayed; everything else is served from the checkpoint, subject
+    /// to the bit-exact fixpoint verification described in the module
+    /// docs. Falls back to a cold pass when there is no compatible
+    /// checkpoint (different kind/n/m) or the dirty set exceeds half the
+    /// rows. The checkpoint is updated to `spec`'s state either way.
+    pub fn resimulate(&mut self, spec: &SimSpec) -> FastResult {
+        check_spec(spec);
+        let compatible = self.ckpt.as_ref().is_some_and(|c| {
+            c.spec.kind == spec.kind && c.spec.n() == spec.n() && c.spec.m == spec.m
+        });
+        if !compatible {
+            return self.cold_checkpointed(spec);
+        }
+        let n = spec.n();
+        let m = spec.m;
+        let FamilySim { arena, ckpt, dirty, stats } = self;
+        dirty.clear();
+        dirty.resize(n, false);
+        let mut cnt = 0usize;
+        {
+            let c = ckpt.as_ref().unwrap();
+            for i in 0..n {
+                if row_differs(&c.spec, spec, i) {
+                    dirty[i] = true;
+                    cnt += 1;
+                }
+            }
+        }
+        if cnt == 0 {
+            // bit-identical spec: the checkpoint *is* the answer
+            let c = ckpt.as_ref().unwrap();
+            arena.cursor.clone_from(&c.cursor);
+            arena.busy.clone_from(&c.busy);
+            arena.peak_in_flight.clone_from(&c.peak_in_flight);
+            stats.incremental_runs += 1;
+            let (makespan, bubble_fraction) = finish(arena, n);
+            return FastResult { makespan, bubble_fraction };
+        }
+        loop {
+            if 2 * cnt > n {
+                stats.fallback_runs += 1;
+                let (makespan, bubble_fraction) = run_cold(arena, spec);
+                ckpt.as_mut().unwrap().refresh(spec, arena);
+                return FastResult { makespan, bubble_fraction };
+            }
+            let c = ckpt.as_ref().unwrap();
+            prefill(arena, c, dirty, n, m);
+            let expected: usize = (0..n)
+                .filter(|&i| dirty[i])
+                .map(|i| ProgramShape::of(spec.kind, n, i, m).len())
+                .sum();
+            let executed = drain_ready(spec, arena, Some(dirty));
+            assert_eq!(
+                executed, expected,
+                "incremental replay deadlock: {:?} n={n} m={m}",
+                spec.kind
+            );
+            // Fixpoint verification: every clean row fed by a dirty
+            // producer must have received bit-identical inputs, else its
+            // checkpointed timings are stale and it joins the dirty set.
+            let mut grow: Vec<usize> = Vec::new();
+            for r in 0..n {
+                if dirty[r] {
+                    continue;
+                }
+                let row = r * m;
+                let f_stale = r > 0
+                    && dirty[r - 1]
+                    && !rows_equal(&arena.f_arrival[row..row + m], &c.f_arrival[row..row + m]);
+                let b_stale = r + 1 < n
+                    && dirty[r + 1]
+                    && !rows_equal(&arena.b_arrival[row..row + m], &c.b_arrival[row..row + m]);
+                if f_stale || b_stale {
+                    grow.push(r);
+                }
+            }
+            if grow.is_empty() {
+                break;
+            }
+            stats.fixpoint_rounds += 1;
+            for r in grow {
+                dirty[r] = true;
+                cnt += 1;
+            }
+        }
+        // Accepted: fold results over the mixed state, then absorb the
+        // replayed rows into the checkpoint.
+        stats.incremental_runs += 1;
+        let (makespan, bubble_fraction) = finish(arena, n);
+        let c = ckpt.as_mut().unwrap();
+        c.spec.clone_from(spec);
+        for i in 0..n {
+            if dirty[i] {
+                c.cursor[i] = arena.cursor[i];
+                c.busy[i] = arena.busy[i];
+                c.peak_in_flight[i] = arena.peak_in_flight[i];
+                if i + 1 < n {
+                    c.f_chan_free[i] = arena.f_chan_free[i];
+                }
+                if i > 0 {
+                    c.b_chan_free[i - 1] = arena.b_chan_free[i - 1];
+                }
+            }
+        }
+        for r in 0..n {
+            let row = r * m;
+            if r > 0 && dirty[r - 1] {
+                c.f_arrival[row..row + m].copy_from_slice(&arena.f_arrival[row..row + m]);
+            }
+            if r + 1 < n && dirty[r + 1] {
+                c.b_arrival[row..row + m].copy_from_slice(&arena.b_arrival[row..row + m]);
+            }
+        }
+        FastResult { makespan, bubble_fraction }
+    }
+
+    fn cold_checkpointed(&mut self, spec: &SimSpec) -> FastResult {
+        self.stats.full_runs += 1;
+        let (makespan, bubble_fraction) = run_cold(&mut self.arena, spec);
+        match &mut self.ckpt {
+            Some(c) => c.refresh(spec, &self.arena),
+            None => self.ckpt = Some(Checkpoint::capture(spec, &self.arena)),
+        }
+        FastResult { makespan, bubble_fraction }
+    }
+}
+
+/// Does stage `i` need replaying under the new spec? A row owns its
+/// compute costs, its exec mode, and the transfer costs of the edges *it
+/// produces into* (`fwd_xfer[i]` forward, `bwd_xfer[i-1]` backward) —
+/// exactly the parameters `engine::run_core` reads when row `i` executes.
+fn row_differs(old: &SimSpec, new: &SimSpec, i: usize) -> bool {
+    let n = new.n();
+    old.fwd[i].to_bits() != new.fwd[i].to_bits()
+        || old.bwd[i].to_bits() != new.bwd[i].to_bits()
+        || old.update[i].to_bits() != new.update[i].to_bits()
+        || old.exec[i] != new.exec[i]
+        || (i + 1 < n && old.fwd_xfer[i].to_bits() != new.fwd_xfer[i].to_bits())
+        || (i > 0 && old.bwd_xfer[i - 1].to_bits() != new.bwd_xfer[i - 1].to_bits())
+}
+
+fn rows_equal(a: &[f64], b: &[f64]) -> bool {
+    a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits())
+}
+
+fn check_spec(spec: &SimSpec) {
+    let n = spec.n();
+    assert!(n >= 1);
+    assert_eq!(spec.bwd.len(), n);
+    assert_eq!(spec.update.len(), n);
+    assert_eq!(spec.exec.len(), n);
+    assert_eq!(spec.fwd_xfer.len(), n - 1);
+    assert_eq!(spec.bwd_xfer.len(), n - 1);
+    assert!(spec.m >= 1);
+}
+
+/// Cold batched pass over the whole timeline (mirrors `SimArena::reset`
+/// minus the op table and `f_done` matrix, then drains the ready list).
+fn run_cold(a: &mut SimArena, spec: &SimSpec) -> (f64, f64) {
+    check_spec(spec);
+    let n = spec.n();
+    let m = spec.m;
+    a.f_arrival.clear();
+    a.f_arrival.resize(n * m, f64::NAN);
+    a.b_arrival.clear();
+    a.b_arrival.resize(n * m, f64::NAN);
+    // Stage 0's forward inputs are local; the last stage starts backward
+    // from its own loss.
+    for k in 0..m {
+        a.f_arrival[k] = 0.0;
+        a.b_arrival[(n - 1) * m + k] = 0.0;
+    }
+    a.cursor.clear();
+    a.cursor.resize(n, 0.0);
+    a.busy.clear();
+    a.busy.resize(n, 0.0);
+    a.pc.clear();
+    a.pc.resize(n, 0);
+    a.f_chan_free.clear();
+    a.f_chan_free.resize(n.saturating_sub(1), 0.0);
+    a.b_chan_free.clear();
+    a.b_chan_free.resize(n.saturating_sub(1), 0.0);
+    a.in_flight.clear();
+    a.in_flight.resize(n, 0);
+    a.peak_in_flight.clear();
+    a.peak_in_flight.resize(n, 0);
+    a.ready.clear();
+    a.ready.extend(0..n);
+    a.queued.clear();
+    a.queued.resize(n, true);
+    let total: usize = (0..n).map(|i| ProgramShape::of(spec.kind, n, i, m).len()).sum();
+    let executed = drain_ready(spec, a, None);
+    assert_eq!(executed, total, "schedule deadlock: {:?} n={n} m={m}", spec.kind);
+    finish(a, n)
+}
+
+/// Makespan and bubble fraction, with the exact folds of `run_core`.
+fn finish(a: &SimArena, n: usize) -> (f64, f64) {
+    let makespan = a.cursor.iter().cloned().fold(0.0, f64::max);
+    let bubble = if makespan > 0.0 {
+        (0..n).map(|i| 1.0 - a.busy[i] / makespan).sum::<f64>() / n as f64
+    } else {
+        0.0
+    };
+    (makespan, bubble)
+}
+
+/// Seed the arena for an incremental replay: clean rows keep their
+/// checkpointed timings and their input rows (when the producer is clean
+/// too — boundary inputs count as clean); dirty rows restart from zero
+/// with NaN'd inputs from dirty producers.
+fn prefill(arena: &mut SimArena, c: &Checkpoint, dirty: &[bool], n: usize, m: usize) {
+    arena.f_arrival.clear();
+    arena.f_arrival.resize(n * m, f64::NAN);
+    arena.b_arrival.clear();
+    arena.b_arrival.resize(n * m, f64::NAN);
+    for r in 0..n {
+        let row = r * m;
+        if r == 0 || !dirty[r - 1] {
+            arena.f_arrival[row..row + m].copy_from_slice(&c.f_arrival[row..row + m]);
+        }
+        if r + 1 == n || !dirty[r + 1] {
+            arena.b_arrival[row..row + m].copy_from_slice(&c.b_arrival[row..row + m]);
+        }
+    }
+    arena.cursor.clone_from(&c.cursor);
+    arena.busy.clone_from(&c.busy);
+    arena.peak_in_flight.clone_from(&c.peak_in_flight);
+    arena.f_chan_free.clone_from(&c.f_chan_free);
+    arena.b_chan_free.clone_from(&c.b_chan_free);
+    arena.pc.clear();
+    arena.pc.resize(n, 0);
+    arena.in_flight.clear();
+    arena.in_flight.resize(n, 0);
+    arena.ready.clear();
+    arena.queued.clear();
+    arena.queued.resize(n, false);
+    for i in 0..n {
+        if dirty[i] {
+            arena.cursor[i] = 0.0;
+            arena.busy[i] = 0.0;
+            arena.peak_in_flight[i] = 0;
+            if i + 1 < n {
+                arena.f_chan_free[i] = 0.0;
+            }
+            if i > 0 {
+                arena.b_chan_free[i - 1] = 0.0;
+            }
+            arena.ready.push(i);
+            arena.queued[i] = true;
+        }
+    }
+}
+
+/// Drain the ready list. With `dirty = Some(mask)` only masked rows are
+/// ever (re)queued — clean rows' timings are served from the checkpoint.
+fn drain_ready(spec: &SimSpec, a: &mut SimArena, dirty: Option<&[bool]>) -> usize {
+    let mut executed = 0usize;
+    while let Some(i) = a.ready.pop() {
+        a.queued[i] = false;
+        executed += exec_stage(spec, a, i, dirty);
+    }
+    executed
+}
+
+/// Run stage `i` forward from its program counter until it blocks on a
+/// missing arrival, with the stage's scalar state (cursor, busy,
+/// in-flight, channel frees) held in locals for the whole burst. Every
+/// timing expression is verbatim from `engine::run_core`; the `f_done`
+/// gate is dropped (see module docs). Returns the number of ops executed.
+fn exec_stage(spec: &SimSpec, a: &mut SimArena, i: usize, dirty: Option<&[bool]>) -> usize {
+    let n = spec.n();
+    let m = spec.m;
+    let row = i * m;
+    let mut cur = a.cursor[i];
+    let mut busy = a.busy[i];
+    let mut infl = a.in_flight[i];
+    let mut peak = a.peak_in_flight[i];
+    let mut fch = if i + 1 < n { a.f_chan_free[i] } else { 0.0 };
+    let mut bch = if i > 0 { a.b_chan_free[i - 1] } else { 0.0 };
+    let mut pc = a.pc[i];
+    let pc0 = pc;
+    let fd = spec.fwd[i];
+    let bd = spec.bwd[i];
+    let fbd = fd + bd;
+    let ud = spec.update[i];
+    let sync = spec.exec[i] == ExecMode::Sync;
+    let fx = if i + 1 < n { spec.fwd_xfer[i] } else { 0.0 };
+    let bx = if i > 0 { spec.bwd_xfer[i - 1] } else { 0.0 };
+
+    macro_rules! produce_fwd {
+        ($mb:expr, $start:expr, $end:expr) => {{
+            infl += 1;
+            if infl > peak {
+                peak = infl;
+            }
+            if i + 1 < n {
+                let arr = if sync {
+                    $end.max(fch) + fx
+                } else {
+                    // streamed during the op when the channel allows
+                    $end.max($start.max(fch) + fx)
+                };
+                fch = arr;
+                a.f_arrival[(i + 1) * m + $mb] = arr;
+                if !a.queued[i + 1] && dirty.is_none_or(|d| d[i + 1]) {
+                    a.queued[i + 1] = true;
+                    a.ready.push(i + 1);
+                }
+            }
+        }};
+    }
+    macro_rules! produce_bwd {
+        ($mb:expr, $start:expr, $end:expr) => {{
+            infl = infl.saturating_sub(1);
+            if i > 0 {
+                let arr = if sync {
+                    $end.max(bch) + bx
+                } else {
+                    $end.max($start.max(bch) + bx)
+                };
+                bch = arr;
+                a.b_arrival[(i - 1) * m + $mb] = arr;
+                if !a.queued[i - 1] && dirty.is_none_or(|d| d[i - 1]) {
+                    a.queued[i - 1] = true;
+                    a.ready.push(i - 1);
+                }
+            }
+        }};
+    }
+
+    match ProgramShape::of(spec.kind, n, i, m) {
+        ProgramShape::OneFOneB { w, m: _, update } => 'blocked: {
+            // warm-up forwards
+            while pc < w {
+                let arr = a.f_arrival[row + pc];
+                if arr.is_nan() {
+                    break 'blocked;
+                }
+                let start = cur.max(arr);
+                let end = start + fd;
+                cur = end;
+                busy += fd;
+                produce_fwd!(pc, start, end);
+                pc += 1;
+            }
+            // steady 1F1B alternation
+            let steady_end = 2 * m - w;
+            while pc < steady_end {
+                let q = pc - w;
+                if q % 2 == 0 {
+                    let mb = q / 2;
+                    let arr = a.b_arrival[row + mb];
+                    if arr.is_nan() {
+                        break 'blocked;
+                    }
+                    let start = cur.max(arr);
+                    let end = start + bd;
+                    cur = end;
+                    busy += bd;
+                    produce_bwd!(mb, start, end);
+                } else {
+                    let mb = w + q / 2;
+                    let arr = a.f_arrival[row + mb];
+                    if arr.is_nan() {
+                        break 'blocked;
+                    }
+                    let start = cur.max(arr);
+                    let end = start + fd;
+                    cur = end;
+                    busy += fd;
+                    produce_fwd!(mb, start, end);
+                }
+                pc += 1;
+            }
+            // drain backwards
+            while pc < 2 * m {
+                let mb = pc - m;
+                let arr = a.b_arrival[row + mb];
+                if arr.is_nan() {
+                    break 'blocked;
+                }
+                let start = cur.max(arr);
+                let end = start + bd;
+                cur = end;
+                busy += bd;
+                produce_bwd!(mb, start, end);
+                pc += 1;
+            }
+            if update && pc == 2 * m {
+                // Update is ready at the stage's own cursor
+                cur += ud;
+                busy += ud;
+                pc += 1;
+            }
+        }
+        ProgramShape::GPipe { m: _ } => 'blocked: {
+            while pc < m {
+                let arr = a.f_arrival[row + pc];
+                if arr.is_nan() {
+                    break 'blocked;
+                }
+                let start = cur.max(arr);
+                let end = start + fd;
+                cur = end;
+                busy += fd;
+                produce_fwd!(pc, start, end);
+                pc += 1;
+            }
+            while pc < 2 * m {
+                let mb = 2 * m - 1 - pc;
+                let arr = a.b_arrival[row + mb];
+                if arr.is_nan() {
+                    break 'blocked;
+                }
+                let start = cur.max(arr);
+                let end = start + bd;
+                cur = end;
+                busy += bd;
+                produce_bwd!(mb, start, end);
+                pc += 1;
+            }
+            if pc == 2 * m {
+                cur += ud;
+                busy += ud;
+                pc += 1;
+            }
+        }
+        ProgramShape::Fbp { o, m: _ } => 'blocked: {
+            // forward stream alone until the first backward lands
+            let split = o.min(m);
+            while pc < split {
+                let arr = a.f_arrival[row + pc];
+                if arr.is_nan() {
+                    break 'blocked;
+                }
+                let start = cur.max(arr);
+                let end = start + fbd;
+                cur = end;
+                busy += fbd;
+                produce_fwd!(pc, start, end);
+                pc += 1;
+            }
+            // concurrent fwd/bwd slots (each costs F+B — static DSPs)
+            while pc < m {
+                let f_mb = pc;
+                let b_mb = pc - o;
+                let fa = a.f_arrival[row + f_mb];
+                let ba = a.b_arrival[row + b_mb];
+                if fa.is_nan() || ba.is_nan() {
+                    break 'blocked;
+                }
+                let start = cur.max(fa.max(ba));
+                let end = start + fbd;
+                cur = end;
+                busy += fbd;
+                produce_fwd!(f_mb, start, end);
+                produce_bwd!(b_mb, start, end);
+                pc += 1;
+            }
+            // backward-only tail
+            let tail_end = m + split;
+            while pc < tail_end {
+                let mb = o.max(m) + (pc - m) - o;
+                let arr = a.b_arrival[row + mb];
+                if arr.is_nan() {
+                    break 'blocked;
+                }
+                let start = cur.max(arr);
+                let end = start + fbd;
+                cur = end;
+                busy += fbd;
+                produce_bwd!(mb, start, end);
+                pc += 1;
+            }
+            if pc == tail_end {
+                cur += ud;
+                busy += ud;
+                pc += 1;
+            }
+        }
+    }
+
+    let executed = pc - pc0;
+    a.pc[i] = pc;
+    a.cursor[i] = cur;
+    a.busy[i] = busy;
+    a.in_flight[i] = infl;
+    a.peak_in_flight[i] = peak;
+    if i + 1 < n {
+        a.f_chan_free[i] = fch;
+    }
+    if i > 0 {
+        a.b_chan_free[i - 1] = bch;
+    }
+    executed
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::schedule::ScheduleKind;
+    use crate::sim::engine::{simulate_fast, simulate_reference};
+    use crate::util::prop::{check, ensure, Config};
+    use crate::util::rng::Rng;
+
+    fn random_spec(r: &mut Rng, kind: ScheduleKind, n: usize, m: usize) -> SimSpec {
+        let mut spec = SimSpec::uniform(kind, n, m, 1.0, 1.0, 0.0, ExecMode::Sync);
+        for i in 0..n {
+            spec.fwd[i] = 0.01 + r.f64() * 2.0;
+            spec.bwd[i] = 0.01 + r.f64() * 3.0;
+            spec.update[i] = if r.f64() < 0.5 { 0.0 } else { r.f64() * 0.3 };
+            spec.exec[i] = if r.f64() < 0.5 { ExecMode::Sync } else { ExecMode::Async };
+        }
+        for i in 0..n.saturating_sub(1) {
+            spec.fwd_xfer[i] = r.f64() * 1.2;
+            spec.bwd_xfer[i] = r.f64() * 1.2;
+        }
+        spec
+    }
+
+    #[test]
+    fn batched_cold_matches_fast_and_reference_property() {
+        // The table-free batched pass must agree bit-exactly with both
+        // simulate_fast and the seed oracle across every kind and mixed
+        // per-stage exec modes, with the FamilySim reused across cases.
+        let kinds = ScheduleKind::all();
+        let mut fam = FamilySim::new();
+        let mut arena = SimArena::new();
+        check(
+            &Config { cases: 150, seed: 0xBA7C4, max_size: 28 },
+            |g| {
+                let n = g.usize_in(1, 7);
+                let m = g.usize_in(1, 28);
+                let kind = kinds[g.usize_in(0, kinds.len())];
+                let seed = g.usize_in(0, 1 << 30) as u64;
+                let mut r = Rng::new(seed);
+                random_spec(&mut r, kind, n, m)
+            },
+            |spec| {
+                let reference = simulate_reference(spec);
+                let fast = simulate_fast(spec, &mut arena);
+                let got = fam.run(spec);
+                ensure(
+                    got.makespan == reference.makespan,
+                    format!("batched makespan {} != ref {}", got.makespan, reference.makespan),
+                )?;
+                ensure(
+                    got.bubble_fraction == reference.bubble_fraction,
+                    format!(
+                        "batched bubble {} != ref {}",
+                        got.bubble_fraction, reference.bubble_fraction
+                    ),
+                )?;
+                ensure(
+                    got == fast,
+                    format!("batched {got:?} != fast {fast:?}"),
+                )?;
+                ensure(
+                    fam.peak_in_flight() == &reference.peak_in_flight[..],
+                    format!(
+                        "batched peaks {:?} != ref {:?}",
+                        fam.peak_in_flight(),
+                        reference.peak_in_flight
+                    ),
+                )
+            },
+        );
+    }
+
+    #[test]
+    fn run_grid_matches_per_candidate_fast() {
+        // An M-grid family through one arena pass equals per-candidate
+        // simulate_fast, bit for bit, for each kind.
+        let mut r = Rng::new(0xFA111);
+        for kind in ScheduleKind::all() {
+            let n = 5;
+            let base = random_spec(&mut r, kind, n, 1);
+            let family: Vec<SimSpec> = [2usize, 4, 8, 16, 32]
+                .iter()
+                .map(|&m| {
+                    let mut s = base.clone();
+                    s.m = m;
+                    s
+                })
+                .collect();
+            let mut fam = FamilySim::new();
+            let got = fam.run_grid(&family);
+            let mut arena = SimArena::new();
+            for (s, g) in family.iter().zip(&got) {
+                let fast = simulate_fast(s, &mut arena);
+                assert_eq!(*g, fast, "{kind:?} m={}", s.m);
+            }
+            assert_eq!(fam.stats.full_runs, family.len());
+        }
+    }
+
+    #[test]
+    fn incremental_replays_match_cold_passes_property() {
+        // Chains of row mutations replayed incrementally must stay
+        // bit-identical to cold reference runs — and the property run as
+        // a whole must exercise the incremental, fallback and
+        // fixpoint-growth paths (checked after the sweep so a silent
+        // always-fallback regression cannot pass).
+        let kinds = ScheduleKind::all();
+        let mut totals = BatchStats::default();
+        check(
+            &Config { cases: 60, seed: 0x1C4E_5EED, max_size: 16 },
+            |g| {
+                let n = g.usize_in(2, 7);
+                let m = g.usize_in(1, 16);
+                let kind = kinds[g.usize_in(0, kinds.len())];
+                let seed = g.usize_in(0, 1 << 30) as u64;
+                (kind, n, m, seed)
+            },
+            |&(kind, n, m, seed)| {
+                let mut r = Rng::new(seed);
+                let mut spec = random_spec(&mut r, kind, n, m);
+                let mut fam = FamilySim::new();
+                for step in 0..4 {
+                    // mutate 0..=n rows (0 = identical respin; large =
+                    // forced fallback)
+                    let k = (r.f64() * (n + 1) as f64) as usize;
+                    for _ in 0..k {
+                        let i = (r.f64() * n as f64) as usize % n;
+                        match (r.f64() * 4.0) as usize {
+                            0 => spec.fwd[i] = 0.01 + r.f64() * 2.0,
+                            1 => spec.bwd[i] = 0.01 + r.f64() * 3.0,
+                            2 if i + 1 < n => spec.fwd_xfer[i] = r.f64() * 1.2,
+                            _ if i > 0 => spec.bwd_xfer[i - 1] = r.f64() * 1.2,
+                            _ => spec.update[i] = r.f64() * 0.3,
+                        }
+                    }
+                    let got = fam.resimulate(&spec);
+                    let reference = simulate_reference(&spec);
+                    ensure(
+                        got.makespan == reference.makespan,
+                        format!(
+                            "{kind:?} n={n} m={m} step={step}: resim makespan {} != ref {}",
+                            got.makespan, reference.makespan
+                        ),
+                    )?;
+                    ensure(
+                        got.bubble_fraction == reference.bubble_fraction,
+                        format!("{kind:?} n={n} m={m} step={step}: bubble mismatch"),
+                    )?;
+                    ensure(
+                        fam.peak_in_flight() == &reference.peak_in_flight[..],
+                        format!("{kind:?} n={n} m={m} step={step}: peaks mismatch"),
+                    )?;
+                }
+                totals.full_runs += fam.stats.full_runs;
+                totals.incremental_runs += fam.stats.incremental_runs;
+                totals.fallback_runs += fam.stats.fallback_runs;
+                totals.fixpoint_rounds += fam.stats.fixpoint_rounds;
+                Ok(())
+            },
+        );
+        assert!(totals.full_runs > 0, "no cold passes exercised: {totals:?}");
+        assert!(totals.incremental_runs > 0, "no incremental replays exercised: {totals:?}");
+        assert!(totals.fallback_runs > 0, "no threshold fallbacks exercised: {totals:?}");
+    }
+
+    #[test]
+    fn fallback_threshold_boundary() {
+        // n=8: exactly 4 dirty rows (2·4 = n) must stay on the
+        // incremental path; 5 dirty rows (2·5 > n) must fall back. Both
+        // must match the reference bit-exactly.
+        let n = 8;
+        let m = 6;
+        let mut r = Rng::new(0xB0DA);
+        let mut spec = random_spec(&mut r, ScheduleKind::OneFOneBSo, n, m);
+        for e in spec.exec.iter_mut() {
+            *e = ExecMode::Sync;
+        }
+        let mut fam = FamilySim::new();
+        fam.resimulate(&spec); // establish the checkpoint
+        assert_eq!(fam.stats.full_runs, 1);
+
+        // Exactly half the rows dirty — update-time changes are truly
+        // local (the update op is last in the program and produces
+        // nothing), so the dirty set cannot grow and the replay must stay
+        // on the incremental path.
+        for i in 4..8 {
+            spec.update[i] = 0.05 + 0.01 * i as f64;
+        }
+        let at_limit = fam.resimulate(&spec);
+        assert_eq!(fam.stats.incremental_runs, 1, "{:?}", fam.stats);
+        assert_eq!(fam.stats.fallback_runs, 0, "{:?}", fam.stats);
+        assert_eq!(fam.stats.fixpoint_rounds, 0, "{:?}", fam.stats);
+        let reference = simulate_reference(&spec);
+        assert_eq!(at_limit.makespan, reference.makespan);
+        assert_eq!(at_limit.bubble_fraction, reference.bubble_fraction);
+
+        // One more dirty row crosses the threshold.
+        for i in 3..8 {
+            spec.fwd[i] += 0.123;
+        }
+        let past_limit = fam.resimulate(&spec);
+        assert_eq!(fam.stats.fallback_runs, 1, "{:?}", fam.stats);
+        let reference = simulate_reference(&spec);
+        assert_eq!(past_limit.makespan, reference.makespan);
+        assert_eq!(past_limit.bubble_fraction, reference.bubble_fraction);
+    }
+
+    #[test]
+    fn fixpoint_growth_stays_exact() {
+        // A compute-cost change on row 0 cascades into downstream rows'
+        // arrivals; the fixpoint check must grow the dirty set (or fall
+        // back) rather than serve stale checkpointed timings.
+        let n = 6;
+        let m = 8;
+        let mut r = Rng::new(0xF1F0);
+        let mut spec = random_spec(&mut r, ScheduleKind::OneFOneBAs, n, m);
+        let mut fam = FamilySim::new();
+        fam.resimulate(&spec);
+        spec.fwd[0] *= 3.0;
+        let got = fam.resimulate(&spec);
+        let reference = simulate_reference(&spec);
+        assert_eq!(got.makespan, reference.makespan);
+        assert_eq!(got.bubble_fraction, reference.bubble_fraction);
+        assert_eq!(fam.peak_in_flight(), &reference.peak_in_flight[..]);
+        assert!(
+            fam.stats.fixpoint_rounds > 0 || fam.stats.fallback_runs > 0,
+            "cascading change neither grew the dirty set nor fell back: {:?}",
+            fam.stats
+        );
+    }
+
+    #[test]
+    fn begin_family_releases_capacity_between_families() {
+        // A big family grows the arena; starting a much smaller family
+        // must shrink it (the SHRINK_HYSTERESIS policy over
+        // SimArena::shrink_to).
+        let mut fam = FamilySim::new();
+        let big = SimSpec::uniform(ScheduleKind::OneFOneBSo, 16, 512, 1.0, 2.0, 0.1, ExecMode::Sync);
+        fam.run_grid(std::slice::from_ref(&big));
+        assert!(fam.arena().cells_capacity() >= 16 * 512);
+        let small = SimSpec::uniform(ScheduleKind::GPipe, 2, 4, 1.0, 1.0, 0.2, ExecMode::Sync);
+        let got = fam.run_grid(std::slice::from_ref(&small))[0];
+        assert!(
+            fam.arena().cells_capacity() < 16 * 512 / SHRINK_HYSTERESIS,
+            "capacity {} not released",
+            fam.arena().cells_capacity()
+        );
+        let mut arena = SimArena::new();
+        assert_eq!(got, simulate_fast(&small, &mut arena));
+    }
+
+    #[test]
+    fn resimulate_on_shape_change_recovers_with_cold_pass() {
+        // kind / n / m changes invalidate the checkpoint; resimulate must
+        // transparently run cold and stay exact.
+        let mut fam = FamilySim::new();
+        let mut arena = SimArena::new();
+        for spec in [
+            SimSpec::uniform(ScheduleKind::OneFOneBSo, 4, 8, 1.0, 2.0, 0.1, ExecMode::Sync),
+            SimSpec::uniform(ScheduleKind::OneFOneBSo, 4, 12, 1.0, 2.0, 0.1, ExecMode::Sync),
+            SimSpec::uniform(ScheduleKind::GPipe, 4, 12, 1.0, 2.0, 0.1, ExecMode::Sync),
+            SimSpec::uniform(ScheduleKind::GPipe, 6, 12, 1.0, 2.0, 0.1, ExecMode::Sync),
+        ] {
+            assert_eq!(fam.resimulate(&spec), simulate_fast(&spec, &mut arena));
+        }
+        assert_eq!(fam.stats.full_runs, 4);
+        assert_eq!(fam.stats.incremental_runs, 0);
+    }
+
+    #[test]
+    fn single_stage_pipelines_work_in_both_modes() {
+        let spec = SimSpec::uniform(ScheduleKind::OneFOneBSno, 1, 4, 1.0, 2.0, 0.0, ExecMode::Sync);
+        let mut fam = FamilySim::new();
+        let mut arena = SimArena::new();
+        assert_eq!(fam.run(&spec), simulate_fast(&spec, &mut arena));
+        assert_eq!(fam.resimulate(&spec), simulate_fast(&spec, &mut arena));
+        let mut tweaked = spec.clone();
+        tweaked.fwd[0] = 1.5;
+        // n=1: any dirty row exceeds the n/2 threshold → fallback
+        assert_eq!(fam.resimulate(&tweaked), simulate_fast(&tweaked, &mut arena));
+        assert_eq!(fam.stats.fallback_runs, 1);
+    }
+}

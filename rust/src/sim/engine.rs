@@ -124,26 +124,28 @@ pub struct FastResult {
 #[derive(Debug, Default)]
 pub struct SimArena {
     /// All stage programs, concatenated (`ops_bounds` delimits stages).
+    /// The batched core (`sim::batch`) leaves this empty — it reads the
+    /// program through `generators::ProgramShape` instead.
     ops: Vec<Op>,
     /// `n + 1` offsets into `ops`; stage `i` owns `ops_bounds[i]..ops_bounds[i+1]`.
     ops_bounds: Vec<usize>,
     /// When stage `i`'s forward input for micro-batch `k` is ready (NaN = not yet).
-    f_arrival: Vec<f64>,
+    pub(crate) f_arrival: Vec<f64>,
     /// When stage `i`'s backward input for micro-batch `k` is ready (NaN = not yet).
-    b_arrival: Vec<f64>,
+    pub(crate) b_arrival: Vec<f64>,
     /// Has stage `i` completed the forward of micro-batch `k`?
     f_done: Vec<bool>,
-    cursor: Vec<f64>,
-    busy: Vec<f64>,
-    pc: Vec<usize>,
-    f_chan_free: Vec<f64>,
-    b_chan_free: Vec<f64>,
-    in_flight: Vec<usize>,
-    peak_in_flight: Vec<usize>,
+    pub(crate) cursor: Vec<f64>,
+    pub(crate) busy: Vec<f64>,
+    pub(crate) pc: Vec<usize>,
+    pub(crate) f_chan_free: Vec<f64>,
+    pub(crate) b_chan_free: Vec<f64>,
+    pub(crate) in_flight: Vec<usize>,
+    pub(crate) peak_in_flight: Vec<usize>,
     /// Work list of stages whose next op may have become ready.
-    ready: Vec<usize>,
+    pub(crate) ready: Vec<usize>,
     /// Is the stage already on the work list?
-    queued: Vec<bool>,
+    pub(crate) queued: Vec<bool>,
 }
 
 impl SimArena {
@@ -159,6 +161,76 @@ impl SimArena {
     /// allocation-free).
     pub fn peak_in_flight(&self) -> &[usize] {
         &self.peak_in_flight
+    }
+
+    /// Release capacity beyond what an `(n, m)`-stage simulation needs.
+    ///
+    /// Arena buffers only ever grow, so one 1024-stage order-search probe
+    /// would otherwise pin its peak allocation for the rest of the
+    /// planner run even if every later family is tiny. All scratch state
+    /// is cleared (the next `reset` rebuilds it); capacity shrinks to the
+    /// `(n, m)` working set.
+    pub fn shrink_to(&mut self, n: usize, m: usize) {
+        let cells = n * m;
+        // upper bound on ops per stage across all kinds: 2m + 1 (1F1B /
+        // GPipe) and m + min(m, o) + 1 <= 2m + 1 (FBP)
+        let ops_cap = n * (2 * m + 1);
+        self.ops.clear();
+        self.ops.shrink_to(ops_cap);
+        self.ops_bounds.clear();
+        self.ops_bounds.shrink_to(n + 1);
+        self.f_arrival.clear();
+        self.f_arrival.shrink_to(cells);
+        self.b_arrival.clear();
+        self.b_arrival.shrink_to(cells);
+        self.f_done.clear();
+        self.f_done.shrink_to(cells);
+        self.cursor.clear();
+        self.cursor.shrink_to(n);
+        self.busy.clear();
+        self.busy.shrink_to(n);
+        self.pc.clear();
+        self.pc.shrink_to(n);
+        self.f_chan_free.clear();
+        self.f_chan_free.shrink_to(n.saturating_sub(1));
+        self.b_chan_free.clear();
+        self.b_chan_free.shrink_to(n.saturating_sub(1));
+        self.in_flight.clear();
+        self.in_flight.shrink_to(n);
+        self.peak_in_flight.clear();
+        self.peak_in_flight.shrink_to(n);
+        self.ready.clear();
+        self.ready.shrink_to(n);
+        self.queued.clear();
+        self.queued.shrink_to(n);
+    }
+
+    /// Retained capacity of the `n × m` arrival matrices, in cells — the
+    /// dominant term of the arena's footprint and the hysteresis input
+    /// for [`SimArena::shrink_to`] policies.
+    pub fn cells_capacity(&self) -> usize {
+        self.f_arrival.capacity().max(self.b_arrival.capacity())
+    }
+
+    /// Total bytes currently retained across all buffers (capacities, not
+    /// lengths) — what the capacity-release regression test asserts on.
+    pub fn footprint_bytes(&self) -> usize {
+        use std::mem::size_of;
+        self.ops.capacity() * size_of::<Op>()
+            + self.ops_bounds.capacity() * size_of::<usize>()
+            + (self.f_arrival.capacity() + self.b_arrival.capacity()) * size_of::<f64>()
+            + self.f_done.capacity()
+            + (self.cursor.capacity()
+                + self.busy.capacity()
+                + self.f_chan_free.capacity()
+                + self.b_chan_free.capacity())
+                * size_of::<f64>()
+            + (self.pc.capacity()
+                + self.in_flight.capacity()
+                + self.peak_in_flight.capacity()
+                + self.ready.capacity())
+                * size_of::<usize>()
+            + self.queued.capacity()
     }
 
     /// Size and initialize every buffer for `spec`, keeping capacity.
@@ -897,5 +969,30 @@ mod tests {
         assert_eq!(arena.peak_in_flight(), &s_full.peak_in_flight[..]);
         let b2 = simulate_fast(&big, &mut arena);
         assert_eq!(b1, b2);
+    }
+
+    #[test]
+    fn shrink_to_releases_capacity_and_keeps_results() {
+        // Regression for capacity retention: a large spec grows the arena;
+        // shrink_to must actually release the memory, and the arena must
+        // still simulate correctly (both smaller and larger specs) after.
+        let mut arena = SimArena::new();
+        let big =
+            SimSpec::uniform(ScheduleKind::OneFOneBSo, 16, 512, 1.0, 2.0, 0.1, ExecMode::Sync);
+        let small = SimSpec::uniform(ScheduleKind::GPipe, 2, 4, 1.0, 1.0, 0.2, ExecMode::Sync);
+        let big_ref = simulate_fast(&big, &mut arena);
+        let grown = arena.footprint_bytes();
+        arena.shrink_to(2, 4);
+        let shrunk = arena.footprint_bytes();
+        assert!(
+            shrunk * 8 < grown,
+            "shrink_to kept {shrunk} of {grown} bytes — capacity not released"
+        );
+        assert!(arena.cells_capacity() < 16 * 512);
+        // still fully functional in both directions
+        let s = simulate_fast(&small, &mut arena);
+        assert_eq!(s, simulate_fast(&small, &mut SimArena::new()));
+        let b2 = simulate_fast(&big, &mut arena);
+        assert_eq!(b2, big_ref);
     }
 }

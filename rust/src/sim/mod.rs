@@ -2,9 +2,27 @@
 //! clusters: the [`engine`] executes the per-stage op sequences from
 //! `schedule::generators` against a cost model, honouring synchronous
 //! (GPU) vs asynchronous/streamed (FPGA) communication semantics;
-//! [`timeline`] renders Figs. 4–6-style ASCII timelines; [`dp`] models the
-//! data-parallel baseline with ring all-reduce.
+//! [`batch`] layers batched-family and incremental passes on the same
+//! arena; [`timeline`] renders Figs. 4–6-style ASCII timelines; [`dp`]
+//! models the data-parallel baseline with ring all-reduce.
+//!
+//! Four simulate entry points, all bit-exact with each other; pick by
+//! call pattern:
+//!
+//! * [`simulate_reference`](engine::simulate_reference) — the seed
+//!   round-robin polling oracle. Slow (worst-case quadratic scheduling);
+//!   use only as the correctness baseline in tests and benches.
+//! * [`simulate_full`] (= [`simulate`]) — SoA core plus the full event
+//!   trace, for timelines, figures and debugging one schedule.
+//! * [`simulate_fast`] — trace-free SoA core over a reused [`SimArena`];
+//!   the right call for *one-off* specs on a hot path.
+//! * [`batch::FamilySim`] — table-free batched passes for *families* of
+//!   related specs (M-grids: [`batch::FamilySim::run_grid`]) and
+//!   incremental re-simulation of small per-row diffs against a
+//!   checkpoint ([`batch::FamilySim::resimulate`], order-search probes);
+//!   the planner's phase-B workhorse.
 
+pub mod batch;
 pub mod dp;
 pub mod engine;
 pub mod timeline;

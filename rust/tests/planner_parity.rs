@@ -11,6 +11,9 @@
 //!   permutations) and the phase-B DES fan-out, at 64-stage scale;
 //! * adaptive M refinement never selects a worse plan than the fixed
 //!   grid (zoo models);
+//! * the pooled per-worker simulators (one `sim::batch::FamilySim` per
+//!   worker, shared by the fixed-grid pass and every adaptive-M round)
+//!   keep the jobs=1 ≡ jobs=8 guarantee on the batched DES path;
 //! * `plan.json` artifacts round-trip losslessly;
 //! * device-order permutation search only ever improves a heterogeneous
 //!   plan.
@@ -181,6 +184,57 @@ fn parallel_phase_a_parity_with_permutations() {
             a.candidate.kind,
             a.candidate.m
         );
+    }
+}
+
+#[test]
+fn pooled_batched_path_parity_across_grid_and_adaptive_rounds() {
+    // PR 6 moves phase B onto pooled per-worker `sim::batch::FamilySim`
+    // instances that survive across the fixed-grid pass and every
+    // adaptive-M round (reset via `begin_family` in between). The sparse
+    // starting grid forces at least one bisection round, so a worker's
+    // simulator serves candidate families of different shapes back to
+    // back — and everything observable must still be independent of the
+    // job count on a heterogeneous cluster with permutations on.
+    let net = zoo::vgg16(224);
+    let cl = presets::gpu_mixed_cluster(4); // V100/P100 mix: permutations matter
+    let prof = analytical::profile(&net, &cl);
+    let base = Options {
+        consider_dp: false,
+        permute_devices: true,
+        adaptive_m: true,
+        m_candidates: vec![2, 32], // global batch 32: bisection can reach 1/4/8/16
+        ..opts(8.0)
+    };
+    let serial = planner::explore(&net, &cl, &prof, &Options { jobs: 1, ..base.clone() });
+    let parallel = planner::explore(&net, &cl, &prof, &Options { jobs: 8, ..base });
+    assert_eq!(serial.choice, parallel.choice);
+    assert_eq!(serial.epoch_time, parallel.epoch_time);
+    assert_eq!(serial.minibatch_time, parallel.minibatch_time);
+    assert_eq!(serial.device_order, parallel.device_order);
+    assert_eq!(serial.stage_memory, parallel.stage_memory);
+    assert_eq!(serial.report.cache_hits, parallel.report.cache_hits);
+    // the sparse grid must produce a feasible incumbent for the
+    // bisection to work around (VGG-16 fits this mix comfortably)
+    assert!(
+        serial
+            .report
+            .evaluations
+            .iter()
+            .any(|e| matches!(e.outcome, Outcome::Evaluated { .. })),
+        "no feasible candidate on the starting grid:\n{}",
+        serial.report.log_lines().join("\n")
+    );
+    // the refinement actually ran extra rounds through the shared pool
+    assert!(
+        serial.report.notes.iter().any(|n| n.contains("adaptive-M round")),
+        "expected at least one bisection round:\n{:?}",
+        serial.report.notes
+    );
+    // the candidate work list (ascending-lb order) is jobs-independent
+    assert_eq!(serial.report.evaluations.len(), parallel.report.evaluations.len());
+    for (a, b) in serial.report.evaluations.iter().zip(&parallel.report.evaluations) {
+        assert_eq!(a.candidate, b.candidate);
     }
 }
 
