@@ -114,7 +114,7 @@ fn overlap_vs_link_speed() {
         let micro = 4.0;
         let part = interlayer::dp_optimal(&prof, &cl, &net.legal_cuts(), micro, None).unwrap();
         let t = |kind| {
-            simulate(&build_spec(&prof, &cl, &part, kind, micro, m)).makespan
+            simulate(&build_spec(&prof, &cl, &part, kind, false, micro, m)).makespan
         };
         let sno = t(ScheduleKind::OneFOneBSno);
         let so = t(ScheduleKind::OneFOneBSo);

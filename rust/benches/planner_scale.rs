@@ -20,7 +20,7 @@ use bapipe::partition::interlayer::{
     dp_optimal_prefix, dp_optimal_rc, dp_optimal_reference, max_stage_time,
 };
 use bapipe::planner::space::permuted_view;
-use bapipe::planner::{self, Choice, EvalCache, Options, SearchSpace};
+use bapipe::planner::{self, Choice, EvalCache, Options, Outcome, SearchSpace};
 use bapipe::profile::{analytical, RangeCost};
 use bapipe::schedule::{generators, ScheduleKind};
 use bapipe::sim::batch::FamilySim;
@@ -265,6 +265,63 @@ fn main() {
         if non_identity { "non-identity" } else { "identity" },
     );
 
+    // ---- Pareto-front memory planning on a capacity-halved 8-device
+    // V100 cluster: the --pareto/--recompute axes simulate every feasible
+    // candidate (time-bound pruning suspended) with per-device peak-byte
+    // tracking; report the front and the peak-memory reduction the
+    // lightest front plan achieves over the best GPipe candidate.
+    let pn = 8usize;
+    let pm_model = if quick { "gnmt-l64" } else { "gnmt-l128" };
+    let pm_net = zoo::by_name(pm_model).unwrap();
+    let mut pm_cl = presets::v100_cluster(pn);
+    for d in &mut pm_cl.devices {
+        d.mem_capacity /= 2;
+    }
+    let pm_prof = analytical::profile(&pm_net, &pm_cl);
+    let pm_opts = Options {
+        batch_per_device: 32.0,
+        samples_per_epoch: 4096,
+        consider_dp: false,
+        pareto: true,
+        recompute: true,
+        jobs: 8,
+        ..Default::default()
+    };
+    let pm_bench = bench("planner/pareto 8-device halved-capacity", aw, ai, || {
+        std::hint::black_box(
+            planner::explore(&pm_net, &pm_cl, &pm_prof, &pm_opts).pareto_front.len(),
+        );
+    });
+    let pm_plan = planner::explore(&pm_net, &pm_cl, &pm_prof, &pm_opts);
+    let front = &pm_plan.pareto_front;
+    assert!(!front.is_empty(), "pareto exploration returned an empty front");
+    let lightest = front.last().unwrap();
+    // Fastest feasible GPipe candidate's simulated peak — the baseline
+    // for the paper-style "memory the balanced schedule saves" row.
+    let gpipe_peak = pm_plan
+        .report
+        .evaluations
+        .iter()
+        .filter(|e| e.candidate.kind == ScheduleKind::GPipe)
+        .filter_map(|e| match &e.outcome {
+            Outcome::Evaluated { epoch_time, peak_memory, .. } => {
+                peak_memory.iter().copied().max().map(|p| (*epoch_time, p))
+            }
+            _ => None,
+        })
+        .min_by(|a, b| a.0.total_cmp(&b.0))
+        .map(|(_, p)| p);
+    let pm_reduction = gpipe_peak.map(|g| g as f64 / lightest.peak_memory as f64);
+    println!(
+        "  pareto front ({pm_model}, {pn} halved V100s): {} plans, epoch {:.1}s-{:.1}s, \
+         lightest peak {}, vs GPipe {}",
+        front.len(),
+        front[0].epoch_time,
+        lightest.epoch_time,
+        bapipe::util::fmt_bytes(lightest.peak_memory),
+        pm_reduction.map_or("n/a".to_string(), |r| format!("{r:.2}x smaller")),
+    );
+
     // ---- Emit the measured trajectory.
     let doc = obj(vec![
         ("bench", Json::from("planner_scale")),
@@ -333,6 +390,28 @@ fn main() {
                     Json::Num(het_identity.epoch_time / het_plan.epoch_time),
                 ),
                 ("non_identity_winner", Json::from(non_identity)),
+            ]),
+        ),
+        (
+            "pareto_memory",
+            obj(vec![
+                ("model", Json::from(pm_model)),
+                ("devices", Json::from(pn)),
+                ("capacity_bytes", Json::Num(pm_cl.devices[0].mem_capacity as f64)),
+                ("explore_ms", Json::Num(pm_bench.p50 * 1e3)),
+                ("front_size", Json::from(front.len())),
+                ("fastest_epoch_s", Json::Num(front[0].epoch_time)),
+                ("fastest_peak_bytes", Json::Num(front[0].peak_memory as f64)),
+                ("lightest_epoch_s", Json::Num(lightest.epoch_time)),
+                ("lightest_peak_bytes", Json::Num(lightest.peak_memory as f64)),
+                ("gpipe_peak_bytes", gpipe_peak.map_or(Json::Null, |g| Json::Num(g as f64))),
+                ("memory_reduction_vs_gpipe", pm_reduction.map_or(Json::Null, Json::Num)),
+                (
+                    "memory_scalable_on_front",
+                    Json::from(front.iter().any(|p| {
+                        p.candidate.kind == ScheduleKind::TwoBW || p.candidate.recompute
+                    })),
+                ),
             ]),
         ),
         (

@@ -41,6 +41,7 @@ fn fits(framework: &str, l: u64, n: usize) -> bool {
                     &prof,
                     &mm,
                     ScheduleKind::PipeDream,
+                    false,
                     n,
                     i,
                     part.stage(i),

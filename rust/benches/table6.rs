@@ -84,7 +84,7 @@ fn main() {
         let m = mini; // micro-batch 1 → M = mini-batch size
         let plan = balanced_partition(&net, &cl, &prof, ScheduleKind::FbpAs, micro, m)
             .expect("partition feasible");
-        let spec = build_spec_plan(&prof, &cl, &plan, ScheduleKind::FbpAs, micro, m);
+        let spec = build_spec_plan(&prof, &cl, &plan, ScheduleKind::FbpAs, false, micro, m);
         let ba_time = simulate(&spec).makespan;
 
         rows.push(vec![

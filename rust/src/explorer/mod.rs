@@ -45,9 +45,10 @@ impl Plan {
     /// One-paragraph human-readable report.
     pub fn report(&self) -> String {
         let head = match &self.choice {
-            Choice::Pipeline { kind, m, micro, partition } => format!(
-                "BaPipe plan: {} with M={m} (micro-batch {micro}), partition {}",
+            Choice::Pipeline { kind, m, micro, recompute, partition } => format!(
+                "BaPipe plan: {}{} with M={m} (micro-batch {micro}), partition {}",
                 kind.label(),
+                if *recompute { "+RC" } else { "" },
                 partition.describe()
             ),
             Choice::DataParallel => {

@@ -49,7 +49,14 @@
 //! //    orderings: exhaustive up to 8 devices, and past that the
 //! //    `planner::orders` neighbourhood search (`order_search`) —
 //! //    seeded heuristic layouts hill-climbed under a probe budget.
-//! let opts = planner::Options { jobs: 4, adaptive_m: true, ..Default::default() };
+//! //    Memory is a *simulated* quantity throughout: phase B prices each
+//! //    stage's DES in-flight high-water mark through the same
+//! //    `partition::memfit::StageBytes` the feasibility check used, and
+//! //    `pareto`/`recompute` widen the space with the memory-scalable
+//! //    2BW schedule (double-buffered weight versions) and activation
+//! //    recomputation, keeping the (epoch time × peak memory) Pareto
+//! //    front in the plan.
+//! let opts = planner::Options { jobs: 4, adaptive_m: true, pareto: true, ..Default::default() };
 //! let plan = planner::explore(&net, &cl, &prof, &opts);
 //! println!("{}", plan.summary());
 //! // 4. The typed report is serializable: this is `bapipe explore --emit`.

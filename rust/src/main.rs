@@ -6,6 +6,9 @@
 //!               --permute device-order search, --order-search/--order-budget
 //!               neighbourhood search past 8 devices, --no-prune exhaustive,
 //!               --adaptive-m incumbent-bisection M refinement,
+//!               --pareto keep the epoch-time × peak-memory front (adds the
+//!               memory-scalable 2BW kind), --recompute add the
+//!               activation-recomputation axis,
 //!               --plan-cache path: persist/restore the partition cache
 //!               keyed on a (model, cluster) fingerprint so repeated
 //!               invocations skip phase A entirely)
@@ -72,6 +75,8 @@ fn main() -> bapipe::Result<()> {
                 order_budget: args
                     .get_usize("order-budget", planner::orders::ORDER_BUDGET_DEFAULT),
                 adaptive_m: args.has_flag("adaptive-m"),
+                pareto: args.has_flag("pareto"),
+                recompute: args.has_flag("recompute"),
                 ..Default::default()
             };
             let plan = match args.opt_str("plan-cache") {
@@ -109,6 +114,19 @@ fn main() -> bapipe::Result<()> {
                 println!("  {l}");
             }
             println!("\n{}", plan.summary());
+            if !plan.pareto_front.is_empty() {
+                println!("\n== pareto front (epoch time × peak memory) ==");
+                for p in &plan.pareto_front {
+                    let rc = if p.candidate.recompute { "+RC" } else { "" };
+                    println!(
+                        "  {}{rc} M={}: epoch {:.1}s, peak {}",
+                        p.candidate.kind.label(),
+                        p.candidate.m,
+                        p.epoch_time,
+                        bapipe::util::fmt_bytes(p.peak_memory)
+                    );
+                }
+            }
             if let Some(path) = args.opt_str("emit") {
                 // emit_json re-parses what it serialized and verifies the
                 // round-trip before handing the text out.
@@ -259,6 +277,8 @@ fn main() -> bapipe::Result<()> {
                        # past 8 devices: neighbourhood search over device orderings\n\
                    bapipe explore --model gnmt-l128 --cluster v100 --n 64 \\\n\
                        --plan-cache plan-cache.json   # 2nd run skips phase A\n\
+                   bapipe explore --model gnmt-l64 --cluster v100 --n 8 --pareto --recompute\n\
+                       # epoch-time × peak-memory front; 2BW + recomputation axes\n\
                    bapipe plan diff old-plan.json new-plan.json\n\
                    bapipe simulate --schedule 1f1b-so --n 3 --m 8\n\
                    bapipe train --artifacts artifacts/lm10m-s4-b4 --schedule 1f1b --m 8 --steps 50\n\

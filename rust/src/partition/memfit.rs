@@ -45,34 +45,101 @@ impl MemoryModel {
     }
 }
 
-/// Peak memory (bytes) of stage `i` of `n` under schedule `kind` with
-/// micro-batch size `micro` and `m` micro-batches per mini-batch.
-/// Generic over [`CostModel`]: byte-range queries are bit-exact between
-/// `Profile` sums and `RangeCost` prefix differences, so the fine-tune's
-/// decisions are identical for either backing.
-pub fn stage_memory_bytes<C: CostModel>(
+/// Kind- and recompute-aware per-stage byte components — the **single
+/// source of truth** for memory pricing. The memory fine-tune
+/// ([`fit_memory`]), the planner's feasibility check and its
+/// simulated-peak derivation all price bytes through this struct, so a
+/// plan the fine-tune accepts is priced in exactly the bytes the
+/// simulator reports. The kind-aware multipliers are the Tables 1–2 rows
+/// ([`ScheduleKind::stash_depth`] / [`ScheduleKind::weight_versions`]),
+/// shared with `schedule::analytical::features_memory` /
+/// `weights_memory`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct StageBytes {
+    /// Occupancy-independent bytes: weights + gradient accumulator +
+    /// stashed weight versions + optimizer state + comm buffers +
+    /// boundary I/O buffers (+ one micro-batch of recompute workspace
+    /// when recomputation is on).
+    pub static_bytes: u64,
+    /// Bytes stashed per in-flight micro-batch: the full intermediate
+    /// stash, or boundary-only input under recomputation.
+    pub per_mb_stash: u64,
+    /// The schedule's worst-case stash depth (in-flight micro-batches).
+    pub stash_depth: usize,
+}
+
+impl StageBytes {
+    /// Worst-case peak: every stash slot the schedule can fill, filled.
+    pub fn peak(&self) -> u64 {
+        self.at_occupancy(self.stash_depth)
+    }
+
+    /// Bytes when `in_flight` micro-batches are live — the simulated-peak
+    /// figure once `in_flight` is the DES high-water mark.
+    pub fn at_occupancy(&self, in_flight: usize) -> u64 {
+        self.static_bytes + in_flight as u64 * self.per_mb_stash
+    }
+}
+
+/// Price stage `i` of `n` under schedule `kind` with micro-batch size
+/// `micro` and `m` micro-batches per mini-batch. Generic over
+/// [`CostModel`]: byte-range queries are bit-exact between `Profile`
+/// sums and `RangeCost` prefix differences, so the fine-tune's decisions
+/// are identical for either backing.
+///
+/// With `recompute`, only the stage's boundary input is stashed per
+/// in-flight micro-batch; the intermediates of **one** micro-batch are
+/// regenerated in a static workspace during its backward (the extra
+/// forward FLOPs are priced into the DES spec by the planner).
+pub fn stage_bytes<C: CostModel>(
     costs: &C,
     mm: &MemoryModel,
     kind: ScheduleKind,
+    recompute: bool,
     n: usize,
     i: usize,
     range: std::ops::Range<usize>,
     micro: f64,
     m: usize,
-) -> u64 {
+) -> StageBytes {
     let w = costs.param_bytes(range.start, range.end);
     let params = w / costs.dtype_bytes();
     // working weights + gradient accumulator + stashed versions
     let weights = (2 + kind.weight_versions(n, i)) as u64 * w;
     let opt = params * mm.optimizer_bytes_per_param;
     let comm = params * mm.comm_bytes_per_param;
-    // activation stash: per in-flight micro-batch, everything BP needs
-    let stash =
-        kind.stash_depth(n, i, m) as u64 * (costs.stash_bytes(range.start, range.end) as f64 * micro) as u64;
     // boundary I/O buffers (double-buffered in and out)
     let io = 2 * (costs.stage_in_bytes(range.start) as f64 * micro) as u64
         + 2 * (costs.cut_bytes(range.end - 1) as f64 * micro) as u64;
-    weights + opt + comm + stash + io
+    let full_stash = (costs.stash_bytes(range.start, range.end) as f64 * micro) as u64;
+    let (per_mb_stash, workspace) = if recompute {
+        // boundary input per in-flight micro-batch + one micro-batch of
+        // regenerated intermediates live during a backward
+        ((costs.stage_in_bytes(range.start) as f64 * micro) as u64, full_stash)
+    } else {
+        (full_stash, 0)
+    };
+    StageBytes {
+        static_bytes: weights + opt + comm + io + workspace,
+        per_mb_stash,
+        stash_depth: kind.stash_depth(n, i, m),
+    }
+}
+
+/// Peak memory (bytes) of stage `i` of `n` — the worst-case
+/// ([`StageBytes::peak`]) view of [`stage_bytes`].
+pub fn stage_memory_bytes<C: CostModel>(
+    costs: &C,
+    mm: &MemoryModel,
+    kind: ScheduleKind,
+    recompute: bool,
+    n: usize,
+    i: usize,
+    range: std::ops::Range<usize>,
+    micro: f64,
+    m: usize,
+) -> u64 {
+    stage_bytes(costs, mm, kind, recompute, n, i, range, micro, m).peak()
 }
 
 /// Memory of the whole net on one device under data parallelism with
@@ -105,6 +172,7 @@ pub fn fit_memory<C: CostModel>(
     cluster: &Cluster,
     part: Partition,
     kind: ScheduleKind,
+    recompute: bool,
     micro: f64,
     m: usize,
     cuts: &[usize],
@@ -117,7 +185,7 @@ pub fn fit_memory<C: CostModel>(
     let max_moves = 4 * costs.n_layers();
 
     let usage = |p: &Partition, i: usize| -> i64 {
-        let used = stage_memory_bytes(costs, &mm, kind, n, i, p.stage(i), micro, m);
+        let used = stage_memory_bytes(costs, &mm, kind, recompute, n, i, p.stage(i), micro, m);
         used as i64 - mm.usable(cluster.devices[i].mem_capacity) as i64
     };
 
@@ -200,7 +268,7 @@ mod tests {
         let all = net.len();
         // one stage owning everything ≈ DP memory minus comm buffer
         let m1 = stage_memory_bytes(
-            &prof, &mm, ScheduleKind::OneFOneBSno, 1, 0, 0..all, 1.0, 1,
+            &prof, &mm, ScheduleKind::OneFOneBSno, false, 1, 0, 0..all, 1.0, 1,
         );
         let dp = dp_memory_bytes(&prof, &mm, 1.0);
         let rel = (m1 as f64 - dp as f64).abs() / dp as f64;
@@ -214,9 +282,85 @@ mod tests {
         let prof = analytical::profile(&net, &cl);
         let mm = MemoryModel::default();
         let r = 0..5;
-        let sno = stage_memory_bytes(&prof, &mm, ScheduleKind::OneFOneBSno, 4, 0, r.clone(), 4.0, 16);
-        let so = stage_memory_bytes(&prof, &mm, ScheduleKind::OneFOneBSo, 4, 0, r, 4.0, 16);
+        let sno =
+            stage_memory_bytes(&prof, &mm, ScheduleKind::OneFOneBSno, false, 4, 0, r.clone(), 4.0, 16);
+        let so = stage_memory_bytes(&prof, &mm, ScheduleKind::OneFOneBSo, false, 4, 0, r, 4.0, 16);
         assert!(so > sno, "SO {so} should exceed SNO {sno}");
+    }
+
+    #[test]
+    fn kind_aware_pricing_matches_analytical_rows() {
+        // Satellite regression: memfit and the analytical Tables 1–2
+        // memory rows must price the *same* kind-aware bytes. Everything
+        // except weights-versions and stash is kind-independent, so for
+        // any kind pair the memfit byte difference must equal the
+        // analytical (weights_memory + features_memory) difference — on
+        // a pair whose *ranking* differs with depth: PipeDream outweighs
+        // 2BW on early stages of a deep pipe (n-i-1 vs 1 stashed weight
+        // versions), while GPipe out-stashes both at large M.
+        use crate::schedule::analytical::{features_memory, weights_memory, Symbols};
+        let net = zoo::vgg16(224);
+        let cl = presets::v100_cluster(8);
+        let prof = analytical::profile(&net, &cl);
+        let mm = MemoryModel::default();
+        let (n, m, micro) = (8usize, 16usize, 4.0f64);
+        let r = 0..5usize;
+        let a = (prof.stash_bytes(r.start, r.end) as f64 * micro) as u64;
+        let w = prof.param_bytes(r.start, r.end);
+        let kinds = ScheduleKind::all();
+        for ka in kinds {
+            for kb in kinds {
+                let ma = stage_memory_bytes(&prof, &mm, ka, false, n, 0, r.clone(), micro, m);
+                let mb = stage_memory_bytes(&prof, &mm, kb, false, n, 0, r.clone(), micro, m);
+                let s = Symbols { m, n, f: 1.0, b: 1.0, sr: 0.0, a: a as f64, w: w as f64 };
+                let oracle_a = weights_memory(ka, &s, 1) + features_memory(ka, &s, 1);
+                let oracle_b = weights_memory(kb, &s, 1) + features_memory(kb, &s, 1);
+                assert_eq!(
+                    ma as i64 - mb as i64,
+                    (oracle_a - oracle_b) as i64,
+                    "{ka:?} vs {kb:?}: memfit and analytical disagree on kind-aware bytes"
+                );
+            }
+        }
+        // the ranking-flip pair the shared helper must get right
+        let pd = stage_memory_bytes(&prof, &mm, ScheduleKind::PipeDream, false, n, 0, r.clone(), micro, m);
+        let bw = stage_memory_bytes(&prof, &mm, ScheduleKind::TwoBW, false, n, 0, r.clone(), micro, m);
+        assert!(pd > bw, "deep-pipe stage 0: PipeDream {pd} must outweigh 2BW {bw}");
+        let pd_last =
+            stage_memory_bytes(&prof, &mm, ScheduleKind::PipeDream, false, n, n - 1, r.clone(), micro, m);
+        let bw_last =
+            stage_memory_bytes(&prof, &mm, ScheduleKind::TwoBW, false, n, n - 1, r, micro, m);
+        assert!(bw_last > pd_last, "last stage: 2BW {bw_last} still buffers, PipeDream {pd_last} does not");
+    }
+
+    #[test]
+    fn recompute_trades_stash_for_workspace() {
+        // Recompute collapses the per-micro-batch stash to the boundary
+        // input and adds one micro-batch of workspace: with a deep stash
+        // (early stage of a long pipe, activation-heavy net) that is a
+        // large net win; with stash depth 1 (last stage) it can only be
+        // a wash or worse.
+        let net = zoo::vgg16(224);
+        let cl = presets::v100_cluster(8);
+        let prof = analytical::profile(&net, &cl);
+        let mm = MemoryModel::default();
+        let (n, m, micro) = (8usize, 32usize, 4.0f64);
+        let r = 0..5usize;
+        let full = stage_bytes(&prof, &mm, ScheduleKind::TwoBW, false, n, 0, r.clone(), micro, m);
+        let rc = stage_bytes(&prof, &mm, ScheduleKind::TwoBW, true, n, 0, r.clone(), micro, m);
+        assert!(rc.per_mb_stash < full.per_mb_stash, "boundary-only stash must shrink");
+        assert!(
+            rc.peak() < full.peak(),
+            "recompute peak {} must beat full stash {} at depth {}",
+            rc.peak(),
+            full.peak(),
+            full.stash_depth
+        );
+        // same stash depth either way: recompute changes bytes, not the schedule
+        assert_eq!(rc.stash_depth, full.stash_depth);
+        let last_full = stage_bytes(&prof, &mm, ScheduleKind::TwoBW, false, n, n - 1, r.clone(), micro, m);
+        let last_rc = stage_bytes(&prof, &mm, ScheduleKind::TwoBW, true, n, n - 1, r, micro, m);
+        assert!(last_rc.peak() >= last_full.peak(), "depth-1 stash: workspace cancels the saving");
     }
 
     #[test]
@@ -225,8 +369,8 @@ mod tests {
         let cl = presets::v100_cluster(4);
         let prof = analytical::profile(&net, &cl);
         let mm = MemoryModel::default();
-        let a = stage_memory_bytes(&prof, &mm, ScheduleKind::GPipe, 4, 0, 0..5, 4.0, 4);
-        let b = stage_memory_bytes(&prof, &mm, ScheduleKind::GPipe, 4, 0, 0..5, 4.0, 32);
+        let a = stage_memory_bytes(&prof, &mm, ScheduleKind::GPipe, false, 4, 0, 0..5, 4.0, 4);
+        let b = stage_memory_bytes(&prof, &mm, ScheduleKind::GPipe, false, 4, 0, 0..5, 4.0, 32);
         assert!(b > a);
     }
 
@@ -237,7 +381,7 @@ mod tests {
         let prof = analytical::profile(&net, &cl);
         let cuts = net.legal_cuts();
         let p = interlayer::dp_optimal(&prof, &cl, &cuts, 4.0, None).unwrap();
-        let r = fit_memory(&prof, &cl, p.clone(), ScheduleKind::OneFOneBSno, 4.0, 8, &cuts)
+        let r = fit_memory(&prof, &cl, p.clone(), ScheduleKind::OneFOneBSno, false, 4.0, 8, &cuts)
             .unwrap();
         assert_eq!(r.moved, 0);
         assert_eq!(r.partition, p);
@@ -251,7 +395,7 @@ mod tests {
         let prof = analytical::profile(&net, &cl);
         let cuts = net.legal_cuts();
         let p = Partition::new(vec![0, net.len()], net.len());
-        assert!(fit_memory(&prof, &cl, p, ScheduleKind::OneFOneBSno, 32.0, 2, &cuts).is_err());
+        assert!(fit_memory(&prof, &cl, p, ScheduleKind::OneFOneBSno, false, 32.0, 2, &cuts).is_err());
     }
 
     #[test]
@@ -264,7 +408,7 @@ mod tests {
         let cuts = net.legal_cuts();
         let l = net.len();
         let p = Partition::new(vec![0, l - 3, l - 2, l - 1, l], l);
-        let r = fit_memory(&prof, &cl, p, ScheduleKind::OneFOneBSno, 32.0, 8, &cuts).unwrap();
+        let r = fit_memory(&prof, &cl, p, ScheduleKind::OneFOneBSno, false, 32.0, 8, &cuts).unwrap();
         assert!(r.moved > 0);
         // first stage now owns fewer layers
         assert!(r.partition.bounds[1] < l - 3);

@@ -255,6 +255,7 @@ pub fn finish_partition<C: CostModel>(
     costs: &C,
     seed: &BalanceSeed,
     kind: ScheduleKind,
+    recompute: bool,
     micro: f64,
     m: usize,
 ) -> crate::Result<PartitionPlan> {
@@ -264,6 +265,7 @@ pub fn finish_partition<C: CostModel>(
         cluster,
         seed.partition.clone(),
         kind,
+        recompute,
         micro,
         m,
         &seed.active_cuts,
@@ -300,7 +302,7 @@ pub fn balanced_partition(
 ) -> crate::Result<PartitionPlan> {
     let rc = RangeCost::build(profile);
     let seed = balance_stages_rc(net, cluster, &rc, micro)?;
-    finish_partition(cluster, &rc, &seed, kind, micro, m)
+    finish_partition(cluster, &rc, &seed, kind, false, micro, m)
 }
 
 #[cfg(test)]

@@ -55,12 +55,15 @@ struct SeedKey {
     micro_bits: u64,
 }
 
-/// Key of a finished partition: seed key × memory class × M.
+/// Key of a finished partition: seed key × memory class × M × recompute
+/// (recompute changes the stashed bytes the fine-tune prices, so
+/// variants must not share a finished plan).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 struct PlanKey {
     seed: SeedKey,
     memory_class: u8,
     m: usize,
+    recompute: bool,
 }
 
 /// Memoizing store for balanced partitions (and their failures).
@@ -92,8 +95,12 @@ impl EvalCache {
         cand: &Candidate,
     ) -> Result<PartitionPlan, String> {
         let seed_key = SeedKey { perm: cand.perm, micro_bits: cand.micro.to_bits() };
-        let plan_key =
-            PlanKey { seed: seed_key, memory_class: cand.kind.memory_class(), m: cand.m };
+        let plan_key = PlanKey {
+            seed: seed_key,
+            memory_class: cand.kind.memory_class(),
+            m: cand.m,
+            recompute: cand.recompute,
+        };
         if let Some(found) = self.plans.get(&plan_key) {
             self.hits += 1;
             return found.clone();
@@ -118,7 +125,7 @@ impl EvalCache {
         let finished = match seed {
             Ok(seed) => {
                 self.misses += 1;
-                finish_partition(cluster, &rc, &seed, cand.kind, cand.micro, cand.m)
+                finish_partition(cluster, &rc, &seed, cand.kind, cand.recompute, cand.micro, cand.m)
                     .map_err(|e| e.to_string())
             }
             Err(e) => Err(e),
@@ -169,7 +176,12 @@ impl EvalCache {
         let mut seen_plans: HashSet<PlanKey> = self.plans.keys().copied().collect();
         for c in candidates.iter().filter(divisible) {
             let seed = SeedKey { perm: c.perm, micro_bits: c.micro.to_bits() };
-            let key = PlanKey { seed, memory_class: c.kind.memory_class(), m: c.m };
+            let key = PlanKey {
+                seed,
+                memory_class: c.kind.memory_class(),
+                m: c.m,
+                recompute: c.recompute,
+            };
             if seen_plans.insert(key) {
                 plan_work.push((key, c.kind));
             }
@@ -216,6 +228,7 @@ impl EvalCache {
                     rc_of(key.seed.perm),
                     seed,
                     *kind,
+                    key.recompute,
                     f64::from_bits(key.seed.micro_bits),
                     key.m,
                 )
@@ -243,7 +256,7 @@ impl EvalCache {
         seeds.sort_by_key(|(k, _)| (k.perm, k.micro_bits));
         let mut plans: Vec<(&PlanKey, &Result<PartitionPlan, String>)> =
             self.plans.iter().collect();
-        plans.sort_by_key(|(k, _)| (k.seed.perm, k.seed.micro_bits, k.memory_class, k.m));
+        plans.sort_by_key(|(k, _)| (k.seed.perm, k.seed.micro_bits, k.memory_class, k.m, k.recompute));
         obj(vec![
             ("format", Json::from(PLAN_CACHE_FORMAT)),
             ("fingerprint", Json::from(fingerprint)),
@@ -459,6 +472,11 @@ fn plan_entry_to_json(k: &PlanKey, r: &Result<PartitionPlan, String>) -> Json {
         ("memory_class", Json::from(k.memory_class as usize)),
         ("m", Json::from(k.m)),
     ];
+    // emitted only when set: default-off entries stay byte-identical to
+    // pre-recompute documents (and old documents parse leniently below)
+    if k.recompute {
+        pairs.push(("recompute", Json::Bool(true)));
+    }
     match r {
         Ok(p) => pairs.push(("plan", plan_to_json(p))),
         Err(e) => pairs.push(("error", Json::from(e.clone()))),
@@ -476,6 +494,8 @@ fn plan_entry_from_json(j: &Json) -> crate::Result<(PlanKey, Result<PartitionPla
         },
         memory_class,
         m: report::req_usize(j, "m")?,
+        // lenient: absent in pre-recompute cache documents
+        recompute: j.get("recompute").and_then(|v| v.as_bool()).unwrap_or(false),
     };
     let res = match j.get("plan") {
         Some(p) => Ok(plan_from_json(p)?),
@@ -494,7 +514,7 @@ mod tests {
     use crate::schedule::ScheduleKind;
 
     fn cand(kind: ScheduleKind, m: usize, micro: f64) -> Candidate {
-        Candidate { kind, m, micro, perm: 0 }
+        Candidate { kind, m, micro, perm: 0, recompute: false }
     }
 
     #[test]
@@ -559,6 +579,7 @@ mod tests {
                     m,
                     micro: 128.0 / m as f64,
                     perm: 0,
+                    recompute: false,
                 })
             })
             .collect();

@@ -48,9 +48,10 @@ pub struct PlanDiff {
 /// One-line human description of a plan's choice.
 fn describe_choice(choice: &Choice) -> String {
     match choice {
-        Choice::Pipeline { kind, m, micro, partition } => format!(
-            "{} M={m} (micro-batch {micro}) partition {}",
+        Choice::Pipeline { kind, m, micro, recompute, partition } => format!(
+            "{}{} M={m} (micro-batch {micro}) partition {}",
             kind.label(),
+            if *recompute { "+RC" } else { "" },
             partition.describe()
         ),
         Choice::DataParallel => "data-parallel".to_string(),
@@ -165,6 +166,7 @@ mod tests {
                 kind: ScheduleKind::OneFOneBSo,
                 m,
                 micro: 128.0 / m as f64,
+                recompute: false,
                 partition: Partition::new(bounds, n_layers),
             },
             device_order: vec![0, 1],
@@ -173,6 +175,7 @@ mod tests {
             dp_epoch_time: f64::INFINITY,
             speedup_over_dp: f64::INFINITY,
             stage_memory: vec![1 << 30; 2],
+            pareto_front: Vec::new(),
             report: report(),
         }
     }

@@ -8,7 +8,7 @@ use super::Options;
 use crate::cluster::Cluster;
 use crate::model::Network;
 use crate::partition::intralayer::frac_stage_costs;
-use crate::partition::memfit::{stage_memory_bytes, MemoryModel};
+use crate::partition::memfit::{stage_bytes, MemoryModel, StageBytes};
 use crate::partition::{
     balanced_partition, cut_comm_time, stage_costs, Partition, PartitionPlan,
 };
@@ -26,17 +26,20 @@ pub fn build_spec_plan(
     cluster: &Cluster,
     plan: &PartitionPlan,
     kind: ScheduleKind,
+    recompute: bool,
     micro: f64,
     m: usize,
 ) -> SimSpec {
-    let mut spec = build_spec(profile, cluster, &plan.partition, kind, micro, m);
+    let mut spec = build_spec(profile, cluster, &plan.partition, kind, recompute, micro, m);
     if let Some(fp) = &plan.frac {
         let frac = frac_stage_costs(profile, fp, micro);
         // keep any stage-level floor (FPGA weight-spill penalty) from the
         // integral costs: the fractional refinement only rebalances compute
         for (i, (f, b)) in frac.into_iter().enumerate() {
             spec.fwd[i] = f.max(1e-12);
-            spec.bwd[i] = b.max(1e-12);
+            // recomputation replays the stage forward before its backward,
+            // so the refined backward slot carries the same surcharge
+            spec.bwd[i] = if recompute { (f + b).max(1e-12) } else { b.max(1e-12) };
         }
     }
     spec
@@ -53,6 +56,7 @@ pub fn build_spec<C: CostModel>(
     cluster: &Cluster,
     part: &Partition,
     kind: ScheduleKind,
+    recompute: bool,
     micro: f64,
     m: usize,
 ) -> SimSpec {
@@ -64,7 +68,11 @@ pub fn build_spec<C: CostModel>(
         kind,
         m,
         fwd: costs.iter().map(|c| c.0).collect(),
-        bwd: costs.iter().map(|c| c.1).collect(),
+        // activation recomputation replays the stage forward from the
+        // stashed boundary input before running the backward, so each
+        // backward slot is priced F+B (the memory side of the trade is
+        // in [`crate::partition::memfit::stage_bytes`])
+        bwd: costs.iter().map(|c| if recompute { c.0 + c.1 } else { c.1 }).collect(),
         update: vec![0.0; n],
         bwd_xfer: fwd_xfer.clone(), // errors are activation-sized (Section 1)
         fwd_xfer,
@@ -72,18 +80,37 @@ pub fn build_spec<C: CostModel>(
     }
 }
 
-/// Per-stage memory of a candidate plan.
+/// Per-stage byte components of a candidate plan — the planner's handle
+/// on both the worst-case feasibility bytes ([`StageBytes::peak`]) and
+/// the simulated-peak derivation ([`StageBytes::at_occupancy`] at the
+/// DES in-flight high-water mark).
+pub fn plan_stage_bytes(
+    profile: &Profile,
+    kind: ScheduleKind,
+    recompute: bool,
+    part: &Partition,
+    micro: f64,
+    m: usize,
+) -> Vec<StageBytes> {
+    let mm = MemoryModel::default();
+    let n = part.n_stages();
+    (0..n)
+        .map(|i| stage_bytes(profile, &mm, kind, recompute, n, i, part.stage(i), micro, m))
+        .collect()
+}
+
+/// Per-stage worst-case memory of a candidate plan.
 pub fn plan_memory(
     profile: &Profile,
     kind: ScheduleKind,
+    recompute: bool,
     part: &Partition,
     micro: f64,
     m: usize,
 ) -> Vec<u64> {
-    let mm = MemoryModel::default();
-    let n = part.n_stages();
-    (0..n)
-        .map(|i| stage_memory_bytes(profile, &mm, kind, n, i, part.stage(i), micro, m))
+    plan_stage_bytes(profile, kind, recompute, part, micro, m)
+        .iter()
+        .map(StageBytes::peak)
         .collect()
 }
 
@@ -92,12 +119,13 @@ pub fn fits(
     profile: &Profile,
     cluster: &Cluster,
     kind: ScheduleKind,
+    recompute: bool,
     part: &Partition,
     micro: f64,
     m: usize,
 ) -> bool {
     let mm = MemoryModel::default();
-    plan_memory(profile, kind, part, micro, m)
+    plan_memory(profile, kind, recompute, part, micro, m)
         .iter()
         .zip(&cluster.devices)
         .all(|(&used, d)| used <= mm.usable(d.mem_capacity))
@@ -124,6 +152,9 @@ pub(crate) struct Prepared {
     pub spec: SimSpec,
     pub partition: Partition,
     pub lb_epoch: f64,
+    /// Per-stage byte constants; phase B turns the DES in-flight
+    /// high-water marks into simulated peak bytes through these.
+    pub stage_bytes: Vec<StageBytes>,
 }
 
 /// Phase A of the exploration for one candidate: divisibility, balanced
@@ -143,12 +174,20 @@ pub(crate) fn prepare(
         return Err(format!("M={} does not divide the global mini-batch {global_batch}", cand.m));
     }
     let plan = cache.partition(net, cluster, profile, cand)?;
-    if !fits(profile, cluster, cand.kind, &plan.partition, cand.micro, cand.m) {
+    let sb =
+        plan_stage_bytes(profile, cand.kind, cand.recompute, &plan.partition, cand.micro, cand.m);
+    let mm = MemoryModel::default();
+    if !sb
+        .iter()
+        .zip(&cluster.devices)
+        .all(|(b, d)| b.peak() <= mm.usable(d.mem_capacity))
+    {
         return Err("stage memory exceeds device capacity".to_string());
     }
-    let spec = build_spec_plan(profile, cluster, &plan, cand.kind, cand.micro, cand.m);
+    let spec =
+        build_spec_plan(profile, cluster, &plan, cand.kind, cand.recompute, cand.micro, cand.m);
     let lb_epoch = super::bounds::epoch_lower_bound(&spec, n_minibatches);
-    Ok(Prepared { spec, partition: plan.partition, lb_epoch })
+    Ok(Prepared { spec, partition: plan.partition, lb_epoch, stage_bytes: sb })
 }
 
 /// Evaluate one fully-specified pipeline candidate (the seed explorer's
@@ -169,10 +208,10 @@ pub fn evaluate_pipeline(
     }
     let micro = global / m as f64;
     let plan = balanced_partition(net, cluster, profile, kind, micro, m).ok()?;
-    if !fits(profile, cluster, kind, &plan.partition, micro, m) {
+    if !fits(profile, cluster, kind, false, &plan.partition, micro, m) {
         return None;
     }
-    let spec = build_spec_plan(profile, cluster, &plan, kind, micro, m);
+    let spec = build_spec_plan(profile, cluster, &plan, kind, false, micro, m);
     let n_mb = (opts.samples_per_epoch as f64 / global).ceil() as usize;
     let makespan = simulate(&spec).makespan;
     let ep = epoch_from_makespan(makespan, &spec, n_mb);
@@ -207,10 +246,43 @@ mod tests {
         let cl = presets::v100_cluster(4);
         let prof = analytical::profile(&net, &cl);
         let mut cache = EvalCache::new();
-        let cand = Candidate { kind: ScheduleKind::OneFOneBSno, m: 3, micro: 128.0 / 3.0, perm: 0 };
+        let cand = Candidate {
+            kind: ScheduleKind::OneFOneBSno,
+            m: 3,
+            micro: 128.0 / 3.0,
+            perm: 0,
+            recompute: false,
+        };
         let err = prepare(&net, &cl, &prof, &mut cache, &cand, 128.0, 64).unwrap_err();
         assert!(err.contains("does not divide"), "{err}");
         assert_eq!(cache.misses, 0, "no partition work for a non-divisor M");
+    }
+
+    #[test]
+    fn recompute_reprices_time_and_bytes_consistently() {
+        let net = zoo::vgg16(224);
+        let cl = presets::v100_cluster(4);
+        let prof = analytical::profile(&net, &cl);
+        let plan =
+            balanced_partition(&net, &cl, &prof, ScheduleKind::OneFOneBSno, 8.0, 16).unwrap();
+        let part = &plan.partition;
+        // time: every backward slot absorbs the replayed forward, exactly
+        let s0 = build_spec(&prof, &cl, part, ScheduleKind::OneFOneBSno, false, 8.0, 16);
+        let s1 = build_spec(&prof, &cl, part, ScheduleKind::OneFOneBSno, true, 8.0, 16);
+        for i in 0..s0.fwd.len() {
+            assert_eq!(s1.fwd[i], s0.fwd[i]);
+            assert_eq!(s1.bwd[i], s0.fwd[i] + s0.bwd[i]);
+        }
+        // bytes: the deepest-stashing stage trades its intermediate stash
+        // for a boundary-only one and must get strictly cheaper
+        let b0 = plan_stage_bytes(&prof, ScheduleKind::OneFOneBSno, false, part, 8.0, 16);
+        let b1 = plan_stage_bytes(&prof, ScheduleKind::OneFOneBSno, true, part, 8.0, 16);
+        assert!(b1[0].peak() < b0[0].peak(), "{} !< {}", b1[0].peak(), b0[0].peak());
+        assert!(b1[0].per_mb_stash < b0[0].per_mb_stash);
+        assert_eq!(b1[0].stash_depth, b0[0].stash_depth, "the schedule's depth is unchanged");
+        // and plan_memory is exactly the peak view of plan_stage_bytes
+        let pm = plan_memory(&prof, ScheduleKind::OneFOneBSno, true, part, 8.0, 16);
+        assert_eq!(pm, b1.iter().map(StageBytes::peak).collect::<Vec<_>>());
     }
 
     #[test]
@@ -221,7 +293,8 @@ mod tests {
         let opts = Options { batch_per_device: 32.0, samples_per_epoch: 8192, ..Default::default() };
         let mut cache = EvalCache::new();
         let m = 16;
-        let cand = Candidate { kind: ScheduleKind::OneFOneBSo, m, micro: 8.0, perm: 0 };
+        let cand =
+            Candidate { kind: ScheduleKind::OneFOneBSo, m, micro: 8.0, perm: 0, recompute: false };
         let p = prepare(&net, &cl, &prof, &mut cache, &cand, 128.0, 64).unwrap();
         let (mb, ep, part) =
             evaluate_pipeline(&net, &cl, &prof, ScheduleKind::OneFOneBSo, m, &opts).unwrap();

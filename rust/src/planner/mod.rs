@@ -69,8 +69,10 @@ mod parallel;
 
 pub use cache::EvalCache;
 pub use diff::{BoundaryMove, PlanDiff};
-pub use eval::{build_spec, build_spec_plan, evaluate_pipeline, fits, plan_memory};
-pub use report::{Choice, Evaluation, ExplorationReport, Outcome, Plan};
+pub use eval::{
+    build_spec, build_spec_plan, evaluate_pipeline, fits, plan_memory, plan_stage_bytes,
+};
+pub use report::{Choice, Evaluation, ExplorationReport, Outcome, ParetoPoint, Plan};
 pub use space::{Candidate, SearchSpace};
 
 use crate::cluster::Cluster;
@@ -123,6 +125,21 @@ pub struct Options {
     /// evaluations, so the refined plan is never worse than the fixed
     /// grid's.
     pub adaptive_m: bool,
+    /// Keep the whole (epoch time × simulated peak memory) Pareto front
+    /// in the returned [`Plan`] instead of the fastest point alone, and
+    /// widen the schedule-kind axis with the memory-scalable 2BW kind
+    /// (double-buffered weight versions, PipeDream-2BW). Suspends
+    /// branch-and-bound pruning — the front needs slower-but-lighter
+    /// candidates simulated, which the time bound would skip. The selected
+    /// plan — the fastest feasible point — is unchanged by this flag
+    /// unless 2BW itself wins.
+    pub pareto: bool,
+    /// Add activation recomputation as a candidate axis: every
+    /// (kind, M, order) point is also tried with boundary-only stashing
+    /// and forward replay in the backward slot (extra FLOPs priced into
+    /// the DES spec, the byte trade priced by
+    /// [`crate::partition::memfit::stage_bytes`]).
+    pub recompute: bool,
 }
 
 impl Default for Options {
@@ -138,13 +155,15 @@ impl Default for Options {
             order_search: false,
             order_budget: orders::ORDER_BUDGET_DEFAULT,
             adaptive_m: false,
+            pareto: false,
+            recompute: false,
         }
     }
 }
 
 /// How a candidate fared in phase B (DES / pruning).
 enum PhaseB {
-    Done { minibatch_time: f64, epoch_time: f64 },
+    Done { minibatch_time: f64, epoch_time: f64, peak_memory: Vec<u64> },
     Pruned { lower_bound: f64 },
 }
 
@@ -276,16 +295,27 @@ fn explore_space_with(
             // simulated so the deterministic tie-break can consider it), with
             // a relative margin so summation-order rounding in the bound can
             // never prune a candidate the exhaustive search would keep.
-            if opts.prune && p.lb_epoch * (1.0 - 1e-9) > best_seen {
+            // Suspended under `--pareto`: the front needs slower-but-lighter
+            // candidates simulated, which the time bound would prune.
+            if opts.prune && !opts.pareto && p.lb_epoch * (1.0 - 1e-9) > best_seen {
                 return PhaseB::Pruned { lower_bound: p.lb_epoch };
             }
             // Table-free batched DES over the worker's pooled simulator:
             // bit-exact with `simulate_fast`/`simulate_full`, no
             // per-candidate allocation or op-table build.
             let makespan = sim.run(&p.spec).makespan;
+            // Simulated per-device peak bytes: the DES in-flight
+            // high-water mark priced through the same `StageBytes` the
+            // memory fine-tune used — never above its worst-case `peak()`.
+            let peak_memory: Vec<u64> = p
+                .stage_bytes
+                .iter()
+                .zip(sim.peak_in_flight())
+                .map(|(sb, &k)| sb.at_occupancy(k))
+                .collect();
             let ep = epoch_from_makespan(makespan, &p.spec, n_mb);
             atomic_min_f64(&incumbent, ep);
-            PhaseB::Done { minibatch_time: makespan, epoch_time: ep }
+            PhaseB::Done { minibatch_time: makespan, epoch_time: ep, peak_memory }
         });
 
     // Stitch phase results back into enumeration order.
@@ -303,11 +333,12 @@ fn explore_space_with(
             Err(_) => unreachable!(),
         };
         outcomes[idx] = Some(match res {
-            PhaseB::Done { minibatch_time, epoch_time } => Outcome::Evaluated {
+            PhaseB::Done { minibatch_time, epoch_time, peak_memory } => Outcome::Evaluated {
                 minibatch_time,
                 epoch_time,
                 lower_bound: p.lb_epoch,
                 partition: p.partition.clone(),
+                peak_memory,
             },
             PhaseB::Pruned { lower_bound } => Outcome::Pruned { lower_bound },
         });
@@ -434,6 +465,7 @@ fn refine_m(
             kinds: space.kinds.clone(),
             ineligible: Vec::new(), // already reported by the grid pass
             m_grid: new_ms.clone(),
+            recompute_options: space.recompute_options.clone(),
             batch_per_device: space.batch_per_device,
             device_orders: space.device_orders.clone(),
             notes: Vec::new(),
@@ -517,6 +549,12 @@ pub fn explore_with_cache_in_space(
     report.dp_minibatch_time = dpr.minibatch_time;
     report.dp_epoch_time = dp_epoch;
 
+    // The (epoch time × simulated peak memory) front over every DES'd
+    // candidate. Kept only under `--pareto` (the serialized plan stays
+    // byte-compatible otherwise); the *selected* plan below is still the
+    // fastest feasible point in either mode.
+    let pareto_front = if opts.pareto { report.pareto_front() } else { Vec::new() };
+
     let best = report.best_evaluation().cloned();
     match best {
         Some(ev) => {
@@ -527,18 +565,28 @@ pub fn explore_with_cache_in_space(
                 _ => unreachable!("best_evaluation only returns Evaluated entries"),
             };
             if opts.consider_dp && dp_epoch < ep {
-                return dp_plan(profile, opts, dpr.minibatch_time, dp_epoch, cluster.len(), report);
+                let mut plan =
+                    dp_plan(profile, opts, dpr.minibatch_time, dp_epoch, cluster.len(), report);
+                plan.pareto_front = pareto_front;
+                return plan;
             }
             let cand = ev.candidate;
             let (_, prof_view) =
                 space::permuted_view(cluster, profile, &space.device_orders[cand.perm]);
-            let stage_memory =
-                plan_memory(&prof_view, cand.kind, &partition, cand.micro, cand.m);
+            let stage_memory = plan_memory(
+                &prof_view,
+                cand.kind,
+                cand.recompute,
+                &partition,
+                cand.micro,
+                cand.m,
+            );
             Plan {
                 choice: Choice::Pipeline {
                     kind: cand.kind,
                     m: cand.m,
                     micro: cand.micro,
+                    recompute: cand.recompute,
                     partition,
                 },
                 device_order: space.device_orders[cand.perm].clone(),
@@ -547,10 +595,16 @@ pub fn explore_with_cache_in_space(
                 dp_epoch_time: dp_epoch,
                 speedup_over_dp: dp_epoch / ep,
                 stage_memory,
+                pareto_front,
                 report,
             }
         }
-        None => dp_plan(profile, opts, dpr.minibatch_time, dp_epoch, cluster.len(), report),
+        None => {
+            let mut plan =
+                dp_plan(profile, opts, dpr.minibatch_time, dp_epoch, cluster.len(), report);
+            plan.pareto_front = pareto_front;
+            plan
+        }
     }
 }
 
@@ -573,6 +627,7 @@ fn dp_plan(
         dp_epoch_time: dp_epoch,
         speedup_over_dp: 1.0,
         stage_memory,
+        pareto_front: Vec::new(),
         report,
     }
 }
@@ -617,8 +672,8 @@ pub fn plan_pipedream(
         let part =
             crate::partition::interlayer::dp_optimal(profile, cluster, &cuts, b, Some(&comm))
                 .ok()?;
-        if fits(profile, cluster, ScheduleKind::PipeDream, &part, b, 1) {
-            let spec = build_spec(profile, cluster, &part, ScheduleKind::PipeDream, b, 1);
+        if fits(profile, cluster, ScheduleKind::PipeDream, false, &part, b, 1) {
+            let spec = build_spec(profile, cluster, &part, ScheduleKind::PipeDream, false, b, 1);
             let n_mb = (opts.samples_per_epoch as f64 / b).ceil() as usize;
             return Some((epoch_time(&spec, n_mb), b));
         }

@@ -417,7 +417,7 @@ pub fn discover(
             line.push_str(", des skipped (infeasible partition)");
             continue;
         };
-        let spec = super::eval::build_spec(&rc, &cl, &part, des_kind, micro, m_probe);
+        let spec = super::eval::build_spec(&rc, &cl, &part, des_kind, false, micro, m_probe);
         let mb = fam.resimulate(&spec).makespan;
         line.push_str(&format!(", des minibatch {mb:.4e}s"));
         annotated += 1;

@@ -24,6 +24,9 @@ pub enum Choice {
         m: usize,
         /// Micro-batch size (samples).
         micro: f64,
+        /// Activation recomputation on (stages stash boundary inputs and
+        /// re-run forward during backward).
+        recompute: bool,
         /// The balanced partition.
         partition: Partition,
     },
@@ -44,6 +47,12 @@ pub enum Outcome {
         lower_bound: f64,
         /// The balanced partition used.
         partition: Partition,
+        /// Simulated per-device peak memory, bytes: the DES in-flight
+        /// high-water mark priced through the same
+        /// [`crate::partition::memfit::StageBytes`] the memory fine-tune
+        /// used, so it never exceeds the worst-case feasibility figure.
+        /// Empty in artifacts emitted before peak tracking existed.
+        peak_memory: Vec<u64>,
     },
     /// Skipped: the analytical lower bound already exceeded the
     /// incumbent's simulated epoch time.
@@ -65,6 +74,23 @@ pub struct Evaluation {
     pub candidate: Candidate,
     /// How it fared.
     pub outcome: Outcome,
+}
+
+/// One non-dominated point on the (epoch time × peak memory) trade-off
+/// front ([`ExplorationReport::pareto_front`], kept in
+/// [`Plan::pareto_front`] under `--pareto`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ParetoPoint {
+    /// The search-space point this plan came from.
+    pub candidate: Candidate,
+    /// Simulated time per (global) mini-batch, seconds.
+    pub minibatch_time: f64,
+    /// Simulated epoch time, seconds.
+    pub epoch_time: f64,
+    /// Worst device's simulated peak memory, bytes.
+    pub peak_memory: u64,
+    /// The balanced partition used.
+    pub partition: Partition,
 }
 
 /// Everything the exploration did, as data (the seed explorer's
@@ -128,6 +154,59 @@ impl ExplorationReport {
         best.map(|(ev, _)| ev)
     }
 
+    /// The non-dominated set over every simulated candidate on
+    /// (epoch time, worst-device simulated peak memory): no returned
+    /// point has another simulated candidate that is at least as fast
+    /// *and* at least as small with one of the two strictly better.
+    /// Exactly coincident points keep the earliest candidate in
+    /// enumeration order — the same tie rule as [`Self::best_evaluation`]
+    /// — so the front is independent of DES thread interleaving. Sorted
+    /// fastest-first (peak memory strictly decreasing along the front).
+    /// Candidates without peak data (pre-peak-tracking artifacts) are
+    /// skipped.
+    pub fn pareto_front(&self) -> Vec<ParetoPoint> {
+        let pts: Vec<ParetoPoint> = self
+            .evaluations
+            .iter()
+            .filter_map(|ev| match &ev.outcome {
+                Outcome::Evaluated {
+                    minibatch_time,
+                    epoch_time,
+                    partition,
+                    peak_memory,
+                    ..
+                } if !peak_memory.is_empty() => Some(ParetoPoint {
+                    candidate: ev.candidate.clone(),
+                    minibatch_time: *minibatch_time,
+                    epoch_time: *epoch_time,
+                    peak_memory: peak_memory.iter().copied().max().unwrap_or(0),
+                    partition: partition.clone(),
+                }),
+                _ => None,
+            })
+            .collect();
+        let mut front: Vec<ParetoPoint> = Vec::new();
+        'points: for (i, p) in pts.iter().enumerate() {
+            for (j, q) in pts.iter().enumerate() {
+                let no_worse = q.epoch_time <= p.epoch_time && q.peak_memory <= p.peak_memory;
+                let strictly =
+                    q.epoch_time < p.epoch_time || q.peak_memory < p.peak_memory;
+                let coincident =
+                    q.epoch_time == p.epoch_time && q.peak_memory == p.peak_memory;
+                if (no_worse && strictly) || (coincident && j < i) {
+                    continue 'points;
+                }
+            }
+            front.push(p.clone());
+        }
+        front.sort_by(|a, b| {
+            a.epoch_time
+                .total_cmp(&b.epoch_time)
+                .then(a.peak_memory.cmp(&b.peak_memory))
+        });
+        front
+    }
+
     /// Human-readable exploration log in the seed explorer's line format
     /// (one line per ineligible kind, per candidate, and for the DP
     /// baseline).
@@ -146,20 +225,21 @@ impl ExplorationReport {
         }
         for ev in &self.evaluations {
             let c = &ev.candidate;
+            let rc = if c.recompute { "+RC" } else { "" };
             let order = if c.perm > 0 { format!(" [order {}]", c.perm) } else { String::new() };
             lines.push(match &ev.outcome {
                 Outcome::Evaluated { epoch_time, .. } => {
-                    format!("{} M={}{}: epoch {:.1}s", c.kind.label(), c.m, order, epoch_time)
+                    format!("{}{rc} M={}{}: epoch {:.1}s", c.kind.label(), c.m, order, epoch_time)
                 }
                 Outcome::Pruned { lower_bound } => format!(
-                    "{} M={}{}: pruned (lower bound {:.1}s)",
+                    "{}{rc} M={}{}: pruned (lower bound {:.1}s)",
                     c.kind.label(),
                     c.m,
                     order,
                     lower_bound
                 ),
                 Outcome::Infeasible { .. } => {
-                    format!("{} M={}{}: infeasible", c.kind.label(), c.m, order)
+                    format!("{}{rc} M={}{}: infeasible", c.kind.label(), c.m, order)
                 }
             });
         }
@@ -289,6 +369,11 @@ pub struct Plan {
     pub speedup_over_dp: f64,
     /// Per-stage memory (bytes); one entry (whole net) for DP.
     pub stage_memory: Vec<u64>,
+    /// The (epoch time × simulated peak memory) Pareto front over every
+    /// simulated candidate ([`ExplorationReport::pareto_front`]).
+    /// Populated under [`super::Options::pareto`]; empty otherwise and in
+    /// plan.json artifacts from before memory-aware planning.
+    pub pareto_front: Vec<ParetoPoint>,
     /// The full exploration record.
     pub report: ExplorationReport,
 }
@@ -298,9 +383,10 @@ impl Plan {
     /// `report()`, extended with search statistics).
     pub fn summary(&self) -> String {
         let head = match &self.choice {
-            Choice::Pipeline { kind, m, micro, partition } => format!(
-                "BaPipe plan: {} with M={m} (micro-batch {micro}), partition {}",
+            Choice::Pipeline { kind, m, micro, recompute, partition } => format!(
+                "BaPipe plan: {}{} with M={m} (micro-batch {micro}), partition {}",
                 kind.label(),
+                if *recompute { "+RC" } else { "" },
                 partition.describe()
             ),
             Choice::DataParallel => {
@@ -312,9 +398,23 @@ impl Plan {
         } else {
             format!("\n  device order: {:?}", self.device_order)
         };
+        let front = if self.pareto_front.is_empty() {
+            String::new()
+        } else {
+            let lo = self.pareto_front.last().expect("non-empty front");
+            let hi = &self.pareto_front[0];
+            format!(
+                "\n  pareto front: {} plans, epoch {:.1}s–{:.1}s, peak {}–{}",
+                self.pareto_front.len(),
+                hi.epoch_time,
+                lo.epoch_time,
+                crate::util::fmt_bytes(lo.peak_memory),
+                crate::util::fmt_bytes(hi.peak_memory),
+            )
+        };
         format!(
             "{head}\n  mini-batch {:.4}s, epoch {:.1}s, {:.2}x over DP\n  stage memory: [{}]\n  \
-             search: {} simulated, {} pruned, {} infeasible, {} cache hits (jobs {}){order}",
+             search: {} simulated, {} pruned, {} infeasible, {} cache hits (jobs {}){front}{order}",
             self.minibatch_time,
             self.epoch_time,
             self.speedup_over_dp,
@@ -333,16 +433,24 @@ impl Plan {
     /// document.
     pub fn to_json(&self) -> Json {
         let choice = match &self.choice {
-            Choice::Pipeline { kind, m, micro, partition } => obj(vec![
-                ("type", Json::from("pipeline")),
-                ("kind", Json::from(kind.label())),
-                ("m", Json::from(*m)),
-                ("micro", Json::Num(*micro)),
-                ("partition", partition_to_json(partition)),
-            ]),
+            Choice::Pipeline { kind, m, micro, recompute, partition } => {
+                let mut pairs = vec![
+                    ("type", Json::from("pipeline")),
+                    ("kind", Json::from(kind.label())),
+                    ("m", Json::from(*m)),
+                    ("micro", Json::Num(*micro)),
+                ];
+                // Only emitted when on: default plans keep the pre-recompute
+                // key set.
+                if *recompute {
+                    pairs.push(("recompute", Json::Bool(true)));
+                }
+                pairs.push(("partition", partition_to_json(partition)));
+                obj(pairs)
+            }
             Choice::DataParallel => obj(vec![("type", Json::from("data-parallel"))]),
         };
-        obj(vec![
+        let mut pairs = vec![
             ("format", Json::from("bapipe-plan-v1")),
             ("choice", choice),
             (
@@ -357,8 +465,17 @@ impl Plan {
                 "stage_memory",
                 Json::Arr(self.stage_memory.iter().map(|&b| Json::Num(b as f64)).collect()),
             ),
-            ("report", self.report.to_json()),
-        ])
+        ];
+        // Emitted only when --pareto populated it: default documents stay
+        // byte-identical to pre-pareto artifacts.
+        if !self.pareto_front.is_empty() {
+            pairs.push((
+                "pareto_front",
+                Json::Arr(self.pareto_front.iter().map(pareto_point_to_json).collect()),
+            ));
+        }
+        pairs.push(("report", self.report.to_json()));
+        obj(pairs)
     }
 
     /// Serialize to pretty-printed `plan.json` text and verify the
@@ -371,6 +488,7 @@ impl Plan {
         anyhow::ensure!(
             back.choice == self.choice
                 && back.epoch_time == self.epoch_time
+                && back.pareto_front == self.pareto_front
                 && back.report == self.report,
             "plan.json round-trip mismatch"
         );
@@ -388,6 +506,8 @@ impl Plan {
                 kind: kind_from_json(cj.req("kind").map_err(|e| anyhow::anyhow!("{e}"))?)?,
                 m: req_usize(cj, "m")?,
                 micro: req_f64(cj, "micro")?,
+                // Lenient: absent in pre-recompute artifacts.
+                recompute: cj.get("recompute").and_then(Json::as_bool).unwrap_or(false),
                 partition: partition_from_json(
                     cj.req("partition").map_err(|e| anyhow::anyhow!("{e}"))?,
                 )?,
@@ -411,6 +531,17 @@ impl Plan {
                     .ok_or_else(|| anyhow::anyhow!("bad stage_memory entry"))
             })
             .collect::<crate::Result<Vec<_>>>()?;
+        // Lenient: plan.json artifacts emitted before memory-aware
+        // planning have no `pareto_front` key.
+        let pareto_front = match j.get("pareto_front") {
+            None => Vec::new(),
+            Some(v) => v
+                .as_arr()
+                .ok_or_else(|| anyhow::anyhow!("`pareto_front` is not an array"))?
+                .iter()
+                .map(pareto_point_from_json)
+                .collect::<crate::Result<Vec<_>>>()?,
+        };
         Ok(Plan {
             choice,
             device_order,
@@ -419,6 +550,7 @@ impl Plan {
             dp_epoch_time: req_f64(j, "dp_epoch_time")?,
             speedup_over_dp: req_f64(j, "speedup_over_dp")?,
             stage_memory,
+            pareto_front,
             report: ExplorationReport::from_json(
                 j.req("report").map_err(|e| anyhow::anyhow!("{e}"))?,
             )?,
@@ -497,13 +629,24 @@ fn evaluation_to_json(ev: &Evaluation) -> Json {
         ("micro", Json::Num(c.micro)),
         ("perm", Json::from(c.perm)),
     ];
+    // Emitted only when set: default-off documents stay byte-identical to
+    // pre-recompute artifacts.
+    if c.recompute {
+        pairs.push(("recompute", Json::Bool(true)));
+    }
     match &ev.outcome {
-        Outcome::Evaluated { minibatch_time, epoch_time, lower_bound, partition } => {
+        Outcome::Evaluated { minibatch_time, epoch_time, lower_bound, partition, peak_memory } => {
             pairs.push(("status", Json::from("evaluated")));
             pairs.push(("minibatch_time", Json::Num(*minibatch_time)));
             pairs.push(("epoch_time", Json::Num(*epoch_time)));
             pairs.push(("lower_bound", Json::Num(*lower_bound)));
             pairs.push(("partition", partition_to_json(partition)));
+            if !peak_memory.is_empty() {
+                pairs.push((
+                    "peak_memory",
+                    Json::Arr(peak_memory.iter().map(|&b| Json::Num(b as f64)).collect()),
+                ));
+            }
         }
         Outcome::Pruned { lower_bound } => {
             pairs.push(("status", Json::from("pruned")));
@@ -517,13 +660,36 @@ fn evaluation_to_json(ev: &Evaluation) -> Json {
     obj(pairs)
 }
 
-fn evaluation_from_json(j: &Json) -> crate::Result<Evaluation> {
-    let candidate = Candidate {
+/// u64-byte array field that may be absent (pre-peak-tracking artifacts).
+fn opt_bytes_arr(j: &Json, key: &str) -> crate::Result<Vec<u64>> {
+    match j.get(key) {
+        None => Ok(Vec::new()),
+        Some(v) => v
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("`{key}` is not an array"))?
+            .iter()
+            .map(|v| {
+                v.as_i64()
+                    .and_then(|x| u64::try_from(x).ok())
+                    .ok_or_else(|| anyhow::anyhow!("bad `{key}` entry"))
+            })
+            .collect(),
+    }
+}
+
+fn candidate_from_json(j: &Json) -> crate::Result<Candidate> {
+    Ok(Candidate {
         kind: kind_from_json(j.req("kind").map_err(|e| anyhow::anyhow!("{e}"))?)?,
         m: req_usize(j, "m")?,
         micro: req_f64(j, "micro")?,
         perm: req_usize(j, "perm")?,
-    };
+        // Lenient: absent in artifacts from before the recompute axis.
+        recompute: j.get("recompute").and_then(|v| v.as_bool()).unwrap_or(false),
+    })
+}
+
+fn evaluation_from_json(j: &Json) -> crate::Result<Evaluation> {
+    let candidate = candidate_from_json(j)?;
     let outcome = match req_str(j, "status")?.as_str() {
         "evaluated" => Outcome::Evaluated {
             minibatch_time: req_f64(j, "minibatch_time")?,
@@ -532,12 +698,46 @@ fn evaluation_from_json(j: &Json) -> crate::Result<Evaluation> {
             partition: partition_from_json(
                 j.req("partition").map_err(|e| anyhow::anyhow!("{e}"))?,
             )?,
+            peak_memory: opt_bytes_arr(j, "peak_memory")?,
         },
         "pruned" => Outcome::Pruned { lower_bound: req_f64(j, "lower_bound")? },
         "infeasible" => Outcome::Infeasible { reason: req_str(j, "reason")? },
         other => anyhow::bail!("unknown evaluation status `{other}`"),
     };
     Ok(Evaluation { candidate, outcome })
+}
+
+fn pareto_point_to_json(p: &ParetoPoint) -> Json {
+    let c = &p.candidate;
+    let mut pairs = vec![
+        ("kind", Json::from(c.kind.label())),
+        ("m", Json::from(c.m)),
+        ("micro", Json::Num(c.micro)),
+        ("perm", Json::from(c.perm)),
+    ];
+    if c.recompute {
+        pairs.push(("recompute", Json::Bool(true)));
+    }
+    pairs.push(("minibatch_time", Json::Num(p.minibatch_time)));
+    pairs.push(("epoch_time", Json::Num(p.epoch_time)));
+    pairs.push(("peak_memory", Json::Num(p.peak_memory as f64)));
+    pairs.push(("partition", partition_to_json(&p.partition)));
+    obj(pairs)
+}
+
+fn pareto_point_from_json(j: &Json) -> crate::Result<ParetoPoint> {
+    Ok(ParetoPoint {
+        candidate: candidate_from_json(j)?,
+        minibatch_time: req_f64(j, "minibatch_time")?,
+        epoch_time: req_f64(j, "epoch_time")?,
+        peak_memory: j
+            .req("peak_memory")
+            .map_err(|e| anyhow::anyhow!("{e}"))?
+            .as_i64()
+            .and_then(|x| u64::try_from(x).ok())
+            .ok_or_else(|| anyhow::anyhow!("bad `peak_memory`"))?,
+        partition: partition_from_json(j.req("partition").map_err(|e| anyhow::anyhow!("{e}"))?)?,
+    })
 }
 
 #[cfg(test)]
@@ -561,12 +761,14 @@ mod tests {
                         m: 4,
                         micro: 16.0,
                         perm: 0,
+                        recompute: false,
                     },
                     outcome: Outcome::Evaluated {
                         minibatch_time: 0.5,
                         epoch_time: 64.0,
                         lower_bound: 60.0,
                         partition: Partition::new(vec![0, 3, 7], 7),
+                        peak_memory: vec![3 << 30, 1 << 30],
                     },
                 },
                 Evaluation {
@@ -575,6 +777,7 @@ mod tests {
                         m: 8,
                         micro: 8.0,
                         perm: 0,
+                        recompute: false,
                     },
                     outcome: Outcome::Pruned { lower_bound: 70.0 },
                 },
@@ -584,6 +787,7 @@ mod tests {
                         m: 3,
                         micro: 64.0 / 3.0,
                         perm: 0,
+                        recompute: false,
                     },
                     outcome: Outcome::Infeasible { reason: "M=3 does not divide".into() },
                 },
@@ -604,6 +808,7 @@ mod tests {
                 kind: ScheduleKind::OneFOneBSno,
                 m: 4,
                 micro: 16.0,
+                recompute: false,
                 partition: Partition::new(vec![0, 3, 7], 7),
             },
             device_order: vec![0, 1],
@@ -612,6 +817,7 @@ mod tests {
             dp_epoch_time: f64::INFINITY,
             speedup_over_dp: f64::INFINITY,
             stage_memory: vec![1 << 30, 2 << 30],
+            pareto_front: Vec::new(),
             report: sample_report(),
         }
     }
@@ -687,16 +893,121 @@ mod tests {
         assert!(old.order_provenance.is_empty());
     }
 
+    fn evaluated(kind: ScheduleKind, m: usize, recompute: bool, epoch: f64, peak: u64) -> Evaluation {
+        Evaluation {
+            candidate: Candidate { kind, m, micro: 64.0 / m as f64, perm: 0, recompute },
+            outcome: Outcome::Evaluated {
+                minibatch_time: epoch / 128.0,
+                epoch_time: epoch,
+                lower_bound: epoch * 0.9,
+                partition: Partition::new(vec![0, 3, 7], 7),
+                peak_memory: vec![peak, peak / 2],
+            },
+        }
+    }
+
+    #[test]
+    fn pareto_front_is_mutually_non_dominated_and_sorted() {
+        let mut r = sample_report(); // holds one Evaluated point: (64s, 3 GiB)
+        // slower but smaller: must join the front
+        r.evaluations.push(evaluated(ScheduleKind::TwoBW, 8, false, 70.0, 1 << 30));
+        // slower AND bigger than the 2BW point: dominated
+        r.evaluations.push(evaluated(ScheduleKind::GPipe, 8, false, 80.0, 2 << 30));
+        // exactly coincident with the first point but later: dropped
+        r.evaluations.push(evaluated(ScheduleKind::OneFOneBSo, 16, true, 64.0, 3 << 30));
+        let front = r.pareto_front();
+        assert_eq!(front.len(), 2, "{front:?}");
+        // fastest-first, peak strictly decreasing along the front
+        assert_eq!(front[0].epoch_time, 64.0);
+        assert_eq!(front[0].candidate.kind, ScheduleKind::OneFOneBSno, "ties keep the earliest");
+        assert_eq!(front[0].peak_memory, 3 << 30);
+        assert_eq!(front[1].candidate.kind, ScheduleKind::TwoBW);
+        assert!(front.windows(2).all(|w| {
+            w[0].epoch_time < w[1].epoch_time && w[0].peak_memory > w[1].peak_memory
+        }));
+        // mutual non-domination, pairwise
+        for a in &front {
+            for b in &front {
+                if a.candidate != b.candidate {
+                    assert!(
+                        a.epoch_time < b.epoch_time || a.peak_memory < b.peak_memory,
+                        "{a:?} dominated by {b:?}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn recompute_candidates_round_trip_and_stay_silent_when_off() {
+        let mut r = sample_report();
+        r.evaluations.push(evaluated(ScheduleKind::OneFOneBSno, 8, true, 90.0, 1 << 30));
+        let text = r.to_json().to_string_compact();
+        assert!(text.contains("\"recompute\""), "on-candidates carry the key");
+        let back = ExplorationReport::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, r);
+        assert!(back.evaluations.last().unwrap().candidate.recompute);
+        // a report with no recompute candidates never mentions the key
+        let plain = sample_report().to_json().to_string_compact();
+        assert!(!plain.contains("recompute"));
+        // the +RC marker reaches the human-readable log
+        assert!(r.log_lines().iter().any(|l| l.starts_with("1F1B-SNO+RC M=8")), "{:?}", r.log_lines());
+    }
+
+    #[test]
+    fn pareto_front_round_trips_and_old_artifacts_parse_leniently() {
+        let mut plan = sample_plan();
+        plan.pareto_front = plan.report.pareto_front();
+        assert!(!plan.pareto_front.is_empty());
+        let text = plan.emit_json().unwrap();
+        let back = Plan::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.pareto_front, plan.pareto_front);
+        // an empty front never emits the key (documents stay byte-compatible)
+        assert!(!sample_plan().to_json().to_string_compact().contains("pareto_front"));
+        // pre-memory-planning artifact: strip every new key; the document
+        // must still load, with empty front / peaks and recompute off
+        let mut j = plan.to_json();
+        if let Json::Obj(top) = &mut j {
+            top.remove("pareto_front");
+            if let Some(Json::Obj(rep)) = top.get_mut("report") {
+                if let Some(Json::Arr(evs)) = rep.get_mut("evaluations") {
+                    for e in evs {
+                        if let Json::Obj(eo) = e {
+                            eo.remove("peak_memory");
+                            eo.remove("recompute");
+                        }
+                    }
+                }
+            }
+        }
+        let old = Plan::from_json(&j).unwrap();
+        assert!(old.pareto_front.is_empty());
+        for ev in &old.report.evaluations {
+            assert!(!ev.candidate.recompute);
+            if let Outcome::Evaluated { peak_memory, .. } = &ev.outcome {
+                assert!(peak_memory.is_empty());
+            }
+        }
+        assert!(old.report.pareto_front().is_empty(), "no peak data → no front");
+    }
+
     #[test]
     fn best_evaluation_prefers_earlier_on_ties() {
         let mut r = sample_report();
         r.evaluations.push(Evaluation {
-            candidate: Candidate { kind: ScheduleKind::OneFOneBSo, m: 16, micro: 4.0, perm: 0 },
+            candidate: Candidate {
+                kind: ScheduleKind::OneFOneBSo,
+                m: 16,
+                micro: 4.0,
+                perm: 0,
+                recompute: false,
+            },
             outcome: Outcome::Evaluated {
                 minibatch_time: 0.5,
                 epoch_time: 64.0, // ties the first entry
                 lower_bound: 60.0,
                 partition: Partition::new(vec![0, 2, 7], 7),
+                peak_memory: vec![2 << 30],
             },
         });
         let best = r.best_evaluation().unwrap();

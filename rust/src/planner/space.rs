@@ -33,6 +33,10 @@ pub struct Candidate {
     pub micro: f64,
     /// Index into [`SearchSpace::device_orders`].
     pub perm: usize,
+    /// Activation recomputation: stash boundary inputs only, regenerate
+    /// intermediates during backward (extra forward FLOPs priced into
+    /// the DES spec). Orthogonal to `kind`.
+    pub recompute: bool,
 }
 
 /// The enumerable exploration space.
@@ -57,6 +61,10 @@ pub struct SearchSpace {
     /// search produced them (which seed/restart, climb length, score);
     /// empty for enumerated or identity-only spaces.
     pub order_provenance: Vec<String>,
+    /// Recompute settings to enumerate per `(kind, m)` point: `[false]`
+    /// normally, `[false, true]` when `--recompute` widens the space
+    /// with activation-checkpointing variants.
+    pub recompute_options: Vec<bool>,
 }
 
 impl SearchSpace {
@@ -79,8 +87,19 @@ impl SearchSpace {
                 ineligible.push(kind);
             }
         }
-        let (device_orders, notes, order_provenance) =
+        let (device_orders, mut notes, order_provenance) =
             device_orders(net, cluster, profile, opts);
+        // --pareto opens the memory-scalable axis: 2BW joins the kinds
+        // (it runs in either exec mode), so the front can trade its one
+        // extra weight buffer against the plain schedules' throughput.
+        if opts.pareto {
+            kinds.push(ScheduleKind::TwoBW);
+            notes.push("pareto: 2BW added to the schedule-kind axis".to_string());
+        }
+        let recompute_options = if opts.recompute { vec![false, true] } else { vec![false] };
+        if opts.recompute {
+            notes.push("recompute: activation-checkpointing variants enumerated".to_string());
+        }
         SearchSpace {
             kinds,
             ineligible,
@@ -89,6 +108,7 @@ impl SearchSpace {
             device_orders,
             notes,
             order_provenance,
+            recompute_options,
         }
     }
 
@@ -103,6 +123,7 @@ impl SearchSpace {
             device_orders: vec![(0..cluster.len()).collect()],
             notes: Vec::new(),
             order_provenance: Vec::new(),
+            recompute_options: vec![false],
         }
     }
 
@@ -120,17 +141,25 @@ impl SearchSpace {
     }
 
     /// All candidates in deterministic enumeration order (device order,
-    /// then kind, then M). This order is the reduction tie-break: among
-    /// equal epoch times the earliest candidate wins, matching the seed
-    /// explorer's first-strictly-better sequential rule.
+    /// then kind, then M, then recompute off-before-on). This order is
+    /// the reduction tie-break: among equal epoch times the earliest
+    /// candidate wins, matching the seed explorer's first-strictly-better
+    /// sequential rule.
     pub fn candidates(&self, n_devices: usize) -> Vec<Candidate> {
         let global = crate::util::canonical_global_batch(self.batch_per_device, n_devices);
-        let mut out = Vec::with_capacity(self.device_orders.len() * self.kinds.len() * self.m_grid.len());
+        let mut out = Vec::with_capacity(
+            self.device_orders.len()
+                * self.kinds.len()
+                * self.m_grid.len()
+                * self.recompute_options.len(),
+        );
         for (perm, _) in self.device_orders.iter().enumerate() {
             for &kind in &self.kinds {
                 for &m in &self.m_grid {
-                    let micro = if m == 0 { 0.0 } else { global / m as f64 };
-                    out.push(Candidate { kind, m, micro, perm });
+                    for &recompute in &self.recompute_options {
+                        let micro = if m == 0 { 0.0 } else { global / m as f64 };
+                        out.push(Candidate { kind, m, micro, perm, recompute });
+                    }
                 }
             }
         }
@@ -306,6 +335,24 @@ mod tests {
         assert_eq!(cands[0].m, 2);
         assert_eq!(cands[0].micro, 32.0); // global 64 / m 2
         assert_eq!(cands[s.m_grid.len()].kind, ScheduleKind::OneFOneBSo);
+    }
+
+    #[test]
+    fn pareto_and_recompute_widen_the_space() {
+        let cl = presets::v100_cluster(2);
+        let o = Options { pareto: true, recompute: true, ..Default::default() };
+        let s = space(&cl, &o);
+        assert!(s.kinds.contains(&ScheduleKind::TwoBW), "pareto adds 2BW: {:?}", s.kinds);
+        assert_eq!(s.recompute_options, vec![false, true]);
+        let cands = s.candidates(2);
+        assert_eq!(cands.len(), 3 * s.m_grid.len() * 2);
+        // recompute toggles innermost: off before on at the same (kind, m)
+        assert!(!cands[0].recompute && cands[1].recompute);
+        assert_eq!((cands[0].kind, cands[0].m), (cands[1].kind, cands[1].m));
+        // default space is unchanged
+        let plain = space(&cl, &Options::default());
+        assert!(!plain.kinds.contains(&ScheduleKind::TwoBW));
+        assert_eq!(plain.recompute_options, vec![false]);
     }
 
     #[test]

@@ -36,7 +36,9 @@ pub fn minibatch_time(kind: ScheduleKind, s: &Symbols) -> f64 {
         // Table 1: (M+N-1)(F+B) — communication fully overlapped.
         ScheduleKind::OneFOneBAs | ScheduleKind::FbpAs => (m + n - 1.0) * fb,
         // Table 2, 1F1B-SNO: (M+N-1)(F+B) + (N+M-2-⌈(M-1)/N⌉)·2SR.
-        ScheduleKind::OneFOneBSno => {
+        // 2BW runs the identical op sequence (only its *memory* rows
+        // differ — double-buffered weights), so it shares the form.
+        ScheduleKind::OneFOneBSno | ScheduleKind::TwoBW => {
             let ceil = ((s.m - 1) as f64 / n).ceil();
             (m + n - 1.0) * fb + (n + m - 2.0 - ceil) * 2.0 * s.sr
         }
@@ -59,7 +61,7 @@ pub fn bubble_fraction(kind: ScheduleKind, s: &Symbols) -> f64 {
     let fb = s.f + s.b;
     match kind {
         ScheduleKind::OneFOneBAs | ScheduleKind::FbpAs => (n - 1.0) / (m + n - 1.0),
-        ScheduleKind::OneFOneBSno => {
+        ScheduleKind::OneFOneBSno | ScheduleKind::TwoBW => {
             let ceil = ((s.m - 1) as f64 / n).ceil();
             let num = (n - 1.0) * (fb + 2.0 * s.sr) + (m - 1.0 - ceil) * 2.0 * s.sr;
             num / minibatch_time(kind, s)
@@ -100,8 +102,9 @@ pub fn demand_bandwidth(kind: ScheduleKind, s: &Symbols) -> f64 {
         // 2a/(F+B) for FBP (activation + error during one combined slot).
         ScheduleKind::OneFOneBAs => s.a / s.f,
         ScheduleKind::FbpAs => 2.0 * s.a / (s.f + s.b),
-        // Table 2: both sync schedules demand a/F.
-        ScheduleKind::OneFOneBSno | ScheduleKind::OneFOneBSo => s.a / s.f,
+        // Table 2: both sync schedules demand a/F; 2BW streams the same
+        // per-micro-batch activation during one forward slot.
+        ScheduleKind::OneFOneBSno | ScheduleKind::OneFOneBSo | ScheduleKind::TwoBW => s.a / s.f,
         ScheduleKind::GPipe => s.a / s.f,
         ScheduleKind::PipeDream => 2.0 * s.a / (s.f + s.b),
     }

@@ -24,7 +24,7 @@ pub fn program(kind: ScheduleKind, n: usize, i: usize, m: usize) -> StageProgram
 pub fn program_into(kind: ScheduleKind, n: usize, i: usize, m: usize, ops: &mut Vec<Op>) {
     assert!(n >= 1 && i < n && m >= 1, "program({kind:?}, n={n}, i={i}, m={m})");
     match kind {
-        ScheduleKind::OneFOneBAs | ScheduleKind::OneFOneBSno => {
+        ScheduleKind::OneFOneBAs | ScheduleKind::OneFOneBSno | ScheduleKind::TwoBW => {
             one_f_one_b(n - i, m, true, ops)
         }
         ScheduleKind::OneFOneBSo => one_f_one_b((2 * (n - i)).min(m.max(1)), m, true, ops),
@@ -131,7 +131,7 @@ impl ProgramShape {
     pub fn of(kind: ScheduleKind, n: usize, i: usize, m: usize) -> ProgramShape {
         assert!(n >= 1 && i < n && m >= 1, "shape({kind:?}, n={n}, i={i}, m={m})");
         match kind {
-            ScheduleKind::OneFOneBAs | ScheduleKind::OneFOneBSno => {
+            ScheduleKind::OneFOneBAs | ScheduleKind::OneFOneBSno | ScheduleKind::TwoBW => {
                 ProgramShape::OneFOneB { w: (n - i).min(m).max(1), m, update: true }
             }
             ScheduleKind::OneFOneBSo => ProgramShape::OneFOneB {
@@ -339,14 +339,8 @@ mod tests {
                 let n = g.usize_in(1, 9);
                 let i = g.usize_in(0, n);
                 let m = g.usize_in(1, 33);
-                let kind = [
-                    ScheduleKind::OneFOneBAs,
-                    ScheduleKind::FbpAs,
-                    ScheduleKind::OneFOneBSno,
-                    ScheduleKind::OneFOneBSo,
-                    ScheduleKind::GPipe,
-                    ScheduleKind::PipeDream,
-                ][g.usize_in(0, 6)];
+                let kinds = ScheduleKind::all();
+                let kind = kinds[g.usize_in(0, kinds.len())];
                 (kind, n, i, m)
             },
             |&(kind, n, i, m)| {
@@ -363,14 +357,7 @@ mod tests {
     fn program_into_appends_and_matches_program() {
         // The buffer entry point appends (existing content survives) and
         // produces exactly the ops of `program` for every kind.
-        for kind in [
-            ScheduleKind::OneFOneBAs,
-            ScheduleKind::FbpAs,
-            ScheduleKind::OneFOneBSno,
-            ScheduleKind::OneFOneBSo,
-            ScheduleKind::GPipe,
-            ScheduleKind::PipeDream,
-        ] {
+        for kind in ScheduleKind::all() {
             let mut buf = vec![Op::Update];
             program_into(kind, 4, 1, 8, &mut buf);
             let p = program(kind, 4, 1, 8);
@@ -390,7 +377,8 @@ mod tests {
                 let n = g.usize_in(1, 10);
                 let i = g.usize_in(0, n);
                 let m = g.usize_in(1, 40);
-                let kind = ScheduleKind::all()[g.usize_in(0, 6)];
+                let kinds = ScheduleKind::all();
+                let kind = kinds[g.usize_in(0, kinds.len())];
                 (kind, n, i, m)
             },
             |&(kind, n, i, m)| {
@@ -426,10 +414,23 @@ mod tests {
             ScheduleKind::OneFOneBSno,
             ScheduleKind::OneFOneBSo,
             ScheduleKind::GPipe,
+            ScheduleKind::TwoBW,
         ] {
             let p = program(kind, 4, 2, 10);
             assert_eq!(p.n_fwd(), 10, "{kind:?}");
             assert_eq!(p.n_bwd(), 10, "{kind:?}");
+        }
+    }
+
+    #[test]
+    fn two_bw_program_is_one_f_one_b_with_update() {
+        // 2BW executes the plain 1F1B schedule — the memory behaviour
+        // (double-buffered weights) differs, the op sequence does not.
+        for i in 0..4usize {
+            let p = program(ScheduleKind::TwoBW, 4, i, 8);
+            assert_eq!(p.ops, program(ScheduleKind::OneFOneBAs, 4, i, 8).ops, "stage {i}");
+            assert!(matches!(p.ops.last(), Some(Op::Update)));
+            validate(&p, 8, true).unwrap();
         }
     }
 }

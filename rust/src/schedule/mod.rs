@@ -26,6 +26,13 @@ pub enum ScheduleKind {
     GPipe,
     /// PipeDream inter-batch 1F1B with weight stashing (baseline).
     PipeDream,
+    /// Double-buffered weight versions (PipeDream-2BW, arXiv 2006.09503):
+    /// 1F1B-shaped execution with exactly **one** extra weight version
+    /// beyond the working copy on every stage — constant in pipeline
+    /// depth, unlike PipeDream's `n-i-1` stashed versions. The
+    /// memory-scalable kind the planner reaches for when activations fit
+    /// but weights do not.
+    TwoBW,
 }
 
 impl ScheduleKind {
@@ -65,18 +72,23 @@ impl ScheduleKind {
     pub fn stash_depth(&self, n: usize, i: usize, m: usize) -> usize {
         let base = n - i; // 1F1B warm-up depth at stage i
         match self {
-            ScheduleKind::OneFOneBAs | ScheduleKind::OneFOneBSno => base.min(m),
+            ScheduleKind::OneFOneBAs | ScheduleKind::OneFOneBSno | ScheduleKind::TwoBW => {
+                base.min(m)
+            }
             ScheduleKind::FbpAs | ScheduleKind::OneFOneBSo => (2 * base).min(m),
             ScheduleKind::GPipe => m, // all micro-batches of the mini-batch
             ScheduleKind::PipeDream => base,
         }
     }
 
-    /// Extra stored weight *versions* beyond the working copy (PipeDream's
-    /// weight stashing; zero for all intra-batch schedules).
+    /// Extra stored weight *versions* beyond the working copy: PipeDream
+    /// stashes one per in-flight mini-batch (`n-i-1`), 2BW double-buffers
+    /// exactly one regardless of depth, and the plain intra-batch
+    /// schedules need none.
     pub fn weight_versions(&self, n: usize, i: usize) -> usize {
         match self {
             ScheduleKind::PipeDream => (n - i).saturating_sub(1),
+            ScheduleKind::TwoBW => 1,
             _ => 0,
         }
     }
@@ -103,6 +115,7 @@ impl ScheduleKind {
             ScheduleKind::FbpAs | ScheduleKind::OneFOneBSo => 1,
             ScheduleKind::GPipe => 2,
             ScheduleKind::PipeDream => 3,
+            ScheduleKind::TwoBW => 4,
         }
     }
 
@@ -116,12 +129,13 @@ impl ScheduleKind {
             "1F1B-SO" => Some(ScheduleKind::OneFOneBSo),
             "GPipe" => Some(ScheduleKind::GPipe),
             "PipeDream" => Some(ScheduleKind::PipeDream),
+            "2BW" => Some(ScheduleKind::TwoBW),
             _ => None,
         }
     }
 
     /// Every kind, for label round-trips and property tests.
-    pub fn all() -> [ScheduleKind; 6] {
+    pub fn all() -> [ScheduleKind; 7] {
         [
             ScheduleKind::OneFOneBAs,
             ScheduleKind::FbpAs,
@@ -129,6 +143,7 @@ impl ScheduleKind {
             ScheduleKind::OneFOneBSo,
             ScheduleKind::GPipe,
             ScheduleKind::PipeDream,
+            ScheduleKind::TwoBW,
         ]
     }
 
@@ -141,6 +156,7 @@ impl ScheduleKind {
             ScheduleKind::OneFOneBSo => "1F1B-SO",
             ScheduleKind::GPipe => "GPipe",
             ScheduleKind::PipeDream => "PipeDream",
+            ScheduleKind::TwoBW => "2BW",
         }
     }
 }
@@ -235,6 +251,25 @@ mod tests {
             (0..n).map(|i| ScheduleKind::PipeDream.weight_versions(n, i)).collect();
         assert_eq!(v, vec![3, 2, 1, 0]);
         assert_eq!(ScheduleKind::OneFOneBSo.weight_versions(n, 0), 0);
+    }
+
+    #[test]
+    fn two_bw_weight_versions_constant_in_depth() {
+        // 2BW's defining trait (arXiv 2006.09503): exactly one extra
+        // weight version on every stage, no matter how deep the pipe —
+        // vs PipeDream's n-i-1.
+        for n in 1..=16usize {
+            for i in 0..n {
+                assert_eq!(ScheduleKind::TwoBW.weight_versions(n, i), 1);
+                assert_eq!(
+                    ScheduleKind::TwoBW.stash_depth(n, i, 8),
+                    ScheduleKind::OneFOneBAs.stash_depth(n, i, 8),
+                    "2BW stashes like plain 1F1B at n={n} i={i}"
+                );
+            }
+        }
+        assert!(ScheduleKind::TwoBW.intra_batch());
+        assert_eq!(ScheduleKind::TwoBW.required_exec(), None);
     }
 
     #[test]

@@ -797,6 +797,24 @@ mod tests {
     }
 
     #[test]
+    fn two_bw_peak_in_flight_matches_stash_depth() {
+        // 2BW runs the 1F1B op sequence, so its simulated in-flight
+        // high-water mark is exactly the analytical stash depth — the
+        // anchor for the simulated-peak ≡ analytical-rows oracle.
+        let n = 4;
+        let m = 16;
+        let spec = SimSpec::uniform(ScheduleKind::TwoBW, n, m, 1.0, 1.0, 0.1, ExecMode::Sync);
+        let r = simulate(&spec);
+        for i in 0..n {
+            assert_eq!(
+                r.peak_in_flight[i],
+                ScheduleKind::TwoBW.stash_depth(n, i, m),
+                "stage {i}"
+            );
+        }
+    }
+
+    #[test]
     fn so_peak_in_flight_doubles() {
         let n = 3;
         let m = 16;
@@ -871,6 +889,7 @@ mod tests {
             (ScheduleKind::OneFOneBSo, ExecMode::Sync),
             (ScheduleKind::GPipe, ExecMode::Sync),
             (ScheduleKind::PipeDream, ExecMode::Sync),
+            (ScheduleKind::TwoBW, ExecMode::Sync),
         ] {
             let spec = SimSpec::uniform(kind, 4, 6, 1.0, 2.0, 0.3, exec);
             let r = simulate_full(&spec);

@@ -39,7 +39,7 @@ fn simulated_makespan_between_bottleneck_and_serial() {
     let costs = stage_costs(&prof, &cl, &plan.partition, micro);
     let bottleneck: f64 = costs.iter().map(|(f, b)| f + b).fold(0.0, f64::max);
     let serial: f64 = costs.iter().map(|(f, b)| f + b).sum::<f64>() * m as f64;
-    let spec = build_spec(&prof, &cl, &plan.partition, ScheduleKind::OneFOneBSo, micro, m);
+    let spec = build_spec(&prof, &cl, &plan.partition, ScheduleKind::OneFOneBSo, false, micro, m);
     let r = simulate(&spec);
     assert!(r.makespan >= bottleneck * m as f64 - 1e-12, "below bottleneck bound");
     assert!(r.makespan <= serial + 1.0, "above serial bound: {} vs {serial}", r.makespan);
@@ -91,7 +91,7 @@ fn timeline_render_is_consistent() {
     let prof = analytical::profile(&net, &cl);
     let plan =
         balanced_partition(&net, &cl, &prof, ScheduleKind::OneFOneBSno, 4.0, 8).unwrap();
-    let spec = build_spec_plan(&prof, &cl, &plan, ScheduleKind::OneFOneBSno, 4.0, 8);
+    let spec = build_spec_plan(&prof, &cl, &plan, ScheduleKind::OneFOneBSno, false, 4.0, 8);
     let r = simulate(&spec);
     let s = timeline::render(&r, 3, 100);
     assert_eq!(s.lines().count(), 3);
@@ -104,8 +104,8 @@ fn heterogeneous_fractional_feeds_simulator() {
     let cl = presets::fpga_cluster(&["VCU129", "VCU118"]);
     let prof = analytical::profile(&net, &cl);
     let plan = balanced_partition(&net, &cl, &prof, ScheduleKind::FbpAs, 1.0, 32).unwrap();
-    let spec_plain = build_spec(&prof, &cl, &plan.partition, ScheduleKind::FbpAs, 1.0, 32);
-    let spec_frac = build_spec_plan(&prof, &cl, &plan, ScheduleKind::FbpAs, 1.0, 32);
+    let spec_plain = build_spec(&prof, &cl, &plan.partition, ScheduleKind::FbpAs, false, 1.0, 32);
+    let spec_frac = build_spec_plan(&prof, &cl, &plan, ScheduleKind::FbpAs, false, 1.0, 32);
     let t_plain = simulate(&spec_plain).makespan;
     let t_frac = simulate(&spec_frac).makespan;
     // fractional rebalancing can only help (or tie) the bottleneck

@@ -1,0 +1,201 @@
+//! Memory-scalable planning, end to end: the DES per-stage in-flight
+//! high-water mark against the paper's closed-form memory rows (Tables
+//! 1–2), capacity safety of every memfit-accepted plan, and the
+//! (epoch time × simulated peak memory) Pareto front on a
+//! capacity-halved cluster — including the 2BW and recomputation axes
+//! and worker-count determinism.
+
+use bapipe::cluster::{presets, Cluster, ExecMode};
+use bapipe::model::zoo;
+use bapipe::partition::memfit::MemoryModel;
+use bapipe::planner::{self, Choice, Options, Outcome};
+use bapipe::profile::analytical;
+use bapipe::schedule::{analytical as closed, ScheduleKind};
+use bapipe::sim::engine::{simulate, SimSpec};
+use bapipe::util::prop::{check, ensure, Config};
+
+/// Kinds whose generator warm-up *equals* the stash-depth bound, so the
+/// simulated high-water mark must hit it exactly (with `m ≥ n` below so
+/// PipeDream's unclamped `n-i` depth is reachable). FBP-AS peaks one
+/// below its `2(n-i)` bound (the round-trip offset is `2(n-i)-1`) and is
+/// covered by the `≤` property in `prop_coordinator`.
+const EXACT_KINDS: [ScheduleKind; 6] = [
+    ScheduleKind::OneFOneBAs,
+    ScheduleKind::OneFOneBSno,
+    ScheduleKind::OneFOneBSo,
+    ScheduleKind::GPipe,
+    ScheduleKind::PipeDream,
+    ScheduleKind::TwoBW,
+];
+
+#[test]
+fn prop_simulated_peak_matches_analytical_memory_oracle() {
+    // On uniform chains the DES peak, priced at `a` bytes per stashed
+    // micro-batch plus `(2 + versions)·w` for weights, must reproduce the
+    // paper's features+weights memory rows *exactly* — the high-water
+    // mark is program-structural, independent of op timing.
+    check(
+        &Config { cases: 150, ..Default::default() },
+        |g| {
+            let kind = EXACT_KINDS[g.usize_in(0, EXACT_KINDS.len())];
+            let n = g.usize_in(1, 7);
+            let m = g.usize_in(n, 4 * n + 9);
+            let f = g.f64_in(0.2, 2.0);
+            let b = g.f64_in(0.2, 3.0);
+            let sr = g.f64_in(0.0, 0.2);
+            (kind, n, m, f, b, sr)
+        },
+        |&(kind, n, m, f, b, sr)| {
+            let exec = kind.required_exec().unwrap_or(ExecMode::Sync);
+            let r = simulate(&SimSpec::uniform(kind, n, m, f, b, sr, exec));
+            let s = closed::Symbols {
+                m,
+                n,
+                f,
+                b,
+                sr,
+                a: 3.0 * (1u64 << 20) as f64,
+                w: 5.0 * (1u64 << 20) as f64,
+            };
+            for i in 0..n {
+                ensure(
+                    r.peak_in_flight[i] == kind.stash_depth(n, i, m),
+                    format!(
+                        "{kind:?} n={n} i={i} m={m}: peak {} != stash depth {}",
+                        r.peak_in_flight[i],
+                        kind.stash_depth(n, i, m)
+                    ),
+                )?;
+                let simulated = (2 + kind.weight_versions(n, i)) as f64 * s.w
+                    + r.peak_in_flight[i] as f64 * s.a;
+                let oracle = closed::weights_memory(kind, &s, i + 1)
+                    + closed::features_memory(kind, &s, i + 1);
+                ensure(
+                    simulated == oracle,
+                    format!("{kind:?} n={n} i={i} m={m}: {simulated} bytes != oracle {oracle}"),
+                )?;
+            }
+            Ok(())
+        },
+    );
+}
+
+/// The paper's V100 cluster with every device's memory halved — tight
+/// enough that memory-scalable schedules matter, loose enough that the
+/// pipeline still trains.
+fn halved_v100(n: usize) -> Cluster {
+    let mut cl = presets::v100_cluster(n);
+    for d in &mut cl.devices {
+        d.mem_capacity /= 2;
+    }
+    cl
+}
+
+fn pareto_opts(jobs: usize) -> Options {
+    Options {
+        samples_per_epoch: 8192,
+        consider_dp: false,
+        jobs,
+        pareto: true,
+        recompute: true,
+        ..Options::default()
+    }
+}
+
+#[test]
+fn capacity_halved_cluster_yields_memory_scalable_pareto_front() {
+    let net = zoo::gnmt_l(64);
+    let cl = halved_v100(8);
+    let prof = analytical::profile(&net, &cl);
+    let plan = planner::explore(&net, &cl, &prof, &pareto_opts(1));
+    let front = &plan.pareto_front;
+    assert!(
+        front.len() >= 2,
+        "need >= 2 mutually non-dominated plans, got {}\n{}",
+        front.len(),
+        plan.summary()
+    );
+
+    // Pairwise mutual non-domination: each point beats every other on at
+    // least one axis. Combined with the fastest-first sort this means
+    // epoch strictly increases and peak strictly decreases along the front.
+    for (x, a) in front.iter().enumerate() {
+        for b in front.iter().skip(x + 1) {
+            assert!(
+                a.epoch_time < b.epoch_time || a.peak_memory < b.peak_memory,
+                "front point dominated: {a:?} vs {b:?}"
+            );
+            assert!(
+                b.epoch_time < a.epoch_time || b.peak_memory < a.peak_memory,
+                "front point dominated: {b:?} vs {a:?}"
+            );
+        }
+    }
+    assert!(
+        front
+            .windows(2)
+            .all(|w| w[0].epoch_time < w[1].epoch_time && w[0].peak_memory > w[1].peak_memory),
+        "front not sorted fastest-first with decreasing peak\n{}",
+        plan.summary()
+    );
+
+    // At least one front plan uses a memory-scalable mechanism.
+    assert!(
+        front
+            .iter()
+            .any(|p| p.candidate.kind == ScheduleKind::TwoBW || p.candidate.recompute),
+        "no 2BW or recompute plan on the front\n{}",
+        plan.summary()
+    );
+
+    // Simulated peak fits the halved capacity on every front plan — and
+    // on every memfit-accepted (simulated) candidate, per device.
+    let mm = MemoryModel::default();
+    for p in front {
+        assert!(
+            p.peak_memory <= mm.usable(cl.devices[0].mem_capacity),
+            "front plan over capacity: {p:?}"
+        );
+    }
+    for ev in &plan.report.evaluations {
+        if let Outcome::Evaluated { peak_memory, .. } = &ev.outcome {
+            assert!(!peak_memory.is_empty(), "simulated candidate without peaks");
+            for (i, &peak) in peak_memory.iter().enumerate() {
+                assert!(
+                    peak <= mm.usable(cl.devices[i].mem_capacity),
+                    "stage {i} of {:?} oversubscribed: {peak} bytes",
+                    ev.candidate
+                );
+            }
+        }
+    }
+
+    // The selected plan is still the fastest feasible point — the front
+    // widens the report, not the choice.
+    assert!(matches!(plan.choice, Choice::Pipeline { .. }), "expected a pipeline winner");
+    assert_eq!(plan.epoch_time, front[0].epoch_time, "winner must be the fastest front point");
+
+    // The front survives a plan.json round trip (emit_json re-parses and
+    // compares internally).
+    let text = plan.emit_json().unwrap();
+    assert!(text.contains("\"pareto_front\""));
+}
+
+#[test]
+fn pareto_front_is_independent_of_worker_count() {
+    // With pruning suspended under --pareto every feasible candidate is
+    // simulated, so jobs=1 and jobs=8 must agree bit-for-bit: same
+    // winner, same per-candidate outcomes, same simulated peaks, same
+    // front.
+    let net = zoo::gnmt_l(32);
+    let cl = halved_v100(4);
+    let prof = analytical::profile(&net, &cl);
+    let p1 = planner::explore(&net, &cl, &prof, &pareto_opts(1));
+    let p8 = planner::explore(&net, &cl, &prof, &pareto_opts(8));
+    assert_eq!(p1.choice, p8.choice);
+    assert_eq!(p1.epoch_time, p8.epoch_time);
+    assert_eq!(p1.stage_memory, p8.stage_memory);
+    assert_eq!(p1.pareto_front, p8.pareto_front);
+    assert_eq!(p1.report.evaluations, p8.report.evaluations);
+    assert!(!p1.pareto_front.is_empty(), "parity check needs a non-trivial front");
+}

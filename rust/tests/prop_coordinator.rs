@@ -11,13 +11,14 @@ use bapipe::schedule::{analytical as closed, generators, Op, ScheduleKind};
 use bapipe::sim::engine::{simulate, SimSpec};
 use bapipe::util::prop::{check, ensure, Config};
 
-const KINDS: [ScheduleKind; 6] = [
+const KINDS: [ScheduleKind; 7] = [
     ScheduleKind::OneFOneBAs,
     ScheduleKind::FbpAs,
     ScheduleKind::OneFOneBSno,
     ScheduleKind::OneFOneBSo,
     ScheduleKind::GPipe,
     ScheduleKind::PipeDream,
+    ScheduleKind::TwoBW,
 ];
 
 #[test]
@@ -184,13 +185,13 @@ fn prop_memfit_never_returns_oversubscribed_partition() {
             let kind = ScheduleKind::OneFOneBSno;
             let seed = interlayer::dp_optimal(&prof, &cl, &cuts, micro, None)
                 .map_err(|e| e.to_string())?;
-            match fit_memory(&prof, &cl, seed, kind, micro, m, &cuts) {
+            match fit_memory(&prof, &cl, seed, kind, false, micro, m, &cuts) {
                 Err(_) => Ok(()), // honest failure is allowed
                 Ok(r) => {
                     let mm = MemoryModel::default();
                     for i in 0..n {
                         let used = stage_memory_bytes(
-                            &prof, &mm, kind, n, i, r.partition.stage(i), micro, m,
+                            &prof, &mm, kind, false, n, i, r.partition.stage(i), micro, m,
                         );
                         ensure(
                             used <= mm.usable(cl.devices[i].mem_capacity),
