@@ -4,23 +4,26 @@
 //! pipeline with M up to 4096 (`sim_batch`), the partition DP
 //! trajectory (seed reference loop → prefix tables → prefix + monotone
 //! crossing search) on the 64-stage cut set, the phase-A balance-seed
-//! fan-out and the end-to-end exploration at jobs ∈ {1, 8} on a 64-stage
-//! synthetic cluster with M up to 512 — emitting the measured perf
-//! trajectory to `BENCH_planner.json` at the repository root so later
-//! PRs can track regressions.
+//! fan-out, the end-to-end exploration at jobs ∈ {1, 8} on a 64-stage
+//! synthetic cluster with M up to 512, and the elastic `replan` line —
+//! warm-started scenario replay vs cold re-exploration on a 16-device
+//! loss/degrade/straggler script, with migration bytes — emitting the
+//! measured perf trajectory to `BENCH_planner.json` at the repository
+//! root so later PRs can track regressions.
 //!
 //! Run: `cargo bench --bench planner_scale`
 //! CI smoke (small model, one iteration): `BAPIPE_BENCH_QUICK=1 cargo
 //! bench --bench planner_scale` (or pass `--quick`).
 //! Output override: `BAPIPE_BENCH_OUT=path.json`.
 
+use bapipe::cluster::mutate::{self, ClusterEvent, Scenario};
 use bapipe::cluster::{presets, ExecMode};
 use bapipe::model::zoo;
 use bapipe::partition::interlayer::{
     dp_optimal_prefix, dp_optimal_rc, dp_optimal_reference, max_stage_time,
 };
 use bapipe::planner::space::permuted_view;
-use bapipe::planner::{self, Choice, EvalCache, Options, Outcome, SearchSpace};
+use bapipe::planner::{self, elastic, Choice, EvalCache, Options, Outcome, SearchSpace};
 use bapipe::profile::{analytical, RangeCost};
 use bapipe::schedule::{generators, ScheduleKind};
 use bapipe::sim::batch::FamilySim;
@@ -322,6 +325,57 @@ fn main() {
         pm_reduction.map_or("n/a".to_string(), |r| format!("{r:.2}x smaller")),
     );
 
+    // ---- Elastic replanning on the 16-device GPU mix: a scripted
+    // loss/degrade/straggler scenario replayed against the incumbent.
+    // Warm path: `elastic::run_scenario` — incumbent-seeded
+    // branch-and-bound, seeded order discovery, per-view cache salvage
+    // threaded across events. Cold baseline: a from-scratch
+    // `planner::explore` of each mutated cluster with the same options.
+    let rp_scenario = Scenario {
+        name: "loss-degrade-straggler".to_string(),
+        events: vec![
+            ClusterEvent::DeviceLoss { device: 3 },
+            ClusterEvent::LinkDegrade { link: 0, bandwidth_factor: 0.5, latency_factor: 2.0 },
+            ClusterEvent::Straggler { device: 1, slowdown: 1.5 },
+        ],
+    };
+    let rp_warm = bench("planner/replan warm 16-device scenario", aw, ai, || {
+        let run = elastic::run_scenario(
+            &het_net, &het_cl, &het_prof, &het_plan, &rp_scenario, &mk_het(8),
+        )
+        .unwrap();
+        std::hint::black_box(run.steps.len());
+    });
+    let rp_cold = bench("planner/replan cold 16-device scenario", aw, ai, || {
+        let (mut c, mut p) = (het_cl.clone(), het_prof.clone());
+        for ev in &rp_scenario.events {
+            let mu = mutate::apply(&het_net, &c, &p, ev).unwrap();
+            std::hint::black_box(
+                planner::explore(&het_net, &mu.cluster, &mu.profile, &mk_het(8)).epoch_time,
+            );
+            c = mu.cluster;
+            p = mu.profile;
+        }
+    });
+    let rp_run = elastic::run_scenario(
+        &het_net, &het_cl, &het_prof, &het_plan, &rp_scenario, &mk_het(8),
+    )
+    .unwrap();
+    let rp_feasible =
+        rp_run.steps.iter().all(|s| matches!(s.plan.choice, Choice::Pipeline { .. }));
+    let rp_migration_bytes: u64 =
+        rp_run.steps.iter().filter_map(|s| s.migration.as_ref().map(|m| m.bytes)).sum();
+    let rp_speedup = rp_cold.p50 / rp_warm.p50;
+    println!(
+        "  replan ({het_n}-device gpu-mixed, {} events): warm {:.0} ms vs cold {:.0} ms \
+         ({rp_speedup:.2}x), {} migrated, every event {}",
+        rp_scenario.events.len(),
+        rp_warm.p50 * 1e3,
+        rp_cold.p50 * 1e3,
+        bapipe::util::fmt_bytes(rp_migration_bytes),
+        if rp_feasible { "feasible" } else { "NOT feasible" },
+    );
+
     // ---- Emit the measured trajectory.
     let doc = obj(vec![
         ("bench", Json::from("planner_scale")),
@@ -415,6 +469,25 @@ fn main() {
             ]),
         ),
         (
+            "replan",
+            obj(vec![
+                ("devices", Json::from(het_n)),
+                ("model", Json::from(het_model)),
+                ("cluster", Json::from(het_cl.describe())),
+                (
+                    "scenario",
+                    Json::Arr(
+                        rp_scenario.events.iter().map(|e| Json::from(e.describe())).collect(),
+                    ),
+                ),
+                ("warm_ms", Json::Num(rp_warm.p50 * 1e3)),
+                ("cold_ms", Json::Num(rp_cold.p50 * 1e3)),
+                ("speedup_cold_over_warm", Json::Num(rp_speedup)),
+                ("migration_bytes", Json::Num(rp_migration_bytes as f64)),
+                ("feasible_every_event", Json::from(rp_feasible)),
+            ]),
+        ),
+        (
             "explore",
             obj(vec![
                 ("stages", Json::from(stages)),
@@ -466,6 +539,23 @@ fn main() {
     if dp_speedup < 5.0 {
         let msg = format!(
             "dp_optimal (prefix+monotone) only {dp_speedup:.2}x over the reference loop (floor: 5x)"
+        );
+        if quick {
+            println!("  WARNING: {msg} — quick mode is noise-prone; run the full bench");
+        } else {
+            panic!("{msg} (measurements preserved in {out})");
+        }
+    }
+
+    // This PR's floor, same pattern: every scenario event must end with a
+    // feasible plan, and the warm-started replan must beat a cold
+    // re-exploration of the same mutated clusters — it does strictly less
+    // work (incumbent-seeded pruning, salvaged phase-A cache, seeded
+    // order portfolio).
+    assert!(rp_feasible, "replan scenario left an event without a feasible pipeline");
+    if rp_speedup < 1.0 {
+        let msg = format!(
+            "warm replan only {rp_speedup:.2}x over cold re-exploration (floor: 1x)"
         );
         if quick {
             println!("  WARNING: {msg} — quick mode is noise-prone; run the full bench");

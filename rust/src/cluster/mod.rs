@@ -1,10 +1,13 @@
 //! Accelerator-cluster model: device specifications ([`device`]),
 //! interconnect links ([`link`]), the 1-D daisy-chain topology BaPipe
-//! targets ([`topology`]) and presets for the paper's testbeds
-//! ([`presets`]: NVIDIA V100, Xilinx VCU118/VCU129, CPU host).
+//! targets ([`topology`]), presets for the paper's testbeds
+//! ([`presets`]: NVIDIA V100, Xilinx VCU118/VCU129, CPU host), and the
+//! fault-injection mutation layer ([`mutate`]: device loss/join, link
+//! degradation, stragglers — the elastic-replanning event stream).
 
 pub mod device;
 pub mod link;
+pub mod mutate;
 pub mod presets;
 pub mod topology;
 

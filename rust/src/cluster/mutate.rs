@@ -1,0 +1,543 @@
+//! Fault-injection cluster mutations — the elastic-cluster event layer.
+//!
+//! Real fleets are not static: devices die or join mid-run, links
+//! degrade, and stragglers appear. This module models those facts as a
+//! deterministic [`ClusterEvent`] stream (parsed from a scenario JSON by
+//! [`Scenario::from_json`]) and applies each event to a
+//! `(Cluster, Profile)` pair, producing a [`Mutation`] that carries the
+//! mutated cluster, the matching mutated profile, and a **lineage** map
+//! from post-event device indices back to pre-event ones — the piece
+//! `planner::elastic` needs to restrict an incumbent device order to the
+//! survivors when warm-starting a replan.
+//!
+//! Invariants preserved by every event:
+//! * the chain shape (`links.len() == devices.len() - 1`) — an interior
+//!   device loss *merges* its two adjacent links (bandwidth = min,
+//!   latency = sum: the surviving route crosses both hops);
+//! * `Link::new`'s bandwidth > 0 — degradation factors must be positive;
+//! * `Profile` size fields — a [`ClusterEvent::Straggler`] slows only the
+//!   *time* fields of a device's rows, never `params`/`act_*`/`stash`
+//!   (row 0 of the profile is the source of truth for byte sizes).
+
+use crate::cluster::{Cluster, Device, Link};
+use crate::model::Network;
+use crate::profile::{analytical, Profile};
+use crate::util::json::Json;
+
+/// One mutation of the cluster, in the order fields are read from the
+/// scenario JSON.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ClusterEvent {
+    /// Device at chain slot `device` fails and leaves the chain.
+    DeviceLoss {
+        /// Pre-event chain index of the lost device.
+        device: usize,
+    },
+    /// A device of preset type `device_name` joins at chain slot
+    /// `position` (0 ..= current length).
+    DeviceJoin {
+        /// Preset device name (`"V100"`, `"P100"`, `"VCU118"`,
+        /// `"VCU129"`, `"cpu-host"`).
+        device_name: String,
+        /// Insertion slot in the chain.
+        position: usize,
+        /// Link bandwidth (bytes/s) for the new adjacency; when absent
+        /// the nearest existing link is cloned.
+        link_bandwidth: Option<f64>,
+        /// Link latency (s) for the new adjacency.
+        link_latency: Option<f64>,
+    },
+    /// Link at chain slot `link` degrades: bandwidth is multiplied by
+    /// `bandwidth_factor` (0 < f), latency by `latency_factor` (f >= 0).
+    LinkDegrade {
+        /// Link index (between devices `link` and `link + 1`).
+        link: usize,
+        /// Multiplier on bandwidth (e.g. 0.5 = half the bandwidth).
+        bandwidth_factor: f64,
+        /// Multiplier on latency (e.g. 2.0 = double the latency).
+        latency_factor: f64,
+    },
+    /// Device at chain slot `device` becomes `slowdown`x slower: all four
+    /// time fields of its profile rows are multiplied by `slowdown`.
+    Straggler {
+        /// Chain index of the straggling device.
+        device: usize,
+        /// Time multiplier (> 0; 1.5 = 50% slower).
+        slowdown: f64,
+    },
+}
+
+impl ClusterEvent {
+    /// One-line description for reports and provenance notes.
+    pub fn describe(&self) -> String {
+        match self {
+            ClusterEvent::DeviceLoss { device } => format!("device-loss @{device}"),
+            ClusterEvent::DeviceJoin { device_name, position, .. } => {
+                format!("device-join {device_name} @{position}")
+            }
+            ClusterEvent::LinkDegrade { link, bandwidth_factor, latency_factor } => format!(
+                "link-degrade @{link} (bandwidth x{bandwidth_factor}, latency x{latency_factor})"
+            ),
+            ClusterEvent::Straggler { device, slowdown } => {
+                format!("straggler @{device} (x{slowdown})")
+            }
+        }
+    }
+
+    /// Parse one event object (`{"event": "...", ...}`).
+    pub fn from_json(doc: &Json) -> Result<ClusterEvent, String> {
+        let kind = doc.req_str("event").map_err(|e| e.to_string())?;
+        match kind {
+            "device-loss" => Ok(ClusterEvent::DeviceLoss {
+                device: doc.req_usize("device").map_err(|e| e.to_string())?,
+            }),
+            "device-join" => Ok(ClusterEvent::DeviceJoin {
+                device_name: doc.req_str("device_name").map_err(|e| e.to_string())?.to_string(),
+                position: doc.req_usize("position").map_err(|e| e.to_string())?,
+                link_bandwidth: doc.get("link_bandwidth").and_then(Json::as_f64),
+                link_latency: doc.get("link_latency").and_then(Json::as_f64),
+            }),
+            "link-degrade" => Ok(ClusterEvent::LinkDegrade {
+                link: doc.req_usize("link").map_err(|e| e.to_string())?,
+                bandwidth_factor: doc.req_f64("bandwidth_factor").map_err(|e| e.to_string())?,
+                latency_factor: doc.req_f64("latency_factor").map_err(|e| e.to_string())?,
+            }),
+            "straggler" => Ok(ClusterEvent::Straggler {
+                device: doc.req_usize("device").map_err(|e| e.to_string())?,
+                slowdown: doc.req_f64("slowdown").map_err(|e| e.to_string())?,
+            }),
+            other => Err(format!(
+                "unknown event `{other}` (expected device-loss | device-join | \
+                 link-degrade | straggler)"
+            )),
+        }
+    }
+
+    /// Serialize back to the scenario-JSON event object.
+    pub fn to_json(&self) -> Json {
+        use crate::util::json::obj;
+        match self {
+            ClusterEvent::DeviceLoss { device } => {
+                obj(vec![("event", "device-loss".into()), ("device", (*device).into())])
+            }
+            ClusterEvent::DeviceJoin { device_name, position, link_bandwidth, link_latency } => {
+                let mut fields = vec![
+                    ("event", Json::from("device-join")),
+                    ("device_name", device_name.clone().into()),
+                    ("position", (*position).into()),
+                ];
+                if let Some(b) = link_bandwidth {
+                    fields.push(("link_bandwidth", (*b).into()));
+                }
+                if let Some(l) = link_latency {
+                    fields.push(("link_latency", (*l).into()));
+                }
+                obj(fields)
+            }
+            ClusterEvent::LinkDegrade { link, bandwidth_factor, latency_factor } => obj(vec![
+                ("event", "link-degrade".into()),
+                ("link", (*link).into()),
+                ("bandwidth_factor", (*bandwidth_factor).into()),
+                ("latency_factor", (*latency_factor).into()),
+            ]),
+            ClusterEvent::Straggler { device, slowdown } => obj(vec![
+                ("event", "straggler".into()),
+                ("device", (*device).into()),
+                ("slowdown", (*slowdown).into()),
+            ]),
+        }
+    }
+}
+
+/// A named, ordered fault-injection scenario: the event stream the
+/// elastic replanner replays against an incumbent plan.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Scenario {
+    /// Scenario name (for reports and bench lines).
+    pub name: String,
+    /// Events, applied in order.
+    pub events: Vec<ClusterEvent>,
+}
+
+impl Scenario {
+    /// Parse a scenario document:
+    /// `{"name": "...", "events": [{"event": "device-loss", ...}, ...]}`.
+    pub fn from_json(doc: &Json) -> Result<Scenario, String> {
+        let name = doc.req_str("name").map_err(|e| e.to_string())?.to_string();
+        let mut events = Vec::new();
+        for (i, e) in doc.req_arr("events").map_err(|e| e.to_string())?.iter().enumerate() {
+            events.push(
+                ClusterEvent::from_json(e).map_err(|err| format!("event {i}: {err}"))?,
+            );
+        }
+        Ok(Scenario { name, events })
+    }
+
+    /// Serialize to the scenario-JSON document.
+    pub fn to_json(&self) -> Json {
+        crate::util::json::obj(vec![
+            ("name", self.name.clone().into()),
+            ("events", Json::Arr(self.events.iter().map(ClusterEvent::to_json).collect())),
+        ])
+    }
+}
+
+/// The result of applying one event: the mutated cluster + profile pair,
+/// a survivor lineage map, and a human-readable note.
+#[derive(Debug, Clone)]
+pub struct Mutation {
+    /// The cluster after the event.
+    pub cluster: Cluster,
+    /// The profile after the event (rows travel with their devices).
+    pub profile: Profile,
+    /// `lineage[new_idx] = Some(old_idx)` for surviving devices, `None`
+    /// for a freshly joined device.
+    pub lineage: Vec<Option<usize>>,
+    /// What happened, for provenance notes.
+    pub note: String,
+}
+
+/// Resolve a preset device spec by name (the scenario JSON's
+/// `device_name` field for joins).
+pub fn device_by_name(name: &str) -> Result<Device, String> {
+    use super::presets;
+    match name {
+        "V100" | "v100" => Ok(presets::v100()),
+        "P100" | "p100" => Ok(presets::p100()),
+        "VCU118" | "vcu118" => Ok(presets::vcu118()),
+        "VCU129" | "vcu129" => Ok(presets::vcu129()),
+        "cpu-host" | "cpu" => Ok(presets::cpu_host()),
+        other => Err(format!("unknown device preset `{other}`")),
+    }
+}
+
+/// Apply one event to `(cluster, profile)`; `net` is needed to profile a
+/// joining device. Errors (bad index, last-device loss, non-positive
+/// factor) leave the inputs untouched.
+pub fn apply(
+    net: &Network,
+    cluster: &Cluster,
+    profile: &Profile,
+    event: &ClusterEvent,
+) -> Result<Mutation, String> {
+    let n = cluster.len();
+    match event {
+        ClusterEvent::DeviceLoss { device } => {
+            let d = *device;
+            if d >= n {
+                return Err(format!("device-loss index {d} out of range (cluster has {n})"));
+            }
+            if n == 1 {
+                return Err("device-loss would empty the cluster".to_string());
+            }
+            let mut devices = cluster.devices.clone();
+            let lost = devices.remove(d);
+            let mut links = cluster.links.clone();
+            if d == 0 {
+                links.remove(0);
+            } else if d == n - 1 {
+                links.remove(n - 2);
+            } else {
+                // Interior loss: the surviving route crosses both former
+                // hops — merged bandwidth is the bottleneck, latency adds.
+                let left = links.remove(d - 1);
+                let right = links.remove(d - 1);
+                links.insert(
+                    d - 1,
+                    Link::new(left.bandwidth.min(right.bandwidth), left.latency + right.latency),
+                );
+            }
+            let mut per_device = profile.per_device.clone();
+            per_device.remove(d);
+            let lineage = (0..n).filter(|&i| i != d).map(Some).collect();
+            Ok(Mutation {
+                cluster: Cluster::new(devices, links),
+                profile: Profile {
+                    model: profile.model.clone(),
+                    dtype_bytes: profile.dtype_bytes,
+                    per_device,
+                },
+                lineage,
+                note: format!("device-loss: {} @{d} removed, {} devices remain", lost.name, n - 1),
+            })
+        }
+        ClusterEvent::DeviceJoin { device_name, position, link_bandwidth, link_latency } => {
+            let p = *position;
+            if p > n {
+                return Err(format!("device-join position {p} out of range (cluster has {n})"));
+            }
+            let dev = device_by_name(device_name)?;
+            // Profile the joiner in isolation; rows are per-device so a
+            // single-device profiling pass yields exactly its row set.
+            let solo = Cluster::new(vec![dev.clone()], vec![]);
+            let solo_prof = analytical::profile(net, &solo);
+            if solo_prof.dtype_bytes != profile.dtype_bytes {
+                return Err(format!(
+                    "device-join {device_name} would change training precision \
+                     ({} vs {} bytes/elem)",
+                    solo_prof.dtype_bytes, profile.dtype_bytes
+                ));
+            }
+            let new_link = match (link_bandwidth, link_latency) {
+                (Some(b), Some(l)) => {
+                    if *b <= 0.0 || *l < 0.0 {
+                        return Err(format!(
+                            "device-join link parameters invalid (bandwidth {b}, latency {l})"
+                        ));
+                    }
+                    Link::new(*b, *l)
+                }
+                _ => {
+                    // Clone the nearest existing link; a 1-device cluster
+                    // has none, so fall back to the board-class preset.
+                    let near = if p == 0 { 0 } else { p - 1 };
+                    match cluster.links.get(near.min(cluster.links.len().saturating_sub(1))) {
+                        Some(l) if !cluster.links.is_empty() => l.clone(),
+                        _ => {
+                            if dev.exec == super::ExecMode::Async {
+                                super::presets::gty_link()
+                            } else {
+                                super::presets::pcie_gen3_x16()
+                            }
+                        }
+                    }
+                }
+            };
+            let mut devices = cluster.devices.clone();
+            devices.insert(p, dev);
+            let mut links = cluster.links.clone();
+            // Inserting a device adds exactly one adjacency to the chain.
+            links.insert(p.min(links.len()), new_link);
+            let mut per_device = profile.per_device.clone();
+            per_device.insert(p, solo_prof.per_device[0].clone());
+            let mut lineage: Vec<Option<usize>> = (0..n).map(Some).collect();
+            lineage.insert(p, None);
+            Ok(Mutation {
+                cluster: Cluster::new(devices, links),
+                profile: Profile {
+                    model: profile.model.clone(),
+                    dtype_bytes: profile.dtype_bytes,
+                    per_device,
+                },
+                lineage,
+                note: format!("device-join: {device_name} @{p}, {} devices now", n + 1),
+            })
+        }
+        ClusterEvent::LinkDegrade { link, bandwidth_factor, latency_factor } => {
+            let l = *link;
+            if l >= cluster.links.len() {
+                return Err(format!(
+                    "link-degrade index {l} out of range (cluster has {} links)",
+                    cluster.links.len()
+                ));
+            }
+            if *bandwidth_factor <= 0.0 || *latency_factor < 0.0 {
+                return Err(format!(
+                    "link-degrade factors invalid (bandwidth x{bandwidth_factor}, \
+                     latency x{latency_factor})"
+                ));
+            }
+            let mut links = cluster.links.clone();
+            let old = &cluster.links[l];
+            links[l] = Link::new(old.bandwidth * bandwidth_factor, old.latency * latency_factor);
+            Ok(Mutation {
+                cluster: Cluster::new(cluster.devices.clone(), links),
+                profile: profile.clone(),
+                lineage: (0..n).map(Some).collect(),
+                note: format!(
+                    "link-degrade @{l}: bandwidth x{bandwidth_factor}, latency x{latency_factor}"
+                ),
+            })
+        }
+        ClusterEvent::Straggler { device, slowdown } => {
+            let d = *device;
+            if d >= n {
+                return Err(format!("straggler index {d} out of range (cluster has {n})"));
+            }
+            if *slowdown <= 0.0 {
+                return Err(format!("straggler slowdown must be positive (got {slowdown})"));
+            }
+            let mut per_device = profile.per_device.clone();
+            for row in &mut per_device[d] {
+                // Only the time fields: byte sizes are read from row 0 and
+                // must stay identical across devices.
+                row.fwd *= slowdown;
+                row.bwd *= slowdown;
+                row.fwd_fixed *= slowdown;
+                row.bwd_fixed *= slowdown;
+            }
+            Ok(Mutation {
+                cluster: cluster.clone(),
+                profile: Profile {
+                    model: profile.model.clone(),
+                    dtype_bytes: profile.dtype_bytes,
+                    per_device,
+                },
+                lineage: (0..n).map(Some).collect(),
+                note: format!("straggler @{d}: x{slowdown} slower"),
+            })
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::presets;
+    use crate::model::zoo;
+
+    fn setup(n: usize) -> (Network, Cluster, Profile) {
+        let net = zoo::vgg16(224);
+        let cl = presets::gpu_mixed_cluster(n);
+        let prof = analytical::profile(&net, &cl);
+        (net, cl, prof)
+    }
+
+    #[test]
+    fn interior_loss_merges_links() {
+        let (net, cl, prof) = setup(4);
+        let m = apply(&net, &cl, &prof, &ClusterEvent::DeviceLoss { device: 1 }).unwrap();
+        assert_eq!(m.cluster.len(), 3);
+        assert_eq!(m.cluster.links.len(), 2);
+        // merged link: bandwidth = min of the two PCIe hops, latency = sum
+        let merged = &m.cluster.links[0];
+        let pcie = presets::pcie_gen3_x16();
+        assert_eq!(merged.bandwidth, pcie.bandwidth);
+        assert!((merged.latency - 2.0 * pcie.latency).abs() < 1e-18);
+        assert_eq!(m.lineage, vec![Some(0), Some(2), Some(3)]);
+        // survivors keep their own rows: slot 1 is now the old device 2 (V100)
+        assert_eq!(m.cluster.devices[1].name, "V100");
+        assert_eq!(m.profile.n_devices(), 3);
+        m.profile.validate(&m.cluster).unwrap();
+    }
+
+    #[test]
+    fn edge_loss_drops_one_link() {
+        let (net, cl, prof) = setup(4);
+        let m = apply(&net, &cl, &prof, &ClusterEvent::DeviceLoss { device: 0 }).unwrap();
+        assert_eq!(m.cluster.len(), 3);
+        assert_eq!(m.cluster.links.len(), 2);
+        assert_eq!(m.lineage, vec![Some(1), Some(2), Some(3)]);
+        let m2 = apply(&net, &cl, &prof, &ClusterEvent::DeviceLoss { device: 3 }).unwrap();
+        assert_eq!(m2.lineage, vec![Some(0), Some(1), Some(2)]);
+    }
+
+    #[test]
+    fn loss_errors() {
+        let (net, cl, prof) = setup(2);
+        assert!(apply(&net, &cl, &prof, &ClusterEvent::DeviceLoss { device: 5 }).is_err());
+        let solo = presets::v100_cluster(1);
+        let sp = analytical::profile(&net, &solo);
+        assert!(apply(&net, &solo, &sp, &ClusterEvent::DeviceLoss { device: 0 }).is_err());
+    }
+
+    #[test]
+    fn join_inserts_device_and_profile_row() {
+        let (net, cl, prof) = setup(3);
+        let ev = ClusterEvent::DeviceJoin {
+            device_name: "P100".into(),
+            position: 1,
+            link_bandwidth: None,
+            link_latency: None,
+        };
+        let m = apply(&net, &cl, &prof, &ev).unwrap();
+        assert_eq!(m.cluster.len(), 4);
+        assert_eq!(m.cluster.links.len(), 3);
+        assert_eq!(m.cluster.devices[1].name, "P100");
+        assert_eq!(m.lineage, vec![Some(0), None, Some(1), Some(2)]);
+        m.profile.validate(&m.cluster).unwrap();
+        // the joiner's row matches a fresh solo profiling pass
+        let solo = Cluster::new(vec![presets::p100()], vec![]);
+        let sp = analytical::profile(&net, &solo);
+        assert_eq!(m.profile.per_device[1].len(), sp.per_device[0].len());
+        assert_eq!(m.profile.per_device[1][0].fwd, sp.per_device[0][0].fwd);
+    }
+
+    #[test]
+    fn join_rejects_precision_change_and_bad_preset() {
+        let (net, cl, prof) = setup(2);
+        let ev = ClusterEvent::DeviceJoin {
+            device_name: "VCU118".into(), // fp16 board into an fp32 cluster
+            position: 0,
+            link_bandwidth: None,
+            link_latency: None,
+        };
+        assert!(apply(&net, &cl, &prof, &ev).unwrap_err().contains("precision"));
+        let bad = ClusterEvent::DeviceJoin {
+            device_name: "TPUv9".into(),
+            position: 0,
+            link_bandwidth: None,
+            link_latency: None,
+        };
+        assert!(apply(&net, &cl, &prof, &bad).is_err());
+    }
+
+    #[test]
+    fn degrade_and_straggler_mutate_in_place() {
+        let (net, cl, prof) = setup(3);
+        let m = apply(
+            &net,
+            &cl,
+            &prof,
+            &ClusterEvent::LinkDegrade { link: 1, bandwidth_factor: 0.5, latency_factor: 2.0 },
+        )
+        .unwrap();
+        assert_eq!(m.cluster.links[1].bandwidth, cl.links[1].bandwidth * 0.5);
+        assert_eq!(m.cluster.links[1].latency, cl.links[1].latency * 2.0);
+        assert_eq!(m.cluster.links[0].bandwidth, cl.links[0].bandwidth);
+        assert_eq!(m.lineage, vec![Some(0), Some(1), Some(2)]);
+
+        let s =
+            apply(&net, &cl, &prof, &ClusterEvent::Straggler { device: 2, slowdown: 1.5 }).unwrap();
+        let before = &prof.per_device[2][0];
+        let after = &s.profile.per_device[2][0];
+        assert!((after.fwd - before.fwd * 1.5).abs() < 1e-18);
+        assert!((after.bwd - before.bwd * 1.5).abs() < 1e-18);
+        // size fields untouched
+        assert_eq!(after.params, before.params);
+        assert_eq!(after.act_out_elems, before.act_out_elems);
+        // other devices untouched
+        assert_eq!(s.profile.per_device[0][0].fwd, prof.per_device[0][0].fwd);
+        // factors validated
+        assert!(apply(
+            &net,
+            &cl,
+            &prof,
+            &ClusterEvent::LinkDegrade { link: 0, bandwidth_factor: 0.0, latency_factor: 1.0 }
+        )
+        .is_err());
+        assert!(
+            apply(&net, &cl, &prof, &ClusterEvent::Straggler { device: 0, slowdown: 0.0 }).is_err()
+        );
+    }
+
+    #[test]
+    fn scenario_json_roundtrip() {
+        let s = Scenario {
+            name: "loss-degrade-straggle".into(),
+            events: vec![
+                ClusterEvent::DeviceLoss { device: 3 },
+                ClusterEvent::DeviceJoin {
+                    device_name: "V100".into(),
+                    position: 2,
+                    link_bandwidth: Some(2e9),
+                    link_latency: Some(1e-5),
+                },
+                ClusterEvent::LinkDegrade { link: 1, bandwidth_factor: 0.5, latency_factor: 2.0 },
+                ClusterEvent::Straggler { device: 0, slowdown: 1.5 },
+            ],
+        };
+        let doc = s.to_json();
+        let back = Scenario::from_json(&doc).unwrap();
+        assert_eq!(s, back);
+        // parse from raw text too
+        let parsed = Json::parse(&doc.to_string_pretty()).unwrap();
+        assert_eq!(Scenario::from_json(&parsed).unwrap(), s);
+        // unknown event kind rejected with the index in the message
+        let bad = Json::parse(
+            r#"{"name":"x","events":[{"event":"meteor-strike","device":0}]}"#,
+        )
+        .unwrap();
+        assert!(Scenario::from_json(&bad).unwrap_err().contains("event 0"));
+    }
+}

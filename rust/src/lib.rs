@@ -64,6 +64,23 @@
 //! // 5. Compare two artifacts (`bapipe plan diff old.json new.json`).
 //! let diff = planner::diff::compare(&plan, &plan);
 //! assert!(diff.same_choice);
+//! // 6. Elastic clusters: replay a fault-injection scenario against the
+//! //    incumbent plan (`bapipe replan --plan plan.json --scenario s.json`).
+//! //    `planner::elastic` warm-starts every replan — the incumbent is
+//! //    re-evaluated on the mutated cluster to seed the branch-and-bound,
+//! //    the order portfolio is seeded with the surviving permutation, and
+//! //    `EvalCache` views whose device sequence survived are salvaged —
+//! //    and prices each plan switch as migration bytes of weights +
+//! //    optimizer state. If a loss makes every plain-schedule partition
+//! //    memfit-infeasible, the explorer widens to the recompute/2BW axes
+//! //    before falling back to data parallelism.
+//! use bapipe::cluster::mutate::{ClusterEvent, Scenario};
+//! let scenario = Scenario {
+//!     name: "outage".into(),
+//!     events: vec![ClusterEvent::DeviceLoss { device: 1 }],
+//! };
+//! let run = planner::elastic::run_scenario(&net, &cl, &prof, &plan, &scenario, &opts).unwrap();
+//! println!("{}", run.render());
 //! ```
 //!
 //! The simulator itself has three entry points: `sim::engine::simulate_full`

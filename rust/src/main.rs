@@ -11,7 +11,14 @@
 //!               activation-recomputation axis,
 //!               --plan-cache path: persist/restore the partition cache
 //!               keyed on a (model, cluster) fingerprint so repeated
-//!               invocations skip phase A entirely)
+//!               invocations skip phase A entirely; per-view salvage keeps
+//!               the surviving device orders of a stale cache,
+//!               --eval-budget N: anytime stop after N candidates)
+//!   replan    — elastic-cluster replanning: replay a fault-injection
+//!               scenario JSON (device loss/join, link degradation,
+//!               stragglers) against an incumbent plan.json, warm-starting
+//!               the exploration after every event and pricing each plan
+//!               switch as migration bytes
 //!   plan      — plan.json artifact tooling: `plan diff <a> <b>` compares
 //!               winner, time deltas and stage-boundary moves
 //!   partition — show the balanced partition for a model/cluster
@@ -52,6 +59,33 @@ fn cluster_by_name(name: &str, n: usize) -> Cluster {
     }
 }
 
+/// Exploration options shared by `explore` and `replan`.
+fn planner_opts(args: &Args) -> planner::Options {
+    planner::Options {
+        batch_per_device: args.get_f64("batch", 32.0),
+        samples_per_epoch: args.get_usize("samples", 50_000),
+        jobs: args.get_usize("jobs", 1),
+        prune: !args.has_flag("no-prune"),
+        permute_devices: args.has_flag("permute"),
+        order_search: args.has_flag("order-search"),
+        order_budget: args.get_usize("order-budget", planner::orders::ORDER_BUDGET_DEFAULT),
+        adaptive_m: args.has_flag("adaptive-m"),
+        pareto: args.has_flag("pareto"),
+        recompute: args.has_flag("recompute"),
+        eval_budget: args.opt_str("eval-budget").map(|_| args.get_usize("eval-budget", 0)),
+        ..Default::default()
+    }
+}
+
+/// Load a `plan.json` artifact emitted by `explore --emit`.
+fn load_plan(path: &str) -> bapipe::Result<planner::Plan> {
+    let text =
+        std::fs::read_to_string(path).map_err(|e| anyhow::anyhow!("reading {path}: {e}"))?;
+    let json = bapipe::util::json::Json::parse(&text)
+        .map_err(|e| anyhow::anyhow!("parsing {path}: {e}"))?;
+    planner::Plan::from_json(&json).map_err(|e| anyhow::anyhow!("loading {path}: {e}"))
+}
+
 fn main() -> bapipe::Result<()> {
     let args = Args::from_env();
     if args.has_flag("verbose") {
@@ -65,37 +99,31 @@ fn main() -> bapipe::Result<()> {
                 .ok_or_else(|| anyhow::anyhow!("unknown model `{model}`"))?;
             let cl = cluster_by_name(&args.get_str("cluster", "v100"), args.get_usize("n", 4));
             let prof = analytical::profile(&net, &cl);
-            let opts = planner::Options {
-                batch_per_device: args.get_f64("batch", 32.0),
-                samples_per_epoch: args.get_usize("samples", 50_000),
-                jobs: args.get_usize("jobs", 1),
-                prune: !args.has_flag("no-prune"),
-                permute_devices: args.has_flag("permute"),
-                order_search: args.has_flag("order-search"),
-                order_budget: args
-                    .get_usize("order-budget", planner::orders::ORDER_BUDGET_DEFAULT),
-                adaptive_m: args.has_flag("adaptive-m"),
-                pareto: args.has_flag("pareto"),
-                recompute: args.has_flag("recompute"),
-                ..Default::default()
-            };
+            let opts = planner_opts(&args);
             let plan = match args.opt_str("plan-cache") {
                 Some(path) => {
                     // Cross-scenario cache: restore the seed/plan maps when
                     // the (model, cluster) fingerprint and device-order
-                    // space match, persist the (possibly grown) cache after.
+                    // space match, salvage the surviving views otherwise,
+                    // and persist the (possibly grown) cache after. The
+                    // load outcome travels in the space notes so the
+                    // report/log records it — never just stdout.
                     let fp = planner::store::fingerprint(&net, &cl, &prof);
-                    let space = planner::SearchSpace::bapipe(&net, &cl, &prof, &opts);
-                    let mut cache = match planner::store::load(path, &fp, &space.device_orders)
-                    {
-                        planner::store::CacheLoad::Loaded(cache) => {
-                            println!("plan cache: restored {path} (fingerprint {fp})");
-                            cache
-                        }
-                        planner::store::CacheLoad::Fresh(reason) => {
-                            println!("plan cache: {reason}; computing from scratch");
-                            planner::EvalCache::new()
-                        }
+                    let mut space = planner::SearchSpace::bapipe(&net, &cl, &prof, &opts);
+                    let vfps: Vec<String> = space
+                        .device_orders
+                        .iter()
+                        .map(|o| planner::store::view_fingerprint(&net, &cl, &prof, o))
+                        .collect();
+                    let (load, notes) =
+                        planner::store::load_with_views(path, &fp, &space.device_orders, &vfps);
+                    for note in &notes {
+                        println!("{note}");
+                    }
+                    space.notes.extend(notes);
+                    let mut cache = match load {
+                        planner::store::CacheLoad::Loaded(cache) => cache,
+                        planner::store::CacheLoad::Fresh(_) => planner::EvalCache::new(),
                     };
                     // Reuse the space built for cache validation: past 8
                     // devices its construction ran the budgeted order
@@ -103,7 +131,9 @@ fn main() -> bapipe::Result<()> {
                     let plan = planner::explore_with_cache_in_space(
                         &net, &cl, &prof, &space, &opts, &mut cache,
                     );
-                    planner::store::save(path, &cache, &fp, &space.device_orders)?;
+                    planner::store::save_with_views(
+                        path, &cache, &fp, &space.device_orders, &vfps,
+                    )?;
                     println!("plan cache: saved {path}");
                     plan
                 }
@@ -135,6 +165,55 @@ fn main() -> bapipe::Result<()> {
                 println!("\nwrote {path} ({} bytes, round-trip verified)", text.len());
             }
         }
+        "replan" => {
+            let model = args.get_str("model", "vgg16");
+            let net = zoo::by_name(&model)
+                .ok_or_else(|| anyhow::anyhow!("unknown model `{model}`"))?;
+            let cl = cluster_by_name(&args.get_str("cluster", "v100"), args.get_usize("n", 4));
+            let prof = analytical::profile(&net, &cl);
+            let plan_path = args.opt_str("plan").ok_or_else(|| {
+                anyhow::anyhow!(
+                    "usage: bapipe replan --plan plan.json --scenario scenario.json \
+                     --model <m> --cluster <c> --n <n> [explore flags]"
+                )
+            })?;
+            let scenario_path = args
+                .opt_str("scenario")
+                .ok_or_else(|| anyhow::anyhow!("replan needs --scenario scenario.json"))?;
+            let incumbent = load_plan(plan_path)?;
+            let text = std::fs::read_to_string(scenario_path)
+                .map_err(|e| anyhow::anyhow!("reading {scenario_path}: {e}"))?;
+            let doc = bapipe::util::json::Json::parse(&text)
+                .map_err(|e| anyhow::anyhow!("parsing {scenario_path}: {e}"))?;
+            let scenario = bapipe::cluster::mutate::Scenario::from_json(&doc)
+                .map_err(|e| anyhow::anyhow!("loading {scenario_path}: {e}"))?;
+            let opts = planner_opts(&args);
+            let run =
+                planner::elastic::run_scenario(&net, &cl, &prof, &incumbent, &scenario, &opts)
+                    .map_err(|e| anyhow::anyhow!("replaying {scenario_path}: {e}"))?;
+            println!("scenario: {} ({} events)", run.scenario, run.steps.len());
+            for (i, step) in run.steps.iter().enumerate() {
+                println!("\n== event {} — {} ==", i + 1, step.event);
+                println!("cluster: {}", step.cluster);
+                for p in &step.provenance {
+                    println!("  {p}");
+                }
+                if let Some(m) = &step.migration {
+                    println!("  {}", m.render());
+                }
+                println!("{}", step.diff.render());
+                println!("{}", step.plan.summary());
+            }
+            if let Some(path) = args.opt_str("emit") {
+                let last = run
+                    .steps
+                    .last()
+                    .ok_or_else(|| anyhow::anyhow!("scenario has no events"))?;
+                let text = last.plan.emit_json()?;
+                std::fs::write(path, &text)?;
+                println!("\nwrote {path} ({} bytes, round-trip verified)", text.len());
+            }
+        }
         "plan" => {
             let sub = args.positional.get(1).map(String::as_str).unwrap_or("");
             match sub {
@@ -146,16 +225,8 @@ fn main() -> bapipe::Result<()> {
                                 "usage: bapipe plan diff <a.json> <b.json>"
                             ),
                         };
-                    let load = |path: &str| -> bapipe::Result<planner::Plan> {
-                        let text = std::fs::read_to_string(path)
-                            .map_err(|e| anyhow::anyhow!("reading {path}: {e}"))?;
-                        let json = bapipe::util::json::Json::parse(&text)
-                            .map_err(|e| anyhow::anyhow!("parsing {path}: {e}"))?;
-                        planner::Plan::from_json(&json)
-                            .map_err(|e| anyhow::anyhow!("loading {path}: {e}"))
-                    };
-                    let a = load(path_a)?;
-                    let b = load(path_b)?;
+                    let a = load_plan(path_a)?;
+                    let b = load_plan(path_b)?;
                     println!("{}", planner::diff::compare(&a, &b).render());
                 }
                 other => anyhow::bail!("unknown plan subcommand `{other}` (expected: diff)"),
@@ -267,7 +338,7 @@ fn main() -> bapipe::Result<()> {
         _ => {
             println!(
                 "bapipe — balanced pipeline parallelism for DNN training\n\n\
-                 usage: bapipe <explore|plan|partition|simulate|train|dp|profile> [--key value ...]\n\
+                 usage: bapipe <explore|replan|plan|partition|simulate|train|dp|profile> [--key value ...]\n\
                  examples:\n\
                    bapipe explore --model vgg16 --cluster v100 --n 4 --batch 32\n\
                    bapipe explore --model resnet50 --cluster fpga-mixed --n 4 --batch 4 \\\n\
@@ -279,6 +350,15 @@ fn main() -> bapipe::Result<()> {
                        --plan-cache plan-cache.json   # 2nd run skips phase A\n\
                    bapipe explore --model gnmt-l64 --cluster v100 --n 8 --pareto --recompute\n\
                        # epoch-time × peak-memory front; 2BW + recomputation axes\n\
+                   bapipe explore --model gnmt-l64 --cluster v100 --n 8 --eval-budget 200\n\
+                       # anytime stop: best incumbent after 200 candidates\n\
+                   bapipe replan --plan plan.json --scenario outage.json \\\n\
+                       --model vgg16 --cluster gpu-mixed --n 16 --batch 8 --jobs 8 \\\n\
+                       --permute --order-search\n\
+                       # warm-started replanning after each scripted cluster event;\n\
+                       # scenario JSON: {\"name\": ..., \"events\": [{\"event\": \"device-loss\",\n\
+                       #   \"device\": 3}, {\"event\": \"link-degrade\", \"link\": 0,\n\
+                       #   \"bandwidth_factor\": 0.5, \"latency_factor\": 2.0}, ...]}\n\
                    bapipe plan diff old-plan.json new-plan.json\n\
                    bapipe simulate --schedule 1f1b-so --n 3 --m 8\n\
                    bapipe train --artifacts artifacts/lm10m-s4-b4 --schedule 1f1b --m 8 --steps 50\n\

@@ -142,6 +142,23 @@ pub fn stage_memory_bytes<C: CostModel>(
     stage_bytes(costs, mm, kind, recompute, n, i, range, micro, m).peak()
 }
 
+/// Bytes of **persistent** training state bound to layers `lo..hi`: one
+/// working copy of the weights plus the optimizer state. This is what a
+/// migration physically moves when a stage boundary shift reassigns the
+/// layers to another device — activations/stashes drain with the
+/// pipeline and gradient accumulators restart at zero, so neither
+/// transfers. `planner::diff` prices replan migration reports with this.
+pub fn movable_state_bytes<C: CostModel>(
+    costs: &C,
+    mm: &MemoryModel,
+    lo: usize,
+    hi: usize,
+) -> u64 {
+    let w = costs.param_bytes(lo, hi);
+    let params = w / costs.dtype_bytes();
+    w + params * mm.optimizer_bytes_per_param
+}
+
 /// Memory of the whole net on one device under data parallelism with
 /// per-device batch `b` (baseline; stores *all* activations of a batch).
 pub fn dp_memory_bytes<C: CostModel>(costs: &C, mm: &MemoryModel, b: f64) -> u64 {
@@ -361,6 +378,26 @@ mod tests {
         let last_full = stage_bytes(&prof, &mm, ScheduleKind::TwoBW, false, n, n - 1, r.clone(), micro, m);
         let last_rc = stage_bytes(&prof, &mm, ScheduleKind::TwoBW, true, n, n - 1, r, micro, m);
         assert!(last_rc.peak() >= last_full.peak(), "depth-1 stash: workspace cancels the saving");
+    }
+
+    #[test]
+    fn movable_state_is_weights_plus_optimizer() {
+        let net = zoo::vgg16(224);
+        let cl = presets::v100_cluster(2);
+        let prof = analytical::profile(&net, &cl);
+        let mm = MemoryModel::default();
+        let l = net.len();
+        let w = prof.param_bytes(0, l);
+        let params = w / prof.dtype_bytes();
+        assert_eq!(movable_state_bytes(&prof, &mm, 0, l), w + params * 8);
+        // additive over a split
+        let mid = l / 2;
+        assert_eq!(
+            movable_state_bytes(&prof, &mm, 0, mid) + movable_state_bytes(&prof, &mm, mid, l),
+            movable_state_bytes(&prof, &mm, 0, l)
+        );
+        // empty range moves nothing
+        assert_eq!(movable_state_bytes(&prof, &mm, 3, 3), 0);
     }
 
     #[test]

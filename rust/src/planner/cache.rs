@@ -252,12 +252,27 @@ impl EvalCache {
     /// `(model, cluster)` scenario and `device_orders` pins the meaning
     /// of the `perm` indices.
     pub fn to_json(&self, fingerprint: &str, device_orders: &[Vec<usize>]) -> Json {
+        self.to_json_with_views(fingerprint, device_orders, &[])
+    }
+
+    /// [`EvalCache::to_json`] with per-view fingerprints embedded
+    /// (`view_fingerprints[p]` = [`super::store::view_fingerprint`] of
+    /// device order `p`). The key is emitted only when non-empty, so
+    /// documents saved without views stay byte-identical to the v1
+    /// format. Embedded views are what lets [`EvalCache::salvage_json`]
+    /// reuse individual permutations of an otherwise-stale cache.
+    pub fn to_json_with_views(
+        &self,
+        fingerprint: &str,
+        device_orders: &[Vec<usize>],
+        view_fingerprints: &[String],
+    ) -> Json {
         let mut seeds: Vec<(&SeedKey, &Result<BalanceSeed, String>)> = self.seeds.iter().collect();
         seeds.sort_by_key(|(k, _)| (k.perm, k.micro_bits));
         let mut plans: Vec<(&PlanKey, &Result<PartitionPlan, String>)> =
             self.plans.iter().collect();
         plans.sort_by_key(|(k, _)| (k.seed.perm, k.seed.micro_bits, k.memory_class, k.m, k.recompute));
-        obj(vec![
+        let mut pairs = vec![
             ("format", Json::from(PLAN_CACHE_FORMAT)),
             ("fingerprint", Json::from(fingerprint)),
             (
@@ -269,15 +284,22 @@ impl EvalCache {
                         .collect(),
                 ),
             ),
-            (
-                "seeds",
-                Json::Arr(seeds.into_iter().map(|(k, r)| seed_entry_to_json(k, r)).collect()),
-            ),
-            (
-                "plans",
-                Json::Arr(plans.into_iter().map(|(k, r)| plan_entry_to_json(k, r)).collect()),
-            ),
-        ])
+        ];
+        if !view_fingerprints.is_empty() {
+            pairs.push((
+                "view_fingerprints",
+                Json::Arr(view_fingerprints.iter().map(|f| Json::from(f.clone())).collect()),
+            ));
+        }
+        pairs.push((
+            "seeds",
+            Json::Arr(seeds.into_iter().map(|(k, r)| seed_entry_to_json(k, r)).collect()),
+        ));
+        pairs.push((
+            "plans",
+            Json::Arr(plans.into_iter().map(|(k, r)| plan_entry_to_json(k, r)).collect()),
+        ));
+        obj(pairs)
     }
 
     /// Inverse of [`EvalCache::to_json`]. Rejects a document whose
@@ -323,6 +345,127 @@ impl EvalCache {
         }
         Ok(cache)
     }
+
+    /// Re-key this cache's entries from one view namespace into another:
+    /// `cached_views[p]` / `current_views[q]` are per-view fingerprints
+    /// ([`super::store::view_fingerprint`]), and every entry whose old
+    /// `perm` has a fingerprint-identical current view is kept under the
+    /// current index. Entries whose view no longer exists are dropped;
+    /// when two cached views match the same current view the
+    /// lowest-old-perm entries win (deterministic). This is how the
+    /// elastic replanner carries partition work across a cluster mutation
+    /// instead of rejecting the whole cache, and how
+    /// [`EvalCache::salvage_json`] partially restores a stale document.
+    /// Hit/miss statistics restart at zero.
+    pub fn salvage(
+        &self,
+        cached_views: &[String],
+        current_views: &[String],
+    ) -> (EvalCache, SalvageStats) {
+        use std::collections::hash_map::Entry;
+        let map: Vec<Option<usize>> = cached_views
+            .iter()
+            .map(|fp| current_views.iter().position(|c| c == fp))
+            .collect();
+        let mut out = EvalCache::new();
+        let mut stats = SalvageStats {
+            views_matched: current_views
+                .iter()
+                .filter(|c| cached_views.contains(c))
+                .count(),
+            views_total: current_views.len(),
+            seeds_reused: 0,
+            plans_reused: 0,
+            entries_dropped: 0,
+        };
+        // deterministic insertion order: sorted old keys, first wins
+        let mut seeds: Vec<(&SeedKey, &Result<BalanceSeed, String>)> = self.seeds.iter().collect();
+        seeds.sort_by_key(|(k, _)| (k.perm, k.micro_bits));
+        for (k, v) in seeds {
+            match map.get(k.perm).copied().flatten() {
+                Some(np) => match out.seeds.entry(SeedKey { perm: np, ..*k }) {
+                    Entry::Vacant(e) => {
+                        e.insert(v.clone());
+                        stats.seeds_reused += 1;
+                    }
+                    Entry::Occupied(_) => stats.entries_dropped += 1,
+                },
+                None => stats.entries_dropped += 1,
+            }
+        }
+        let mut plans: Vec<(&PlanKey, &Result<PartitionPlan, String>)> =
+            self.plans.iter().collect();
+        plans.sort_by_key(|(k, _)| (k.seed.perm, k.seed.micro_bits, k.memory_class, k.m, k.recompute));
+        for (k, v) in plans {
+            match map.get(k.seed.perm).copied().flatten() {
+                Some(np) => {
+                    let nk = PlanKey { seed: SeedKey { perm: np, ..k.seed }, ..*k };
+                    match out.plans.entry(nk) {
+                        Entry::Vacant(e) => {
+                            e.insert(v.clone());
+                            stats.plans_reused += 1;
+                        }
+                        Entry::Occupied(_) => stats.entries_dropped += 1,
+                    }
+                }
+                None => stats.entries_dropped += 1,
+            }
+        }
+        (out, stats)
+    }
+
+    /// Partial restore of a cache document that failed the all-or-nothing
+    /// [`EvalCache::from_json`] match: entries are re-keyed per view via
+    /// [`EvalCache::salvage`], using the `view_fingerprints` the document
+    /// was saved with ([`EvalCache::to_json_with_views`]). Errors when the
+    /// document has no embedded views (pre-view-fingerprint caches stay
+    /// all-or-nothing) or is structurally unreadable.
+    pub fn salvage_json(
+        j: &Json,
+        current_views: &[String],
+    ) -> crate::Result<(EvalCache, SalvageStats)> {
+        let format = report::req_str(j, "format")?;
+        anyhow::ensure!(format == PLAN_CACHE_FORMAT, "unknown plan-cache format `{format}`");
+        let cached_views = match j.get("view_fingerprints") {
+            None => anyhow::bail!("cache document carries no per-view fingerprints"),
+            Some(v) => v
+                .as_arr()
+                .ok_or_else(|| anyhow::anyhow!("`view_fingerprints` is not an array"))?
+                .iter()
+                .map(|f| {
+                    f.as_str()
+                        .map(str::to_string)
+                        .ok_or_else(|| anyhow::anyhow!("bad `view_fingerprints` entry"))
+                })
+                .collect::<crate::Result<Vec<String>>>()?,
+        };
+        let mut full = EvalCache::new();
+        for e in j.req_arr("seeds").map_err(|e| anyhow::anyhow!("{e}"))? {
+            let (key, res) = seed_entry_from_json(e)?;
+            full.seeds.insert(key, res);
+        }
+        for e in j.req_arr("plans").map_err(|e| anyhow::anyhow!("{e}"))? {
+            let (key, res) = plan_entry_from_json(e)?;
+            full.plans.insert(key, res);
+        }
+        Ok(full.salvage(&cached_views, current_views))
+    }
+}
+
+/// What a per-view cache salvage kept and dropped
+/// ([`EvalCache::salvage`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SalvageStats {
+    /// Current views that found a fingerprint-identical cached view.
+    pub views_matched: usize,
+    /// Total current views.
+    pub views_total: usize,
+    /// Balance-seed entries carried over.
+    pub seeds_reused: usize,
+    /// Finished-partition entries carried over.
+    pub plans_reused: usize,
+    /// Entries whose view vanished (or collided) and were dropped.
+    pub entries_dropped: usize,
 }
 
 /// On-disk format tag of the persisted plan cache.
@@ -651,6 +794,109 @@ mod tests {
             EvalCache::from_json(&Json::parse(&text).unwrap(), "fp", &orders).unwrap();
         assert!(restored.partition(&net, &cl, &prof, &c).is_err());
         assert_eq!((restored.hits, restored.misses), (1, 0), "cached failure must be a hit");
+    }
+
+    #[test]
+    fn salvage_rekeys_surviving_views_and_drops_the_rest() {
+        let net = zoo::vgg16(224);
+        let cl = presets::gpu_mixed_cluster(2);
+        let prof = analytical::profile(&net, &cl);
+        let orders = [vec![0usize, 1], vec![1, 0]];
+        let fps: Vec<String> = orders
+            .iter()
+            .map(|o| crate::planner::store::view_fingerprint(&net, &cl, &prof, o))
+            .collect();
+        assert_ne!(fps[0], fps[1], "heterogeneous swap must change the view fingerprint");
+        let mut cache = EvalCache::new();
+        for (perm, order) in orders.iter().enumerate() {
+            let (vcl, vprof) = crate::planner::space::permuted_view(&cl, &prof, order);
+            cache
+                .partition(
+                    &net,
+                    &vcl,
+                    &vprof,
+                    &Candidate {
+                        kind: ScheduleKind::OneFOneBSno,
+                        m: 16,
+                        micro: 8.0,
+                        perm,
+                        recompute: false,
+                    },
+                )
+                .unwrap();
+        }
+        // The next run discovers only the swapped order, now at index 0:
+        // its entries must be re-keyed 1 → 0, the identity view's dropped.
+        let current = vec![fps[1].clone()];
+        let (mut salvaged, st) = cache.salvage(&fps, &current);
+        assert_eq!(st.views_matched, 1);
+        assert_eq!(st.views_total, 1);
+        assert_eq!(st.seeds_reused, 1);
+        assert_eq!(st.plans_reused, 1);
+        assert_eq!(st.entries_dropped, 2);
+        let (vcl, vprof) = crate::planner::space::permuted_view(&cl, &prof, &[1, 0]);
+        let via = salvaged
+            .partition(
+                &net,
+                &vcl,
+                &vprof,
+                &Candidate {
+                    kind: ScheduleKind::OneFOneBSno,
+                    m: 16,
+                    micro: 8.0,
+                    perm: 0,
+                    recompute: false,
+                },
+            )
+            .unwrap();
+        assert_eq!((salvaged.hits, salvaged.misses), (1, 0), "salvaged entry must answer");
+        // bit-identical to a cold computation on the same view
+        let mut cold = EvalCache::new();
+        let direct = cold
+            .partition(
+                &net,
+                &vcl,
+                &vprof,
+                &Candidate {
+                    kind: ScheduleKind::OneFOneBSno,
+                    m: 16,
+                    micro: 8.0,
+                    perm: 0,
+                    recompute: false,
+                },
+            )
+            .unwrap();
+        assert_eq!(via.partition, direct.partition);
+
+        // the same salvage through a serialized document
+        let doc = cache.to_json_with_views("fp", &orders, &fps);
+        let (mut from_doc, st2) =
+            EvalCache::salvage_json(&Json::parse(&doc.to_string_compact()).unwrap(), &current)
+                .unwrap();
+        assert_eq!(st2, st);
+        assert!(from_doc
+            .partition(
+                &net,
+                &vcl,
+                &vprof,
+                &Candidate {
+                    kind: ScheduleKind::OneFOneBSno,
+                    m: 16,
+                    micro: 8.0,
+                    perm: 0,
+                    recompute: false,
+                },
+            )
+            .is_ok());
+        assert_eq!((from_doc.hits, from_doc.misses), (1, 0));
+        // documents without embedded views stay all-or-nothing
+        let plain = cache.to_json("fp", &orders);
+        assert!(EvalCache::salvage_json(&plain, &current).is_err());
+        // and embedding views never disturbs the plain document bytes
+        assert_eq!(
+            cache.to_json_with_views("fp", &orders, &[]).to_string_pretty(),
+            plain.to_string_pretty()
+        );
     }
 
     #[test]

@@ -1,14 +1,27 @@
 //! Comparison of two serialized `plan.json` artifacts — the typed model
-//! behind `bapipe plan diff <a.json> <b.json>`.
+//! behind `bapipe plan diff <a.json> <b.json>` — plus migration pricing
+//! for the elastic replanner.
 //!
 //! The diff answers the three questions an operator has when a plan
 //! artifact changes between runs (new profile, new cluster, new planner
 //! version): did the *winner* change, by how much did the predicted
-//! times move, and which stage boundaries shifted where.
+//! times move, and which stage boundaries shifted where. Plans need not
+//! have the same device or stage counts — the post-device-loss replan
+//! case — in which case boundaries are compared over the common prefix
+//! (aligned by boundary index) and the device-count change plus the
+//! added/removed device slots are reported explicitly.
+//!
+//! [`migration`] prices what a plan change physically costs: every layer
+//! whose device assignment changes must move its persistent state
+//! (weights + optimizer, [`crate::partition::memfit::movable_state_bytes`])
+//! over the wire.
 
 use super::report::{Choice, Plan};
+use crate::partition::memfit::{movable_state_bytes, MemoryModel};
+use crate::profile::range::CostModel;
 
-/// One moved stage boundary between two same-depth partitions.
+/// One moved stage boundary between two partitions (same boundary index
+/// on both sides).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct BoundaryMove {
     /// Index into `Partition::bounds` (0 = start of stage 0).
@@ -35,14 +48,26 @@ pub struct PlanDiff {
     pub epoch_delta: f64,
     /// `B / A` epoch-time ratio.
     pub epoch_ratio: f64,
-    /// Boundaries that moved, when both sides are pipelines of the same
-    /// stage count.
+    /// Boundaries that moved, when both sides are pipelines. With equal
+    /// stage counts every boundary is compared; with different counts
+    /// (post-device-loss replans) the common prefix is, and
+    /// `partition_note` records the count change.
     pub boundary_moves: Vec<BoundaryMove>,
-    /// Why boundaries were not compared stage-by-stage (mode or stage
-    /// count mismatch), when they were not.
+    /// Why boundaries were not (fully) compared stage-by-stage: mode
+    /// mismatch, or a stage-count change limiting the comparison to the
+    /// common prefix.
     pub partition_note: Option<String>,
     /// Did the winning device ordering change?
     pub device_order_changed: bool,
+    /// Device count in plan A (`device_order` length).
+    pub devices_a: usize,
+    /// Device count in plan B.
+    pub devices_b: usize,
+    /// Device slots present in B's order but not in A's (joins, by slot
+    /// id as the plan numbers them).
+    pub added_devices: Vec<usize>,
+    /// Device slots present in A's order but not in B's (losses).
+    pub removed_devices: Vec<usize>,
 }
 
 /// One-line human description of a plan's choice.
@@ -58,21 +83,26 @@ fn describe_choice(choice: &Choice) -> String {
     }
 }
 
-/// Compare two plans (A → B).
+/// Compare two plans (A → B). Never panics on mismatched device or stage
+/// counts — the elastic replanner diffs across losses and joins.
 pub fn compare(a: &Plan, b: &Plan) -> PlanDiff {
     let mut boundary_moves = Vec::new();
     let mut partition_note = None;
     match (&a.choice, &b.choice) {
         (Choice::Pipeline { partition: pa, .. }, Choice::Pipeline { partition: pb, .. }) => {
-            if pa.n_stages() == pb.n_stages() {
-                for (i, (&la, &lb)) in pa.bounds.iter().zip(&pb.bounds).enumerate() {
-                    if la != lb {
-                        boundary_moves.push(BoundaryMove { boundary: i, from: la, to: lb });
-                    }
+            let common = pa.bounds.len().min(pb.bounds.len());
+            for i in 0..common {
+                if pa.bounds[i] != pb.bounds[i] {
+                    boundary_moves.push(BoundaryMove {
+                        boundary: i,
+                        from: pa.bounds[i],
+                        to: pb.bounds[i],
+                    });
                 }
-            } else {
+            }
+            if pa.n_stages() != pb.n_stages() {
                 partition_note = Some(format!(
-                    "stage counts differ ({} vs {}); boundaries not comparable",
+                    "stage counts differ ({} vs {}); boundaries compared over the common prefix",
                     pa.n_stages(),
                     pb.n_stages()
                 ));
@@ -84,6 +114,10 @@ pub fn compare(a: &Plan, b: &Plan) -> PlanDiff {
                 Some("parallelization modes differ; boundaries not comparable".to_string())
         }
     }
+    let added_devices: Vec<usize> =
+        b.device_order.iter().filter(|d| !a.device_order.contains(d)).copied().collect();
+    let removed_devices: Vec<usize> =
+        a.device_order.iter().filter(|d| !b.device_order.contains(d)).copied().collect();
     PlanDiff {
         choice_a: describe_choice(&a.choice),
         choice_b: describe_choice(&b.choice),
@@ -94,6 +128,10 @@ pub fn compare(a: &Plan, b: &Plan) -> PlanDiff {
         boundary_moves,
         partition_note,
         device_order_changed: a.device_order != b.device_order,
+        devices_a: a.device_order.len(),
+        devices_b: b.device_order.len(),
+        added_devices,
+        removed_devices,
     }
 }
 
@@ -113,9 +151,12 @@ impl PlanDiff {
             ),
         ];
         match (&self.partition_note, self.boundary_moves.is_empty()) {
-            (Some(note), _) => lines.push(format!("boundaries: {note}")),
+            (Some(note), true) => lines.push(format!("boundaries: {note}")),
             (None, true) => lines.push("boundaries: unchanged".to_string()),
-            (None, false) => {
+            (note, false) => {
+                if let Some(note) = note {
+                    lines.push(format!("boundaries: {note}"));
+                }
                 for mv in &self.boundary_moves {
                     lines.push(format!(
                         "boundary {}: layer {} -> {}",
@@ -124,11 +165,82 @@ impl PlanDiff {
                 }
             }
         }
+        if self.devices_a != self.devices_b {
+            lines.push(format!("devices: {} -> {}", self.devices_a, self.devices_b));
+        }
+        if !self.removed_devices.is_empty() {
+            lines.push(format!("removed devices: {:?}", self.removed_devices));
+        }
+        if !self.added_devices.is_empty() {
+            lines.push(format!("added devices: {:?}", self.added_devices));
+        }
         if self.device_order_changed {
             lines.push("device order: CHANGED".to_string());
         }
         lines.join("\n")
     }
+}
+
+/// What a plan change physically costs: layers whose device assignment
+/// changed, priced as the bytes of persistent state (weights + optimizer)
+/// that must cross the wire before training can resume.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct MigrationReport {
+    /// Total layers in the model.
+    pub n_layers: usize,
+    /// Layers whose physical device changed (including layers restored
+    /// onto a new device after a loss).
+    pub moved_layers: usize,
+    /// Weights + optimizer-state bytes those layers carry.
+    pub bytes: u64,
+}
+
+impl MigrationReport {
+    /// One-line human summary.
+    pub fn render(&self) -> String {
+        format!(
+            "migration: {}/{} layers move, {} of weights+optimizer state",
+            self.moved_layers,
+            self.n_layers,
+            crate::util::fmt_bytes(self.bytes)
+        )
+    }
+}
+
+/// Price a migration between two per-layer *physical* device assignments
+/// (`assign[layer] = Some(physical_device)`, `None` when the layer's
+/// former host is gone — a loss; its state must be restored onto the new
+/// host from elsewhere, which still costs the transfer). Both maps must
+/// cover the same model; the caller is responsible for expressing device
+/// identity in one shared namespace (the elastic replanner maps post-event
+/// slots back through the mutation lineage).
+pub fn migration<C: CostModel>(
+    costs: &C,
+    mm: &MemoryModel,
+    assign_a: &[Option<usize>],
+    assign_b: &[Option<usize>],
+) -> MigrationReport {
+    assert_eq!(
+        assign_a.len(),
+        assign_b.len(),
+        "migration maps must cover the same layer count"
+    );
+    let mut moved_layers = 0usize;
+    let mut bytes = 0u64;
+    for l in 0..assign_a.len() {
+        let moved = match (assign_a[l], assign_b[l]) {
+            (Some(da), Some(db)) => da != db,
+            // former host lost: state restored onto the new host
+            (None, Some(_)) => true,
+            // layer not placed in B (shouldn't happen for a full plan)
+            (_, None) => false,
+        };
+        if moved {
+            moved_layers += 1;
+            bytes += movable_state_bytes(costs, mm, l, l + 1);
+        }
+    }
+    MigrationReport { n_layers: assign_a.len(), moved_layers, bytes }
 }
 
 #[cfg(test)]
@@ -190,8 +302,11 @@ mod tests {
         assert!(d.boundary_moves.is_empty());
         assert!(d.partition_note.is_none());
         assert!(!d.device_order_changed);
+        assert_eq!((d.devices_a, d.devices_b), (2, 2));
+        assert!(d.added_devices.is_empty() && d.removed_devices.is_empty());
         assert!(d.render().contains("winner: identical"));
         assert!(d.render().contains("boundaries: unchanged"));
+        assert!(!d.render().contains("devices:"));
     }
 
     #[test]
@@ -223,12 +338,47 @@ mod tests {
     }
 
     #[test]
-    fn stage_count_mismatch_is_noted() {
+    fn stage_count_mismatch_compares_common_prefix() {
+        // The post-device-loss case: 2 stages vs 3 stages. Boundaries are
+        // compared over the common prefix (indices 0..=2) instead of
+        // being dropped, and the count change is noted.
         let a = pipeline_plan(16, vec![0, 5, 12], 64.0);
         let b = pipeline_plan(16, vec![0, 4, 8, 12], 64.0);
         let d = compare(&a, &b);
-        assert!(d.boundary_moves.is_empty());
-        assert!(d.partition_note.as_deref().unwrap().contains("stage counts differ"));
+        assert_eq!(
+            d.boundary_moves,
+            vec![
+                BoundaryMove { boundary: 1, from: 5, to: 4 },
+                BoundaryMove { boundary: 2, from: 12, to: 8 },
+            ]
+        );
+        let note = d.partition_note.as_deref().unwrap();
+        assert!(note.contains("stage counts differ (2 vs 3)"), "{note}");
+        let text = d.render();
+        assert!(text.contains("stage counts differ"), "{text}");
+        assert!(text.contains("boundary 1: layer 5 -> 4"), "{text}");
+    }
+
+    #[test]
+    fn added_and_removed_devices_rendered() {
+        let a = pipeline_plan(16, vec![0, 5, 12], 64.0); // order [0, 1]
+        let mut b = pipeline_plan(16, vec![0, 12], 70.0);
+        b.device_order = vec![0, 2]; // slot 1 lost, slot 2 joined
+        let d = compare(&a, &b);
+        assert_eq!((d.devices_a, d.devices_b), (2, 2));
+        assert_eq!(d.removed_devices, vec![1]);
+        assert_eq!(d.added_devices, vec![2]);
+        assert!(d.device_order_changed);
+        let text = d.render();
+        assert!(text.contains("removed devices: [1]"), "{text}");
+        assert!(text.contains("added devices: [2]"), "{text}");
+
+        let mut c = pipeline_plan(16, vec![0, 12], 70.0);
+        c.device_order = vec![0];
+        let d2 = compare(&a, &c);
+        assert_eq!((d2.devices_a, d2.devices_b), (2, 1));
+        assert_eq!(d2.removed_devices, vec![1]);
+        assert!(d2.render().contains("devices: 2 -> 1"));
     }
 
     #[test]
@@ -239,5 +389,35 @@ mod tests {
         let d = compare(&a, &b);
         assert!(d.device_order_changed);
         assert!(d.render().contains("device order: CHANGED"));
+    }
+
+    #[test]
+    fn migration_prices_moved_layers_only() {
+        use crate::cluster::presets;
+        use crate::model::zoo;
+        use crate::profile::analytical;
+        let net = zoo::vgg16(224);
+        let cl = presets::v100_cluster(2);
+        let prof = analytical::profile(&net, &cl);
+        let mm = MemoryModel::default();
+        let l = net.len();
+        // identical assignment → nothing moves
+        let same: Vec<Option<usize>> = (0..l).map(|i| Some(if i < l / 2 { 0 } else { 1 })).collect();
+        let r = migration(&prof, &mm, &same, &same);
+        assert_eq!(r.moved_layers, 0);
+        assert_eq!(r.bytes, 0);
+        // boundary shifts by one layer: exactly that layer's state moves
+        let mut shifted = same.clone();
+        shifted[l / 2] = Some(0);
+        let r2 = migration(&prof, &mm, &same, &shifted);
+        assert_eq!(r2.moved_layers, 1);
+        assert_eq!(r2.bytes, movable_state_bytes(&prof, &mm, l / 2, l / 2 + 1));
+        assert!(r2.render().contains("1/"), "{}", r2.render());
+        // a lost host (None in A) still costs the restore transfer
+        let mut lost = same.clone();
+        lost[0] = None;
+        let r3 = migration(&prof, &mm, &lost, &same);
+        assert_eq!(r3.moved_layers, 1);
+        assert_eq!(r3.bytes, movable_state_bytes(&prof, &mm, 0, 1));
     }
 }

@@ -1,0 +1,580 @@
+//! Elastic clusters: failure-aware replanning with end-to-end warm
+//! starts (`bapipe replan`).
+//!
+//! Training clusters change under a running job — a device is preempted,
+//! a link degrades, a straggler appears, a repaired host rejoins. BaPipe's
+//! exploration is cheap enough to re-run from scratch, but a replan is
+//! latency-critical (the pipeline is stalled while it runs) and the
+//! incumbent plan is a *very* strong prior: most of the mutated cluster
+//! is the old cluster. This module turns one `(incumbent plan, cluster
+//! event)` pair into a warm-started exploration:
+//!
+//! 1. **Incumbent re-evaluation** — the cached plan's candidate is
+//!    evaluated *on the mutated cluster* first (one DES run). Its fresh
+//!    epoch time — never the stale pre-mutation number — seeds the
+//!    branch-and-bound, so provably-worse candidates are pruned from the
+//!    first batch onward.
+//! 2. **Superset search space** — the warm space is the cold space
+//!    ([`SearchSpace::bapipe`] on the mutated cluster) plus the
+//!    incumbent's M, schedule kind, recompute setting and device order
+//!    (restricted to the surviving devices via [`surviving_order`]);
+//!    past the 8-device wall the device-order axis comes from
+//!    [`orders::discover_seeded`], which appends the incumbent-seeded
+//!    climb after the unseeded prefix. Warm ⊇ cold by construction, so
+//!    the warm plan is **never worse** than a cold exploration of the
+//!    same mutated cluster — the warm win is latency, not quality.
+//! 3. **Per-view cache salvage** — every [`EvalCache`] view whose
+//!    device-name-id sequence survives the mutation keeps its balance
+//!    seeds and finished partitions ([`EvalCache::salvage`] keyed by
+//!    [`store::view_fingerprint`]), instead of the old all-or-nothing
+//!    cache rejection.
+//! 4. **Graceful degradation** — if the warm space holds no feasible
+//!    pipeline (a loss can push every partition past memfit), the
+//!    explorer automatically widens to the activation-recomputation and
+//!    2BW axes before giving up; data parallelism is the last resort.
+//!    Every widening leaves a provenance note.
+//!
+//! Each replan prices its own disruption: stage-boundary moves become a
+//! [`MigrationReport`] — bytes of weights + optimizer state that must
+//! move between physical devices
+//! ([`crate::partition::memfit::movable_state_bytes`]) — next to a
+//! structured [`PlanDiff`]. [`run_scenario`] replays a whole
+//! [`Scenario`] (a deterministic [`ClusterEvent`] stream parsed from
+//! JSON), replanning after every event and threading the salvaged cache
+//! through, which is the `bapipe replan` CLI path and the
+//! warm-vs-cold replan-latency bench.
+
+use super::diff::{self, MigrationReport, PlanDiff};
+use super::orders;
+use super::report::{Choice, Plan};
+use super::space::{self, Candidate, SearchSpace};
+use super::store;
+use super::{EvalCache, Options};
+use crate::cluster::mutate::{self, Scenario};
+use crate::cluster::Cluster;
+use crate::model::Network;
+use crate::partition::memfit::MemoryModel;
+use crate::profile::Profile;
+use crate::schedule::ScheduleKind;
+use crate::sim::engine::{epoch_from_makespan, simulate};
+use std::collections::HashSet;
+
+#[cfg(doc)]
+use crate::cluster::mutate::ClusterEvent;
+
+/// One warm replan: the new plan plus everything the next replan (and the
+/// report) needs.
+pub struct Replan {
+    /// The plan selected on the mutated cluster.
+    pub plan: Plan,
+    /// Warm-start provenance: what was seeded, salvaged, widened or given
+    /// up on — one line per decision, never silent.
+    pub provenance: Vec<String>,
+    /// [`store::view_fingerprint`] of every device order the exploration
+    /// ran over — the salvage key carrying this replan's cache into the
+    /// next event.
+    pub view_fingerprints: Vec<String>,
+    /// The exploration's evaluation cache (salvaged prior entries plus
+    /// this replan's work).
+    pub cache: EvalCache,
+}
+
+/// One event of a scenario replay: the mutation, the replanned result and
+/// the migration price of switching plans.
+pub struct ReplanStep {
+    /// The event, as [`crate::cluster::mutate::ClusterEvent::describe`]s it.
+    pub event: String,
+    /// The mutated cluster ([`Cluster::describe`]).
+    pub cluster: String,
+    /// Warm-start provenance for this event (mutation note first).
+    pub provenance: Vec<String>,
+    /// Weights + optimizer state that must move between physical devices
+    /// to switch from the previous plan to this one. `None` when either
+    /// side is data-parallel (every device holds the full model — there
+    /// is no stage state to migrate).
+    pub migration: Option<MigrationReport>,
+    /// Structured previous-vs-new plan comparison.
+    pub diff: PlanDiff,
+    /// The plan selected after this event.
+    pub plan: Plan,
+}
+
+/// A full scenario replay: one [`ReplanStep`] per event, in order.
+pub struct ReplanRun {
+    /// Scenario name (from the scenario JSON).
+    pub scenario: String,
+    /// Per-event results.
+    pub steps: Vec<ReplanStep>,
+}
+
+impl ReplanRun {
+    /// Human-readable replay transcript.
+    pub fn render(&self) -> String {
+        let mut lines = vec![format!("scenario: {}", self.scenario)];
+        for (i, s) in self.steps.iter().enumerate() {
+            lines.push(format!("event {}: {}", i + 1, s.event));
+            lines.push(format!("  cluster: {}", s.cluster));
+            for p in &s.provenance {
+                lines.push(format!("  {p}"));
+            }
+            if let Some(m) = &s.migration {
+                lines.push(format!("  {}", m.render()));
+            }
+            lines.push(format!("  plan: {}", s.plan.summary()));
+        }
+        lines.join("\n")
+    }
+}
+
+/// The incumbent device order carried into the mutated cluster: surviving
+/// devices keep their old relative position (each old index mapped
+/// through the inverted `lineage`, which reads
+/// `lineage[new_idx] = Some(old_idx)`), and devices with no pre-mutation
+/// lineage (joins) are appended in ascending index order. Always a
+/// permutation of `0..n_new`.
+pub fn surviving_order(order: &[usize], lineage: &[Option<usize>], n_new: usize) -> Vec<usize> {
+    let inv = invert_lineage(lineage, order.len());
+    let mut out: Vec<usize> =
+        order.iter().filter_map(|&i| inv.get(i).copied().flatten()).collect();
+    let present: HashSet<usize> = out.iter().copied().collect();
+    for d in 0..n_new {
+        if !present.contains(&d) {
+            out.push(d);
+        }
+    }
+    out
+}
+
+/// Invert a [`Mutation`](mutate::Mutation) lineage
+/// (`lineage[new] = Some(old)`) into `inv[old] = Some(new)`; lost
+/// devices stay `None`.
+fn invert_lineage(lineage: &[Option<usize>], n_old: usize) -> Vec<Option<usize>> {
+    let mut inv = vec![None; n_old];
+    for (new, old) in lineage.iter().enumerate() {
+        if let Some(o) = *old {
+            if o < n_old {
+                inv[o] = Some(new);
+            }
+        }
+    }
+    inv
+}
+
+/// Per-layer physical device assignment of a plan: layer `l` lives on the
+/// device hosting its stage (`device_order[stage_of(l)]`). `None` for a
+/// data-parallel plan — every device holds every layer, so there is no
+/// per-layer placement to diff.
+fn assign_map(plan: &Plan, n_layers: usize) -> Option<Vec<Option<usize>>> {
+    match &plan.choice {
+        Choice::Pipeline { partition, .. } => Some(
+            (0..n_layers).map(|l| Some(plan.device_order[partition.stage_of(l)])).collect(),
+        ),
+        Choice::DataParallel => None,
+    }
+}
+
+/// Index of `order`'s device-name sequence in the space's order axis
+/// (permuting identical boards changes nothing, so lookup is by name-id
+/// key, the same equivalence the enumeration dedups on).
+fn order_index(space: &SearchSpace, cluster: &Cluster, order: &[usize]) -> usize {
+    let ids = cluster.name_ids();
+    let key = |o: &[usize]| o.iter().map(|&i| ids[i]).collect::<Vec<usize>>();
+    space
+        .device_orders
+        .iter()
+        .position(|o| key(o) == key(order))
+        .expect("the warm space always contains the incumbent order")
+}
+
+/// The warm search space: the cold space of the mutated cluster widened —
+/// purely additively — with the incumbent's device order, M, schedule
+/// kind and recompute setting, so the incumbent candidate is always
+/// evaluable and warm quality is never below cold quality.
+fn warm_space(
+    net: &Network,
+    cluster: &Cluster,
+    profile: &Profile,
+    opts: &Options,
+    incumbent_order: &[usize],
+    incumbent: &Plan,
+    provenance: &mut Vec<String>,
+) -> SearchSpace {
+    let n = cluster.len();
+    let discovery_path =
+        opts.permute_devices && opts.order_search && n > 8 && !cluster.is_homogeneous();
+    let mut space = if discovery_path {
+        // The order axis comes from the *seeded* neighbourhood search:
+        // unseeded prefix first (cold-space superset guarantee), the
+        // incumbent seed and its climb appended. The rest of the space is
+        // built with the permutation axis off so the unseeded discovery
+        // does not run a second time.
+        let d = orders::discover_seeded(net, cluster, profile, opts, Some(incumbent_order));
+        let mut s = SearchSpace::bapipe(
+            net,
+            cluster,
+            profile,
+            &Options { permute_devices: false, order_search: false, ..opts.clone() },
+        );
+        s.device_orders = d.orders;
+        s.order_provenance = d.provenance;
+        s.notes.extend(d.notes);
+        s
+    } else {
+        SearchSpace::bapipe(net, cluster, profile, opts)
+    };
+
+    let ids = cluster.name_ids();
+    let key = |o: &[usize]| o.iter().map(|&i| ids[i]).collect::<Vec<usize>>();
+    if !space.device_orders.iter().any(|o| key(o) == key(incumbent_order)) {
+        if !space.order_provenance.is_empty() {
+            space.order_provenance.push("incumbent device order (elastic warm start)".to_string());
+        }
+        space.device_orders.push(incumbent_order.to_vec());
+        space.notes.push(
+            "elastic warm start: incumbent device order appended to the search axis".to_string(),
+        );
+        provenance.push("warm start: incumbent device order appended to the order axis".to_string());
+    }
+
+    if let Choice::Pipeline { kind, m, recompute, .. } = &incumbent.choice {
+        if !space.m_grid.contains(m) {
+            space.m_grid.push(*m);
+            space.notes.push(format!("elastic warm start: incumbent M={m} appended to the grid"));
+            provenance.push(format!("warm start: incumbent M={m} appended to the M grid"));
+        }
+        if !space.kinds.contains(kind) && !space.ineligible.contains(kind) {
+            space.kinds.push(*kind);
+            space.notes.push(format!(
+                "elastic warm start: incumbent kind {} appended to the schedule axis",
+                kind.label()
+            ));
+            provenance
+                .push(format!("warm start: incumbent kind {} appended", kind.label()));
+        }
+        if *recompute && !space.recompute_options.contains(&true) {
+            space.recompute_options.push(true);
+            space.notes.push(
+                "elastic warm start: incumbent uses recomputation — variants enumerated"
+                    .to_string(),
+            );
+        }
+    }
+    space
+}
+
+/// One warm replan against an already-mutated `(cluster, profile)`.
+///
+/// `incumbent_order` is the incumbent's device order expressed in the
+/// *mutated* cluster's indices ([`surviving_order`] maps it through a
+/// mutation's lineage). `prior` carries the previous exploration's cache
+/// and its per-view fingerprints; views whose name-id sequence survived
+/// the mutation keep their entries ([`EvalCache::salvage`]). The returned
+/// plan is never worse than a cold [`super::explore`] of the same mutated
+/// cluster with the same `opts` (the warm space is a superset — see
+/// module docs), and a degradation to wider axes or data parallelism is
+/// recorded in the provenance.
+pub fn replan(
+    net: &Network,
+    cluster: &Cluster,
+    profile: &Profile,
+    incumbent: &Plan,
+    incumbent_order: &[usize],
+    opts: &Options,
+    prior: Option<(&EvalCache, &[String])>,
+) -> Replan {
+    let mut provenance = Vec::new();
+    let space = warm_space(net, cluster, profile, opts, incumbent_order, incumbent, &mut provenance);
+    let view_fingerprints: Vec<String> = space
+        .device_orders
+        .iter()
+        .map(|o| store::view_fingerprint(net, cluster, profile, o))
+        .collect();
+
+    let mut cache = match prior {
+        Some((prior_cache, prior_fps)) => {
+            let (salvaged, st) = prior_cache.salvage(prior_fps, &view_fingerprints);
+            provenance.push(format!(
+                "cache salvage: {}/{} views matched, {} seeds + {} plans reused, {} entries \
+                 dropped",
+                st.views_matched, st.views_total, st.seeds_reused, st.plans_reused,
+                st.entries_dropped
+            ));
+            salvaged
+        }
+        None => EvalCache::new(),
+    };
+
+    // Warm seed: the incumbent candidate evaluated on the *mutated*
+    // cluster — one DES run whose fresh epoch (never the stale
+    // pre-mutation number) primes the branch-and-bound.
+    let n = cluster.len();
+    let global = crate::util::canonical_global_batch(space.batch_per_device, n);
+    let n_mb = (opts.samples_per_epoch as f64 / global).ceil() as usize;
+    let mut seed = f64::INFINITY;
+    if let Choice::Pipeline { kind, m, recompute, .. } = &incumbent.choice {
+        let perm = order_index(&space, cluster, incumbent_order);
+        let cand = Candidate {
+            kind: *kind,
+            m: *m,
+            micro: global / *m as f64,
+            perm,
+            recompute: *recompute,
+        };
+        let (vcl, vprof) = space::permuted_view(cluster, profile, &space.device_orders[perm]);
+        match super::eval::prepare(net, &vcl, &vprof, &mut cache, &cand, global, n_mb) {
+            Ok(p) => {
+                let makespan = simulate(&p.spec).makespan;
+                seed = epoch_from_makespan(makespan, &p.spec, n_mb);
+                provenance.push(format!(
+                    "warm start: incumbent {} M={m} re-evaluated on the mutated cluster — epoch \
+                     {seed:.3}s seeds the branch-and-bound",
+                    kind.label()
+                ));
+            }
+            Err(e) => {
+                provenance.push(format!(
+                    "warm start: incumbent {} M={m} infeasible on the mutated cluster ({e}); \
+                     exploring unseeded",
+                    kind.label()
+                ));
+            }
+        }
+    } else {
+        provenance.push(
+            "warm start: incumbent is data-parallel; exploring without a pipeline seed"
+                .to_string(),
+        );
+    }
+
+    let mut plan =
+        super::explore_seeded_in_space(net, cluster, profile, &space, opts, &mut cache, seed);
+
+    // Graceful degradation: no feasible pipeline in the warm space (a
+    // loss can push every partition past memfit) — widen to the
+    // recomputation and 2BW axes before giving up. Data parallelism (the
+    // explorer's own fallback) is the last resort.
+    if plan.report.best_evaluation().is_none() {
+        let mut widened = space.clone();
+        if !widened.kinds.contains(&ScheduleKind::TwoBW) {
+            widened.kinds.push(ScheduleKind::TwoBW);
+        }
+        if !widened.recompute_options.contains(&true) {
+            widened.recompute_options.push(true);
+        }
+        widened.notes.push(
+            "elastic degradation: no feasible pipeline in the warm space — widened to the \
+             recompute/2BW axes"
+                .to_string(),
+        );
+        provenance.push(
+            "degradation: no feasible pipeline — widened to the recompute/2BW axes".to_string(),
+        );
+        plan = super::explore_seeded_in_space(
+            net, cluster, profile, &widened, opts, &mut cache, f64::INFINITY,
+        );
+        if plan.report.best_evaluation().is_none() {
+            provenance.push(
+                "degradation: still no feasible pipeline — data-parallel fallback".to_string(),
+            );
+        } else {
+            provenance
+                .push("degradation: widened axes recovered a feasible pipeline".to_string());
+        }
+    }
+
+    Replan { plan, provenance, view_fingerprints, cache }
+}
+
+/// Replay a fault-injection [`Scenario`] against an incumbent plan:
+/// apply each event through [`mutate::apply`], warm-replan
+/// ([`replan`]) on the mutated cluster, price the plan switch
+/// ([`diff::migration`] over the per-layer physical assignments, old
+/// devices mapped through the mutation lineage) and carry the mutated
+/// cluster, the new plan and the salvaged cache into the next event.
+/// Errors only on an invalid event (e.g. losing the last device);
+/// planning itself always degrades gracefully.
+pub fn run_scenario(
+    net: &Network,
+    cluster: &Cluster,
+    profile: &Profile,
+    incumbent: &Plan,
+    scenario: &Scenario,
+    opts: &Options,
+) -> Result<ReplanRun, String> {
+    let mm = MemoryModel::default();
+    let n_layers = net.len();
+    let mut cl = cluster.clone();
+    let mut prof = profile.clone();
+    let mut plan = incumbent.clone();
+    let mut carried: Option<(EvalCache, Vec<String>)> = None;
+    let mut steps = Vec::new();
+    for event in &scenario.events {
+        let mu = mutate::apply(net, &cl, &prof, event)?;
+        let inc_order = surviving_order(&plan.device_order, &mu.lineage, mu.cluster.len());
+        let r = replan(
+            net,
+            &mu.cluster,
+            &mu.profile,
+            &plan,
+            &inc_order,
+            opts,
+            carried.as_ref().map(|(c, f)| (c, f.as_slice())),
+        );
+        let mut provenance = vec![mu.note.clone()];
+        provenance.extend(r.provenance);
+        let migration = match (assign_map(&plan, n_layers), assign_map(&r.plan, n_layers)) {
+            (Some(old), Some(new)) => {
+                // Old placements travel through the inverted lineage into
+                // the mutated cluster's index namespace: a layer whose
+                // host was lost maps to `None` and is priced as a restore.
+                let inv = invert_lineage(&mu.lineage, cl.len());
+                let old_mapped: Vec<Option<usize>> =
+                    old.iter().map(|d| d.and_then(|i| inv.get(i).copied().flatten())).collect();
+                Some(diff::migration(&mu.profile, &mm, &old_mapped, &new))
+            }
+            _ => None,
+        };
+        steps.push(ReplanStep {
+            event: event.describe(),
+            cluster: mu.cluster.describe(),
+            provenance,
+            migration,
+            diff: diff::compare(&plan, &r.plan),
+            plan: r.plan.clone(),
+        });
+        cl = mu.cluster;
+        prof = mu.profile;
+        plan = r.plan;
+        carried = Some((r.cache, r.view_fingerprints));
+    }
+    Ok(ReplanRun { scenario: scenario.name.clone(), steps })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::mutate::ClusterEvent;
+    use crate::cluster::presets;
+    use crate::model::zoo;
+    use crate::profile::analytical;
+
+    fn opts() -> Options {
+        Options {
+            batch_per_device: 8.0,
+            samples_per_epoch: 8192,
+            m_candidates: vec![4, 8, 16],
+            consider_dp: false,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn surviving_order_maps_losses_and_appends_joins() {
+        // old order [2, 0, 1, 3], device 1 lost: lineage[new] = old is
+        // [0, 2, 3] — old 2 → new 1, old 0 → new 0, old 3 → new 2
+        let lineage = vec![Some(0), Some(2), Some(3)];
+        assert_eq!(surviving_order(&[2, 0, 1, 3], &lineage, 3), vec![1, 0, 2]);
+        // a join at position 1 of a 2-device cluster: lineage
+        // [Some(0), None, Some(1)] — the joiner (new index 1) is appended
+        let lineage = vec![Some(0), None, Some(1)];
+        assert_eq!(surviving_order(&[1, 0], &lineage, 3), vec![2, 0, 1]);
+    }
+
+    #[test]
+    fn replan_after_loss_is_feasible_and_warm_not_worse_than_cold() {
+        let net = zoo::vgg16(224);
+        let cl = presets::gpu_mixed_cluster(4);
+        let prof = analytical::profile(&net, &cl);
+        let o = opts();
+        let incumbent = super::super::explore(&net, &cl, &prof, &o);
+        assert!(matches!(incumbent.choice, Choice::Pipeline { .. }));
+
+        let mu = mutate::apply(&net, &cl, &prof, &ClusterEvent::DeviceLoss { device: 1 }).unwrap();
+        let inc_order = surviving_order(&incumbent.device_order, &mu.lineage, mu.cluster.len());
+        let warm = replan(&net, &mu.cluster, &mu.profile, &incumbent, &inc_order, &o, None);
+        assert!(
+            matches!(warm.plan.choice, Choice::Pipeline { .. }),
+            "a 3-device remainder must still pipeline: {:?}",
+            warm.provenance
+        );
+        let cold = super::super::explore(&net, &mu.cluster, &mu.profile, &o);
+        assert!(
+            warm.plan.epoch_time <= cold.epoch_time,
+            "warm {} must not be worse than cold {}",
+            warm.plan.epoch_time,
+            cold.epoch_time
+        );
+        assert!(
+            warm.provenance.iter().any(|p| p.contains("seeds the branch-and-bound")),
+            "{:?}",
+            warm.provenance
+        );
+    }
+
+    #[test]
+    fn scenario_replay_is_deterministic_across_job_counts() {
+        let net = zoo::vgg16(224);
+        let cl = presets::gpu_mixed_cluster(4);
+        let prof = analytical::profile(&net, &cl);
+        let incumbent = super::super::explore(&net, &cl, &prof, &opts());
+        let scenario = Scenario {
+            name: "test".to_string(),
+            events: vec![
+                ClusterEvent::Straggler { device: 0, slowdown: 1.5 },
+                ClusterEvent::DeviceLoss { device: 3 },
+                ClusterEvent::LinkDegrade { link: 0, bandwidth_factor: 0.5, latency_factor: 2.0 },
+            ],
+        };
+        let a = run_scenario(&net, &cl, &prof, &incumbent, &scenario, &opts()).unwrap();
+        let b = run_scenario(
+            &net,
+            &cl,
+            &prof,
+            &incumbent,
+            &scenario,
+            &Options { jobs: 8, ..opts() },
+        )
+        .unwrap();
+        assert_eq!(a.steps.len(), 3);
+        for (sa, sb) in a.steps.iter().zip(&b.steps) {
+            assert_eq!(sa.plan.choice, sb.plan.choice, "event {}", sa.event);
+            assert_eq!(sa.plan.epoch_time, sb.plan.epoch_time);
+            assert_eq!(sa.plan.device_order, sb.plan.device_order);
+            assert_eq!(
+                sa.migration.as_ref().map(|m| m.bytes),
+                sb.migration.as_ref().map(|m| m.bytes)
+            );
+        }
+    }
+
+    #[test]
+    fn migration_is_priced_and_cache_salvage_reported() {
+        let net = zoo::vgg16(224);
+        let cl = presets::gpu_mixed_cluster(4);
+        let prof = analytical::profile(&net, &cl);
+        let incumbent = super::super::explore(&net, &cl, &prof, &opts());
+        let scenario = Scenario {
+            name: "loss-then-straggler".to_string(),
+            events: vec![
+                ClusterEvent::DeviceLoss { device: 1 },
+                ClusterEvent::Straggler { device: 0, slowdown: 2.0 },
+            ],
+        };
+        let run = run_scenario(&net, &cl, &prof, &incumbent, &scenario, &opts()).unwrap();
+        // losing a host forces its layers elsewhere: bytes must move
+        let mig = run.steps[0].migration.as_ref().expect("pipeline-to-pipeline migration");
+        assert!(mig.moved_layers > 0, "a lost device's layers must move");
+        assert!(mig.bytes > 0);
+        assert!(mig.moved_layers <= mig.n_layers);
+        // the second event threads the first's cache through salvage
+        assert!(
+            run.steps[1].provenance.iter().any(|p| p.contains("cache salvage")),
+            "{:?}",
+            run.steps[1].provenance
+        );
+        // the rendered transcript mentions every event
+        let text = run.render();
+        assert!(text.contains("device-loss"), "{text}");
+        assert!(text.contains("straggler"), "{text}");
+    }
+}

@@ -59,6 +59,7 @@
 pub mod bounds;
 pub mod cache;
 pub mod diff;
+pub mod elastic;
 pub mod eval;
 pub mod orders;
 pub mod report;
@@ -140,6 +141,16 @@ pub struct Options {
     /// the DES spec, the byte trade priced by
     /// [`crate::partition::memfit::stage_bytes`]).
     pub recompute: bool,
+    /// Anytime stopping (`--eval-budget`): process at most this many
+    /// feasible candidates in phase B. DES'd and pruned candidates both
+    /// consume a unit — the budget counts candidates *considered*, not
+    /// wall clock, so the stopping point is identical for every `--jobs`
+    /// value. Candidates past the cap are reported as
+    /// [`Outcome::Skipped`] with their analytical lower bound, the report
+    /// carries a TRUNCATED note, and the best incumbent found within
+    /// budget is returned. The budget is shared across the grid pass and
+    /// every adaptive-M round. `None` = unbounded.
+    pub eval_budget: Option<usize>,
 }
 
 impl Default for Options {
@@ -157,6 +168,7 @@ impl Default for Options {
             adaptive_m: false,
             pareto: false,
             recompute: false,
+            eval_budget: None,
         }
     }
 }
@@ -213,7 +225,18 @@ pub fn explore_space(
 ) -> ExplorationReport {
     let mut cache = EvalCache::new();
     let mut pool = parallel::ScratchPool::new();
-    explore_space_with(net, cluster, profile, space, opts, &mut cache, &mut pool, f64::INFINITY)
+    let mut budget = opts.eval_budget;
+    explore_space_with(
+        net,
+        cluster,
+        profile,
+        space,
+        opts,
+        &mut cache,
+        &mut pool,
+        f64::INFINITY,
+        &mut budget,
+    )
 }
 
 /// [`explore_space`] against a caller-owned cache, a caller-owned
@@ -224,7 +247,10 @@ pub fn explore_space(
 /// branch-and-bound at the best epoch already simulated (a candidate
 /// pruned against it is provably worse than a recorded evaluation, so the
 /// merged selection is unchanged). `cache_hits` in the returned report
-/// counts this call's hits only.
+/// counts this call's hits only. `eval_budget` is the remaining anytime
+/// budget ([`Options::eval_budget`]), decremented by the candidates this
+/// call processes so the cap spans adaptive-M rounds; `None` = unbounded.
+#[allow(clippy::too_many_arguments)]
 fn explore_space_with(
     net: &Network,
     cluster: &Cluster,
@@ -234,6 +260,7 @@ fn explore_space_with(
     cache: &mut EvalCache,
     pool: &mut parallel::ScratchPool<FamilySim>,
     incumbent_seed: f64,
+    eval_budget: &mut Option<usize>,
 ) -> ExplorationReport {
     let n = cluster.len();
     // Canonical (float-noise-snapped) global batch: micro sizes, the
@@ -276,6 +303,19 @@ fn explore_space_with(
         };
         la.partial_cmp(&lb).unwrap_or(std::cmp::Ordering::Equal).then(a.cmp(&b))
     });
+
+    // Anytime stopping (`--eval-budget`): cap the number of phase-B
+    // candidates processed. The cut sits in the deterministic
+    // lower-bound order and counts candidates considered (DES'd *or*
+    // pruned), never wall clock — so the truncation point, and with it
+    // the whole report, is identical for every `--jobs` value. Skipped
+    // candidates keep their analytical lower bound.
+    let mut budget_skipped: Vec<usize> = Vec::new();
+    if let Some(b) = eval_budget {
+        let cap = (*b).min(order.len());
+        budget_skipped = order.split_off(cap);
+        *b -= cap;
+    }
 
     // This invocation is a new candidate family for the pooled
     // simulators: drop stale replay checkpoints and release capacity a
@@ -343,6 +383,13 @@ fn explore_space_with(
             PhaseB::Pruned { lower_bound } => Outcome::Pruned { lower_bound },
         });
     }
+    for &idx in &budget_skipped {
+        let p = match &prepared[idx] {
+            Ok(p) => p,
+            Err(_) => unreachable!("budget_skipped only holds feasible candidates"),
+        };
+        outcomes[idx] = Some(Outcome::Skipped { lower_bound: p.lb_epoch });
+    }
 
     let evaluations: Vec<Evaluation> = candidates
         .into_iter()
@@ -358,6 +405,17 @@ fn explore_space_with(
     let pruned_count =
         evaluations.iter().filter(|e| matches!(e.outcome, Outcome::Pruned { .. })).count();
 
+    let mut notes = space.notes.clone();
+    if !budget_skipped.is_empty() {
+        notes.push(format!(
+            "eval budget TRUNCATED: {} of {} feasible candidates skipped after {} processed \
+             (--eval-budget); best incumbent within budget returned",
+            budget_skipped.len(),
+            order.len() + budget_skipped.len(),
+            order.len()
+        ));
+    }
+
     ExplorationReport {
         model: net.describe(),
         cluster: cluster.describe(),
@@ -365,7 +423,7 @@ fn explore_space_with(
         samples_per_epoch: opts.samples_per_epoch,
         jobs: opts.jobs.max(1),
         ineligible: space.ineligible.clone(),
-        notes: space.notes.clone(),
+        notes,
         order_provenance: space.order_provenance.clone(),
         evaluations,
         simulated_count,
@@ -408,7 +466,10 @@ fn bisect_divisor(
 /// axis when the incumbent sits on the grid edge) — and merge the new
 /// evaluations into `report`. Purely additive: every fixed-grid
 /// evaluation is retained and ties keep the earlier candidate, so the
-/// refined selection is never worse than the fixed grid's.
+/// refined selection is never worse than the fixed grid's. The anytime
+/// `eval_budget` is shared with the grid pass — an exhausted budget turns
+/// every new bisection candidate into [`Outcome::Skipped`].
+#[allow(clippy::too_many_arguments)]
 fn refine_m(
     net: &Network,
     cluster: &Cluster,
@@ -418,6 +479,7 @@ fn refine_m(
     cache: &mut EvalCache,
     pool: &mut parallel::ScratchPool<FamilySim>,
     report: &mut ExplorationReport,
+    eval_budget: &mut Option<usize>,
 ) {
     // Round, never truncate: a global batch computed in f64 can land a
     // hair below its intended integer (7.999999999999999 × 4 =
@@ -472,12 +534,13 @@ fn refine_m(
             order_provenance: Vec::new(), // already reported by the grid pass
         };
         let sub = explore_space_with(
-            net, cluster, profile, &sub_space, opts, cache, pool, best_epoch,
+            net, cluster, profile, &sub_space, opts, cache, pool, best_epoch, eval_budget,
         );
         report.notes.push(format!(
             "adaptive-M round {}: bisected to M={new_ms:?} around incumbent M={best_m}",
             round + 1
         ));
+        report.notes.extend(sub.notes);
         report.evaluations.extend(sub.evaluations);
         report.simulated_count += sub.simulated_count;
         report.pruned_count += sub.pruned_count;
@@ -525,14 +588,44 @@ pub fn explore_with_cache_in_space(
     opts: &Options,
     cache: &mut EvalCache,
 ) -> Plan {
+    explore_seeded_in_space(net, cluster, profile, space, opts, cache, f64::INFINITY)
+}
+
+/// [`explore_with_cache_in_space`] with a pre-seeded incumbent epoch for
+/// the branch-and-bound ([`elastic`]'s warm start: the cached plan
+/// re-evaluated on the mutated cluster). The seed must be an epoch time
+/// *achieved by a candidate inside `space`* — then every pruned candidate
+/// is provably no better than a recorded evaluation and the selection is
+/// unchanged, just cheaper to reach.
+pub(crate) fn explore_seeded_in_space(
+    net: &Network,
+    cluster: &Cluster,
+    profile: &Profile,
+    space: &SearchSpace,
+    opts: &Options,
+    cache: &mut EvalCache,
+    incumbent_seed: f64,
+) -> Plan {
     // One simulator pool for the whole exploration: the grid pass and
     // every adaptive-M round share per-worker arenas instead of
     // reallocating them per `explore_space_with` invocation.
     let mut pool = parallel::ScratchPool::new();
-    let mut report =
-        explore_space_with(net, cluster, profile, space, opts, cache, &mut pool, f64::INFINITY);
+    // One anytime budget for the whole exploration too: the grid pass
+    // spends first, the refinement rounds get the remainder.
+    let mut budget = opts.eval_budget;
+    let mut report = explore_space_with(
+        net,
+        cluster,
+        profile,
+        space,
+        opts,
+        cache,
+        &mut pool,
+        incumbent_seed,
+        &mut budget,
+    );
     if opts.adaptive_m {
-        refine_m(net, cluster, profile, space, opts, cache, &mut pool, &mut report);
+        refine_m(net, cluster, profile, space, opts, cache, &mut pool, &mut report, &mut budget);
     }
 
     // DP baseline (the paper's 1x reference; ResNet-50's winner). The
@@ -798,6 +891,45 @@ mod tests {
             "bisection must walk the divisors of the rounded global batch: {:?}",
             plan.report.log_lines()
         );
+    }
+
+    #[test]
+    fn eval_budget_truncates_deterministically_and_is_anytime() {
+        let net = zoo::vgg16(224);
+        let cl = presets::v100_cluster(4);
+        let prof = analytical::profile(&net, &cl);
+        let o = Options {
+            eval_budget: Some(3),
+            prune: false,
+            consider_dp: false,
+            ..opts(32.0)
+        };
+        let a = explore(&net, &cl, &prof, &o);
+        let b = explore(&net, &cl, &prof, &Options { jobs: 8, ..o.clone() });
+        // the budget counts candidates, not wall clock: the truncation
+        // point — and with it every outcome — is job-count independent
+        assert_eq!(a.report.evaluations, b.report.evaluations);
+        assert_eq!(a.choice, b.choice);
+        assert_eq!(a.epoch_time, b.epoch_time);
+        assert_eq!(a.report.simulated_count, 3, "exactly the budget is spent");
+        let skipped = a
+            .report
+            .evaluations
+            .iter()
+            .filter(|e| matches!(e.outcome, Outcome::Skipped { .. }))
+            .count();
+        assert!(skipped > 0, "a budget of 3 must leave candidates unprocessed");
+        assert!(
+            a.report.notes.iter().any(|n| n.contains("TRUNCATED")),
+            "truncation must be noted: {:?}",
+            a.report.notes
+        );
+        // anytime: the unbounded run is at least as good, and the
+        // truncated run still returns a real incumbent
+        let full =
+            explore(&net, &cl, &prof, &Options { prune: false, consider_dp: false, ..opts(32.0) });
+        assert!(matches!(a.choice, Choice::Pipeline { .. }));
+        assert!(full.epoch_time <= a.epoch_time);
     }
 
     #[test]

@@ -320,6 +320,28 @@ pub fn discover(
     profile: &Profile,
     opts: &Options,
 ) -> Discovery {
+    discover_seeded(net, cluster, profile, opts, None)
+}
+
+/// [`discover`] with an incumbent ordering injected — the elastic
+/// replanner's warm start. The incumbent (the surviving devices of the
+/// pre-mutation plan, in their old relative order) is scored and
+/// hill-climbed *after* the normal search finishes, on a small separate
+/// probe allowance, and its entries are appended to the kept set: the
+/// unseeded discovery is a strict prefix of the seeded one, so a
+/// warm-started search space is a superset of the cold one by
+/// construction (the warm plan can never be worse). `incumbent: None` is
+/// bit-identical to [`discover`]. An incumbent that is not a permutation
+/// of `0..n` is ignored. The appended entries may exceed
+/// [`MAX_DEVICE_ORDERS`] by up to two — the cap bounds the *search*, not
+/// the warm start.
+pub fn discover_seeded(
+    net: &Network,
+    cluster: &Cluster,
+    profile: &Profile,
+    opts: &Options,
+    incumbent: Option<&[usize]>,
+) -> Discovery {
     let n = cluster.len();
     let global = crate::util::canonical_global_batch(opts.batch_per_device, n);
     let mut ms: Vec<usize> = opts
@@ -398,6 +420,44 @@ pub fn discover(
             orders.push(order.clone());
         }
     }
+    // Incumbent warm start: scored and climbed after the normal assembly
+    // on a separate probe allowance, entries appended — see
+    // [`discover_seeded`]. Appending keeps the unseeded result a prefix.
+    let mut incumbent_note: Option<String> = None;
+    if let Some(inc) = incumbent {
+        let mut sorted = inc.to_vec();
+        sorted.sort_unstable();
+        if sorted == orders[0] {
+            prober.budget = prober.probes + 1 + 2 * n;
+            let inc = inc.to_vec();
+            if let Some(s0) = prober.score_all(std::slice::from_ref(&inc))[0] {
+                let (end, score, steps) = climb(&mut prober, inc.clone(), s0);
+                let mut appended = 0usize;
+                if seen.insert(prober.key(&inc)) {
+                    provenance
+                        .push(format!("order {} [incumbent seed, bottleneck {s0:.4e}]", orders.len()));
+                    orders.push(inc);
+                    appended += 1;
+                }
+                if score.is_finite() && seen.insert(prober.key(&end)) {
+                    provenance.push(format!(
+                        "order {} [seed incumbent, {steps} improving moves, bottleneck {score:.4e}]",
+                        orders.len()
+                    ));
+                    orders.push(end);
+                    appended += 1;
+                }
+                incumbent_note = Some(format!(
+                    "device-order search: incumbent seed bottleneck {s0:.4e}, climbed {steps} \
+                     moves to {score:.4e}, {appended} orders appended"
+                ));
+            }
+        } else {
+            incumbent_note =
+                Some("device-order search: incumbent seed ignored (not a device permutation)".into());
+        }
+    }
+
     // DES provenance annotation: one representative schedule per kept
     // order, re-simulated through a single incremental simulator. The
     // spec builder is the generic [`super::eval::build_spec`] on this
@@ -424,7 +484,7 @@ pub fn discover(
     }
 
     let best = endpoints.iter().map(|e| e.0).fold(id_score, f64::min);
-    let notes = vec![
+    let mut notes = vec![
         format!(
             "device-order search: {n} devices — neighbourhood search, {} of {} probe budget \
              used, {restarts} restarts, {} orders kept (probe micro-batch {micro})",
@@ -442,6 +502,9 @@ pub fn discover(
             fam.stats.full_runs + fam.stats.fallback_runs
         ),
     ];
+    if let Some(line) = incumbent_note {
+        notes.push(line);
+    }
     Discovery { orders, provenance, notes }
 }
 
@@ -560,6 +623,48 @@ mod tests {
             d.notes.iter().any(|n| n.contains("DES provenance")),
             "DES pass must report itself: {:?}",
             d.notes
+        );
+    }
+
+    #[test]
+    fn seeded_discovery_appends_the_incumbent_after_the_unseeded_prefix() {
+        let cl = presets::gpu_mixed_cluster(10);
+        let net = zoo::vgg16(224);
+        let prof = analytical::profile(&net, &cl);
+        let base = discover(&net, &cl, &prof, &opts(120, 1));
+
+        // The incumbent is the swapped-pairs layout — a name sequence the
+        // portfolio seeds never produce on an alternating mix.
+        let incumbent: Vec<usize> = vec![1, 0, 3, 2, 5, 4, 7, 6, 9, 8];
+        let seeded = discover_seeded(&net, &cl, &prof, &opts(120, 1), Some(&incumbent));
+
+        // The unseeded discovery is a strict prefix: warm search spaces
+        // are supersets of cold ones by construction.
+        assert_eq!(&seeded.orders[..base.orders.len()], &base.orders[..]);
+        assert_eq!(&seeded.provenance[..base.provenance.len()], &base.provenance[..]);
+        assert!(
+            seeded.notes.iter().any(|n| n.contains("incumbent seed")),
+            "incumbent phase must report itself: {:?}",
+            seeded.notes
+        );
+        // The incumbent's name sequence is evaluable in the seeded set —
+        // either appended, or already present as a kept layout.
+        let key = |o: &Vec<usize>| -> Vec<String> {
+            o.iter().map(|&i| cl.devices[i].name.clone()).collect()
+        };
+        assert!(
+            seeded.orders.iter().any(|o| key(o) == key(&incumbent)),
+            "incumbent layout must be in the discovered set"
+        );
+        assert_eq!(seeded.orders.len(), seeded.provenance.len());
+
+        // A non-permutation incumbent is ignored, with a note.
+        let bad = discover_seeded(&net, &cl, &prof, &opts(120, 1), Some(&[0usize; 10]));
+        assert_eq!(bad.orders, base.orders);
+        assert!(
+            bad.notes.iter().any(|n| n.contains("ignored")),
+            "ignored incumbent must be noted: {:?}",
+            bad.notes
         );
     }
 

@@ -65,6 +65,13 @@ pub enum Outcome {
         /// Human-readable reason.
         reason: String,
     },
+    /// Not evaluated: the anytime `--eval-budget` cap was hit first. The
+    /// candidate kept its analytical lower bound so later runs can tell
+    /// whether it could have mattered.
+    Skipped {
+        /// The analytical lower bound computed in phase A, seconds.
+        lower_bound: f64,
+    },
 }
 
 /// One candidate with its outcome.
@@ -241,6 +248,13 @@ impl ExplorationReport {
                 Outcome::Infeasible { .. } => {
                     format!("{}{rc} M={}{}: infeasible", c.kind.label(), c.m, order)
                 }
+                Outcome::Skipped { lower_bound } => format!(
+                    "{}{rc} M={}{}: skipped (eval budget, lower bound {:.1}s)",
+                    c.kind.label(),
+                    c.m,
+                    order,
+                    lower_bound
+                ),
             });
         }
         if self.dp_considered {
@@ -412,9 +426,16 @@ impl Plan {
                 crate::util::fmt_bytes(hi.peak_memory),
             )
         };
+        let skipped = self
+            .report
+            .evaluations
+            .iter()
+            .filter(|e| matches!(e.outcome, Outcome::Skipped { .. }))
+            .count();
+        let budget = if skipped > 0 { format!(", {skipped} budget-skipped") } else { String::new() };
         format!(
             "{head}\n  mini-batch {:.4}s, epoch {:.1}s, {:.2}x over DP\n  stage memory: [{}]\n  \
-             search: {} simulated, {} pruned, {} infeasible, {} cache hits (jobs {}){front}{order}",
+             search: {} simulated, {} pruned, {} infeasible{budget}, {} cache hits (jobs {}){front}{order}",
             self.minibatch_time,
             self.epoch_time,
             self.speedup_over_dp,
@@ -423,7 +444,8 @@ impl Plan {
             self.report.pruned_count,
             self.report.evaluations.len()
                 - self.report.simulated_count
-                - self.report.pruned_count,
+                - self.report.pruned_count
+                - skipped,
             self.report.cache_hits,
             self.report.jobs,
         )
@@ -656,6 +678,10 @@ fn evaluation_to_json(ev: &Evaluation) -> Json {
             pairs.push(("status", Json::from("infeasible")));
             pairs.push(("reason", Json::from(reason.clone())));
         }
+        Outcome::Skipped { lower_bound } => {
+            pairs.push(("status", Json::from("skipped")));
+            pairs.push(("lower_bound", Json::Num(*lower_bound)));
+        }
     }
     obj(pairs)
 }
@@ -702,6 +728,7 @@ fn evaluation_from_json(j: &Json) -> crate::Result<Evaluation> {
         },
         "pruned" => Outcome::Pruned { lower_bound: req_f64(j, "lower_bound")? },
         "infeasible" => Outcome::Infeasible { reason: req_str(j, "reason")? },
+        "skipped" => Outcome::Skipped { lower_bound: req_f64(j, "lower_bound")? },
         other => anyhow::bail!("unknown evaluation status `{other}`"),
     };
     Ok(Evaluation { candidate, outcome })
@@ -989,6 +1016,36 @@ mod tests {
             }
         }
         assert!(old.report.pareto_front().is_empty(), "no peak data → no front");
+    }
+
+    #[test]
+    fn skipped_outcome_round_trips_and_stays_out_of_the_front() {
+        let mut r = sample_report();
+        r.evaluations.push(Evaluation {
+            candidate: Candidate {
+                kind: ScheduleKind::GPipe,
+                m: 16,
+                micro: 4.0,
+                perm: 0,
+                recompute: false,
+            },
+            outcome: Outcome::Skipped { lower_bound: 55.0 },
+        });
+        let text = r.to_json().to_string_compact();
+        assert!(text.contains("\"skipped\""));
+        let back = ExplorationReport::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, r);
+        // a skipped candidate never wins or joins the front, even with a
+        // better lower bound than the winner's epoch
+        assert_eq!(back.best_evaluation().unwrap().candidate.kind, ScheduleKind::OneFOneBSno);
+        assert_eq!(back.pareto_front().len(), 1);
+        assert!(
+            r.log_lines()
+                .iter()
+                .any(|l| l == "GPipe M=16: skipped (eval budget, lower bound 55.0s)"),
+            "{:?}",
+            r.log_lines()
+        );
     }
 
     #[test]

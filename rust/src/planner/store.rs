@@ -94,6 +94,24 @@ pub fn fingerprint(net: &Network, cluster: &Cluster, profile: &Profile) -> Strin
     format!("{:016x}", h.0)
 }
 
+/// Fingerprint of one permuted *view* of a scenario — the inputs the
+/// partition passes for device order `order` actually consume (profile
+/// rows travel with their devices; links stay in chain slots). Two
+/// orders that produce byte-identical views (e.g. swapping two identical
+/// boards) share a fingerprint by construction, and a view whose
+/// fingerprint survives a cluster mutation can keep its cached partition
+/// entries ([`EvalCache::salvage`]) even when the scenario fingerprint
+/// changed.
+pub fn view_fingerprint(
+    net: &Network,
+    cluster: &Cluster,
+    profile: &Profile,
+    order: &[usize],
+) -> String {
+    let (vcl, vprof) = super::space::permuted_view(cluster, profile, order);
+    fingerprint(net, &vcl, &vprof)
+}
+
 /// Outcome of [`load`]: a usable cache, or the reason to start fresh.
 pub enum CacheLoad {
     /// The on-disk cache matched the scenario and was restored.
@@ -121,6 +139,64 @@ pub fn load(path: &str, fingerprint: &str, device_orders: &[Vec<usize>]) -> Cach
     }
 }
 
+/// [`load`] with a per-view salvage fallback: when the all-or-nothing
+/// match fails (changed fingerprint or order set) but the document was
+/// saved with embedded view fingerprints ([`save_with_views`]), every
+/// cached view that still exists in `view_fingerprints` keeps its
+/// entries, re-keyed to the current `perm` indices. Returns the load
+/// outcome plus report-ready notes saying exactly what was restored,
+/// salvaged or rejected — the exploration surfaces them in
+/// `ExplorationReport::notes` instead of burying the reason on stdout.
+pub fn load_with_views(
+    path: &str,
+    fingerprint: &str,
+    device_orders: &[Vec<usize>],
+    view_fingerprints: &[String],
+) -> (CacheLoad, Vec<String>) {
+    let text = match std::fs::read_to_string(path) {
+        Ok(t) => t,
+        Err(_) => {
+            let reason = format!("no plan cache at {path}");
+            let note = format!("plan cache: {reason}; computing from scratch");
+            return (CacheLoad::Fresh(reason), vec![note]);
+        }
+    };
+    let json = match Json::parse(&text) {
+        Ok(j) => j,
+        Err(e) => {
+            let reason = format!("unreadable plan cache {path}: {e}");
+            let note = format!("plan cache: {reason}; computing from scratch");
+            return (CacheLoad::Fresh(reason), vec![note]);
+        }
+    };
+    match EvalCache::from_json(&json, fingerprint, device_orders) {
+        Ok(cache) => {
+            let note = format!("plan cache: restored {path} (fingerprint {fingerprint})");
+            (CacheLoad::Loaded(cache), vec![note])
+        }
+        Err(e) => match EvalCache::salvage_json(&json, view_fingerprints) {
+            Ok((cache, st)) if st.seeds_reused + st.plans_reused > 0 => {
+                let note = format!(
+                    "plan cache: partial reuse of {path} — {}/{} views matched, \
+                     {} seeds + {} plans re-keyed, {} entries dropped \
+                     (full restore failed: {e})",
+                    st.views_matched,
+                    st.views_total,
+                    st.seeds_reused,
+                    st.plans_reused,
+                    st.entries_dropped
+                );
+                (CacheLoad::Loaded(cache), vec![note])
+            }
+            _ => {
+                let reason = format!("stale plan cache {path}: {e}");
+                let note = format!("plan cache: {reason}; computing from scratch");
+                (CacheLoad::Fresh(reason), vec![note])
+            }
+        },
+    }
+}
+
 /// Persist `cache` to `path`, keyed by `fingerprint` / `device_orders`.
 pub fn save(
     path: &str,
@@ -129,6 +205,22 @@ pub fn save(
     device_orders: &[Vec<usize>],
 ) -> crate::Result<()> {
     let text = cache.to_json(fingerprint, device_orders).to_string_pretty();
+    std::fs::write(path, text).map_err(|e| anyhow::anyhow!("writing plan cache {path}: {e}"))?;
+    Ok(())
+}
+
+/// [`save`] with per-view fingerprints embedded, enabling the
+/// [`load_with_views`] salvage path on later invocations.
+pub fn save_with_views(
+    path: &str,
+    cache: &EvalCache,
+    fingerprint: &str,
+    device_orders: &[Vec<usize>],
+    view_fingerprints: &[String],
+) -> crate::Result<()> {
+    let text = cache
+        .to_json_with_views(fingerprint, device_orders, view_fingerprints)
+        .to_string_pretty();
     std::fs::write(path, text).map_err(|e| anyhow::anyhow!("writing plan cache {path}: {e}"))?;
     Ok(())
 }
@@ -202,5 +294,115 @@ mod tests {
             CacheLoad::Fresh(reason) => assert!(reason.contains("no plan cache"), "{reason}"),
             CacheLoad::Loaded(_) => panic!("must not load a missing file"),
         }
+        let (outcome, notes) =
+            load_with_views("/nonexistent/bapipe-plan-cache.json", "00", &[vec![0]], &[]);
+        assert!(matches!(outcome, CacheLoad::Fresh(_)));
+        assert_eq!(notes.len(), 1);
+        assert!(notes[0].contains("no plan cache"), "{}", notes[0]);
+        assert!(notes[0].contains("computing from scratch"), "{}", notes[0]);
+    }
+
+    #[test]
+    fn view_fingerprint_tracks_what_the_partition_sees() {
+        let net = zoo::vgg16(224);
+
+        // Heterogeneous pair: swapping the devices changes the view.
+        let cl = presets::gpu_mixed_cluster(2);
+        let prof = analytical::profile(&net, &cl);
+        let identity = view_fingerprint(&net, &cl, &prof, &[0, 1]);
+        let swapped = view_fingerprint(&net, &cl, &prof, &[1, 0]);
+        assert_ne!(identity, swapped, "V100/P100 swap must change the view");
+        // The identity view is the scenario itself.
+        assert_eq!(identity, fingerprint(&net, &cl, &prof));
+
+        // Homogeneous pair: the swap produces a byte-identical view, so
+        // the fingerprints legitimately coincide (shared cache entries).
+        let homo = presets::v100_cluster(2);
+        let hprof = analytical::profile(&net, &homo);
+        assert_eq!(
+            view_fingerprint(&net, &homo, &hprof, &[0, 1]),
+            view_fingerprint(&net, &homo, &hprof, &[1, 0]),
+        );
+    }
+
+    #[test]
+    fn load_with_views_restores_salvages_and_reports() {
+        use crate::planner::space::Candidate;
+        use crate::schedule::ScheduleKind;
+
+        let net = zoo::vgg16(224);
+        let cl = presets::gpu_mixed_cluster(2);
+        let prof = analytical::profile(&net, &cl);
+        let fp = fingerprint(&net, &cl, &prof);
+        let orders = vec![vec![0usize, 1], vec![1, 0]];
+        let fps: Vec<String> =
+            orders.iter().map(|o| view_fingerprint(&net, &cl, &prof, o)).collect();
+
+        let mut cache = EvalCache::new();
+        for (perm, order) in orders.iter().enumerate() {
+            let (vcl, vprof) = crate::planner::space::permuted_view(&cl, &prof, order);
+            cache
+                .partition(
+                    &net,
+                    &vcl,
+                    &vprof,
+                    &Candidate {
+                        kind: ScheduleKind::OneFOneBSno,
+                        m: 16,
+                        micro: 8.0,
+                        perm,
+                        recompute: false,
+                    },
+                )
+                .unwrap();
+        }
+
+        let path = std::env::temp_dir().join("bapipe-store-views-test.json");
+        let path = path.to_str().unwrap().to_string();
+        let _ = std::fs::remove_file(&path);
+        save_with_views(&path, &cache, &fp, &orders, &fps).unwrap();
+
+        // Unchanged scenario: the full restore path reports itself.
+        let (outcome, notes) = load_with_views(&path, &fp, &orders, &fps);
+        assert!(matches!(outcome, CacheLoad::Loaded(_)));
+        assert!(notes[0].contains("restored"), "{}", notes[0]);
+
+        // The next run discovers only the swapped order (a shrunken
+        // order set): the all-or-nothing match fails, but that view's
+        // entries survive via the embedded fingerprints.
+        let current_orders = vec![vec![1usize, 0]];
+        let current_fps = vec![fps[1].clone()];
+        let (outcome, notes) = load_with_views(&path, &fp, &current_orders, &current_fps);
+        let mut salvaged = match outcome {
+            CacheLoad::Loaded(c) => c,
+            CacheLoad::Fresh(reason) => panic!("salvage must fire: {reason}"),
+        };
+        assert!(notes[0].contains("partial reuse"), "{}", notes[0]);
+        assert!(notes[0].contains("1/1 views matched"), "{}", notes[0]);
+        let (vcl, vprof) = crate::planner::space::permuted_view(&cl, &prof, &[1, 0]);
+        salvaged
+            .partition(
+                &net,
+                &vcl,
+                &vprof,
+                &Candidate {
+                    kind: ScheduleKind::OneFOneBSno,
+                    m: 16,
+                    micro: 8.0,
+                    perm: 0,
+                    recompute: false,
+                },
+            )
+            .unwrap();
+        assert_eq!((salvaged.hits, salvaged.misses), (1, 0), "salvaged view must answer");
+
+        // No surviving view at all → Fresh with the stale reason.
+        let other = presets::v100_cluster(2);
+        let oprof = analytical::profile(&net, &other);
+        let foreign = vec![view_fingerprint(&net, &other, &oprof, &[0, 1])];
+        let (outcome, notes) = load_with_views(&path, "other-fp", &[vec![0usize, 1]], &foreign);
+        assert!(matches!(outcome, CacheLoad::Fresh(_)));
+        assert!(notes[0].contains("stale plan cache"), "{}", notes[0]);
+        let _ = std::fs::remove_file(&path);
     }
 }

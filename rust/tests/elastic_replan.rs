@@ -1,0 +1,189 @@
+//! Elastic replanning, end to end: scenario replay determinism across
+//! worker counts, warm-start quality against cold exploration on the
+//! same mutated cluster, and graceful degradation to the recompute/2BW
+//! axes when a device loss makes the incumbent partition memfit-
+//! infeasible.
+
+use bapipe::cluster::mutate::{self, ClusterEvent, Scenario};
+use bapipe::cluster::presets;
+use bapipe::model::zoo;
+use bapipe::planner::elastic::{replan, run_scenario, surviving_order};
+use bapipe::planner::{self, Choice, Options};
+use bapipe::profile::analytical;
+use bapipe::schedule::ScheduleKind;
+use bapipe::util::json::Json;
+
+fn opts(jobs: usize) -> Options {
+    Options {
+        batch_per_device: 8.0,
+        samples_per_epoch: 8192,
+        m_candidates: vec![4, 8],
+        consider_dp: false,
+        jobs,
+        ..Options::default()
+    }
+}
+
+/// The CLI scenario-JSON shape drives the replay: loss, join, link
+/// degradation and a straggler, parsed from text exactly as `bapipe
+/// replan --scenario` would, and bit-identical for any `--jobs` value.
+#[test]
+fn scenario_replay_is_bit_identical_across_worker_counts() {
+    let net = zoo::vgg16(224);
+    let cl = presets::gpu_mixed_cluster(6);
+    let prof = analytical::profile(&net, &cl);
+    let incumbent = planner::explore(&net, &cl, &prof, &opts(1));
+    assert!(matches!(incumbent.choice, Choice::Pipeline { .. }));
+
+    let doc = Json::parse(
+        r#"{
+          "name": "outage-and-recovery",
+          "events": [
+            {"event": "device-loss", "device": 2},
+            {"event": "straggler", "device": 0, "slowdown": 1.5},
+            {"event": "device-join", "device_name": "P100", "position": 2},
+            {"event": "link-degrade", "link": 1, "bandwidth_factor": 0.5,
+             "latency_factor": 2.0}
+          ]
+        }"#,
+    )
+    .unwrap();
+    let scenario = Scenario::from_json(&doc).unwrap();
+
+    let a = run_scenario(&net, &cl, &prof, &incumbent, &scenario, &opts(1)).unwrap();
+    let b = run_scenario(&net, &cl, &prof, &incumbent, &scenario, &opts(8)).unwrap();
+    assert_eq!(a.scenario, "outage-and-recovery");
+    assert_eq!(a.steps.len(), 4);
+    for (sa, sb) in a.steps.iter().zip(&b.steps) {
+        assert_eq!(sa.plan.choice, sb.plan.choice, "event {}", sa.event);
+        assert_eq!(sa.plan.epoch_time, sb.plan.epoch_time, "event {}", sa.event);
+        assert_eq!(sa.plan.device_order, sb.plan.device_order, "event {}", sa.event);
+        assert_eq!(
+            sa.plan.report.evaluations, sb.plan.report.evaluations,
+            "event {}",
+            sa.event
+        );
+        assert_eq!(
+            sa.migration.as_ref().map(|m| (m.moved_layers, m.bytes)),
+            sb.migration.as_ref().map(|m| (m.moved_layers, m.bytes)),
+            "event {}",
+            sa.event
+        );
+        assert_eq!(sa.provenance, sb.provenance, "event {}", sa.event);
+    }
+    // every event ends with a feasible pipeline on this roomy cluster
+    for s in &a.steps {
+        assert!(matches!(s.plan.choice, Choice::Pipeline { .. }), "{}", s.event);
+    }
+    // the loss event must price a migration: the lost device's layers move
+    let mig = a.steps[0].migration.as_ref().expect("pipeline-to-pipeline step");
+    assert!(mig.moved_layers > 0 && mig.bytes > 0, "{mig:?}");
+}
+
+/// Warm-started replanning explores a superset of the cold space, so on
+/// every mutated cluster of the scenario the warm plan is at least as
+/// fast as a cold `explore` with the same options.
+#[test]
+fn warm_replan_never_loses_to_cold_exploration() {
+    let net = zoo::vgg16(224);
+    let cl = presets::gpu_mixed_cluster(6);
+    let prof = analytical::profile(&net, &cl);
+    let o = opts(1);
+    let incumbent = planner::explore(&net, &cl, &prof, &o);
+    let scenario = Scenario {
+        name: "degrade".to_string(),
+        events: vec![
+            ClusterEvent::Straggler { device: 1, slowdown: 2.0 },
+            ClusterEvent::DeviceLoss { device: 4 },
+            ClusterEvent::LinkDegrade { link: 0, bandwidth_factor: 0.25, latency_factor: 1.0 },
+        ],
+    };
+    let run = run_scenario(&net, &cl, &prof, &incumbent, &scenario, &o).unwrap();
+
+    // replay the mutations independently to rebuild each step's cluster
+    let (mut c, mut p) = (cl, prof);
+    for (event, step) in scenario.events.iter().zip(&run.steps) {
+        let mu = mutate::apply(&net, &c, &p, event).unwrap();
+        let cold = planner::explore(&net, &mu.cluster, &mu.profile, &o);
+        assert!(
+            step.plan.epoch_time <= cold.epoch_time,
+            "warm {} slower than cold {} after {}",
+            step.plan.epoch_time,
+            cold.epoch_time,
+            step.event
+        );
+        c = mu.cluster;
+        p = mu.profile;
+    }
+    // the first replan runs without a prior cache, later ones salvage
+    assert!(run.steps[0].provenance.iter().all(|l| !l.contains("cache salvage")));
+    assert!(run.steps[1].provenance.iter().any(|l| l.contains("cache salvage")));
+}
+
+/// When the post-loss cluster cannot fit any plain-schedule partition,
+/// the replanner widens to the recompute/2BW axes instead of giving up,
+/// and says so in the provenance.
+#[test]
+fn infeasible_after_loss_falls_back_to_memory_scalable_axes() {
+    let net = zoo::gnmt_l(64);
+    let base = Options {
+        batch_per_device: 32.0,
+        samples_per_epoch: 8192,
+        m_candidates: vec![4, 8, 16],
+        consider_dp: false,
+        ..Options::default()
+    };
+
+    // Find a capacity tight enough that no plain schedule fits three
+    // devices but the recompute/2BW axes still do — self-validating, so
+    // the test never asserts against an infeasible-everywhere cluster.
+    let mut found = None;
+    for div in [2u64, 3, 4, 6, 8, 12] {
+        let mut tight = presets::v100_cluster(3);
+        for d in &mut tight.devices {
+            d.mem_capacity /= div;
+        }
+        let tprof = analytical::profile(&net, &tight);
+        let plain = planner::explore(&net, &tight, &tprof, &base);
+        let wide = planner::explore(
+            &net,
+            &tight,
+            &tprof,
+            &Options { pareto: true, recompute: true, ..base.clone() },
+        );
+        if plain.report.best_evaluation().is_none() && wide.report.best_evaluation().is_some() {
+            found = Some((tight, tprof));
+            break;
+        }
+    }
+    let (tight, tprof) =
+        found.expect("no capacity divisor separates plain from memory-scalable schedules");
+
+    // healthy incumbent at full capacity
+    let cl = presets::v100_cluster(3);
+    let prof = analytical::profile(&net, &cl);
+    let incumbent = planner::explore(&net, &cl, &prof, &base);
+    assert!(matches!(incumbent.choice, Choice::Pipeline { .. }));
+
+    // the "mutated" cluster is the capacity-starved one; the incumbent
+    // order survives verbatim
+    let order = surviving_order(&incumbent.device_order, &[Some(0), Some(1), Some(2)], 3);
+    let r = replan(&net, &tight, &tprof, &incumbent, &order, &base, None);
+    assert!(
+        r.provenance.iter().any(|l| l.contains("widened to the recompute/2BW axes")),
+        "{:?}",
+        r.provenance
+    );
+    assert!(
+        r.provenance.iter().any(|l| l.contains("recovered a feasible pipeline")),
+        "{:?}",
+        r.provenance
+    );
+    match &r.plan.choice {
+        Choice::Pipeline { kind, recompute, .. } => assert!(
+            *recompute || *kind == ScheduleKind::TwoBW,
+            "recovered plan must use a memory-scalable mechanism, got {kind:?} rc={recompute}"
+        ),
+        Choice::DataParallel => panic!("expected a widened pipeline, got DP\n{:?}", r.provenance),
+    }
+}
