@@ -5,11 +5,14 @@
 //! trajectory (seed reference loop → prefix tables → prefix + monotone
 //! crossing search) on the 64-stage cut set, the phase-A balance-seed
 //! fan-out, the end-to-end exploration at jobs ∈ {1, 8} on a 64-stage
-//! synthetic cluster with M up to 512, and the elastic `replan` line —
+//! synthetic cluster with M up to 512, the elastic `replan` line —
 //! warm-started scenario replay vs cold re-exploration on a 16-device
-//! loss/degrade/straggler script, with migration bytes — emitting the
-//! measured perf trajectory to `BENCH_planner.json` at the repository
-//! root so later PRs can track regressions.
+//! loss/degrade/straggler script, with migration bytes — and the
+//! `migration_overlap` line: the challenger's state transfers placed
+//! into a 2BW drain's bubbles vs the drain-and-copy fallback on the same
+//! 16-device straggler, emitting the measured perf trajectory to
+//! `BENCH_planner.json` at the repository root so later PRs can track
+//! regressions.
 //!
 //! Run: `cargo bench --bench planner_scale`
 //! CI smoke (small model, one iteration): `BAPIPE_BENCH_QUICK=1 cargo
@@ -22,8 +25,9 @@ use bapipe::model::zoo;
 use bapipe::partition::interlayer::{
     dp_optimal_prefix, dp_optimal_rc, dp_optimal_reference, max_stage_time,
 };
+use bapipe::partition::memfit::MemoryModel;
 use bapipe::planner::space::permuted_view;
-use bapipe::planner::{self, elastic, Choice, EvalCache, Options, Outcome, SearchSpace};
+use bapipe::planner::{self, elastic, migrate, Choice, EvalCache, Options, Outcome, SearchSpace};
 use bapipe::profile::{analytical, RangeCost};
 use bapipe::schedule::{generators, ScheduleKind};
 use bapipe::sim::batch::FamilySim;
@@ -331,14 +335,14 @@ fn main() {
     // branch-and-bound, seeded order discovery, per-view cache salvage
     // threaded across events. Cold baseline: a from-scratch
     // `planner::explore` of each mutated cluster with the same options.
-    let rp_scenario = Scenario {
-        name: "loss-degrade-straggler".to_string(),
-        events: vec![
+    let rp_scenario = Scenario::scripted(
+        "loss-degrade-straggler",
+        vec![
             ClusterEvent::DeviceLoss { device: 3 },
             ClusterEvent::LinkDegrade { link: 0, bandwidth_factor: 0.5, latency_factor: 2.0 },
             ClusterEvent::Straggler { device: 1, slowdown: 1.5 },
         ],
-    };
+    );
     let rp_warm = bench("planner/replan warm 16-device scenario", aw, ai, || {
         let run = elastic::run_scenario(
             &het_net, &het_cl, &het_prof, &het_plan, &rp_scenario, &mk_het(8),
@@ -349,7 +353,7 @@ fn main() {
     let rp_cold = bench("planner/replan cold 16-device scenario", aw, ai, || {
         let (mut c, mut p) = (het_cl.clone(), het_prof.clone());
         for ev in &rp_scenario.events {
-            let mu = mutate::apply(&het_net, &c, &p, ev).unwrap();
+            let mu = mutate::apply(&het_net, &c, &p, &ev.event).unwrap();
             std::hint::black_box(
                 planner::explore(&het_net, &mu.cluster, &mu.profile, &mk_het(8)).epoch_time,
             );
@@ -374,6 +378,66 @@ fn main() {
         rp_cold.p50 * 1e3,
         bapipe::util::fmt_bytes(rp_migration_bytes),
         if rp_feasible { "feasible" } else { "NOT feasible" },
+    );
+
+    // ---- Migration overlap on the same 16-device GPU mix: a straggler
+    // makes the planner shift boundaries; the challenger's state
+    // transfers are placed into the incumbent's draining bubbles (a 2BW
+    // drain keeps an immutable shadow weight version, so mid-drain
+    // copies are sound) and compared against the stop-the-world
+    // drain-and-copy fallback the same schedule reports.
+    let mo_event = ClusterEvent::Straggler { device: 1, slowdown: 1.5 };
+    let mo_mu = mutate::apply(&het_net, &het_cl, &het_prof, &mo_event).unwrap();
+    let mo_scenario = Scenario::scripted("straggler", vec![mo_event.clone()]);
+    let mo_run = elastic::run_scenario(
+        &het_net, &het_cl, &het_prof, &het_plan, &mo_scenario, &mk_het(8),
+    )
+    .unwrap();
+    let mo_challenger = &mo_run.steps[0].plan;
+    // per-layer physical assignment of a pipeline plan: layer -> the
+    // chain slot hosting its stage (straggler mutations keep the device
+    // namespace, so old and new share it verbatim)
+    let stage_assignment = |plan: &planner::Plan| -> Vec<Option<usize>> {
+        match &plan.choice {
+            Choice::Pipeline { partition, .. } => {
+                let mut a = vec![None; het_net.len()];
+                for (s, w) in partition.bounds.windows(2).enumerate() {
+                    for l in w[0]..w[1] {
+                        a[l] = Some(plan.device_order[s]);
+                    }
+                }
+                a
+            }
+            Choice::DataParallel => unreachable!("consider_dp is off"),
+        }
+    };
+    let mo_spec = match &het_plan.choice {
+        Choice::Pipeline { m, micro, recompute, partition, .. } => {
+            let (vcl, vprof) =
+                permuted_view(&mo_mu.cluster, &mo_mu.profile, &het_plan.device_order);
+            planner::build_spec(
+                &vprof, &vcl, partition, ScheduleKind::TwoBW, *recompute, *micro, *m,
+            )
+        }
+        Choice::DataParallel => unreachable!("consider_dp is off"),
+    };
+    let mo_sched = migrate::schedule_migration(
+        &mo_mu.profile,
+        &MemoryModel::default(),
+        &mo_mu.cluster,
+        Some((&mo_spec, het_plan.device_order.as_slice())),
+        &stage_assignment(&het_plan),
+        &stage_assignment(mo_challenger),
+    );
+    println!(
+        "  migration overlap ({het_n}-device gpu-mixed, {}): {} moved, overlapped stall \
+         {:.3} ms vs drain-and-copy {:.3} ms (drain {:.1} ms, weights {} micro-batches stale)",
+        mo_event.describe(),
+        bapipe::util::fmt_bytes(mo_sched.bytes),
+        mo_sched.stall * 1e3,
+        mo_sched.drain_stall * 1e3,
+        mo_sched.drain_makespan * 1e3,
+        mo_sched.stale_weight_mb,
     );
 
     // ---- Emit the measured trajectory.
@@ -488,6 +552,21 @@ fn main() {
             ]),
         ),
         (
+            "migration_overlap",
+            obj(vec![
+                ("devices", Json::from(het_n)),
+                ("model", Json::from(het_model)),
+                ("event", Json::from(mo_event.describe())),
+                ("drain_schedule", Json::from(ScheduleKind::TwoBW.label())),
+                ("bytes", Json::Num(mo_sched.bytes as f64)),
+                ("overlapped", Json::from(mo_sched.overlapped)),
+                ("drain_makespan_ms", Json::Num(mo_sched.drain_makespan * 1e3)),
+                ("overlapped_stall_ms", Json::Num(mo_sched.stall * 1e3)),
+                ("drain_and_copy_stall_ms", Json::Num(mo_sched.drain_stall * 1e3)),
+                ("stale_weight_microbatches", Json::from(mo_sched.stale_weight_mb)),
+            ]),
+        ),
+        (
             "explore",
             obj(vec![
                 ("stages", Json::from(stages)),
@@ -553,6 +632,20 @@ fn main() {
     // work (incumbent-seeded pruning, salvaged phase-A cache, seeded
     // order portfolio).
     assert!(rp_feasible, "replan scenario left an event without a feasible pipeline");
+
+    // This PR's floor, structural rather than statistical (deterministic
+    // model time, so it holds in quick mode too): transfers overlapped
+    // into the 2BW drain can never stall longer than drain-and-copy —
+    // every slot starts no later than the drain makespan, so it ends no
+    // later than makespan + slowest transfer.
+    assert!(mo_sched.overlapped, "a 2BW drain must overlap the migration");
+    assert!(
+        mo_sched.stall <= mo_sched.drain_stall + 1e-12,
+        "overlapped stall {} exceeds the drain-and-copy fallback {} \
+         (measurements preserved in {out})",
+        mo_sched.stall,
+        mo_sched.drain_stall
+    );
     if rp_speedup < 1.0 {
         let msg = format!(
             "warm replan only {rp_speedup:.2}x over cold re-exploration (floor: 1x)"

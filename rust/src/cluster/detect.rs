@@ -1,0 +1,619 @@
+//! Online drift detection — the *live* half of the elastic loop.
+//!
+//! PR 8's replanner consumed hand-written scenario JSON. Real fleets
+//! produce timing *samples*: per-device step times and per-link transfer
+//! times, tick after tick ([`profile::measured`](crate::profile::measured)-
+//! shaped deltas). This module turns such a stream into
+//! [`ClusterEvent`]s without flapping:
+//!
+//! * **Robust baselines** — each channel's baseline is the median of its
+//!   first [`DetectorConfig::baseline_ticks`] samples; the live level is
+//!   an EWMA over a sliding-window median, so single outliers never move
+//!   the estimate.
+//! * **Hysteresis** — a channel enters the degraded state only after its
+//!   level/baseline ratio stays at or above
+//!   [`DetectorConfig::enter`] for [`DetectorConfig::min_dwell`]
+//!   consecutive ticks, and leaves it only after the ratio stays at or
+//!   below the lower [`DetectorConfig::exit`] for the same dwell —
+//!   bounded jitter below the band provably emits **zero** events, and a
+//!   persistent step change emits **exactly one**.
+//!
+//! The emitted factor is the windowed-median ratio at emission time (the
+//! dwell has passed, so the window sits fully on the new level): a
+//! device channel becomes [`ClusterEvent::Straggler`] with that
+//! slowdown, a link channel becomes [`ClusterEvent::LinkDegrade`] with
+//! `bandwidth_factor = 1/ratio` (transfer time on a chain link is
+//! bandwidth-dominated for activation-sized messages; latency is left
+//! untouched). [`Detection::to_scenario`] then feeds the events straight
+//! into `planner::elastic::run_scenario`, each carrying its epoch
+//! position (`tick × mb_per_tick`) so mid-epoch switch amortization
+//! applies — the detect → replan → migrate loop with no script anywhere.
+//!
+//! Everything here is plain sequential arithmetic on an explicit sample
+//! order: two runs over the same stream are bit-identical, and the
+//! events are independent of the planner's `--jobs` by construction.
+
+use crate::cluster::mutate::{ClusterEvent, Scenario, ScenarioEvent};
+use crate::util::json::Json;
+
+/// A typed sample-stream parse/validation error.
+#[derive(Debug, Clone, PartialEq)]
+pub enum DetectError {
+    /// A document-level field is missing or mistyped.
+    Doc(String),
+    /// The stream has no ticks, or a tick has no device channel.
+    Empty,
+    /// Tick `tick`'s channel counts differ from tick 0's.
+    ShapeMismatch {
+        /// Offending tick index.
+        tick: usize,
+        /// `(devices, links)` of tick 0.
+        expect: (usize, usize),
+        /// `(devices, links)` found.
+        got: (usize, usize),
+    },
+    /// A sample is NaN/non-finite, zero or negative — not a time.
+    BadSample {
+        /// Tick index of the offending sample.
+        tick: usize,
+        /// Channel, e.g. `device 3` or `link 0`.
+        channel: String,
+        /// The rejected value.
+        value: f64,
+    },
+    /// Fewer ticks than the detector needs to freeze a baseline.
+    ShortStream {
+        /// Ticks present.
+        ticks: usize,
+        /// Ticks required ([`DetectorConfig::baseline_ticks`]).
+        need: usize,
+    },
+    /// A [`DetectorConfig`] field is out of range.
+    BadConfig(String),
+}
+
+impl std::fmt::Display for DetectError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            DetectError::Doc(e) => write!(f, "{e}"),
+            DetectError::Empty => write!(f, "sample stream has no ticks (or no device channels)"),
+            DetectError::ShapeMismatch { tick, expect, got } => write!(
+                f,
+                "tick {tick}: {} device / {} link samples, but tick 0 has {} / {}",
+                got.0, got.1, expect.0, expect.1
+            ),
+            DetectError::BadSample { tick, channel, value } => write!(
+                f,
+                "tick {tick}, {channel}: sample {value} is not a positive finite time"
+            ),
+            DetectError::ShortStream { ticks, need } => write!(
+                f,
+                "stream has {ticks} ticks but the detector needs {need} to freeze a baseline"
+            ),
+            DetectError::BadConfig(e) => write!(f, "detector config: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for DetectError {}
+
+/// One measurement tick: every channel sampled once.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tick {
+    /// Per-device step time (s), chain order.
+    pub device_times: Vec<f64>,
+    /// Per-link transfer time (s), chain order (`devices - 1` entries on
+    /// a chain, but any fixed count is accepted).
+    pub link_times: Vec<f64>,
+}
+
+/// A deterministic, validated timing-sample stream — the detector input.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SampleStream {
+    /// Stream name (becomes the synthesized scenario's name).
+    pub name: String,
+    /// Micro-batches of training progress per tick; when present, a
+    /// detection at tick `t` carries epoch position `t × mb_per_tick`
+    /// into the scenario (mid-epoch switch amortization).
+    pub mb_per_tick: Option<u64>,
+    /// The samples, chronological.
+    pub ticks: Vec<Tick>,
+}
+
+impl SampleStream {
+    /// Parse **and validate** a sample-stream document:
+    /// `{"name": "...", "mb_per_tick": 4, "ticks": [{"device_times":
+    /// [...], "link_times": [...]}, ...]}` (`mb_per_tick` optional,
+    /// `link_times` may be an empty array). Every sample must be a
+    /// finite, strictly positive time, and every tick must have the same
+    /// channel counts as tick 0.
+    pub fn from_json(doc: &Json) -> Result<SampleStream, DetectError> {
+        let name = doc.req_str("name").map_err(|e| DetectError::Doc(e.to_string()))?.to_string();
+        let mb_per_tick = match doc.get("mb_per_tick") {
+            None | Some(Json::Null) => None,
+            Some(v) => Some(v.as_usize().map(|u| u as u64).ok_or_else(|| {
+                DetectError::Doc("`mb_per_tick` must be a non-negative integer".to_string())
+            })?),
+        };
+        let arr = doc.req_arr("ticks").map_err(|e| DetectError::Doc(e.to_string()))?;
+        let mut ticks = Vec::with_capacity(arr.len());
+        for (t, tick_doc) in arr.iter().enumerate() {
+            let series = |key: &str, label: &str| -> Result<Vec<f64>, DetectError> {
+                let vals = tick_doc
+                    .req_arr(key)
+                    .map_err(|e| DetectError::Doc(format!("tick {t}: {e}")))?;
+                let mut out = Vec::with_capacity(vals.len());
+                for (c, v) in vals.iter().enumerate() {
+                    let x = v.as_f64().ok_or_else(|| DetectError::BadSample {
+                        tick: t,
+                        channel: format!("{label} {c}"),
+                        value: f64::NAN,
+                    })?;
+                    if !(x.is_finite() && x > 0.0) {
+                        return Err(DetectError::BadSample {
+                            tick: t,
+                            channel: format!("{label} {c}"),
+                            value: x,
+                        });
+                    }
+                    out.push(x);
+                }
+                Ok(out)
+            };
+            let device_times = series("device_times", "device")?;
+            let link_times = series("link_times", "link")?;
+            ticks.push(Tick { device_times, link_times });
+        }
+        let stream = SampleStream { name, mb_per_tick, ticks };
+        stream.validate_shape()?;
+        Ok(stream)
+    }
+
+    /// Shape invariants shared by [`Self::from_json`] and
+    /// programmatically built streams (which [`detect`] re-checks).
+    pub fn validate_shape(&self) -> Result<(), DetectError> {
+        let first = self.ticks.first().ok_or(DetectError::Empty)?;
+        if first.device_times.is_empty() {
+            return Err(DetectError::Empty);
+        }
+        let expect = (first.device_times.len(), first.link_times.len());
+        for (t, tick) in self.ticks.iter().enumerate() {
+            let got = (tick.device_times.len(), tick.link_times.len());
+            if got != expect {
+                return Err(DetectError::ShapeMismatch { tick: t, expect, got });
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Hysteresis thresholds and smoothing of the drift detector.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DetectorConfig {
+    /// Sliding-window length of the per-tick median (outlier rejection).
+    pub window: usize,
+    /// EWMA weight of the newest window median (`0 < α <= 1`).
+    pub ewma_alpha: f64,
+    /// Enter the degraded state at `level/baseline >= enter` (> 1).
+    pub enter: f64,
+    /// Leave it again at `level/baseline <= exit` (`1 <= exit < enter` —
+    /// the gap is the hysteresis band that kills flapping).
+    pub exit: f64,
+    /// Consecutive ticks a crossing must persist before it counts.
+    pub min_dwell: usize,
+    /// Ticks whose median freezes the per-channel baseline.
+    pub baseline_ticks: usize,
+}
+
+impl Default for DetectorConfig {
+    fn default() -> DetectorConfig {
+        DetectorConfig {
+            window: 5,
+            ewma_alpha: 0.3,
+            enter: 1.25,
+            exit: 1.1,
+            min_dwell: 3,
+            baseline_ticks: 4,
+        }
+    }
+}
+
+impl DetectorConfig {
+    /// Range-check every field.
+    pub fn validate(&self) -> Result<(), DetectError> {
+        if self.window == 0 {
+            return Err(DetectError::BadConfig("window must be >= 1".to_string()));
+        }
+        if !(self.ewma_alpha.is_finite() && self.ewma_alpha > 0.0 && self.ewma_alpha <= 1.0) {
+            return Err(DetectError::BadConfig(format!(
+                "ewma_alpha {} must be in (0, 1]",
+                self.ewma_alpha
+            )));
+        }
+        if !(self.enter.is_finite() && self.enter > 1.0) {
+            return Err(DetectError::BadConfig(format!("enter {} must be > 1", self.enter)));
+        }
+        if !(self.exit.is_finite() && self.exit >= 1.0 && self.exit < self.enter) {
+            return Err(DetectError::BadConfig(format!(
+                "exit {} must satisfy 1 <= exit < enter ({})",
+                self.exit, self.enter
+            )));
+        }
+        if self.min_dwell == 0 {
+            return Err(DetectError::BadConfig("min_dwell must be >= 1".to_string()));
+        }
+        if self.baseline_ticks == 0 {
+            return Err(DetectError::BadConfig("baseline_ticks must be >= 1".to_string()));
+        }
+        Ok(())
+    }
+}
+
+/// One synthesized event, tagged with the tick that triggered it.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DetectedEvent {
+    /// Tick index at which the dwell completed.
+    pub tick: usize,
+    /// The synthesized cluster event.
+    pub event: ClusterEvent,
+}
+
+/// Detector output: events in tick order (device channels before link
+/// channels within one tick), plus human-readable notes.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Detection {
+    /// Synthesized events.
+    pub events: Vec<DetectedEvent>,
+    /// Baselines, recoveries and other provenance, one line each.
+    pub notes: Vec<String>,
+}
+
+impl Detection {
+    /// Package the detections as a [`Scenario`] for
+    /// `planner::elastic::run_scenario` — the live replacement for a
+    /// scripted scenario file. With [`SampleStream::mb_per_tick`] set,
+    /// each event carries its epoch position.
+    pub fn to_scenario(&self, stream: &SampleStream) -> Scenario {
+        Scenario {
+            name: stream.name.clone(),
+            events: self
+                .events
+                .iter()
+                .map(|d| ScenarioEvent {
+                    event: d.event.clone(),
+                    at_mb: stream.mb_per_tick.map(|k| k * d.tick as u64),
+                })
+                .collect(),
+        }
+    }
+}
+
+/// Median of a non-empty slice (sorted copy; ties resolve to the upper
+/// middle, matching `profile::measured`'s `len/2` pick).
+fn median(xs: &[f64]) -> f64 {
+    let mut s = xs.to_vec();
+    s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    s[s.len() / 2]
+}
+
+/// Per-channel hysteresis state machine over one sample series; returns
+/// `(tick, factor)` per emission plus recovery notes.
+fn channel_drift(
+    samples: &[f64],
+    cfg: &DetectorConfig,
+    label: &str,
+    notes: &mut Vec<String>,
+) -> Vec<(usize, f64)> {
+    let baseline = median(&samples[..cfg.baseline_ticks.min(samples.len())]);
+    let mut ewma = baseline;
+    let mut degraded = false;
+    let mut dwell = 0usize;
+    let mut out = Vec::new();
+    for (i, _) in samples.iter().enumerate() {
+        let lo = (i + 1).saturating_sub(cfg.window);
+        let med = median(&samples[lo..=i]);
+        ewma = cfg.ewma_alpha * med + (1.0 - cfg.ewma_alpha) * ewma;
+        if i < cfg.baseline_ticks {
+            // Baseline window: the state machine is not armed yet.
+            continue;
+        }
+        let ratio = ewma / baseline;
+        if !degraded {
+            if ratio >= cfg.enter {
+                dwell += 1;
+                if dwell >= cfg.min_dwell {
+                    degraded = true;
+                    dwell = 0;
+                    // Emit the *windowed-median* ratio: after the dwell the
+                    // window sits on the new level, so this is the step
+                    // size itself, not the EWMA's lagged estimate.
+                    out.push((i, med / baseline));
+                }
+            } else {
+                dwell = 0;
+            }
+        } else if ratio <= cfg.exit {
+            dwell += 1;
+            if dwell >= cfg.min_dwell {
+                degraded = false;
+                dwell = 0;
+                notes.push(format!(
+                    "{label}: recovered at tick {i} (ratio {ratio:.3}); re-arming — a further \
+                     excursion would emit again"
+                ));
+            }
+        } else {
+            dwell = 0;
+        }
+    }
+    out
+}
+
+/// Run the drift detector over a validated sample stream.
+///
+/// Device channels synthesize [`ClusterEvent::Straggler`] (slowdown =
+/// median ratio), link channels [`ClusterEvent::LinkDegrade`]
+/// (`bandwidth_factor = 1/ratio`). One event per excursion per channel —
+/// hysteresis plus dwell guarantee that jitter strictly inside the
+/// `exit..enter` band never emits, and the notes record baselines and
+/// recoveries. Deterministic: same stream + config → bit-identical
+/// output, independent of any planner parallelism.
+pub fn detect(stream: &SampleStream, cfg: &DetectorConfig) -> Result<Detection, DetectError> {
+    cfg.validate()?;
+    stream.validate_shape()?;
+    let t = stream.ticks.len();
+    if t < cfg.baseline_ticks {
+        return Err(DetectError::ShortStream { ticks: t, need: cfg.baseline_ticks });
+    }
+    let n_dev = stream.ticks[0].device_times.len();
+    let n_link = stream.ticks[0].link_times.len();
+    let mut notes = vec![format!(
+        "detector: {t} ticks, {n_dev} device + {n_link} link channels; enter x{}, exit x{}, \
+         dwell {}, window {}",
+        cfg.enter, cfg.exit, cfg.min_dwell, cfg.window
+    )];
+    // (tick, channel-kind-order, event) — sorted at the end so emissions
+    // interleave chronologically across channels.
+    let mut tagged: Vec<(usize, usize, ClusterEvent)> = Vec::new();
+    for d in 0..n_dev {
+        let series: Vec<f64> = stream.ticks.iter().map(|k| k.device_times[d]).collect();
+        for (tick, ratio) in channel_drift(&series, cfg, &format!("device {d}"), &mut notes) {
+            notes.push(format!(
+                "device {d}: straggler x{ratio:.3} confirmed at tick {tick} (dwell complete)"
+            ));
+            tagged.push((tick, d, ClusterEvent::Straggler { device: d, slowdown: ratio }));
+        }
+    }
+    for l in 0..n_link {
+        let series: Vec<f64> = stream.ticks.iter().map(|k| k.link_times[l]).collect();
+        for (tick, ratio) in channel_drift(&series, cfg, &format!("link {l}"), &mut notes) {
+            notes.push(format!(
+                "link {l}: transfer time x{ratio:.3} confirmed at tick {tick} — bandwidth \
+                 factor {:.3}",
+                1.0 / ratio
+            ));
+            tagged.push((
+                tick,
+                n_dev + l,
+                ClusterEvent::LinkDegrade {
+                    link: l,
+                    bandwidth_factor: 1.0 / ratio,
+                    latency_factor: 1.0,
+                },
+            ));
+        }
+    }
+    tagged.sort_by_key(|&(tick, chan, _)| (tick, chan));
+    let events = tagged.into_iter().map(|(tick, _, event)| DetectedEvent { tick, event }).collect();
+    Ok(Detection { events, notes })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{check, ensure, Config};
+
+    fn stream(n_dev: usize, n_link: usize, ticks: usize, f: impl Fn(usize, usize, bool) -> f64) -> SampleStream {
+        SampleStream {
+            name: "synthetic".to_string(),
+            mb_per_tick: None,
+            ticks: (0..ticks)
+                .map(|t| Tick {
+                    device_times: (0..n_dev).map(|c| f(t, c, true)).collect(),
+                    link_times: (0..n_link).map(|c| f(t, c, false)).collect(),
+                })
+                .collect(),
+        }
+    }
+
+    #[test]
+    fn parse_validates_samples_and_shape() {
+        let ok = Json::parse(
+            r#"{"name":"rack","mb_per_tick":4,"ticks":[
+                {"device_times":[1.0e-3,2.0e-3],"link_times":[1.0e-4]},
+                {"device_times":[1.1e-3,2.1e-3],"link_times":[1.1e-4]}]}"#,
+        )
+        .unwrap();
+        let s = SampleStream::from_json(&ok).unwrap();
+        assert_eq!(s.ticks.len(), 2);
+        assert_eq!(s.mb_per_tick, Some(4));
+
+        // zero, negative and non-finite samples are rejected with position
+        let zero = Json::parse(
+            r#"{"name":"x","ticks":[{"device_times":[0.0],"link_times":[]}]}"#,
+        )
+        .unwrap();
+        assert!(matches!(
+            SampleStream::from_json(&zero),
+            Err(DetectError::BadSample { tick: 0, .. })
+        ));
+        let neg = Json::parse(
+            r#"{"name":"x","ticks":[{"device_times":[1e-3],"link_times":[-2e-4]}]}"#,
+        )
+        .unwrap();
+        assert!(matches!(
+            SampleStream::from_json(&neg),
+            Err(DetectError::BadSample { tick: 0, .. })
+        ));
+        // programmatic NaN cannot sneak through either
+        use crate::util::json::obj;
+        let nan = obj(vec![
+            ("name", "x".into()),
+            (
+                "ticks",
+                Json::Arr(vec![obj(vec![
+                    ("device_times", Json::Arr(vec![f64::NAN.into()])),
+                    ("link_times", Json::Arr(vec![])),
+                ])]),
+            ),
+        ]);
+        assert!(matches!(
+            SampleStream::from_json(&nan),
+            Err(DetectError::BadSample { tick: 0, .. })
+        ));
+        // ragged tick widths are a shape error
+        let ragged = Json::parse(
+            r#"{"name":"x","ticks":[
+                {"device_times":[1e-3,1e-3],"link_times":[1e-4]},
+                {"device_times":[1e-3],"link_times":[1e-4]}]}"#,
+        )
+        .unwrap();
+        assert!(matches!(
+            SampleStream::from_json(&ragged),
+            Err(DetectError::ShapeMismatch { tick: 1, .. })
+        ));
+    }
+
+    #[test]
+    fn short_stream_and_bad_config_rejected() {
+        let s = stream(2, 1, 2, |_, c, _| 1e-3 * (c + 1) as f64);
+        assert!(matches!(
+            detect(&s, &DetectorConfig::default()),
+            Err(DetectError::ShortStream { ticks: 2, need: 4 })
+        ));
+        let bad = DetectorConfig { exit: 1.5, enter: 1.25, ..DetectorConfig::default() };
+        let s2 = stream(1, 0, 10, |_, _, _| 1e-3);
+        assert!(matches!(detect(&s2, &bad), Err(DetectError::BadConfig(_))));
+    }
+
+    /// Satellite (c), part 1: constant-rate streams with bounded jitter
+    /// strictly below the hysteresis band emit zero events — for any
+    /// channel count, length and jitter pattern.
+    #[test]
+    fn prop_jitter_below_band_emits_nothing() {
+        check(
+            &Config { cases: 64, ..Config::default() },
+            |g| {
+                let n_dev = g.usize_in(1, 4);
+                let n_link = n_dev - 1;
+                let ticks = g.usize_in(8, 40);
+                let jit: Vec<f64> =
+                    (0..ticks * (n_dev + n_link)).map(|_| g.f64_in(-0.05, 0.05)).collect();
+                (n_dev, n_link, ticks, jit)
+            },
+            |(n_dev, n_link, ticks, jit)| {
+                let nd = *n_dev;
+                let s = stream(nd, *n_link, *ticks, |t, c, is_dev| {
+                    let chan = if is_dev { c } else { nd + c };
+                    let base = 1e-3 * (chan + 1) as f64;
+                    base * (1.0 + jit[t * (nd + n_link) + chan])
+                });
+                let d = detect(&s, &DetectorConfig::default()).unwrap();
+                ensure(
+                    d.events.is_empty(),
+                    format!("jitter below the band must not flap: {:?}", d.events),
+                )
+            },
+        );
+    }
+
+    /// Satellite (c), part 2: a persistent step change emits exactly one
+    /// `Straggler` on exactly the stepped device — no flapping — and the
+    /// detector is bit-identical across runs.
+    #[test]
+    fn prop_step_change_emits_exactly_one_event() {
+        check(
+            &Config { cases: 64, ..Config::default() },
+            |g| {
+                let n_dev = g.usize_in(2, 5);
+                let culprit = g.usize_in(0, n_dev - 1);
+                let step_at = g.usize_in(5, 12);
+                let tail = g.usize_in(15, 30);
+                (n_dev, culprit, step_at, tail)
+            },
+            |&(n_dev, culprit, step_at, tail)| {
+                let s = stream(n_dev, n_dev - 1, step_at + tail, |t, c, is_dev| {
+                    let base = 1e-3 * (c + 1) as f64 * if is_dev { 1.0 } else { 0.1 };
+                    if is_dev && c == culprit && t >= step_at {
+                        base * 1.6
+                    } else {
+                        base
+                    }
+                });
+                let a = detect(&s, &DetectorConfig::default()).unwrap();
+                let b = detect(&s, &DetectorConfig::default()).unwrap();
+                ensure(a == b, "detector must be deterministic".to_string())?;
+                ensure(
+                    a.events.len() == 1,
+                    format!("exactly one event, got {:?}", a.events),
+                )?;
+                match &a.events[0].event {
+                    ClusterEvent::Straggler { device, slowdown } => {
+                        ensure(*device == culprit, format!("wrong device {device}"))?;
+                        ensure(
+                            (slowdown - 1.6).abs() < 1e-9,
+                            format!("median ratio should be the step size, got {slowdown}"),
+                        )
+                    }
+                    other => ensure(false, format!("expected a straggler, got {other:?}")),
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn link_step_becomes_bandwidth_degrade_with_position() {
+        let s = SampleStream {
+            mb_per_tick: Some(4),
+            ..stream(2, 1, 30, |t, _, is_dev| {
+                if is_dev {
+                    1e-3
+                } else if t >= 10 {
+                    3e-4
+                } else {
+                    1.5e-4
+                }
+            })
+        };
+        let d = detect(&s, &DetectorConfig::default()).unwrap();
+        assert_eq!(d.events.len(), 1, "{:?}", d.events);
+        let ev = &d.events[0];
+        match &ev.event {
+            ClusterEvent::LinkDegrade { link, bandwidth_factor, latency_factor } => {
+                assert_eq!(*link, 0);
+                assert!((bandwidth_factor - 0.5).abs() < 1e-9, "{bandwidth_factor}");
+                assert_eq!(*latency_factor, 1.0);
+            }
+            other => panic!("expected link-degrade, got {other:?}"),
+        }
+        // the scenario carries the epoch position tick × mb_per_tick
+        let sc = d.to_scenario(&s);
+        assert_eq!(sc.name, "synthetic");
+        assert_eq!(sc.events[0].at_mb, Some(4 * ev.tick as u64));
+    }
+
+    #[test]
+    fn recovery_rearms_and_second_excursion_emits_again() {
+        // up at 8, down at 20, up again at 32: two excursions, two events
+        let s = stream(1, 0, 50, |t, _, _| {
+            if (8..20).contains(&t) || t >= 32 {
+                1.8e-3
+            } else {
+                1e-3
+            }
+        });
+        let d = detect(&s, &DetectorConfig::default()).unwrap();
+        assert_eq!(d.events.len(), 2, "{:?}", d.events);
+        assert!(d.notes.iter().any(|n| n.contains("recovered")), "{:?}", d.notes);
+    }
+}

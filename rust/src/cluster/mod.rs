@@ -3,8 +3,11 @@
 //! targets ([`topology`]), presets for the paper's testbeds
 //! ([`presets`]: NVIDIA V100, Xilinx VCU118/VCU129, CPU host), and the
 //! fault-injection mutation layer ([`mutate`]: device loss/join, link
-//! degradation, stragglers — the elastic-replanning event stream).
+//! degradation, stragglers — the elastic-replanning event stream), and
+//! the online drift detector ([`detect`]) that synthesizes those events
+//! from live timing samples instead of a script.
 
+pub mod detect;
 pub mod device;
 pub mod link;
 pub mod mutate;

@@ -10,6 +10,16 @@
 //! `planner::elastic` needs to restrict an incumbent device order to the
 //! survivors when warm-starting a replan.
 //!
+//! Scenario parsing is *validating*: factors that are NaN/non-finite,
+//! zero or negative, duplicated device losses, and out-of-chronological-
+//! order `at_mb` positions are rejected at parse time with the typed
+//! [`ScenarioError`]/[`EventError`] — a silently mis-mutated cluster is
+//! strictly worse than a refused scenario. Each event may carry an
+//! optional `"at_mb"` position (micro-batches of the incumbent's epoch
+//! already completed when the event fired), which
+//! `planner::elastic::run_scenario` uses to amortize a mid-epoch plan
+//! switch over only the *remaining* micro-batches.
+//!
 //! Invariants preserved by every event:
 //! * the chain shape (`links.len() == devices.len() - 1`) — an interior
 //!   device loss *merges* its two adjacent links (bandwidth = min,
@@ -23,6 +33,125 @@ use crate::cluster::{Cluster, Device, Link};
 use crate::model::Network;
 use crate::profile::{analytical, Profile};
 use crate::util::json::Json;
+
+/// A typed parse/validation error for one scenario event object.
+#[derive(Debug, Clone, PartialEq)]
+pub enum EventError {
+    /// A required field is missing or has the wrong JSON type.
+    Field(String),
+    /// The `event` discriminator names no known kind.
+    UnknownKind(String),
+    /// A numeric factor is NaN/non-finite, or outside its valid range
+    /// (slowdowns and bandwidth factors must be strictly positive,
+    /// latency factors non-negative).
+    BadFactor {
+        /// Field name of the offending factor.
+        field: &'static str,
+        /// The rejected value.
+        value: f64,
+    },
+    /// The optional `at_mb` position is not a non-negative integer.
+    BadPosition(String),
+}
+
+impl std::fmt::Display for EventError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            EventError::Field(e) => write!(f, "{e}"),
+            EventError::UnknownKind(k) => write!(
+                f,
+                "unknown event `{k}` (expected device-loss | device-join | \
+                 link-degrade | straggler)"
+            ),
+            EventError::BadFactor { field, value } => write!(
+                f,
+                "`{field}` = {value} is invalid: factors must be finite \
+                 (slowdown/bandwidth strictly positive, latency >= 0)"
+            ),
+            EventError::BadPosition(e) => {
+                write!(f, "`at_mb` must be a non-negative integer ({e})")
+            }
+        }
+    }
+}
+
+impl std::error::Error for EventError {}
+
+/// A typed scenario-document parse/validation error
+/// ([`Scenario::from_json`]).
+#[derive(Debug, Clone, PartialEq)]
+pub enum ScenarioError {
+    /// A scenario-level field is missing or mistyped.
+    Doc(String),
+    /// One event failed to parse or validate.
+    Event {
+        /// Index into the `events` array.
+        index: usize,
+        /// The underlying event error.
+        error: EventError,
+    },
+    /// The same `device-loss` appears twice at the same position — a
+    /// copy-paste error, not a plan. Indices shift after each loss, so
+    /// repeated losses of a recurring index are legitimate only when the
+    /// events carry distinct `at_mb` positions.
+    DuplicateLoss {
+        /// Device index named by both loss events.
+        device: usize,
+        /// Index of the first occurrence in the `events` array.
+        first: usize,
+        /// Index of the duplicate.
+        second: usize,
+    },
+    /// `at_mb` positions must be non-decreasing in array order — events
+    /// replay chronologically.
+    OutOfOrder {
+        /// Index of the offending event.
+        index: usize,
+        /// Its (earlier) position.
+        at_mb: u64,
+        /// The largest position seen before it.
+        prev: u64,
+    },
+}
+
+impl std::fmt::Display for ScenarioError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ScenarioError::Doc(e) => write!(f, "{e}"),
+            ScenarioError::Event { index, error } => write!(f, "event {index}: {error}"),
+            ScenarioError::DuplicateLoss { device, first, second } => write!(
+                f,
+                "event {second}: duplicate device-loss @{device} (already event {first}); \
+                 repeated losses of a shifting index must carry distinct at_mb positions"
+            ),
+            ScenarioError::OutOfOrder { index, at_mb, prev } => write!(
+                f,
+                "event {index}: at_mb {at_mb} precedes the {prev} of an earlier event — \
+                 scenario events must be chronological"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for ScenarioError {}
+
+/// `Ok(v)` iff `v` is finite and strictly positive.
+fn positive(field: &'static str, v: f64) -> Result<f64, EventError> {
+    if v.is_finite() && v > 0.0 {
+        Ok(v)
+    } else {
+        Err(EventError::BadFactor { field, value: v })
+    }
+}
+
+/// `Ok(v)` iff `v` is finite and non-negative.
+fn non_negative(field: &'static str, v: f64) -> Result<f64, EventError> {
+    if v.is_finite() && v >= 0.0 {
+        Ok(v)
+    } else {
+        Err(EventError::BadFactor { field, value: v })
+    }
+}
 
 /// One mutation of the cluster, in the order fields are read from the
 /// scenario JSON.
@@ -84,32 +213,47 @@ impl ClusterEvent {
         }
     }
 
-    /// Parse one event object (`{"event": "...", ...}`).
-    pub fn from_json(doc: &Json) -> Result<ClusterEvent, String> {
-        let kind = doc.req_str("event").map_err(|e| e.to_string())?;
+    /// Parse **and validate** one event object (`{"event": "...", ...}`).
+    /// Factors that are NaN/non-finite, zero or negative where positivity
+    /// is required are rejected here, not at apply time — a scenario file
+    /// fails loudly before it can mis-mutate anything.
+    pub fn from_json(doc: &Json) -> Result<ClusterEvent, EventError> {
+        let field = |e: crate::util::json::JsonError| EventError::Field(e.to_string());
+        let kind = doc.req_str("event").map_err(field)?;
         match kind {
-            "device-loss" => Ok(ClusterEvent::DeviceLoss {
-                device: doc.req_usize("device").map_err(|e| e.to_string())?,
-            }),
+            "device-loss" => {
+                Ok(ClusterEvent::DeviceLoss { device: doc.req_usize("device").map_err(field)? })
+            }
             "device-join" => Ok(ClusterEvent::DeviceJoin {
-                device_name: doc.req_str("device_name").map_err(|e| e.to_string())?.to_string(),
-                position: doc.req_usize("position").map_err(|e| e.to_string())?,
-                link_bandwidth: doc.get("link_bandwidth").and_then(Json::as_f64),
-                link_latency: doc.get("link_latency").and_then(Json::as_f64),
+                device_name: doc.req_str("device_name").map_err(field)?.to_string(),
+                position: doc.req_usize("position").map_err(field)?,
+                link_bandwidth: doc
+                    .get("link_bandwidth")
+                    .and_then(Json::as_f64)
+                    .map(|v| positive("link_bandwidth", v))
+                    .transpose()?,
+                link_latency: doc
+                    .get("link_latency")
+                    .and_then(Json::as_f64)
+                    .map(|v| non_negative("link_latency", v))
+                    .transpose()?,
             }),
             "link-degrade" => Ok(ClusterEvent::LinkDegrade {
-                link: doc.req_usize("link").map_err(|e| e.to_string())?,
-                bandwidth_factor: doc.req_f64("bandwidth_factor").map_err(|e| e.to_string())?,
-                latency_factor: doc.req_f64("latency_factor").map_err(|e| e.to_string())?,
+                link: doc.req_usize("link").map_err(field)?,
+                bandwidth_factor: positive(
+                    "bandwidth_factor",
+                    doc.req_f64("bandwidth_factor").map_err(field)?,
+                )?,
+                latency_factor: non_negative(
+                    "latency_factor",
+                    doc.req_f64("latency_factor").map_err(field)?,
+                )?,
             }),
             "straggler" => Ok(ClusterEvent::Straggler {
-                device: doc.req_usize("device").map_err(|e| e.to_string())?,
-                slowdown: doc.req_f64("slowdown").map_err(|e| e.to_string())?,
+                device: doc.req_usize("device").map_err(field)?,
+                slowdown: positive("slowdown", doc.req_f64("slowdown").map_err(field)?)?,
             }),
-            other => Err(format!(
-                "unknown event `{other}` (expected device-loss | device-join | \
-                 link-degrade | straggler)"
-            )),
+            other => Err(EventError::UnknownKind(other.to_string())),
         }
     }
 
@@ -149,6 +293,29 @@ impl ClusterEvent {
     }
 }
 
+/// One scenario entry: a [`ClusterEvent`] plus the optional epoch
+/// position that drives mid-epoch switch amortization in
+/// `planner::elastic`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ScenarioEvent {
+    /// The cluster mutation.
+    pub event: ClusterEvent,
+    /// Micro-batches of the incumbent's epoch already completed when the
+    /// event fired. `None` replans at the epoch boundary (full-epoch
+    /// amortization — the scripted-scenario behavior).
+    pub at_mb: Option<u64>,
+}
+
+impl ScenarioEvent {
+    /// One-line description: the event, plus its position when present.
+    pub fn describe(&self) -> String {
+        match self.at_mb {
+            Some(p) => format!("{} at micro-batch {p}", self.event.describe()),
+            None => self.event.describe(),
+        }
+    }
+}
+
 /// A named, ordered fault-injection scenario: the event stream the
 /// elastic replanner replays against an incumbent plan.
 #[derive(Debug, Clone, PartialEq)]
@@ -156,28 +323,83 @@ pub struct Scenario {
     /// Scenario name (for reports and bench lines).
     pub name: String,
     /// Events, applied in order.
-    pub events: Vec<ClusterEvent>,
+    pub events: Vec<ScenarioEvent>,
 }
 
 impl Scenario {
-    /// Parse a scenario document:
-    /// `{"name": "...", "events": [{"event": "device-loss", ...}, ...]}`.
-    pub fn from_json(doc: &Json) -> Result<Scenario, String> {
-        let name = doc.req_str("name").map_err(|e| e.to_string())?.to_string();
-        let mut events = Vec::new();
-        for (i, e) in doc.req_arr("events").map_err(|e| e.to_string())?.iter().enumerate() {
-            events.push(
-                ClusterEvent::from_json(e).map_err(|err| format!("event {i}: {err}"))?,
-            );
+    /// Build a scenario from bare events with no positions — the scripted
+    /// form: every replan amortizes a full epoch.
+    pub fn scripted(name: &str, events: Vec<ClusterEvent>) -> Scenario {
+        Scenario {
+            name: name.to_string(),
+            events: events.into_iter().map(|event| ScenarioEvent { event, at_mb: None }).collect(),
+        }
+    }
+
+    /// Parse **and validate** a scenario document:
+    /// `{"name": "...", "events": [{"event": "device-loss", "device": 3,
+    /// "at_mb": 12}, ...]}` (`at_mb` optional). Beyond per-event factor
+    /// validation, two scenario-level rejections apply: a `device-loss`
+    /// repeated at the same device index *and* position is a duplicate
+    /// ([`ScenarioError::DuplicateLoss`]), and `at_mb` positions must be
+    /// non-decreasing ([`ScenarioError::OutOfOrder`]).
+    pub fn from_json(doc: &Json) -> Result<Scenario, ScenarioError> {
+        let name = doc.req_str("name").map_err(|e| ScenarioError::Doc(e.to_string()))?.to_string();
+        let arr = doc.req_arr("events").map_err(|e| ScenarioError::Doc(e.to_string()))?;
+        let mut events: Vec<ScenarioEvent> = Vec::new();
+        let mut last_pos: Option<u64> = None;
+        // (device, at_mb, event index) of every loss seen so far
+        let mut losses: Vec<(usize, Option<u64>, usize)> = Vec::new();
+        for (i, e) in arr.iter().enumerate() {
+            let event = ClusterEvent::from_json(e)
+                .map_err(|error| ScenarioError::Event { index: i, error })?;
+            let at_mb = match e.get("at_mb") {
+                None | Some(Json::Null) => None,
+                Some(v) => Some(v.as_usize().map(|u| u as u64).ok_or_else(|| {
+                    ScenarioError::Event {
+                        index: i,
+                        error: EventError::BadPosition(format!("got {v:?}")),
+                    }
+                })?),
+            };
+            if let Some(p) = at_mb {
+                if let Some(prev) = last_pos {
+                    if p < prev {
+                        return Err(ScenarioError::OutOfOrder { index: i, at_mb: p, prev });
+                    }
+                }
+                last_pos = Some(p);
+            }
+            if let ClusterEvent::DeviceLoss { device } = event {
+                if let Some(&(_, _, first)) =
+                    losses.iter().find(|&&(d, a, _)| d == device && a == at_mb)
+                {
+                    return Err(ScenarioError::DuplicateLoss { device, first, second: i });
+                }
+                losses.push((device, at_mb, i));
+            }
+            events.push(ScenarioEvent { event, at_mb });
         }
         Ok(Scenario { name, events })
     }
 
-    /// Serialize to the scenario-JSON document.
+    /// Serialize to the scenario-JSON document (`at_mb` emitted only when
+    /// present — byte-identical round-trip for positionless scenarios).
     pub fn to_json(&self) -> Json {
+        let events = self
+            .events
+            .iter()
+            .map(|e| {
+                let mut j = e.event.to_json();
+                if let (Some(p), Json::Obj(map)) = (e.at_mb, &mut j) {
+                    map.insert("at_mb".to_string(), Json::from(p as usize));
+                }
+                j
+            })
+            .collect();
         crate::util::json::obj(vec![
             ("name", self.name.clone().into()),
-            ("events", Json::Arr(self.events.iter().map(ClusterEvent::to_json).collect())),
+            ("events", Json::Arr(events)),
         ])
     }
 }
@@ -280,7 +502,9 @@ pub fn apply(
             }
             let new_link = match (link_bandwidth, link_latency) {
                 (Some(b), Some(l)) => {
-                    if *b <= 0.0 || *l < 0.0 {
+                    // NaN compares false against every threshold, so the
+                    // range checks must be phrased positively.
+                    if !(b.is_finite() && *b > 0.0 && l.is_finite() && *l >= 0.0) {
                         return Err(format!(
                             "device-join link parameters invalid (bandwidth {b}, latency {l})"
                         ));
@@ -331,7 +555,13 @@ pub fn apply(
                     cluster.links.len()
                 ));
             }
-            if *bandwidth_factor <= 0.0 || *latency_factor < 0.0 {
+            // Phrased positively so NaN (which compares false both ways)
+            // cannot slip through and poison every downstream transfer time.
+            if !(bandwidth_factor.is_finite()
+                && *bandwidth_factor > 0.0
+                && latency_factor.is_finite()
+                && *latency_factor >= 0.0)
+            {
                 return Err(format!(
                     "link-degrade factors invalid (bandwidth x{bandwidth_factor}, \
                      latency x{latency_factor})"
@@ -354,8 +584,10 @@ pub fn apply(
             if d >= n {
                 return Err(format!("straggler index {d} out of range (cluster has {n})"));
             }
-            if *slowdown <= 0.0 {
-                return Err(format!("straggler slowdown must be positive (got {slowdown})"));
+            if !(slowdown.is_finite() && *slowdown > 0.0) {
+                return Err(format!(
+                    "straggler slowdown must be finite and positive (got {slowdown})"
+                ));
             }
             let mut per_device = profile.per_device.clone();
             for row in &mut per_device[d] {
@@ -513,9 +745,9 @@ mod tests {
 
     #[test]
     fn scenario_json_roundtrip() {
-        let s = Scenario {
-            name: "loss-degrade-straggle".into(),
-            events: vec![
+        let mut s = Scenario::scripted(
+            "loss-degrade-straggle",
+            vec![
                 ClusterEvent::DeviceLoss { device: 3 },
                 ClusterEvent::DeviceJoin {
                     device_name: "V100".into(),
@@ -526,7 +758,9 @@ mod tests {
                 ClusterEvent::LinkDegrade { link: 1, bandwidth_factor: 0.5, latency_factor: 2.0 },
                 ClusterEvent::Straggler { device: 0, slowdown: 1.5 },
             ],
-        };
+        );
+        // positions survive the round-trip too
+        s.events[3].at_mb = Some(12);
         let doc = s.to_json();
         let back = Scenario::from_json(&doc).unwrap();
         assert_eq!(s, back);
@@ -538,6 +772,144 @@ mod tests {
             r#"{"name":"x","events":[{"event":"meteor-strike","device":0}]}"#,
         )
         .unwrap();
-        assert!(Scenario::from_json(&bad).unwrap_err().contains("event 0"));
+        assert!(Scenario::from_json(&bad).unwrap_err().to_string().contains("event 0"));
+    }
+
+    /// Satellite hardening: every malformed-scenario class is rejected at
+    /// *parse* time with the matching typed error — nothing reaches
+    /// `apply`.
+    #[test]
+    fn parse_rejects_bad_factors() {
+        // zero straggler slowdown
+        let zero = Json::parse(
+            r#"{"name":"x","events":[{"event":"straggler","device":0,"slowdown":0.0}]}"#,
+        )
+        .unwrap();
+        assert!(matches!(
+            Scenario::from_json(&zero),
+            Err(ScenarioError::Event { index: 0, error: EventError::BadFactor { field: "slowdown", .. } })
+        ));
+        // negative bandwidth factor
+        let neg = Json::parse(
+            r#"{"name":"x","events":[{"event":"link-degrade","link":0,
+                "bandwidth_factor":-0.5,"latency_factor":1.0}]}"#,
+        )
+        .unwrap();
+        assert!(matches!(
+            Scenario::from_json(&neg),
+            Err(ScenarioError::Event {
+                error: EventError::BadFactor { field: "bandwidth_factor", .. },
+                ..
+            })
+        ));
+        // negative join latency
+        let lat = Json::parse(
+            r#"{"name":"x","events":[{"event":"device-join","device_name":"V100",
+                "position":0,"link_bandwidth":1e9,"link_latency":-1e-6}]}"#,
+        )
+        .unwrap();
+        assert!(matches!(
+            Scenario::from_json(&lat),
+            Err(ScenarioError::Event {
+                error: EventError::BadFactor { field: "link_latency", .. },
+                ..
+            })
+        ));
+    }
+
+    #[test]
+    fn parse_rejects_nan_factors() {
+        // JSON text cannot spell NaN, but programmatic documents can —
+        // and NaN passes naive `<= 0.0` range checks.
+        use crate::util::json::obj;
+        let doc = obj(vec![
+            ("name", "x".into()),
+            (
+                "events",
+                Json::Arr(vec![obj(vec![
+                    ("event", "straggler".into()),
+                    ("device", 0usize.into()),
+                    ("slowdown", f64::NAN.into()),
+                ])]),
+            ),
+        ]);
+        assert!(matches!(
+            Scenario::from_json(&doc),
+            Err(ScenarioError::Event { error: EventError::BadFactor { .. }, .. })
+        ));
+        // and apply() itself is NaN-proof for programmatically built events
+        let (net, cl, prof) = setup(2);
+        assert!(apply(
+            &net,
+            &cl,
+            &prof,
+            &ClusterEvent::Straggler { device: 0, slowdown: f64::NAN }
+        )
+        .is_err());
+        assert!(apply(
+            &net,
+            &cl,
+            &prof,
+            &ClusterEvent::LinkDegrade {
+                link: 0,
+                bandwidth_factor: f64::NAN,
+                latency_factor: 1.0
+            }
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn parse_rejects_duplicate_loss() {
+        let dup = Json::parse(
+            r#"{"name":"x","events":[
+                {"event":"device-loss","device":2},
+                {"event":"straggler","device":0,"slowdown":1.5},
+                {"event":"device-loss","device":2}]}"#,
+        )
+        .unwrap();
+        assert!(matches!(
+            Scenario::from_json(&dup),
+            Err(ScenarioError::DuplicateLoss { device: 2, first: 0, second: 2 })
+        ));
+        // distinct positions disambiguate a legitimately recurring index
+        let ok = Json::parse(
+            r#"{"name":"x","events":[
+                {"event":"device-loss","device":0,"at_mb":2},
+                {"event":"device-loss","device":0,"at_mb":9}]}"#,
+        )
+        .unwrap();
+        assert_eq!(Scenario::from_json(&ok).unwrap().events.len(), 2);
+    }
+
+    #[test]
+    fn parse_rejects_out_of_order_and_bad_positions() {
+        let ooo = Json::parse(
+            r#"{"name":"x","events":[
+                {"event":"straggler","device":0,"slowdown":1.5,"at_mb":10},
+                {"event":"device-loss","device":1,"at_mb":3}]}"#,
+        )
+        .unwrap();
+        assert!(matches!(
+            Scenario::from_json(&ooo),
+            Err(ScenarioError::OutOfOrder { index: 1, at_mb: 3, prev: 10 })
+        ));
+        // fractional and negative positions are not micro-batch counts
+        let frac = Json::parse(
+            r#"{"name":"x","events":[{"event":"device-loss","device":0,"at_mb":1.5}]}"#,
+        )
+        .unwrap();
+        assert!(matches!(
+            Scenario::from_json(&frac),
+            Err(ScenarioError::Event { error: EventError::BadPosition(_), .. })
+        ));
+        let neg = Json::parse(
+            r#"{"name":"x","events":[{"event":"device-loss","device":0,"at_mb":-4}]}"#,
+        )
+        .unwrap();
+        assert!(matches!(
+            Scenario::from_json(&neg),
+            Err(ScenarioError::Event { error: EventError::BadPosition(_), .. })
+        ));
     }
 }

@@ -75,11 +75,28 @@
 //! //    memfit-infeasible, the explorer widens to the recompute/2BW axes
 //! //    before falling back to data parallelism.
 //! use bapipe::cluster::mutate::{ClusterEvent, Scenario};
-//! let scenario = Scenario {
-//!     name: "outage".into(),
-//!     events: vec![ClusterEvent::DeviceLoss { device: 1 }],
-//! };
+//! let scenario =
+//!     Scenario::scripted("outage", vec![ClusterEvent::DeviceLoss { device: 1 }]);
 //! let run = planner::elastic::run_scenario(&net, &cl, &prof, &plan, &scenario, &opts).unwrap();
+//! println!("{}", run.render());
+//! // 7. Or close the loop live, with no script at all: `cluster::detect`
+//! //    drift-detects over per-device/per-link timing samples (windowed
+//! //    median + EWMA, enter/exit hysteresis + dwell — bounded jitter
+//! //    emits nothing, a persistent step emits exactly one event), each
+//! //    detection carries its epoch position in micro-batches, the
+//! //    challenger's state transfers are scheduled into the draining
+//! //    pipeline's bubbles (`planner::migrate` — overlapped under 2BW
+//! //    shadow weight versions, drain-and-copy otherwise), and
+//! //    `planner::elastic::amortize_switch` keeps the degraded incumbent
+//! //    when a late-epoch switch cannot pay for its migration stall
+//! //    before the epoch boundary (`bapipe replan --detect samples.json`).
+//! use bapipe::cluster::detect::{detect, DetectorConfig, SampleStream};
+//! let doc = bapipe::util::json::Json::parse(
+//!     &std::fs::read_to_string("samples.json").unwrap()).unwrap();
+//! let stream = SampleStream::from_json(&doc).unwrap();
+//! let detection = detect(&stream, &DetectorConfig::default()).unwrap();
+//! let live = detection.to_scenario(&stream);
+//! let run = planner::elastic::run_scenario(&net, &cl, &prof, &plan, &live, &opts).unwrap();
 //! println!("{}", run.render());
 //! ```
 //!

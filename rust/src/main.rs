@@ -17,8 +17,13 @@
 //!   replan    — elastic-cluster replanning: replay a fault-injection
 //!               scenario JSON (device loss/join, link degradation,
 //!               stragglers) against an incumbent plan.json, warm-starting
-//!               the exploration after every event and pricing each plan
-//!               switch as migration bytes
+//!               the exploration after every event, scheduling each plan
+//!               switch's state transfers into the draining pipeline's
+//!               bubbles and amortizing positioned (mid-epoch) events;
+//!               `--detect samples.json` closes the loop from live timing
+//!               samples instead of a script (hysteresis thresholds:
+//!               --detect-enter/--detect-exit/--detect-dwell/
+//!               --detect-window)
 //!   plan      — plan.json artifact tooling: `plan diff <a> <b>` compares
 //!               winner, time deltas and stage-boundary moves
 //!   partition — show the balanced partition for a model/cluster
@@ -173,20 +178,54 @@ fn main() -> bapipe::Result<()> {
             let prof = analytical::profile(&net, &cl);
             let plan_path = args.opt_str("plan").ok_or_else(|| {
                 anyhow::anyhow!(
-                    "usage: bapipe replan --plan plan.json --scenario scenario.json \
-                     --model <m> --cluster <c> --n <n> [explore flags]"
+                    "usage: bapipe replan --plan plan.json (--scenario scenario.json | \
+                     --detect samples.json) --model <m> --cluster <c> --n <n> [explore flags]"
                 )
             })?;
-            let scenario_path = args
-                .opt_str("scenario")
-                .ok_or_else(|| anyhow::anyhow!("replan needs --scenario scenario.json"))?;
             let incumbent = load_plan(plan_path)?;
-            let text = std::fs::read_to_string(scenario_path)
-                .map_err(|e| anyhow::anyhow!("reading {scenario_path}: {e}"))?;
-            let doc = bapipe::util::json::Json::parse(&text)
-                .map_err(|e| anyhow::anyhow!("parsing {scenario_path}: {e}"))?;
-            let scenario = bapipe::cluster::mutate::Scenario::from_json(&doc)
-                .map_err(|e| anyhow::anyhow!("loading {scenario_path}: {e}"))?;
+            let scenario = match (args.opt_str("scenario"), args.opt_str("detect")) {
+                (Some(scenario_path), _) => {
+                    let text = std::fs::read_to_string(scenario_path)
+                        .map_err(|e| anyhow::anyhow!("reading {scenario_path}: {e}"))?;
+                    let doc = bapipe::util::json::Json::parse(&text)
+                        .map_err(|e| anyhow::anyhow!("parsing {scenario_path}: {e}"))?;
+                    bapipe::cluster::mutate::Scenario::from_json(&doc)
+                        .map_err(|e| anyhow::anyhow!("loading {scenario_path}: {e}"))?
+                }
+                (None, Some(samples_path)) => {
+                    // The live path: drift-detect over a timing-sample
+                    // stream and synthesize the event scenario, positions
+                    // included (mb_per_tick × tick).
+                    use bapipe::cluster::detect;
+                    let text = std::fs::read_to_string(samples_path)
+                        .map_err(|e| anyhow::anyhow!("reading {samples_path}: {e}"))?;
+                    let doc = bapipe::util::json::Json::parse(&text)
+                        .map_err(|e| anyhow::anyhow!("parsing {samples_path}: {e}"))?;
+                    let stream = detect::SampleStream::from_json(&doc)
+                        .map_err(|e| anyhow::anyhow!("loading {samples_path}: {e}"))?;
+                    let base = detect::DetectorConfig::default();
+                    let dcfg = detect::DetectorConfig {
+                        enter: args.get_f64("detect-enter", base.enter),
+                        exit: args.get_f64("detect-exit", base.exit),
+                        min_dwell: args.get_usize("detect-dwell", base.min_dwell),
+                        window: args.get_usize("detect-window", base.window),
+                        ..base
+                    };
+                    let det = detect::detect(&stream, &dcfg)
+                        .map_err(|e| anyhow::anyhow!("detecting over {samples_path}: {e}"))?;
+                    for note in &det.notes {
+                        println!("  {note}");
+                    }
+                    if det.events.is_empty() {
+                        println!("detector: no drift above the hysteresis band — keeping the plan");
+                        return Ok(());
+                    }
+                    det.to_scenario(&stream)
+                }
+                (None, None) => anyhow::bail!(
+                    "replan needs --scenario scenario.json or --detect samples.json"
+                ),
+            };
             let opts = planner_opts(&args);
             let run =
                 planner::elastic::run_scenario(&net, &cl, &prof, &incumbent, &scenario, &opts)
@@ -200,6 +239,16 @@ fn main() -> bapipe::Result<()> {
                 }
                 if let Some(m) = &step.migration {
                     println!("  {}", m.render());
+                }
+                if let Some(sc) = &step.schedule {
+                    println!("  {}", sc.render());
+                    let tl = sc.render_timeline(args.get_usize("width", 100));
+                    if !tl.is_empty() {
+                        print!("{tl}");
+                    }
+                }
+                if let Some(d) = &step.decision {
+                    println!("  {}", d.describe());
                 }
                 println!("{}", step.diff.render());
                 println!("{}", step.plan.summary());
@@ -357,8 +406,16 @@ fn main() -> bapipe::Result<()> {
                        --permute --order-search\n\
                        # warm-started replanning after each scripted cluster event;\n\
                        # scenario JSON: {\"name\": ..., \"events\": [{\"event\": \"device-loss\",\n\
-                       #   \"device\": 3}, {\"event\": \"link-degrade\", \"link\": 0,\n\
-                       #   \"bandwidth_factor\": 0.5, \"latency_factor\": 2.0}, ...]}\n\
+                       #   \"device\": 3}, {\"event\": \"straggler\", \"device\": 0,\n\
+                       #   \"slowdown\": 1.6, \"at_mb\": 100}, ...]} — an `at_mb` position\n\
+                       #   makes the switch amortize against the epoch remainder\n\
+                   bapipe replan --plan plan.json --detect samples.json \\\n\
+                       --model vgg16 --cluster gpu-mixed --n 16 --batch 8\n\
+                       # the live loop: drift-detect over per-device/per-link timing\n\
+                       # samples ({\"name\": ..., \"mb_per_tick\": 4, \"ticks\": [\n\
+                       #   {\"device_times\": [...], \"link_times\": [...]}, ...]}),\n\
+                       # then replan each synthesized event; thresholds via\n\
+                       # --detect-enter 1.25 --detect-exit 1.1 --detect-dwell 3\n\
                    bapipe plan diff old-plan.json new-plan.json\n\
                    bapipe simulate --schedule 1f1b-so --n 3 --m 8\n\
                    bapipe train --artifacts artifacts/lm10m-s4-b4 --schedule 1f1b --m 8 --steps 50\n\

@@ -420,4 +420,67 @@ mod tests {
         assert_eq!(r3.moved_layers, 1);
         assert_eq!(r3.bytes, movable_state_bytes(&prof, &mm, 0, 1));
     }
+
+    #[test]
+    fn restore_pricing_round_trips_through_a_loss_join_lineage() {
+        // The join-after-loss case: lose device 1, then a fresh V100
+        // joins. Mapping the old assignment through the inverted,
+        // *composed* lineage strands the lost device's layers at `None`;
+        // restoring them onto the joiner must be priced as exactly the
+        // lost device's movable state — no more, no less.
+        use crate::cluster::mutate::{self, ClusterEvent};
+        use crate::cluster::presets;
+        use crate::model::zoo;
+        use crate::profile::analytical;
+        let net = zoo::vgg16(224);
+        let cl = presets::v100_cluster(3);
+        let prof = analytical::profile(&net, &cl);
+        let mm = MemoryModel::default();
+        let l = net.len();
+        // three contiguous chunks across old devices 0/1/2
+        let old: Vec<Option<usize>> = (0..l).map(|i| Some((i * 3 / l).min(2))).collect();
+        let m1 =
+            mutate::apply(&net, &cl, &prof, &ClusterEvent::DeviceLoss { device: 1 }).unwrap();
+        let m2 = mutate::apply(
+            &net,
+            &m1.cluster,
+            &m1.profile,
+            &ClusterEvent::DeviceJoin {
+                device_name: "V100".into(),
+                position: m1.cluster.len(),
+                link_bandwidth: None,
+                link_latency: None,
+            },
+        )
+        .unwrap();
+        // compose the two lineages (final -> old), then invert
+        // (old -> final) — the same mapping the elastic replanner uses to
+        // express both assignments in one namespace
+        let composed: Vec<Option<usize>> =
+            m2.lineage.iter().map(|mid| mid.and_then(|m| m1.lineage[m])).collect();
+        let mut inv: Vec<Option<usize>> = vec![None; cl.len()];
+        for (new, o) in composed.iter().enumerate() {
+            if let Some(o) = *o {
+                inv[o] = Some(new);
+            }
+        }
+        assert_eq!(inv[1], None, "the lost device has no descendant");
+        let joiner = composed.iter().position(|o| o.is_none()).unwrap();
+        let mapped: Vec<Option<usize>> = old.iter().map(|d| d.and_then(|d| inv[d])).collect();
+        let restored: Vec<Option<usize>> =
+            mapped.iter().map(|d| Some(d.unwrap_or(joiner))).collect();
+        let r = migration(&prof, &mm, &mapped, &restored);
+        let lost_layers: Vec<usize> = (0..l).filter(|&i| mapped[i].is_none()).collect();
+        assert!(!lost_layers.is_empty(), "device 1 hosted layers");
+        assert_eq!(r.moved_layers, lost_layers.len(), "survivors do not move");
+        // round-trip: layer-by-layer pricing == the contiguous range
+        let per_layer: u64 =
+            lost_layers.iter().map(|&i| movable_state_bytes(&prof, &mm, i, i + 1)).sum();
+        let lo = *lost_layers.first().unwrap();
+        let hi = *lost_layers.last().unwrap() + 1;
+        assert_eq!(hi - lo, lost_layers.len(), "lost chunk is contiguous");
+        assert_eq!(r.bytes, per_layer);
+        assert_eq!(r.bytes, movable_state_bytes(&prof, &mm, lo, hi));
+        assert!(r.bytes > 0, "vgg layers carry weights");
+    }
 }

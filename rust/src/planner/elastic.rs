@@ -43,8 +43,20 @@
 //! JSON), replanning after every event and threading the salvaged cache
 //! through, which is the `bapipe replan` CLI path and the
 //! warm-vs-cold replan-latency bench.
+//!
+//! The loop is closed end to end: [`crate::cluster::detect`] synthesizes
+//! the event stream from live timing samples (no script), each
+//! [`mutate::ScenarioEvent`] may carry its epoch position in
+//! micro-batches, the challenger's state transfers are *scheduled* into
+//! the draining incumbent's bubbles
+//! ([`super::migrate::schedule_migration`] — overlapped under 2BW shadow
+//! weight versions, drain-and-copy otherwise), and [`amortize_switch`]
+//! keeps the degraded incumbent when the migration stall cannot pay for
+//! itself before the epoch boundary — a full-epoch re-cost
+//! systematically over-rotates to new plans late in an epoch.
 
 use super::diff::{self, MigrationReport, PlanDiff};
+use super::migrate::{self, MigrationSchedule};
 use super::orders;
 use super::report::{Choice, Plan};
 use super::space::{self, Candidate, SearchSpace};
@@ -56,7 +68,7 @@ use crate::model::Network;
 use crate::partition::memfit::MemoryModel;
 use crate::profile::Profile;
 use crate::schedule::ScheduleKind;
-use crate::sim::engine::{epoch_from_makespan, simulate};
+use crate::sim::engine::{epoch_from_makespan, simulate, SimSpec};
 use std::collections::HashSet;
 
 #[cfg(doc)]
@@ -91,8 +103,19 @@ pub struct ReplanStep {
     /// Weights + optimizer state that must move between physical devices
     /// to switch from the previous plan to this one. `None` when either
     /// side is data-parallel (every device holds the full model — there
-    /// is no stage state to migrate).
+    /// is no stage state to migrate). Priced against the plan actually
+    /// adopted: a kept incumbent moves nothing.
     pub migration: Option<MigrationReport>,
+    /// Where the *challenger's* state transfers were placed relative to
+    /// the draining incumbent ([`migrate::schedule_migration`]: overlap
+    /// vs drain-and-copy, per-link slots, stall). Recorded even when the
+    /// amortization keeps the incumbent — it is what the decision was
+    /// based on. `None` when either side is data-parallel.
+    pub schedule: Option<MigrationSchedule>,
+    /// The mid-epoch switch-or-keep call — present only for positioned
+    /// events ([`mutate::ScenarioEvent::at_mb`]) with a pipeline
+    /// incumbent that can keep draining.
+    pub decision: Option<SwitchDecision>,
     /// Structured previous-vs-new plan comparison.
     pub diff: PlanDiff,
     /// The plan selected after this event.
@@ -120,10 +143,119 @@ impl ReplanRun {
             if let Some(m) = &s.migration {
                 lines.push(format!("  {}", m.render()));
             }
+            if let Some(sc) = &s.schedule {
+                lines.push(format!("  {}", sc.render()));
+            }
+            if let Some(d) = &s.decision {
+                lines.push(format!("  {}", d.describe()));
+            }
             lines.push(format!("  plan: {}", s.plan.summary()));
         }
         lines.join("\n")
     }
+}
+
+/// Where in the epoch a cluster event lands, in micro-batches of
+/// training progress under the incumbent plan.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct EventPosition {
+    /// Micro-batches already completed when the event fired.
+    pub at_mb: u64,
+    /// Micro-batches in the full epoch
+    /// ([`epoch_micro_batches`]: mini-batches per epoch × the plan's M).
+    pub total_mb: u64,
+}
+
+impl EventPosition {
+    /// Fraction of the epoch still ahead, clamped to `[0, 1]` (a
+    /// position at or past the boundary has nothing left to amortize).
+    pub fn remaining_fraction(&self) -> f64 {
+        if self.total_mb == 0 {
+            return 0.0;
+        }
+        (1.0 - self.at_mb as f64 / self.total_mb as f64).clamp(0.0, 1.0)
+    }
+}
+
+/// The switch-or-keep outcome of [`amortize_switch`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct SwitchDecision {
+    /// `true` = adopt the challenger now; `false` = keep the degraded
+    /// incumbent until the epoch boundary.
+    pub switched: bool,
+    /// Seconds to finish the epoch on the degraded incumbent.
+    pub remaining_incumbent: f64,
+    /// Seconds to finish it on the challenger, migration stall included.
+    pub remaining_challenger: f64,
+    /// The migration stall charged to the challenger
+    /// ([`MigrationSchedule::stall`]).
+    pub stall: f64,
+    /// Where the decision was taken.
+    pub position: EventPosition,
+}
+
+impl SwitchDecision {
+    /// One-line report rendering.
+    pub fn describe(&self) -> String {
+        format!(
+            "mid-epoch at {}/{} micro-batches: {} — incumbent finishes in {:.3}s, challenger \
+             in {:.3}s ({:.3}s migration stall)",
+            self.position.at_mb,
+            self.position.total_mb,
+            if self.switched { "SWITCH" } else { "KEEP until the epoch boundary" },
+            self.remaining_incumbent,
+            self.remaining_challenger,
+            self.stall
+        )
+    }
+}
+
+/// The mid-epoch amortization: compare finishing the epoch on the
+/// degraded incumbent (`incumbent_epoch × remaining fraction`) against
+/// paying the migration stall now and finishing on the challenger
+/// (`stall + challenger_epoch × remaining fraction`). The switch happens
+/// only when it strictly pays before the epoch boundary — except that an
+/// incumbent that cannot run at all (non-finite epoch, e.g. its host was
+/// lost) always switches. Both epochs must be full-epoch times on the
+/// *mutated* cluster; a stale pre-event incumbent epoch would bias the
+/// decision toward keeping.
+pub fn amortize_switch(
+    incumbent_epoch: f64,
+    challenger_epoch: f64,
+    stall: f64,
+    position: EventPosition,
+) -> SwitchDecision {
+    let r = position.remaining_fraction();
+    let remaining_incumbent = incumbent_epoch * r;
+    let remaining_challenger = stall + challenger_epoch * r;
+    let switched = !incumbent_epoch.is_finite() || remaining_challenger < remaining_incumbent;
+    SwitchDecision { switched, remaining_incumbent, remaining_challenger, stall, position }
+}
+
+/// Micro-batches one epoch spans under `plan` on an `n_devices` cluster:
+/// mini-batches per epoch × the plan's M — the `total_mb` of an
+/// [`EventPosition`] (and the unit [`crate::cluster::detect`] stamps
+/// detections in via `mb_per_tick`). `None` for a data-parallel plan,
+/// which has no micro-batch structure.
+pub fn epoch_micro_batches(plan: &Plan, n_devices: usize, opts: &Options) -> Option<u64> {
+    match &plan.choice {
+        Choice::Pipeline { m, .. } => {
+            let global = crate::util::canonical_global_batch(opts.batch_per_device, n_devices);
+            let n_mb = (opts.samples_per_epoch as f64 / global).ceil() as u64;
+            Some(n_mb * *m as u64)
+        }
+        Choice::DataParallel => None,
+    }
+}
+
+/// The incumbent's fresh DES on the mutated cluster: the drain timeline
+/// the migration scheduler overlaps into, and the incumbent side of the
+/// mid-epoch amortization.
+struct DrainInfo {
+    spec: SimSpec,
+    hosts: Vec<usize>,
+    makespan: f64,
+    epoch: f64,
 }
 
 /// The incumbent device order carried into the mutated cluster: surviving
@@ -387,12 +519,17 @@ pub fn replan(
 
 /// Replay a fault-injection [`Scenario`] against an incumbent plan:
 /// apply each event through [`mutate::apply`], warm-replan
-/// ([`replan`]) on the mutated cluster, price the plan switch
-/// ([`diff::migration`] over the per-layer physical assignments, old
-/// devices mapped through the mutation lineage) and carry the mutated
-/// cluster, the new plan and the salvaged cache into the next event.
-/// Errors only on an invalid event (e.g. losing the last device);
-/// planning itself always degrades gracefully.
+/// ([`replan`]) on the mutated cluster, *schedule* the challenger's
+/// state transfers into the draining incumbent's bubbles
+/// ([`migrate::schedule_migration`], old devices mapped through the
+/// mutation lineage), amortize positioned events
+/// ([`amortize_switch`] — a late-epoch event keeps the degraded
+/// incumbent when switching cannot pay before the boundary), price the
+/// adopted switch ([`diff::migration`]) and carry the mutated cluster,
+/// the adopted plan and the salvaged cache into the next event. Errors
+/// only on an invalid event (e.g. losing the last device); planning
+/// itself always degrades gracefully. Bit-identical across `--jobs`:
+/// every addition on top of the PR 8 driver is sequential arithmetic.
 pub fn run_scenario(
     net: &Network,
     cluster: &Cluster,
@@ -408,9 +545,44 @@ pub fn run_scenario(
     let mut plan = incumbent.clone();
     let mut carried: Option<(EvalCache, Vec<String>)> = None;
     let mut steps = Vec::new();
-    for event in &scenario.events {
-        let mu = mutate::apply(net, &cl, &prof, event)?;
+    for ev in &scenario.events {
+        let mu = mutate::apply(net, &cl, &prof, &ev.event)?;
+        let inv = invert_lineage(&mu.lineage, cl.len());
         let inc_order = surviving_order(&plan.device_order, &mu.lineage, mu.cluster.len());
+
+        // Can the incumbent keep draining on the mutated cluster? Only
+        // when it is a pipeline and every host survived (straggler /
+        // link-degrade; a loss takes a host with it). Its fresh DES on
+        // the *degraded* cluster — never the stale pre-event timing — is
+        // both the drain the migration overlaps into and the incumbent
+        // side of the amortization.
+        let drain: Option<DrainInfo> = match &plan.choice {
+            Choice::Pipeline { kind, m, micro, recompute, partition }
+                if mu.cluster.len() == cl.len() =>
+            {
+                let hosts: Option<Vec<usize>> = plan
+                    .device_order
+                    .iter()
+                    .map(|&d| inv.get(d).copied().flatten())
+                    .collect();
+                hosts.map(|hosts| {
+                    let (vcl, vprof) = space::permuted_view(&mu.cluster, &mu.profile, &hosts);
+                    let spec = super::eval::build_spec(
+                        &vprof, &vcl, partition, *kind, *recompute, *micro, *m,
+                    );
+                    let global = crate::util::canonical_global_batch(
+                        opts.batch_per_device,
+                        mu.cluster.len(),
+                    );
+                    let n_mb = (opts.samples_per_epoch as f64 / global).ceil() as usize;
+                    let makespan = simulate(&spec).makespan;
+                    let epoch = epoch_from_makespan(makespan, &spec, n_mb);
+                    DrainInfo { spec, hosts, makespan, epoch }
+                })
+            }
+            _ => None,
+        };
+
         let r = replan(
             net,
             &mu.cluster,
@@ -422,29 +594,96 @@ pub fn run_scenario(
         );
         let mut provenance = vec![mu.note.clone()];
         provenance.extend(r.provenance);
-        let migration = match (assign_map(&plan, n_layers), assign_map(&r.plan, n_layers)) {
-            (Some(old), Some(new)) => {
-                // Old placements travel through the inverted lineage into
-                // the mutated cluster's index namespace: a layer whose
-                // host was lost maps to `None` and is priced as a restore.
-                let inv = invert_lineage(&mu.lineage, cl.len());
-                let old_mapped: Vec<Option<usize>> =
-                    old.iter().map(|d| d.and_then(|i| inv.get(i).copied().flatten())).collect();
-                Some(diff::migration(&mu.profile, &mm, &old_mapped, &new))
-            }
+
+        // Old placements travel through the inverted lineage into the
+        // mutated cluster's index namespace: a layer whose host was lost
+        // maps to `None` and is priced as a restore.
+        let old_mapped: Option<Vec<Option<usize>>> = assign_map(&plan, n_layers).map(|old| {
+            old.iter().map(|d| d.and_then(|i| inv.get(i).copied().flatten())).collect()
+        });
+
+        // Schedule the challenger's transfers against the drain.
+        let schedule = match (&old_mapped, assign_map(&r.plan, n_layers)) {
+            (Some(old), Some(new)) => Some(migrate::schedule_migration(
+                &mu.profile,
+                &mm,
+                &mu.cluster,
+                drain.as_ref().map(|d| (&d.spec, d.hosts.as_slice())),
+                old,
+                &new,
+            )),
             _ => None,
         };
+
+        // Mid-epoch amortization: a positioned event switches only when
+        // the migration stall pays for itself before the epoch boundary.
+        let mut decision = None;
+        let mut adopt = true;
+        if let (Some(at_mb), Some(sched)) = (ev.at_mb, schedule.as_ref()) {
+            match (epoch_micro_batches(&plan, cl.len(), opts), &drain) {
+                (Some(total_mb), Some(d)) => {
+                    let call = amortize_switch(
+                        d.epoch,
+                        r.plan.epoch_time,
+                        sched.stall,
+                        EventPosition { at_mb, total_mb },
+                    );
+                    adopt = call.switched;
+                    decision = Some(call);
+                }
+                (_, None) => provenance.push(
+                    "mid-epoch: incumbent cannot continue on the mutated cluster — switching \
+                     regardless of position"
+                        .to_string(),
+                ),
+                (None, _) => provenance.push(
+                    "mid-epoch: data-parallel incumbent has no micro-batch structure — \
+                     switching at the event"
+                        .to_string(),
+                ),
+            }
+        }
+
+        let adopted = if adopt {
+            r.plan.clone()
+        } else {
+            // Keep the degraded incumbent until the epoch boundary: same
+            // choice, order re-expressed in the mutated namespace, times
+            // refreshed on the mutated cluster.
+            let d = drain.as_ref().expect("keeping requires a draining incumbent");
+            let mut kept = plan.clone();
+            kept.device_order = inc_order.clone();
+            kept.minibatch_time = d.makespan;
+            kept.epoch_time = d.epoch;
+            provenance.push(format!(
+                "mid-epoch: keeping the degraded incumbent (fresh epoch {:.3}s on the mutated \
+                 cluster); the challenger is reconsidered at the epoch boundary",
+                d.epoch
+            ));
+            kept
+        };
+
+        // Price the switch actually adopted (a kept incumbent moves
+        // nothing; the challenger's schedule above records what the
+        // decision weighed).
+        let migration = match (&old_mapped, assign_map(&adopted, n_layers)) {
+            (Some(old), Some(new)) => Some(diff::migration(&mu.profile, &mm, old, &new)),
+            _ => None,
+        };
+
         steps.push(ReplanStep {
-            event: event.describe(),
+            event: ev.describe(),
             cluster: mu.cluster.describe(),
             provenance,
             migration,
-            diff: diff::compare(&plan, &r.plan),
-            plan: r.plan.clone(),
+            schedule,
+            decision,
+            diff: diff::compare(&plan, &adopted),
+            plan: adopted.clone(),
         });
         cl = mu.cluster;
         prof = mu.profile;
-        plan = r.plan;
+        plan = adopted;
         carried = Some((r.cache, r.view_fingerprints));
     }
     Ok(ReplanRun { scenario: scenario.name.clone(), steps })
@@ -517,14 +756,14 @@ mod tests {
         let cl = presets::gpu_mixed_cluster(4);
         let prof = analytical::profile(&net, &cl);
         let incumbent = super::super::explore(&net, &cl, &prof, &opts());
-        let scenario = Scenario {
-            name: "test".to_string(),
-            events: vec![
+        let scenario = Scenario::scripted(
+            "test",
+            vec![
                 ClusterEvent::Straggler { device: 0, slowdown: 1.5 },
                 ClusterEvent::DeviceLoss { device: 3 },
                 ClusterEvent::LinkDegrade { link: 0, bandwidth_factor: 0.5, latency_factor: 2.0 },
             ],
-        };
+        );
         let a = run_scenario(&net, &cl, &prof, &incumbent, &scenario, &opts()).unwrap();
         let b = run_scenario(
             &net,
@@ -544,7 +783,74 @@ mod tests {
                 sa.migration.as_ref().map(|m| m.bytes),
                 sb.migration.as_ref().map(|m| m.bytes)
             );
+            assert_eq!(sa.schedule, sb.schedule, "event {}", sa.event);
+            assert_eq!(sa.decision, sb.decision);
         }
+    }
+
+    #[test]
+    fn amortize_keeps_late_and_switches_early() {
+        // incumbent 100 s/epoch, challenger 50 s/epoch, 2 s stall
+        let early = amortize_switch(100.0, 50.0, 2.0, EventPosition { at_mb: 10, total_mb: 100 });
+        assert!(early.switched, "{}", early.describe());
+        assert!((early.remaining_incumbent - 90.0).abs() < 1e-12);
+        assert!((early.remaining_challenger - 47.0).abs() < 1e-12);
+        // 3% remaining: incumbent 3 s vs 2 + 1.5 = 3.5 s — keep
+        let late = amortize_switch(100.0, 50.0, 2.0, EventPosition { at_mb: 97, total_mb: 100 });
+        assert!(!late.switched, "{}", late.describe());
+        assert!(late.describe().contains("KEEP"), "{}", late.describe());
+        // an incumbent that cannot run always switches, even at the boundary
+        let forced =
+            amortize_switch(f64::INFINITY, 50.0, 2.0, EventPosition { at_mb: 100, total_mb: 100 });
+        assert!(forced.switched);
+        // equal remainders do not justify paying the stall
+        let tie = amortize_switch(50.0, 50.0, 0.0, EventPosition { at_mb: 0, total_mb: 100 });
+        assert!(!tie.switched, "a switch must strictly pay");
+        // degenerate zero-length epoch: nothing left to amortize over
+        assert!(!amortize_switch(100.0, 50.0, 2.0, EventPosition { at_mb: 0, total_mb: 0 }).switched);
+    }
+
+    #[test]
+    fn positioned_events_amortize_and_keep_moves_nothing() {
+        let net = zoo::vgg16(224);
+        let cl = presets::gpu_mixed_cluster(4);
+        let prof = analytical::profile(&net, &cl);
+        let o = opts();
+        let incumbent = super::super::explore(&net, &cl, &prof, &o);
+        let total = epoch_micro_batches(&incumbent, cl.len(), &o).expect("pipeline incumbent");
+        let mut sc = Scenario::scripted(
+            "positioned",
+            vec![ClusterEvent::Straggler { device: 0, slowdown: 2.0 }],
+        );
+        sc.events[0].at_mb = Some(total - 1); // one micro-batch before the boundary
+        let run = run_scenario(&net, &cl, &prof, &incumbent, &sc, &o).unwrap();
+        let step = &run.steps[0];
+        assert!(step.event.contains("at micro-batch"), "{}", step.event);
+        let d = step.decision.as_ref().expect("positioned pipeline event must be amortized");
+        assert_eq!(d.position, EventPosition { at_mb: total - 1, total_mb: total });
+        let sched = step.schedule.as_ref().expect("pipeline-to-pipeline switch is scheduled");
+        assert!(sched.stall <= sched.drain_stall + 1e-12, "{sched:?}");
+        if d.switched {
+            assert!(d.remaining_challenger < d.remaining_incumbent, "{}", d.describe());
+        } else {
+            // keeping moves nothing; the step's plan is the incumbent's
+            // choice with times refreshed on the degraded cluster
+            assert_eq!(step.migration.as_ref().unwrap().bytes, 0);
+            assert_eq!(step.plan.choice, incumbent.choice);
+            assert!(step.plan.epoch_time.is_finite());
+            assert!(step.plan.epoch_time > incumbent.epoch_time, "straggler slows the epoch");
+        }
+        // transcript carries the schedule and the decision
+        let text = run.render();
+        assert!(text.contains("migration schedule:"), "{text}");
+        assert!(text.contains("mid-epoch at"), "{text}");
+        // an unpositioned replay of the same event is the PR 8 behavior
+        let sc0 = Scenario::scripted(
+            "unpositioned",
+            vec![ClusterEvent::Straggler { device: 0, slowdown: 2.0 }],
+        );
+        let run0 = run_scenario(&net, &cl, &prof, &incumbent, &sc0, &o).unwrap();
+        assert!(run0.steps[0].decision.is_none());
     }
 
     #[test]
@@ -553,13 +859,13 @@ mod tests {
         let cl = presets::gpu_mixed_cluster(4);
         let prof = analytical::profile(&net, &cl);
         let incumbent = super::super::explore(&net, &cl, &prof, &opts());
-        let scenario = Scenario {
-            name: "loss-then-straggler".to_string(),
-            events: vec![
+        let scenario = Scenario::scripted(
+            "loss-then-straggler",
+            vec![
                 ClusterEvent::DeviceLoss { device: 1 },
                 ClusterEvent::Straggler { device: 0, slowdown: 2.0 },
             ],
-        };
+        );
         let run = run_scenario(&net, &cl, &prof, &incumbent, &scenario, &opts()).unwrap();
         // losing a host forces its layers elsewhere: bytes must move
         let mig = run.steps[0].migration.as_ref().expect("pipeline-to-pipeline migration");

@@ -1,0 +1,429 @@
+//! Migration scheduling — *when* to move the bytes that
+//! [`super::diff::migration`] priced.
+//!
+//! PR 8 answered "what does this plan switch cost" in bytes; this module
+//! places the actual transfers on the physical chain links while the
+//! incumbent pipeline drains its last mini-batch. The draining DES
+//! already knows when each boundary channel goes quiet
+//! ([`SimArena::link_free_times`]), so every per-link migration slot
+//! starts *behind* the last activation/error message on that link —
+//! migration traffic contends with pipeline traffic instead of being
+//! pretended free.
+//!
+//! Whether the transfer may start before the drain completes is a
+//! *weight-versioning* question (PipeDream, arXiv 1806.03377): under
+//! [`ScheduleKind::TwoBW`] (PipeDream-2BW, arXiv 2006.09503) every stage
+//! holds a double-buffered shadow version that stays immutable for the
+//! whole draining mini-batch, so copying it mid-drain is sound — the
+//! receiver starts one mini-batch stale, exactly the staleness 2BW
+//! already tolerates ([`MigrationSchedule::stale_weight_mb`]). Any other
+//! schedule finalizes weights only at drain end, so the scheduler falls
+//! back to **drain-and-copy**: every slot starts at the drain makespan.
+//! Either way the stall is what the replanner's mid-epoch amortization
+//! ([`super::elastic`]) charges the challenger, and the overlapped stall
+//! is never worse than the fallback (each slot starts no later than the
+//! makespan, so it ends no later than `makespan + slowest transfer` —
+//! the bench floor in `BENCH_planner.json`'s `migration_overlap` line).
+
+use crate::cluster::Cluster;
+use crate::partition::memfit::{movable_state_bytes, MemoryModel};
+use crate::profile::range::CostModel;
+use crate::schedule::ScheduleKind;
+use crate::sim::engine::{simulate_fast, SimArena, SimSpec};
+
+/// One aggregated state-transfer slot on a physical link.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LinkSlot {
+    /// Physical chain link index (`cluster.links[link]`).
+    pub link: usize,
+    /// Direction: `true` = toward higher chain slots.
+    pub forward: bool,
+    /// Slot start time (s, drain timeline: 0 = drain begins).
+    pub start: f64,
+    /// Slot end time (s).
+    pub end: f64,
+    /// State bytes carried.
+    pub bytes: u64,
+}
+
+/// A placed migration: per-link slots plus the derived stall — what the
+/// switch costs *in time* on top of the bytes [`super::diff::migration`]
+/// already reported.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MigrationSchedule {
+    /// Did the transfers overlap the drain (2BW shadow versions), or is
+    /// this a drain-and-copy fallback?
+    pub overlapped: bool,
+    /// Makespan of the draining mini-batch (s; 0 when no draining
+    /// schedule was available — pure copy).
+    pub drain_makespan: f64,
+    /// Aggregated transfer slots, chain order, forward before backward.
+    pub slots: Vec<LinkSlot>,
+    /// Per-link time the *pipeline's own* traffic occupies the link
+    /// (max of both directions, clamped to the makespan) — the `#`
+    /// region of [`Self::render_timeline`].
+    pub link_busy_until: Vec<f64>,
+    /// When the last transfer lands (s; ≥ `drain_makespan`).
+    pub done_at: f64,
+    /// Training stall beyond the natural drain: `done_at − makespan`.
+    pub stall: f64,
+    /// What the stall would be under drain-and-copy (slowest aggregated
+    /// transfer, all starting at the makespan). `stall <= drain_stall`
+    /// always holds.
+    pub drain_stall: f64,
+    /// Micro-batches the migrated shadow weights are stale by on arrival
+    /// (= the draining mini-batch's M under 2BW overlap, 0 otherwise).
+    pub stale_weight_mb: usize,
+    /// Total state bytes moved (equals the
+    /// [`super::diff::MigrationReport`] total for the same maps).
+    pub bytes: u64,
+    /// Human-readable decisions: overlap vs fallback and why, restore
+    /// routing, degenerate cases.
+    pub provenance: Vec<String>,
+}
+
+/// Place a plan switch's state transfers onto `cluster`'s chain links.
+///
+/// * `drain` — the incumbent's spec plus its per-stage physical hosts
+///   (`hosts[stage] = chain slot`, `len = spec.n()`), both expressed on
+///   `cluster`. Pass `None` when the incumbent cannot drain (a device
+///   loss took one of its hosts, or there is no incumbent spec): the
+///   schedule degrades to a pure copy with `drain_makespan = 0`.
+/// * `assign_old` / `assign_new` — per-layer physical chain slots before
+///   and after the switch, in `cluster`'s namespace (the elastic
+///   replanner maps the old plan through the mutation lineage;
+///   `assign_old[l] = None` marks a layer whose former host is gone — a
+///   restore). A layer moves iff the slots differ, the same rule
+///   [`super::diff::migration`] prices.
+///
+/// Transfers between slots `a` and `b` occupy every link on the chain
+/// path between them, in the direction of travel; restores ride the
+/// destination's fastest adjacent link inward. Per (link, direction) the
+/// bytes aggregate into one slot costing
+/// [`crate::cluster::Link::xfer_time`] of the total.
+pub fn schedule_migration<C: CostModel>(
+    costs: &C,
+    mm: &MemoryModel,
+    cluster: &Cluster,
+    drain: Option<(&SimSpec, &[usize])>,
+    assign_old: &[Option<usize>],
+    assign_new: &[Option<usize>],
+) -> MigrationSchedule {
+    assert_eq!(assign_old.len(), assign_new.len(), "maps must cover the same layer count");
+    let nl = cluster.links.len();
+    let mut provenance = Vec::new();
+
+    // --- drain timeline: makespan + per-link/direction clear times -----
+    let mut f_free = vec![0.0f64; nl];
+    let mut b_free = vec![0.0f64; nl];
+    let mut makespan = 0.0f64;
+    let mut overlapped = false;
+    match drain {
+        Some((spec, hosts)) => {
+            assert_eq!(hosts.len(), spec.n(), "one physical host per draining stage");
+            let mut arena = SimArena::new();
+            makespan = simulate_fast(spec, &mut arena).makespan;
+            let (fc, bc) = arena.link_free_times();
+            for b in 0..spec.n().saturating_sub(1) {
+                let (lo, hi) = (hosts[b].min(hosts[b + 1]), hosts[b].max(hosts[b + 1]));
+                for link in lo..hi {
+                    // every transfer arrival is <= makespan (consumed by
+                    // an op that ends by then); the clamp is belt and
+                    // braces so the overlap <= drain floor is structural
+                    f_free[link] = f_free[link].max(fc[b].min(makespan));
+                    b_free[link] = b_free[link].max(bc[b].min(makespan));
+                }
+            }
+            if matches!(spec.kind, ScheduleKind::TwoBW) {
+                overlapped = true;
+                provenance.push(format!(
+                    "overlap: {} holds an immutable shadow weight version through the drain — \
+                     transfers start behind the last activation message per link",
+                    spec.kind.label()
+                ));
+            } else {
+                provenance.push(format!(
+                    "drain-and-copy: {} finalizes weights only at drain end — transfers start \
+                     at the {makespan:.6}s makespan",
+                    spec.kind.label()
+                ));
+            }
+        }
+        None => provenance.push(
+            "no draining schedule (host lost or no incumbent spec): pure copy from t=0"
+                .to_string(),
+        ),
+    }
+
+    // --- route moved layers onto (link, direction) byte totals ---------
+    let mut fwd_bytes = vec![0u64; nl];
+    let mut bwd_bytes = vec![0u64; nl];
+    let mut moved_layers = 0usize;
+    let mut total_bytes = 0u64;
+    let mut restores = 0usize;
+    for l in 0..assign_old.len() {
+        let dst = match assign_new[l] {
+            Some(d) => d,
+            None => continue, // layer unplaced in the new plan
+        };
+        match assign_old[l] {
+            Some(src) if src == dst => {}
+            Some(src) => {
+                let bytes = movable_state_bytes(costs, mm, l, l + 1);
+                moved_layers += 1;
+                total_bytes += bytes;
+                let (lo, hi) = (src.min(dst), src.max(dst));
+                let dir = if src < dst { &mut fwd_bytes } else { &mut bwd_bytes };
+                for link in lo..hi {
+                    dir[link] += bytes;
+                }
+            }
+            None => {
+                // former host gone: state restored from a checkpoint peer
+                // over the destination's fastest adjacent link, inward
+                let bytes = movable_state_bytes(costs, mm, l, l + 1);
+                moved_layers += 1;
+                total_bytes += bytes;
+                restores += 1;
+                if nl == 0 {
+                    continue; // single-device cluster: restore is local
+                }
+                let left = dst.checked_sub(1); // link dst-1 carries it forward into dst
+                let right = if dst < nl { Some(dst) } else { None }; // link dst, backward
+                let pick_left = match (left, right) {
+                    (Some(a), Some(b)) => {
+                        cluster.links[a].bandwidth >= cluster.links[b].bandwidth
+                    }
+                    (Some(_), None) => true,
+                    (None, _) => false,
+                };
+                if pick_left {
+                    fwd_bytes[left.unwrap()] += bytes;
+                } else {
+                    bwd_bytes[right.unwrap()] += bytes;
+                }
+            }
+        }
+    }
+    if restores > 0 {
+        provenance.push(format!(
+            "{restores} layer(s) restored onto new hosts via their fastest adjacent link{}",
+            if nl == 0 { " (single device: local restore, no transfer)" } else { "" }
+        ));
+    }
+
+    // --- place one aggregated slot per (link, direction) ---------------
+    let mut slots = Vec::new();
+    let mut drain_stall = 0.0f64;
+    for link in 0..nl {
+        for (forward, bytes, free) in
+            [(true, fwd_bytes[link], f_free[link]), (false, bwd_bytes[link], b_free[link])]
+        {
+            if bytes == 0 {
+                continue;
+            }
+            let t = cluster.links[link].xfer_time(bytes as f64);
+            drain_stall = drain_stall.max(t);
+            let start = if overlapped { free } else { makespan };
+            slots.push(LinkSlot { link, forward, start, end: start + t, bytes });
+        }
+    }
+    let done_at = slots.iter().fold(makespan, |acc, s| acc.max(s.end));
+    let stall = (done_at - makespan).max(0.0);
+    if slots.is_empty() {
+        provenance.push("no state moves: migration is free".to_string());
+    } else {
+        provenance.push(format!(
+            "{moved_layers} layer(s), {} over {} link slot(s): stall {:.6}s beyond the drain \
+             (drain-and-copy would stall {:.6}s)",
+            crate::util::fmt_bytes(total_bytes),
+            slots.len(),
+            stall,
+            drain_stall
+        ));
+    }
+    let stale_weight_mb = match (overlapped, drain) {
+        (true, Some((spec, _))) if !slots.is_empty() => spec.m,
+        _ => 0,
+    };
+    if stale_weight_mb > 0 {
+        provenance.push(format!(
+            "migrated shadow weights arrive {stale_weight_mb} micro-batches stale — within \
+             2BW's one-mini-batch staleness bound"
+        ));
+    }
+    MigrationSchedule {
+        overlapped,
+        drain_makespan: makespan,
+        slots,
+        link_busy_until: f_free.iter().zip(&b_free).map(|(f, b)| f.max(*b)).collect(),
+        done_at,
+        stall,
+        drain_stall,
+        stale_weight_mb,
+        bytes: total_bytes,
+        provenance,
+    }
+}
+
+impl MigrationSchedule {
+    /// One-line summary for reports: mode, stall vs fallback, bytes.
+    pub fn render(&self) -> String {
+        format!(
+            "migration schedule: {} — {} moved, stall {:.3}ms (drain-and-copy {:.3}ms), \
+             done at {:.3}ms of a {:.3}ms drain",
+            if self.overlapped { "overlapped (2BW)" } else { "drain-and-copy" },
+            crate::util::fmt_bytes(self.bytes),
+            self.stall * 1e3,
+            self.drain_stall * 1e3,
+            self.done_at * 1e3,
+            self.drain_makespan * 1e3,
+        )
+    }
+
+    /// ASCII per-link occupancy timeline (`#` pipeline traffic, `M`
+    /// migration slots) via [`crate::sim::timeline::render_link_slots`].
+    pub fn render_timeline(&self, width: usize) -> String {
+        let tuples: Vec<(usize, f64, f64)> =
+            self.slots.iter().map(|s| (s.link, s.start, s.end)).collect();
+        crate::sim::timeline::render_link_slots(
+            self.link_busy_until.len(),
+            &self.link_busy_until,
+            &tuples,
+            self.done_at.max(self.drain_makespan),
+            width,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::presets;
+    use crate::model::zoo;
+    use crate::partition::balanced_partition;
+    use crate::planner::eval::build_spec;
+    use crate::profile::analytical;
+
+    /// Shared fixture: VGG-16 on 4x V100, a balanced 2BW partition, and
+    /// the boundary-shift assignment pair (stage 1's first layer moves to
+    /// stage 0's device).
+    fn fixture(
+        kind: ScheduleKind,
+    ) -> (crate::profile::Profile, Cluster, SimSpec, Vec<usize>, Vec<Option<usize>>, Vec<Option<usize>>)
+    {
+        let net = zoo::vgg16(224);
+        let cl = presets::v100_cluster(4);
+        let prof = analytical::profile(&net, &cl);
+        let plan = balanced_partition(&net, &cl, &prof, kind, 8.0, 16).unwrap();
+        let part = &plan.partition;
+        let spec = build_spec(&prof, &cl, part, kind, false, 8.0, 16);
+        let hosts: Vec<usize> = (0..part.n_stages()).collect();
+        let old: Vec<Option<usize>> =
+            (0..net.len()).map(|l| Some(part.stage_of(l))).collect();
+        let mut new = old.clone();
+        let moved = part.bounds[1]; // first layer of stage 1 -> device 0
+        new[moved] = Some(0);
+        (prof, cl, spec, hosts, old, new)
+    }
+
+    #[test]
+    fn overlap_stall_never_exceeds_drain_and_prices_like_diff() {
+        let (prof, cl, spec, hosts, old, new) = fixture(ScheduleKind::TwoBW);
+        let mm = MemoryModel::default();
+        let s = schedule_migration(&prof, &mm, &cl, Some((&spec, &hosts)), &old, &new);
+        assert!(s.overlapped);
+        assert!(s.drain_makespan > 0.0);
+        assert_eq!(s.slots.len(), 1, "{:?}", s.slots);
+        // overlapped slots start inside the drain, never after it
+        for slot in &s.slots {
+            assert!(slot.start <= s.drain_makespan + 1e-12, "{slot:?}");
+            assert!(slot.end > slot.start);
+        }
+        assert!(s.stall <= s.drain_stall + 1e-12, "{} > {}", s.stall, s.drain_stall);
+        assert!((s.done_at - s.drain_makespan - s.stall).abs() < 1e-12);
+        assert_eq!(s.stale_weight_mb, spec.m);
+        // byte total agrees with the diff-level pricing of the same maps
+        let report = super::super::diff::migration(&prof, &mm, &old, &new);
+        assert_eq!(s.bytes, report.bytes);
+        assert!(s.render().contains("overlapped (2BW)"), "{}", s.render());
+    }
+
+    #[test]
+    fn non_2bw_falls_back_to_drain_and_copy() {
+        let (prof, cl, spec, hosts, old, new) = fixture(ScheduleKind::OneFOneBSo);
+        let mm = MemoryModel::default();
+        let s = schedule_migration(&prof, &mm, &cl, Some((&spec, &hosts)), &old, &new);
+        assert!(!s.overlapped);
+        assert_eq!(s.stale_weight_mb, 0);
+        // every slot waits for the full drain, so the stall is exactly
+        // the drain-and-copy stall
+        for slot in &s.slots {
+            assert_eq!(slot.start, s.drain_makespan);
+        }
+        assert!((s.stall - s.drain_stall).abs() < 1e-15);
+        assert!(
+            s.provenance.iter().any(|n| n.contains("drain-and-copy")),
+            "{:?}",
+            s.provenance
+        );
+    }
+
+    #[test]
+    fn restore_rides_fastest_adjacent_link_inward() {
+        let (prof, cl, _spec, _hosts, old, new) = fixture(ScheduleKind::TwoBW);
+        let mm = MemoryModel::default();
+        // every layer of the old stage 2 lost its host; new plan keeps the
+        // same slots, so only the restores transfer
+        let lost: Vec<Option<usize>> =
+            old.iter().map(|a| if *a == Some(2) { None } else { *a }).collect();
+        let s = schedule_migration(&prof, &mm, &cl, None, &lost, &old);
+        assert!(!s.overlapped);
+        assert_eq!(s.drain_makespan, 0.0, "no drain info: pure copy");
+        assert_eq!(s.slots.len(), 1);
+        // homogeneous links: ties break toward the left neighbour (link 1
+        // carries the restore forward into slot 2)
+        assert_eq!((s.slots[0].link, s.slots[0].forward), (1, true));
+        let expected: u64 = (0..old.len())
+            .filter(|&l| old[l] == Some(2))
+            .map(|l| movable_state_bytes(&prof, &mm, l, l + 1))
+            .sum();
+        assert_eq!(s.bytes, expected);
+        assert_eq!(s.stall, s.drain_stall);
+        assert!(s.provenance.iter().any(|n| n.contains("restored")), "{:?}", s.provenance);
+    }
+
+    #[test]
+    fn identical_assignment_is_free() {
+        let (prof, cl, spec, hosts, old, _new) = fixture(ScheduleKind::TwoBW);
+        let mm = MemoryModel::default();
+        let s = schedule_migration(&prof, &mm, &cl, Some((&spec, &hosts)), &old, &old);
+        assert!(s.slots.is_empty());
+        assert_eq!((s.bytes, s.stall, s.drain_stall), (0, 0.0, 0.0));
+        assert_eq!(s.done_at, s.drain_makespan);
+        assert_eq!(s.stale_weight_mb, 0, "nothing moved, nothing stale");
+        assert!(s.provenance.iter().any(|n| n.contains("free")), "{:?}", s.provenance);
+    }
+
+    #[test]
+    fn multi_hop_move_occupies_every_link_on_the_path() {
+        let (prof, cl, spec, hosts, _old, _new) = fixture(ScheduleKind::TwoBW);
+        let mm = MemoryModel::default();
+        // one layer moves from slot 3 all the way to slot 0: links 0..3
+        // all carry it, in the backward direction
+        let n_layers = zoo::vgg16(224).len();
+        let old: Vec<Option<usize>> =
+            (0..n_layers).map(|l| Some(if l == 0 { 3 } else { 1 })).collect();
+        let new: Vec<Option<usize>> =
+            (0..n_layers).map(|l| Some(if l == 0 { 0 } else { 1 })).collect();
+        let s = schedule_migration(&prof, &mm, &cl, Some((&spec, &hosts)), &old, &new);
+        let links: Vec<(usize, bool)> = s.slots.iter().map(|x| (x.link, x.forward)).collect();
+        assert_eq!(links, vec![(0, false), (1, false), (2, false)]);
+        let per_layer = movable_state_bytes(&prof, &mm, 0, 1);
+        assert!(s.slots.iter().all(|x| x.bytes == per_layer), "{:?}", s.slots);
+        // timeline renders one row per physical link with M slots
+        let t = s.render_timeline(40);
+        assert_eq!(t.lines().count(), 3);
+        assert!(t.contains('M'), "{t}");
+    }
+}

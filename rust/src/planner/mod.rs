@@ -61,6 +61,7 @@ pub mod cache;
 pub mod diff;
 pub mod elastic;
 pub mod eval;
+pub mod migrate;
 pub mod orders;
 pub mod report;
 pub mod space;

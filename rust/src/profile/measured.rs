@@ -5,22 +5,45 @@
 //!
 //! Kept callback-based so the profile module stays independent of the XLA
 //! runtime (and trivially testable).
+//!
+//! Real timers misbehave: clock slews produce negative deltas, a crashed
+//! rep can report 0 or NaN. A negative per-layer cost would quietly trip
+//! `profile::range`'s monotone-DP fallback (noted there) and a NaN would
+//! poison every downstream DP, so [`profile_with_notes`] clamps any
+//! non-positive or non-finite median to the 1e-12 s floor **and says
+//! so** — one note per affected sample, surfaced to the caller and to
+//! the log, never a silent `.max()`.
 
 use super::{LayerCost, Profile};
 use crate::cluster::Cluster;
 use crate::model::Network;
 
+/// Clamp a measured median to the positive-time floor. Returns the
+/// usable value and whether a clamp happened (non-finite, zero or
+/// negative input — none of which is a time).
+fn clamp_time(v: f64) -> (f64, bool) {
+    if v.is_finite() && v > 0.0 {
+        (v.max(1e-12), false)
+    } else {
+        (1e-12, true)
+    }
+}
+
 /// Measure per-layer times with `time_fn(device_idx, layer_idx) ->
 /// (fwd_secs, bwd_secs)` (per sample), repeated `reps` times taking the
-/// median — mirroring the paper's 1000-mini-batch averaging at small scale.
-pub fn profile_with(
+/// median — mirroring the paper's 1000-mini-batch averaging at small
+/// scale. Non-positive / non-finite medians are clamped to 1e-12 s with
+/// one warning note each (the second element); a clean run returns no
+/// notes.
+pub fn profile_with_notes(
     net: &Network,
     cluster: &Cluster,
     dtype_bytes: u64,
     reps: usize,
     mut time_fn: impl FnMut(usize, usize) -> (f64, f64),
-) -> Profile {
+) -> (Profile, Vec<String>) {
     assert!(reps >= 1);
+    let mut notes = Vec::new();
     let mut per_device = Vec::with_capacity(cluster.len());
     for d in 0..cluster.len() {
         let mut layers = Vec::with_capacity(net.len());
@@ -32,10 +55,21 @@ pub fn profile_with(
                 fs.push(f);
                 bs.push(b);
             }
-            fs.sort_by(|a, b| a.partial_cmp(b).unwrap());
-            bs.sort_by(|a, b| a.partial_cmp(b).unwrap());
-            let fwd = fs[fs.len() / 2].max(1e-12);
-            let bwd = bs[bs.len() / 2].max(1e-12);
+            fs.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+            bs.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+            let mut pick = |what: &str, sorted: &[f64]| {
+                let median = sorted[sorted.len() / 2];
+                let (v, clamped) = clamp_time(median);
+                if clamped {
+                    notes.push(format!(
+                        "measured profile: device {d} layer {i} {what} median {median:.3e} is \
+                         not a positive time — clamped to 1e-12s"
+                    ));
+                }
+                v
+            };
+            let fwd = pick("fwd", &fs);
+            let bwd = pick("bwd", &bs);
             layers.push(LayerCost {
                 fwd,
                 bwd,
@@ -50,7 +84,24 @@ pub fn profile_with(
         }
         per_device.push(layers);
     }
-    Profile { model: net.name.clone(), dtype_bytes, per_device }
+    (Profile { model: net.name.clone(), dtype_bytes, per_device }, notes)
+}
+
+/// [`profile_with_notes`] with the notes routed to the log
+/// ([`crate::util::logging::warn`]) — the drop-in signature the runtime
+/// layer uses.
+pub fn profile_with(
+    net: &Network,
+    cluster: &Cluster,
+    dtype_bytes: u64,
+    reps: usize,
+    time_fn: impl FnMut(usize, usize) -> (f64, f64),
+) -> Profile {
+    let (profile, notes) = profile_with_notes(net, cluster, dtype_bytes, reps, time_fn);
+    for n in &notes {
+        crate::util::logging::warn(n);
+    }
+    profile
 }
 
 #[cfg(test)]
@@ -86,6 +137,39 @@ mod tests {
         assert_eq!(p.n_layers(), 3);
         // device index reflected in times
         assert!(p.per_device[2][0].fwd > p.per_device[0][0].fwd);
+        p.validate(&cl).unwrap();
+    }
+
+    #[test]
+    fn negative_and_nan_medians_clamp_with_a_note() {
+        let net = zoo::mlp(&[8, 8, 8]);
+        let cl = presets::cpu_cluster(1);
+        // layer 0: clock slew gives a negative fwd median; layer 1: a
+        // crashed rep reports NaN bwd
+        let (p, notes) = profile_with_notes(&net, &cl, 4, 1, |_, l| match l {
+            0 => (-3e-5, 1e-4),
+            _ => (1e-4, f64::NAN),
+        });
+        assert_eq!(p.per_device[0][0].fwd, 1e-12);
+        assert!((p.per_device[0][0].bwd - 1e-4).abs() < 1e-12, "healthy side untouched");
+        assert_eq!(p.per_device[0][1].bwd, 1e-12);
+        assert_eq!(notes.len(), 2, "{notes:?}");
+        assert!(notes[0].contains("device 0 layer 0 fwd"), "{}", notes[0]);
+        assert!(notes[0].contains("clamped"), "{}", notes[0]);
+        assert!(notes[1].contains("layer 1 bwd"), "{}", notes[1]);
+        // the clamped profile is fully usable downstream
+        p.validate(&cl).unwrap();
+        // zero is not a positive time either
+        let (_, zero_notes) = profile_with_notes(&net, &cl, 4, 1, |_, _| (0.0, 1e-4));
+        assert_eq!(zero_notes.len(), net.len());
+    }
+
+    #[test]
+    fn clean_measurements_produce_no_notes() {
+        let net = zoo::mlp(&[8, 8, 8]);
+        let cl = presets::cpu_cluster(2);
+        let (p, notes) = profile_with_notes(&net, &cl, 4, 3, |_, _| (1e-4, 2e-4));
+        assert!(notes.is_empty(), "{notes:?}");
         p.validate(&cl).unwrap();
     }
 }

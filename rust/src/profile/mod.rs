@@ -74,7 +74,10 @@ impl Profile {
     }
 
     fn eff(c: &LayerCost, micro: f64) -> f64 {
-        if c.half_sat <= 0.0 {
+        // `micro <= 0` guards the saturating branch's 0/(0+h) = 0, which
+        // would turn the caller's `cost * micro / eff` into 0/0 = NaN —
+        // a degenerate micro-batch size costs zero time, not NaN.
+        if c.half_sat <= 0.0 || micro <= 0.0 {
             1.0
         } else {
             micro / (micro + c.half_sat)
@@ -182,6 +185,23 @@ mod tests {
         let t1 = p.fwd_time(0, 0, 5, 1.0);
         let t32 = p.fwd_time(0, 0, 5, 32.0) / 32.0;
         assert!(t32 < t1, "per-sample time should drop with batch: {t32} vs {t1}");
+    }
+
+    #[test]
+    fn zero_micro_batch_costs_zero_not_nan() {
+        // analytical profiles have half_sat > 0, so micro = 0 used to hit
+        // cost * 0 / eff(0) = 0/0 = NaN and poison every downstream DP
+        let net = zoo::vgg16(224);
+        let cl = presets::v100_cluster(1);
+        let p = analytical::profile(&net, &cl);
+        assert!(p.per_device[0][0].half_sat > 0.0, "the premise: a saturating curve");
+        let f = p.fwd_time(0, 0, p.n_layers(), 0.0);
+        let b = p.bwd_time(0, 0, p.n_layers(), 0.0);
+        assert!(f.is_finite() && b.is_finite(), "fwd {f}, bwd {b}");
+        assert_eq!(f, 0.0, "no samples, no variable compute");
+        assert_eq!(b, 0.0);
+        // positive micro-batches are untouched by the guard
+        assert!(p.fwd_time(0, 0, p.n_layers(), 1.0) > 0.0);
     }
 
     #[test]

@@ -163,6 +163,18 @@ impl SimArena {
         &self.peak_in_flight
     }
 
+    /// Per-boundary `(forward, backward)` channel-clear times of the
+    /// **last** simulation run through this arena (`len = n - 1` each):
+    /// the instant boundary `i`'s activation/error traffic stops
+    /// occupying its channel. The migration scheduler
+    /// ([`crate::planner::migrate`]) reads these to place state-transfer
+    /// slots into the draining pipeline's bubbles *behind* the last
+    /// activation message on each link, instead of re-deriving link
+    /// occupancy from an event trace.
+    pub fn link_free_times(&self) -> (&[f64], &[f64]) {
+        (&self.f_chan_free, &self.b_chan_free)
+    }
+
     /// Release capacity beyond what an `(n, m)`-stage simulation needs.
     ///
     /// Arena buffers only ever grow, so one 1024-stage order-search probe

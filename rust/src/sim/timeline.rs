@@ -37,6 +37,45 @@ fn op_label(op: &Op) -> String {
     }
 }
 
+/// Render per-link occupancy with migration slots overlaid: one row per
+/// physical link, `#` while the link still carries pipeline traffic
+/// (`busy_until[link]`), `M` across each migration slot `(link, start,
+/// end)`, `.` idle. The migration scheduler's visual counterpart of
+/// [`render`] — a worked example lives in EXPERIMENTS.md's
+/// "closing the elastic loop" section.
+pub fn render_link_slots(
+    n_links: usize,
+    busy_until: &[f64],
+    slots: &[(usize, f64, f64)],
+    horizon: f64,
+    width: usize,
+) -> String {
+    assert!(width >= 10);
+    assert_eq!(busy_until.len(), n_links);
+    let mut out = String::new();
+    if n_links == 0 || !(horizon > 0.0) {
+        return out;
+    }
+    let dt = horizon / width as f64;
+    let col = |t: f64| ((t / dt) as usize).min(width);
+    for l in 0..n_links {
+        let mut row = vec![b'.'; width];
+        for cell in row.iter_mut().take(col(busy_until[l])) {
+            *cell = b'#';
+        }
+        for &(link, start, end) in slots.iter().filter(|s| s.0 == l) {
+            debug_assert!(link == l);
+            let lo = col(start).min(width - 1);
+            let hi = ((end / dt).ceil() as usize).clamp(lo + 1, width);
+            for cell in row[lo..hi].iter_mut() {
+                *cell = b'M';
+            }
+        }
+        out.push_str(&format!("link{:<2}|{}|\n", l, String::from_utf8_lossy(&row)));
+    }
+    out
+}
+
 /// A compact per-stage op-sequence line (no time axis) — useful when the
 /// schedule's *order* is the point, e.g. Fig. 5's warm-up depths.
 pub fn render_order(result: &SimResult, n_stages: usize) -> String {
@@ -85,6 +124,20 @@ mod tests {
         // Fig. 5(a): acc1 warms up F1 F2 F3; acc3 alternates immediately.
         assert!(s.lines().next().unwrap().starts_with("acc1 : F1 F2 F3 B1"));
         assert!(s.lines().nth(2).unwrap().starts_with("acc3 : F1 B1 F2 B2"));
+    }
+
+    #[test]
+    fn link_slots_render_busy_then_migration() {
+        // link 0 busy to t=5, migrating 6..8; link 1 idle then migrating 2..4
+        let s =
+            render_link_slots(2, &[5.0, 0.0], &[(0, 6.0, 8.0), (1, 2.0, 4.0)], 10.0, 20);
+        let lines: Vec<&str> = s.lines().collect();
+        assert_eq!(lines.len(), 2);
+        assert_eq!(lines[0], "link0 |##########..MMMM....|");
+        assert_eq!(lines[1], "link1 |....MMMM............|");
+        // degenerate inputs render as nothing, not a panic
+        assert_eq!(render_link_slots(0, &[], &[], 10.0, 20), "");
+        assert_eq!(render_link_slots(1, &[0.0], &[], 0.0, 20), "");
     }
 
     #[test]

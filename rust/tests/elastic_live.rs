@@ -1,0 +1,224 @@
+//! The elastic loop, closed live and end to end: a synthetic timing
+//! sample stream — no scripted scenario anywhere — drives
+//! `cluster::detect` → `planner::elastic::run_scenario` →
+//! `planner::migrate`, the detector emits exactly the expected events,
+//! the chosen migration schedule never stalls longer than its
+//! drain-and-copy fallback, the mid-epoch amortization keeps the
+//! degraded incumbent for a late-epoch event while switching for the
+//! same event early in the epoch, and the whole loop is bit-identical
+//! across planner worker counts.
+
+use bapipe::cluster::detect::{detect, DetectorConfig, SampleStream};
+use bapipe::cluster::mutate::ClusterEvent;
+use bapipe::cluster::presets;
+use bapipe::model::zoo;
+use bapipe::planner::elastic::{epoch_micro_batches, run_scenario, ReplanRun};
+use bapipe::planner::{self, Choice, Options, Plan};
+use bapipe::profile::analytical;
+use bapipe::util::json::Json;
+
+const VICTIM: usize = 1;
+const STEP_AT: usize = 10;
+const TICKS: usize = 24;
+/// Default config (window 5, dwell 3): the EWMA crosses `enter` at
+/// `STEP_AT + 2` and the dwell completes at `STEP_AT + 4`.
+const EMIT_TICK: usize = STEP_AT + 4;
+
+fn opts(jobs: usize, samples_per_epoch: usize) -> Options {
+    Options {
+        batch_per_device: 8.0,
+        samples_per_epoch,
+        m_candidates: vec![4, 8],
+        consider_dp: false,
+        jobs,
+        ..Options::default()
+    }
+}
+
+/// A clean 4-device / 3-link sample stream in the CLI's JSON shape:
+/// constant per-channel baselines, with device `VICTIM` stepping to 2x
+/// its baseline from tick `STEP_AT` on — one persistent straggler, zero
+/// jitter, nothing else.
+fn stream_json(mb_per_tick: Option<u64>) -> String {
+    let mut ticks = Vec::with_capacity(TICKS);
+    for t in 0..TICKS {
+        let dev: Vec<String> = (0..4)
+            .map(|d| {
+                let base = 1e-3 * (d + 1) as f64;
+                let v = if d == VICTIM && t >= STEP_AT { 2.0 * base } else { base };
+                format!("{v:e}")
+            })
+            .collect();
+        ticks.push(format!(
+            r#"{{"device_times":[{}],"link_times":[2e-4,2e-4,2e-4]}}"#,
+            dev.join(",")
+        ));
+    }
+    let mb = match mb_per_tick {
+        Some(k) => format!(r#","mb_per_tick":{k}"#),
+        None => String::new(),
+    };
+    format!(r#"{{"name":"live-straggler"{mb},"ticks":[{}]}}"#, ticks.join(","))
+}
+
+fn parse_stream(mb_per_tick: Option<u64>) -> SampleStream {
+    let doc = Json::parse(&stream_json(mb_per_tick)).unwrap();
+    SampleStream::from_json(&doc).unwrap()
+}
+
+/// Detect on a positioned stream and replay the synthesized scenario
+/// against `incumbent`. The detector itself is exercised on every call —
+/// each run goes JSON → detect → scenario → replan, never a script.
+fn run_live(
+    incumbent: &Plan,
+    mb_per_tick: u64,
+    o: &Options,
+) -> (bapipe::cluster::mutate::Scenario, ReplanRun) {
+    let net = zoo::vgg16(224);
+    let cl = presets::gpu_mixed_cluster(4);
+    let prof = analytical::profile(&net, &cl);
+    let stream = parse_stream(Some(mb_per_tick));
+    let det = detect(&stream, &DetectorConfig::default()).unwrap();
+    let scenario = det.to_scenario(&stream);
+    let run = run_scenario(&net, &cl, &prof, incumbent, &scenario, o).unwrap();
+    (scenario, run)
+}
+
+/// Micro-batches per tick that puts the emission at `frac` of the epoch
+/// (capped strictly inside it).
+fn mb_for_fraction(total_mb: u64, frac: f64) -> u64 {
+    let mb = ((frac * total_mb as f64) / EMIT_TICK as f64).round().max(1.0) as u64;
+    // stay strictly before the boundary: past it the keep is trivial
+    mb.min(((0.92 * total_mb as f64) / EMIT_TICK as f64).max(1.0) as u64).max(1)
+}
+
+#[test]
+fn live_stream_detects_replans_and_amortizes_mid_epoch() {
+    let net = zoo::vgg16(224);
+    let cl = presets::gpu_mixed_cluster(4);
+    let prof = analytical::profile(&net, &cl);
+
+    // --- the detector half: exactly one event, on the right device,
+    // with the exact step factor, at the predicted tick ---
+    let stream = parse_stream(None);
+    let det = detect(&stream, &DetectorConfig::default()).unwrap();
+    assert_eq!(det.events.len(), 1, "{:?}", det.events);
+    assert_eq!(det.events[0].tick, EMIT_TICK);
+    match &det.events[0].event {
+        ClusterEvent::Straggler { device, slowdown } => {
+            assert_eq!(*device, VICTIM);
+            assert!((slowdown - 2.0).abs() < 1e-9, "median ratio is the step size: {slowdown}");
+        }
+        other => panic!("expected a straggler, got {other:?}"),
+    }
+
+    // --- probe run: measure the migration stall and the epoch gap
+    // between the degraded incumbent and the challenger at a known
+    // early position ---
+    let s_probe = 8192usize;
+    let o = opts(1, s_probe);
+    let incumbent = planner::explore(&net, &cl, &prof, &o);
+    assert!(matches!(incumbent.choice, Choice::Pipeline { .. }));
+    let total_probe = epoch_micro_batches(&incumbent, cl.len(), &o).unwrap();
+    let (scenario, probe) = run_live(&incumbent, mb_for_fraction(total_probe, 0.10), &o);
+    assert_eq!(scenario.events.len(), 1, "the live scenario is the detection, nothing else");
+    assert!(scenario.events[0].at_mb.is_some(), "mb_per_tick positions the event");
+    assert_eq!(probe.steps.len(), 1);
+    let step = &probe.steps[0];
+    assert!(step.event.contains("straggler"), "{}", step.event);
+    assert!(step.event.contains("at micro-batch"), "{}", step.event);
+
+    // the challenger's transfers were scheduled against the drain, and
+    // overlapping into bubbles never loses to stop-the-world copying
+    let sched = step.schedule.as_ref().expect("pipeline-to-pipeline step has a schedule");
+    assert!(
+        sched.stall <= sched.drain_stall + 1e-9,
+        "overlap {} vs drain-and-copy {}",
+        sched.stall,
+        sched.drain_stall
+    );
+    assert!(sched.stall > 0.0, "a 2x straggler must move layers (stall 0 cannot amortize)");
+    let dec = step.decision.as_ref().expect("positioned event with a draining incumbent");
+    let r = dec.position.remaining_fraction();
+    assert!(r > 0.0);
+    let inc_epoch = dec.remaining_incumbent / r;
+    let chal_epoch = (dec.remaining_challenger - dec.stall) / r;
+    let gap = inc_epoch - chal_epoch;
+    assert!(
+        gap > 0.0,
+        "the challenger must beat the degraded incumbent over a full epoch (gap {gap})"
+    );
+
+    // --- pick an epoch length that lands the stall inside the
+    // amortization window: stall ≈ 0.4 x gap, so an event at 10% of the
+    // epoch switches (0.4 < 0.9) and the same event at 85% keeps
+    // (0.4 > 0.15). The gap scales ~linearly with samples_per_epoch;
+    // the 6x-wide window absorbs the nonlinearity, and the power-of-two
+    // neighbours catch a probe that lands off-centre. ---
+    let s_star = ((s_probe as f64) * dec.stall / (0.4 * gap)).round().max(64.0) as usize;
+    let mut found = None;
+    for s in [s_star, s_star / 2, s_star * 2, s_star / 4, s_star * 4] {
+        if s < 64 {
+            continue;
+        }
+        let o = opts(1, s);
+        let inc = planner::explore(&net, &cl, &prof, &o);
+        let total = match epoch_micro_batches(&inc, cl.len(), &o) {
+            Some(t) if t > 2 * EMIT_TICK as u64 => t,
+            _ => continue,
+        };
+        let (_, early) = run_live(&inc, mb_for_fraction(total, 0.10), &o);
+        let (_, late) = run_live(&inc, mb_for_fraction(total, 0.85), &o);
+        let ed = early.steps[0].decision.as_ref().unwrap().clone();
+        let ld = late.steps[0].decision.as_ref().unwrap().clone();
+        if ed.switched && !ld.switched {
+            found = Some((s, o, inc, early, late, ed, ld));
+            break;
+        }
+    }
+    let (s, o, inc, early, late, ed, ld) =
+        found.expect("no epoch length separates early-switch from late-keep");
+
+    // early in the epoch the stall amortizes: the challenger is adopted
+    assert!(ed.switched, "{}", ed.describe());
+    assert!(ed.remaining_challenger < ed.remaining_incumbent);
+    let em = early.steps[0].migration.as_ref().unwrap();
+    assert!(em.bytes > 0, "switching moves the reassigned layers' state");
+
+    // late in the epoch it cannot pay before the boundary: the degraded
+    // incumbent is kept, nothing moves, and the plan honestly reports
+    // the *degraded* epoch time
+    assert!(!ld.switched, "{}", ld.describe());
+    assert!(ld.position.at_mb > ed.position.at_mb);
+    let lstep = &late.steps[0];
+    assert_eq!(lstep.plan.choice, inc.choice, "kept incumbent, same choice");
+    assert_eq!(lstep.migration.as_ref().unwrap().bytes, 0, "a kept incumbent moves nothing");
+    assert!(
+        lstep.plan.epoch_time > inc.epoch_time,
+        "the kept plan carries the straggler-degraded timing"
+    );
+    assert!(
+        lstep.provenance.iter().any(|l| l.contains("keeping the degraded incumbent")),
+        "{:?}",
+        lstep.provenance
+    );
+
+    // --- the whole live loop is bit-identical across worker counts ---
+    let total = epoch_micro_batches(&inc, cl.len(), &o).unwrap();
+    for frac in [0.10, 0.85] {
+        let mb = mb_for_fraction(total, frac);
+        let (_, a) = run_live(&inc, mb, &opts(1, s));
+        let (_, b) = run_live(&inc, mb, &opts(8, s));
+        assert_eq!(a.steps.len(), b.steps.len());
+        for (sa, sb) in a.steps.iter().zip(&b.steps) {
+            assert_eq!(sa.plan.choice, sb.plan.choice, "event {}", sa.event);
+            assert_eq!(sa.plan.epoch_time, sb.plan.epoch_time, "event {}", sa.event);
+            assert_eq!(sa.plan.device_order, sb.plan.device_order, "event {}", sa.event);
+            assert_eq!(sa.plan.report.evaluations, sb.plan.report.evaluations);
+            assert_eq!(sa.migration, sb.migration, "event {}", sa.event);
+            assert_eq!(sa.schedule, sb.schedule, "event {}", sa.event);
+            assert_eq!(sa.decision, sb.decision, "event {}", sa.event);
+            assert_eq!(sa.provenance, sb.provenance, "event {}", sa.event);
+        }
+    }
+}

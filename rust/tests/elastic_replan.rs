@@ -90,20 +90,20 @@ fn warm_replan_never_loses_to_cold_exploration() {
     let prof = analytical::profile(&net, &cl);
     let o = opts(1);
     let incumbent = planner::explore(&net, &cl, &prof, &o);
-    let scenario = Scenario {
-        name: "degrade".to_string(),
-        events: vec![
+    let scenario = Scenario::scripted(
+        "degrade",
+        vec![
             ClusterEvent::Straggler { device: 1, slowdown: 2.0 },
             ClusterEvent::DeviceLoss { device: 4 },
             ClusterEvent::LinkDegrade { link: 0, bandwidth_factor: 0.25, latency_factor: 1.0 },
         ],
-    };
+    );
     let run = run_scenario(&net, &cl, &prof, &incumbent, &scenario, &o).unwrap();
 
     // replay the mutations independently to rebuild each step's cluster
     let (mut c, mut p) = (cl, prof);
     for (event, step) in scenario.events.iter().zip(&run.steps) {
-        let mu = mutate::apply(&net, &c, &p, event).unwrap();
+        let mu = mutate::apply(&net, &c, &p, &event.event).unwrap();
         let cold = planner::explore(&net, &mu.cluster, &mu.profile, &o);
         assert!(
             step.plan.epoch_time <= cold.epoch_time,
