@@ -10,7 +10,9 @@
 //! loss/degrade/straggler script, with migration bytes — and the
 //! `migration_overlap` line: the challenger's state transfers placed
 //! into a 2BW drain's bubbles vs the drain-and-copy fallback on the same
-//! 16-device straggler, emitting the measured perf trajectory to
+//! 16-device straggler — plus the `verify_overhead` line: the static
+//! program certificate (`verify::check_program`) vs one `simulate_fast`
+//! pass on the 64-stage preset, emitting the measured perf trajectory to
 //! `BENCH_planner.json` at the repository root so later PRs can track
 //! regressions.
 //!
@@ -34,6 +36,7 @@ use bapipe::sim::batch::FamilySim;
 use bapipe::sim::engine::{simulate_fast, simulate_reference, SimArena, SimSpec};
 use bapipe::util::benchkit::bench;
 use bapipe::util::json::{obj, Json};
+use bapipe::verify;
 
 fn main() {
     let quick = std::env::var("BAPIPE_BENCH_QUICK").map(|v| v != "0").unwrap_or(false)
@@ -60,6 +63,29 @@ fn main() {
     println!(
         "  des speedup (seed/fast): {des_speedup:.2}x  \
          ({seed_ns_per_op:.1} -> {fast_ns_per_op:.1} ns/op)"
+    );
+
+    // ---- Static verifier overhead on the 64-stage preset: the full
+    // program certificate (per-stage dependency walk, transfer FIFO
+    // proof, deadlock topological sort, staleness bound, stash-depth
+    // derivation) vs ONE `simulate_fast` pass of the same shape — the
+    // per-candidate price the `cfg(debug_assertions)` planner gate pays.
+    let vn = 64usize;
+    let vm = 512usize;
+    let vspec =
+        SimSpec::uniform(ScheduleKind::OneFOneBSo, vn, vm, 1e-3, 2e-3, 0.1e-3, ExecMode::Sync);
+    let mut varena = SimArena::new();
+    let v_des = bench(&format!("verify/one-des-pass 1f1b-so n={vn} m={vm}"), warm, iters, || {
+        std::hint::black_box(simulate_fast(&vspec, &mut varena).makespan);
+    });
+    let v_check = bench(&format!("verify/check_program 1f1b-so n={vn} m={vm}"), warm, iters, || {
+        let r = verify::check_program(ScheduleKind::OneFOneBSo, vn, vm);
+        assert!(r.is_clean(), "{}", r.render("bench program"));
+        std::hint::black_box(r.violations.len());
+    });
+    let verify_ratio = v_check.p50 / v_des.p50;
+    println!(
+        "  verify overhead (check_program / one DES pass) n={vn} m={vm}: {verify_ratio:.2}x"
     );
 
     // ---- Batched-family DES at 1024-stage scale: one M-grid family
@@ -457,6 +483,17 @@ fn main() {
             ]),
         ),
         (
+            "verify_overhead",
+            obj(vec![
+                ("schedule", Json::from("1F1B-SO")),
+                ("stages", Json::from(vn)),
+                ("m", Json::from(vm)),
+                ("des_pass_ms", Json::Num(v_des.p50 * 1e3)),
+                ("check_ms", Json::Num(v_check.p50 * 1e3)),
+                ("ratio_check_over_des", Json::Num(verify_ratio)),
+            ]),
+        ),
+        (
             "sim_batch",
             obj(vec![
                 ("schedule", Json::from("1F1B-SO")),
@@ -649,6 +686,22 @@ fn main() {
     if rp_speedup < 1.0 {
         let msg = format!(
             "warm replan only {rp_speedup:.2}x over cold re-exploration (floor: 1x)"
+        );
+        if quick {
+            println!("  WARNING: {msg} — quick mode is noise-prone; run the full bench");
+        } else {
+            panic!("{msg} (measurements preserved in {out})");
+        }
+    }
+
+    // This PR's floor, same pattern: the static verifier must stay well
+    // under the simulation it replaces — at most half of one
+    // `simulate_fast` pass on the 64-stage preset. It does strictly less
+    // work (one linear walk per stage plus one topological pass; no
+    // event ordering, no time arithmetic).
+    if verify_ratio > 0.5 {
+        let msg = format!(
+            "check_program costs {verify_ratio:.2}x of one DES pass (ceiling: 0.5x)"
         );
         if quick {
             println!("  WARNING: {msg} — quick mode is noise-prone; run the full bench");

@@ -98,6 +98,20 @@
 //! let live = detection.to_scenario(&stream);
 //! let run = planner::elastic::run_scenario(&net, &cl, &prof, &plan, &live, &opts).unwrap();
 //! println!("{}", run.render());
+//! // 8. Certify without simulating: `verify` statically proves every
+//! //    generated stage program dependency-sound (fwd before bwd per
+//! //    micro-batch, FIFO transfers, no send/recv deadlock cycle),
+//! //    certifies the schedule's staleness bound (2BW keeps exactly one
+//! //    shadow weight version; 1F1B keeps none) and re-derives each
+//! //    stage's peak memory from program text — then audits the emitted
+//! //    artifact itself (`bapipe check plan.json`, exit 0/1/2 =
+//! //    clean/warnings/violations). Debug builds run the same gate on
+//! //    every candidate before it reaches the DES.
+//! let gate = bapipe::verify::check_program(
+//!     bapipe::schedule::ScheduleKind::TwoBW, 4, 8);
+//! assert!(gate.is_clean(), "{}", gate.render("2bw 4x8"));
+//! let audit = bapipe::verify::plan_audit(&plan, Some(&cl));
+//! assert_eq!(audit.exit_code(), 0);
 //! ```
 //!
 //! The simulator itself has three entry points: `sim::engine::simulate_full`
@@ -109,9 +123,29 @@
 //! with each other and with the retained seed oracle
 //! `sim::engine::simulate_reference`.
 #![deny(missing_docs)]
-// The cost-model layers pass (profile, cluster, partition, micro, m)
-// tuples through free functions by design — the argument-count lint
-// would force noise structs on a hot, internally-consistent API.
+// The crate is pure safe Rust end to end — the simulator, planner and
+// verifier never need raw pointers, FFI or unchecked indexing, so lock
+// that property in rather than merely observing it.
+#![forbid(unsafe_code)]
+// Ratcheted lint wall: each of these is verified absent from the tree
+// and denied so it cannot creep back in. Debug/stub macros never belong
+// in committed planner code, `std::process::exit` would skip arena /
+// cache destructors (the CLI exits through `main`'s return path except
+// for the explicit `bapipe check` exit-code contract, which lives in
+// the binary crate, not here), and `mem::forget` would silently leak
+// pooled simulator arenas.
+#![deny(clippy::dbg_macro)]
+#![deny(clippy::todo)]
+#![deny(clippy::unimplemented)]
+#![deny(clippy::exit)]
+#![deny(clippy::mem_forget)]
+// Documented allowlist — pedantic lints we deliberately do NOT ratchet:
+// * `clippy::too_many_arguments` (below): the cost-model layers pass
+//   (profile, cluster, partition, micro, m) tuples through free
+//   functions by design — the argument-count lint would force noise
+//   structs on a hot, internally-consistent API.
+// * print lints stay off: `util::logging`, the benches and the report
+//   renderers talk to stdout/stderr on purpose.
 #![allow(clippy::too_many_arguments)]
 
 pub mod cluster;
@@ -131,6 +165,7 @@ pub mod runtime;
 pub mod schedule;
 pub mod sim;
 pub mod util;
+pub mod verify;
 
 /// Crate-wide result type (thin alias over [`anyhow::Result`]).
 pub type Result<T> = anyhow::Result<T>;

@@ -26,6 +26,15 @@
 //!               --detect-window)
 //!   plan      — plan.json artifact tooling: `plan diff <a> <b>` compares
 //!               winner, time deltas and stage-boundary moves
+//!   check     — statically verify a plan.json artifact without simulating:
+//!               re-generate the winning schedule's stage programs and prove
+//!               dependency order, FIFO transfers, deadlock freedom and the
+//!               weight-staleness bound, re-derive peak memory from program
+//!               text, and audit the artifact's structural invariants
+//!               (partition coverage, device-order permutation, Pareto-front
+//!               sortedness, provenance). `--cluster <c> --n <k>` adds
+//!               device-capacity checks. Exit code 0 = clean, 1 = warnings
+//!               only, 2 = violations.
 //!   partition — show the balanced partition for a model/cluster
 //!   simulate  — DES one schedule and print its timeline (Figs. 4–6)
 //!   train     — real pipeline training over AOT artifacts  [pjrt feature]
@@ -281,6 +290,26 @@ fn main() -> bapipe::Result<()> {
                 other => anyhow::bail!("unknown plan subcommand `{other}` (expected: diff)"),
             }
         }
+        "check" => {
+            let path = args.positional.get(1).map(String::as_str).ok_or_else(|| {
+                anyhow::anyhow!(
+                    "usage: bapipe check <plan.json> [--cluster <c> --n <k>]  \
+                     (exit 0 clean / 1 warnings / 2 violations)"
+                )
+            })?;
+            let plan = load_plan(path)?;
+            // Capacity checks need the cluster the plan was made for; the
+            // artifact carries its name in the report but not the device
+            // table, so the caller passes it back in.
+            let cl = args
+                .opt_str("cluster")
+                .map(|name| cluster_by_name(name, args.get_usize("n", 4)));
+            let report = bapipe::verify::plan_audit(&plan, cl.as_ref());
+            println!("{}", report.render(path));
+            // The 0/1/2 exit-code contract is the whole point of this
+            // subcommand (CI gates on it), so bypass `main`'s Ok path.
+            std::process::exit(report.exit_code());
+        }
         "partition" => {
             let model = args.get_str("model", "vgg16");
             let net = zoo::by_name(&model)
@@ -387,7 +416,7 @@ fn main() -> bapipe::Result<()> {
         _ => {
             println!(
                 "bapipe — balanced pipeline parallelism for DNN training\n\n\
-                 usage: bapipe <explore|replan|plan|partition|simulate|train|dp|profile> [--key value ...]\n\
+                 usage: bapipe <explore|replan|plan|check|partition|simulate|train|dp|profile> [--key value ...]\n\
                  examples:\n\
                    bapipe explore --model vgg16 --cluster v100 --n 4 --batch 32\n\
                    bapipe explore --model resnet50 --cluster fpga-mixed --n 4 --batch 4 \\\n\
@@ -417,6 +446,10 @@ fn main() -> bapipe::Result<()> {
                        # then replan each synthesized event; thresholds via\n\
                        # --detect-enter 1.25 --detect-exit 1.1 --detect-dwell 3\n\
                    bapipe plan diff old-plan.json new-plan.json\n\
+                   bapipe check plan.json --cluster v100 --n 4\n\
+                       # static certification, no DES: dependency/transfer/deadlock\n\
+                       # proofs + staleness bound + memory certificate + artifact\n\
+                       # audit; exit 0 clean, 1 warnings, 2 violations\n\
                    bapipe simulate --schedule 1f1b-so --n 3 --m 8\n\
                    bapipe train --artifacts artifacts/lm10m-s4-b4 --schedule 1f1b --m 8 --steps 50\n\
                    bapipe dp --artifacts artifacts/lm10m-s4-b4 --replicas 2 --steps 20"

@@ -145,10 +145,21 @@ impl PlanDiff {
                 "winner: {}",
                 if self.same_choice { "identical" } else { "CHANGED" }
             ),
-            format!(
-                "mini-batch: {:+.6}s  epoch: {:+.3}s  (B/A {:.4}x)",
-                self.minibatch_delta, self.epoch_delta, self.epoch_ratio
-            ),
+            // Plans that never evaluated a side (e.g. DP infeasible on
+            // both) carry ±inf times; deltas and the ratio are then
+            // NaN/inf and bare format specifiers would print noise —
+            // stub the timing line out instead.
+            if self.minibatch_delta.is_finite()
+                && self.epoch_delta.is_finite()
+                && self.epoch_ratio.is_finite()
+            {
+                format!(
+                    "mini-batch: {:+.6}s  epoch: {:+.3}s  (B/A {:.4}x)",
+                    self.minibatch_delta, self.epoch_delta, self.epoch_ratio
+                )
+            } else {
+                "mini-batch: n/a  epoch: n/a  (B/A n/a)".to_string()
+            },
         ];
         match (&self.partition_note, self.boundary_moves.is_empty()) {
             (Some(note), true) => lines.push(format!("boundaries: {note}")),
@@ -389,6 +400,35 @@ mod tests {
         let d = compare(&a, &b);
         assert!(d.device_order_changed);
         assert!(d.render().contains("device order: CHANGED"));
+    }
+
+    #[test]
+    fn single_stage_plans_render_a_stub_not_nothing() {
+        // A one-stage pipeline has exactly one real boundary pair
+        // [0, L] — the diff must still say *something* about boundaries
+        // rather than emitting a zero-width section.
+        let a = pipeline_plan(16, vec![0, 12], 64.0);
+        let d = compare(&a, &a);
+        assert!(d.same_choice);
+        assert!(d.boundary_moves.is_empty());
+        let text = d.render();
+        assert!(text.contains("boundaries: unchanged"), "{text}");
+        assert!(text.lines().count() >= 4, "{text}");
+    }
+
+    #[test]
+    fn non_finite_epoch_ratio_renders_a_stub() {
+        // Both sides DP with infinite epoch time (never evaluated):
+        // the B/A ratio is NaN — render must not print `NaNx`.
+        let mut a = pipeline_plan(16, vec![0, 12], 64.0);
+        a.choice = Choice::DataParallel;
+        a.epoch_time = f64::INFINITY;
+        a.minibatch_time = f64::INFINITY;
+        let d = compare(&a, &a);
+        assert!(!d.epoch_ratio.is_finite());
+        let text = d.render();
+        assert!(text.contains("mini-batch: n/a  epoch: n/a  (B/A n/a)"), "{text}");
+        assert!(!text.contains("NaN"), "{text}");
     }
 
     #[test]

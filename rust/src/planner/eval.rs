@@ -187,6 +187,25 @@ pub(crate) fn prepare(
     let spec =
         build_spec_plan(profile, cluster, &plan, cand.kind, cand.recompute, cand.micro, cand.m);
     let lb_epoch = super::bounds::epoch_lower_bound(&spec, n_minibatches);
+    // Debug builds statically certify every candidate before it reaches
+    // the DES: the generated program's dependency/transfer/deadlock/
+    // staleness analysis plus the occupancy-vs-StageBytes cross-check.
+    // Release builds skip this (CI runs the suite once with
+    // `RUSTFLAGS="-C debug-assertions"` so the gate executes at release
+    // optimization levels too).
+    #[cfg(debug_assertions)]
+    {
+        let usable: Vec<u64> =
+            cluster.devices.iter().map(|d| mm.usable(d.mem_capacity)).collect();
+        let gate =
+            crate::verify::check_candidate(cand.kind, spec.n(), cand.m, &sb, Some(&usable));
+        debug_assert!(
+            gate.violations.is_empty(),
+            "planner verify gate rejected {:?}:\n{}",
+            cand,
+            gate.render("candidate")
+        );
+    }
     Ok(Prepared { spec, partition: plan.partition, lb_epoch, stage_bytes: sb })
 }
 

@@ -9,6 +9,15 @@ use crate::schedule::Op;
 /// micro-batch 3 fwd), idle time is `.`.
 pub fn render(result: &SimResult, n_stages: usize, width: usize) -> String {
     assert!(width >= 10);
+    // A zero-makespan result (degenerate spec, no events) has no time
+    // axis to divide by — stub out all-idle rows rather than NaN columns.
+    if !(result.makespan > 0.0) {
+        let mut out = String::new();
+        for s in 0..n_stages {
+            out.push_str(&format!("acc{:<2}|{}|\n", s + 1, ".".repeat(width)));
+        }
+        return out;
+    }
     let dt = result.makespan / width as f64;
     let mut out = String::new();
     for s in 0..n_stages {
@@ -53,7 +62,16 @@ pub fn render_link_slots(
     assert!(width >= 10);
     assert_eq!(busy_until.len(), n_links);
     let mut out = String::new();
-    if n_links == 0 || !(horizon > 0.0) {
+    // Degenerate inputs still render *something*: callers print the
+    // result unconditionally, so an empty string used to make e.g. a
+    // single-device migration (zero links) vanish from the report.
+    if n_links == 0 {
+        return "links: (none)\n".to_string();
+    }
+    if !(horizon > 0.0) {
+        for l in 0..n_links {
+            out.push_str(&format!("link{:<2}|{}|\n", l, ".".repeat(width)));
+        }
         return out;
     }
     let dt = horizon / width as f64;
@@ -135,9 +153,25 @@ mod tests {
         assert_eq!(lines.len(), 2);
         assert_eq!(lines[0], "link0 |##########..MMMM....|");
         assert_eq!(lines[1], "link1 |....MMMM............|");
-        // degenerate inputs render as nothing, not a panic
-        assert_eq!(render_link_slots(0, &[], &[], 10.0, 20), "");
-        assert_eq!(render_link_slots(1, &[0.0], &[], 0.0, 20), "");
+    }
+
+    #[test]
+    fn degenerate_inputs_render_stub_lines() {
+        // Zero links (single-device cluster): an explicit marker, not "".
+        assert_eq!(render_link_slots(0, &[], &[], 10.0, 20), "links: (none)\n");
+        // Zero horizon: one all-idle row per link, still pipe-framed.
+        assert_eq!(render_link_slots(1, &[0.0], &[], 0.0, 20), "link0 |....................|\n");
+        let two = render_link_slots(2, &[0.0, 0.0], &[], 0.0, 20);
+        assert_eq!(two.lines().count(), 2);
+        // Zero-makespan stage render: all-idle rows, no NaN columns.
+        let empty = SimResult {
+            makespan: 0.0,
+            bubble_fraction: 0.0,
+            peak_in_flight: vec![],
+            events: vec![],
+        };
+        let s = render(&empty, 2, 20);
+        assert_eq!(s, "acc1 |....................|\nacc2 |....................|\n");
     }
 
     #[test]

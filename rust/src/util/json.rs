@@ -4,6 +4,11 @@
 //! Supports the full JSON grammar (objects, arrays, strings with escapes
 //! and `\uXXXX`, numbers, booleans, null). Object key order is preserved
 //! (insertion order) so emitted manifests and configs diff cleanly.
+//!
+//! The parser is hardened for untrusted artifact input: nesting deeper
+//! than [`MAX_DEPTH`] levels and duplicate object keys are both typed
+//! [`JsonError`]s rather than a stack overflow / silent last-writer-wins
+//! — `bapipe check` audits plan files that may have been hand-edited.
 
 use std::collections::BTreeMap;
 use std::fmt;
@@ -25,10 +30,16 @@ pub enum Json {
     Obj(BTreeMap<String, Json>),
 }
 
+/// Maximum container nesting depth the parser accepts. The recursive
+/// descent uses the call stack, so unbounded depth would let a small
+/// hostile document (`[[[[…`) overflow it; 128 is far beyond any plan
+/// or config artifact this crate emits.
+pub const MAX_DEPTH: usize = 128;
+
 impl Json {
     /// Parse a JSON document from text.
     pub fn parse(s: &str) -> Result<Json, JsonError> {
-        let mut p = Parser { b: s.as_bytes(), i: 0 };
+        let mut p = Parser { b: s.as_bytes(), i: 0, depth: 0 };
         p.skip_ws();
         let v = p.value()?;
         p.skip_ws();
@@ -209,6 +220,7 @@ impl std::error::Error for JsonError {}
 struct Parser<'a> {
     b: &'a [u8],
     i: usize,
+    depth: usize,
 }
 
 impl<'a> Parser<'a> {
@@ -238,8 +250,8 @@ impl<'a> Parser<'a> {
     fn value(&mut self) -> Result<Json, JsonError> {
         self.skip_ws();
         match self.peek() {
-            Some(b'{') => self.object(),
-            Some(b'[') => self.array(),
+            Some(b'{') => self.nested(Self::object),
+            Some(b'[') => self.nested(Self::array),
             Some(b'"') => Ok(Json::Str(self.string()?)),
             Some(b't') => self.lit("true", Json::Bool(true)),
             Some(b'f') => self.lit("false", Json::Bool(false)),
@@ -248,6 +260,22 @@ impl<'a> Parser<'a> {
             Some(c) => Err(self.err(&format!("unexpected `{}`", c as char))),
             None => Err(self.err("unexpected end of input")),
         }
+    }
+
+    /// Run one container parse a level deeper, rejecting documents past
+    /// [`MAX_DEPTH`] before recursing (the error is typed; without this
+    /// a deep-enough document overflows the call stack instead).
+    fn nested(
+        &mut self,
+        f: fn(&mut Self) -> Result<Json, JsonError>,
+    ) -> Result<Json, JsonError> {
+        if self.depth >= MAX_DEPTH {
+            return Err(self.err(&format!("nesting deeper than {MAX_DEPTH} levels")));
+        }
+        self.depth += 1;
+        let v = f(self)?;
+        self.depth -= 1;
+        Ok(v)
     }
 
     fn lit(&mut self, word: &str, v: Json) -> Result<Json, JsonError> {
@@ -269,7 +297,16 @@ impl<'a> Parser<'a> {
         }
         loop {
             self.skip_ws();
+            let kpos = self.i;
             let k = self.string()?;
+            // Last-writer-wins would let a hand-edited artifact silently
+            // shadow a field the auditor then never sees — reject instead.
+            if m.contains_key(&k) {
+                return Err(JsonError {
+                    msg: format!("duplicate object key `{k}`"),
+                    pos: kpos,
+                });
+            }
             self.skip_ws();
             self.eat(b':')?;
             let v = self.value()?;
@@ -560,5 +597,31 @@ mod tests {
     fn builder_obj() {
         let j = obj(vec![("a", 1usize.into()), ("b", "x".into())]);
         assert_eq!(j.to_string_compact(), r#"{"a":1,"b":"x"}"#);
+    }
+
+    #[test]
+    fn depth_limit_is_a_typed_error_not_a_stack_overflow() {
+        // 100 levels (within MAX_DEPTH) parse fine…
+        let deep_ok = format!("{}1{}", "[".repeat(100), "]".repeat(100));
+        assert!(Json::parse(&deep_ok).is_ok());
+        // …but past the limit the parser refuses with a typed error
+        // instead of recursing until the stack dies.
+        let deep_bad = format!("{}1{}", "[".repeat(400), "]".repeat(400));
+        let err = Json::parse(&deep_bad).unwrap_err();
+        assert!(err.msg.contains("nesting deeper than"), "{err}");
+        // Mixed object/array nesting counts every container level.
+        let mixed = format!("{}1{}", r#"{"a":["#.repeat(200), "]}".repeat(200));
+        assert!(Json::parse(&mixed).unwrap_err().msg.contains("nesting"));
+    }
+
+    #[test]
+    fn duplicate_keys_are_rejected() {
+        let err = Json::parse(r#"{"a":1,"a":2}"#).unwrap_err();
+        assert!(err.msg.contains("duplicate object key `a`"), "{err}");
+        assert_eq!(err.pos, 7); // byte offset of the second `"a"`
+        // Nested objects get the same treatment.
+        assert!(Json::parse(r#"{"x":{"k":1,"k":2}}"#).is_err());
+        // Same key in *different* objects is of course fine.
+        assert!(Json::parse(r#"{"x":{"k":1},"y":{"k":2}}"#).is_ok());
     }
 }

@@ -1,0 +1,143 @@
+//! The memory-bound certificate: peak occupancy re-derived from program
+//! text, priced through the planner's own [`StageBytes`], cross-checked
+//! against declared stash depths, recorded peaks, and device capacity.
+
+use super::{VerifyError, VerifyReport};
+use crate::partition::memfit::StageBytes;
+
+/// Certify the memory story of one plan:
+///
+/// * `derived_peaks[i]` — stage `i`'s peak in-flight occupancy from the
+///   op walk ([`super::program::peak_occupancy`]) — must not exceed
+///   `stage_bytes[i].stash_depth`, the depth the memory model budgeted
+///   (an off-by-one stash depth is exactly the bug this catches).
+/// * The worst-case bytes `stage_bytes[i].peak()` must fit
+///   `usable[i]` when capacities are given (already passed through
+///   [`crate::partition::memfit::MemoryModel::usable`]).
+/// * Any `recorded[i]` peak figure (e.g. the plan's simulated
+///   `peak_memory`) must not exceed the certified worst case; a recorded
+///   figure *below* the statically certain floor
+///   `at_occupancy(derived_peaks[i])` is flagged as a warning — it cannot
+///   falsify the plan but it means the artifact's accounting drifted.
+pub fn check_memory(
+    derived_peaks: &[usize],
+    stage_bytes: &[StageBytes],
+    usable: Option<&[u64]>,
+    recorded: Option<&[u64]>,
+) -> VerifyReport {
+    let mut report = VerifyReport::default();
+    if derived_peaks.len() != stage_bytes.len() {
+        report.violations.push(VerifyError::PlanStructure {
+            what: format!(
+                "{} derived occupancies vs {} StageBytes entries",
+                derived_peaks.len(),
+                stage_bytes.len()
+            ),
+        });
+        report.sort();
+        return report;
+    }
+    for (i, (&peak_in_flight, sb)) in derived_peaks.iter().zip(stage_bytes).enumerate() {
+        if peak_in_flight > sb.stash_depth {
+            report.violations.push(VerifyError::StashDepth {
+                stage: i,
+                derived: peak_in_flight,
+                declared: sb.stash_depth,
+            });
+        }
+        let certified_floor = sb.at_occupancy(peak_in_flight.min(sb.stash_depth));
+        let worst_case = sb.peak();
+        if let Some(usable) = usable {
+            if let Some(&cap) = usable.get(i) {
+                if worst_case > cap {
+                    report.violations.push(VerifyError::MemoryBound {
+                        stage: i,
+                        peak: worst_case,
+                        usable: cap,
+                    });
+                }
+            }
+        }
+        if let Some(recorded) = recorded {
+            if let Some(&rec) = recorded.get(i) {
+                if rec > worst_case {
+                    report.violations.push(VerifyError::PeakMismatch {
+                        stage: i,
+                        recorded: rec,
+                        certified: worst_case,
+                    });
+                } else if rec < certified_floor {
+                    report.warnings.push(format!(
+                        "stage {i}: recorded peak {rec} B below the statically certain floor \
+                         {certified_floor} B"
+                    ));
+                }
+            }
+        }
+    }
+    report.sort();
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sb(static_bytes: u64, per_mb: u64, depth: usize) -> StageBytes {
+        StageBytes { static_bytes, per_mb_stash: per_mb, stash_depth: depth }
+    }
+
+    #[test]
+    fn clean_when_everything_agrees() {
+        let bytes = [sb(100, 10, 4), sb(80, 10, 2)];
+        let peaks = [4usize, 2];
+        let usable = [200u64, 200];
+        let recorded = [140u64, 100];
+        let r = check_memory(&peaks, &bytes, Some(&usable), Some(&recorded));
+        assert!(r.is_clean(), "{}", r.render("memory"));
+    }
+
+    #[test]
+    fn off_by_one_stash_depth_is_rejected() {
+        // The program needs 4 in flight but the memory model budgeted 3.
+        let bytes = [sb(100, 10, 3)];
+        let r = check_memory(&[4], &bytes, None, None);
+        assert!(matches!(
+            r.violations.as_slice(),
+            [VerifyError::StashDepth { stage: 0, derived: 4, declared: 3 }]
+        ));
+    }
+
+    #[test]
+    fn capacity_overflow_is_rejected() {
+        let bytes = [sb(100, 10, 4)]; // worst case 140 B
+        let usable = [120u64];
+        let r = check_memory(&[4], &bytes, Some(&usable), None);
+        assert!(matches!(
+            r.violations.as_slice(),
+            [VerifyError::MemoryBound { stage: 0, peak: 140, usable: 120 }]
+        ));
+    }
+
+    #[test]
+    fn recorded_peak_above_bound_is_rejected_below_floor_is_warned() {
+        let bytes = [sb(100, 10, 4), sb(100, 10, 4)];
+        // Stage 0 records more than the worst case; stage 1 records less
+        // than the floor its own occupancy implies.
+        let recorded = [150u64, 120];
+        let r = check_memory(&[4, 4], &bytes, None, Some(&recorded));
+        assert!(matches!(
+            r.violations.as_slice(),
+            [VerifyError::PeakMismatch { stage: 0, recorded: 150, certified: 140 }]
+        ));
+        assert_eq!(r.warnings.len(), 1);
+        assert!(r.warnings[0].contains("stage 1"));
+    }
+
+    #[test]
+    fn length_mismatch_is_structural() {
+        let r = check_memory(&[1, 2], &[sb(1, 1, 1)], None, None);
+        assert_eq!(r.exit_code(), 2);
+        assert!(matches!(r.violations.as_slice(), [VerifyError::PlanStructure { .. }]));
+    }
+}

@@ -1,0 +1,538 @@
+//! Static schedule and plan-artifact verification — certificates without
+//! simulation.
+//!
+//! Everything else in this crate that argues a schedule is *correct* does
+//! so dynamically: `simulate_reference` executes the program and the tests
+//! compare trajectories. This module proves the same properties from the
+//! program text alone, in one linear walk per stage plus one topological
+//! pass over the inter-stage op graph:
+//!
+//! * **Dependency order** ([`program::walk_stage`]) — per micro-batch,
+//!   forward before backward, no duplicate or missing ops, the weight
+//!   update only after every backward has drained.
+//! * **Transfer ordering and deadlock freedom**
+//!   ([`program::check_transfers`], [`program::check_deadlock`]) — every
+//!   activation/error a stage consumes is produced by its neighbour,
+//!   micro-batches cross each stage boundary in FIFO order per direction,
+//!   and the inter-stage op graph (program-order chains plus send/recv
+//!   edges) is acyclic, so no send can wait on its own receiver.
+//! * **Weight-version staleness** ([`program::required_weight_versions`])
+//!   — versions are tracked symbolically: plain intra-batch schedules
+//!   (1F1B, GPipe, FBP) need zero shadow versions, `TwoBW` declares
+//!   exactly one (`stale ≤ 1`), PipeDream's per-mini-batch updates need
+//!   `N − i − 1` at stage `i`; a program whose update lands while an
+//!   in-flight micro-batch still reads the old version is rejected.
+//! * **Memory bound** ([`memory::check_memory`]) — the peak in-flight
+//!   occupancy re-derived from the op walk must not exceed the declared
+//!   stash depth, and priced through the same
+//!   [`crate::partition::memfit::StageBytes`] the planner used it must
+//!   fit the usable device capacity and agree with any recorded
+//!   `peak_memory` figure.
+//! * **Plan artifacts** ([`plan_audit::plan_audit`]) — `plan.json`
+//!   structure: the partition covers all layers exactly once, the device
+//!   order is a permutation of the cluster, the Pareto front really is
+//!   non-dominated and sorted, bookkeeping counts and provenance
+//!   references resolve.
+//!
+//! Every violation is a typed [`VerifyError`] carrying the offending
+//! `(stage, pc, micro)` coordinates, and diagnostics are sorted by those
+//! coordinates so the output is independent of evaluation order (jobs 1 ≡
+//! jobs 8). Surfaced three ways: `bapipe check <plan.json>` (exit 0/1/2 =
+//! clean/warnings/violations), `cfg(debug_assertions)` gates inside
+//! `planner::eval::prepare`, and the `tests/verify_schedule.rs` property
+//! harness.
+
+pub mod memory;
+pub mod plan_audit;
+pub mod program;
+
+pub use memory::check_memory;
+pub use plan_audit::plan_audit;
+pub use program::{check_stage_programs, materialize};
+
+use crate::partition::memfit::StageBytes;
+use crate::schedule::ScheduleKind;
+use crate::sim::engine::SimSpec;
+use std::fmt;
+
+/// Which op family a diagnostic refers to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OpClass {
+    /// A forward pass of one micro-batch.
+    Fwd,
+    /// A backward pass of one micro-batch.
+    Bwd,
+    /// The weight update.
+    Update,
+}
+
+impl fmt::Display for OpClass {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(match self {
+            OpClass::Fwd => "fwd",
+            OpClass::Bwd => "bwd",
+            OpClass::Update => "update",
+        })
+    }
+}
+
+/// One violation found by the static verifier. Every variant carries the
+/// coordinates of the offending op — `stage` (pipeline stage index), `pc`
+/// (position in that stage's program), `micro` (micro-batch index) —
+/// wherever they exist, so a diagnostic points at a single op instance.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum VerifyError {
+    /// A backward op appears before the forward of the same micro-batch.
+    DependencyOrder {
+        /// Stage whose program is broken.
+        stage: usize,
+        /// Program counter of the premature backward.
+        pc: usize,
+        /// Micro-batch whose forward has not run yet.
+        micro: usize,
+    },
+    /// The same op (per micro-batch) appears twice in one stage program.
+    DuplicateOp {
+        /// Stage whose program is broken.
+        stage: usize,
+        /// Program counter of the second occurrence.
+        pc: usize,
+        /// Micro-batch the duplicated op belongs to.
+        micro: usize,
+        /// Which op family is duplicated.
+        what: OpClass,
+    },
+    /// A required op never appears in the stage program.
+    MissingOp {
+        /// Stage whose program is incomplete.
+        stage: usize,
+        /// Micro-batch whose op is missing.
+        micro: usize,
+        /// Which op family is missing.
+        what: OpClass,
+    },
+    /// A micro-batch index outside `0..M`.
+    MicroOutOfRange {
+        /// Stage whose program is broken.
+        stage: usize,
+        /// Program counter of the out-of-range op.
+        pc: usize,
+        /// The offending micro-batch index.
+        micro: usize,
+    },
+    /// The weight update is applied while ops of the same mini-batch are
+    /// still in flight (a later op would read the new version
+    /// inconsistently).
+    UpdateBeforeDrain {
+        /// Stage whose program is broken.
+        stage: usize,
+        /// Program counter of the premature update.
+        pc: usize,
+    },
+    /// Wrong number of update ops for the schedule's batching discipline.
+    UpdateCount {
+        /// Stage whose program is broken.
+        stage: usize,
+        /// Updates found in the program.
+        found: usize,
+        /// Updates the discipline requires (1 intra-batch, 0 inter-batch).
+        expected: usize,
+    },
+    /// An op consumes an activation/error its neighbour stage never
+    /// produces (a dropped transfer).
+    MissingProducer {
+        /// Consuming stage.
+        stage: usize,
+        /// Program counter of the consumer op.
+        pc: usize,
+        /// Micro-batch that is never produced upstream.
+        micro: usize,
+    },
+    /// Micro-batches cross a stage boundary out of FIFO order: the
+    /// consumer reads them in a different order than the producer emits
+    /// them, so the channel would deliver the wrong tensor first.
+    TransferOrder {
+        /// Consuming stage.
+        stage: usize,
+        /// Program counter of the first out-of-order consumer op.
+        pc: usize,
+        /// Micro-batch consumed out of order.
+        micro: usize,
+    },
+    /// The inter-stage op graph has a cycle: some send waits (through
+    /// program order and transfer edges) on its own receiver, so the
+    /// schedule deadlocks before the DES would ever run it.
+    DeadlockCycle {
+        /// The stages participating in the cycle, sorted ascending.
+        stages: Vec<usize>,
+    },
+    /// The schedule needs more weight versions than it declares: an
+    /// update lands between some micro-batch's forward and backward
+    /// without a shadow copy to keep the pair consistent.
+    StalenessBound {
+        /// Stage whose version budget is exceeded.
+        stage: usize,
+        /// Shadow versions the program text actually requires.
+        required: usize,
+        /// Shadow versions the schedule kind declares.
+        declared: usize,
+    },
+    /// The program's peak in-flight occupancy exceeds the stash depth the
+    /// memory model budgeted for.
+    StashDepth {
+        /// Stage whose stash is under-provisioned.
+        stage: usize,
+        /// Peak simultaneous in-flight micro-batches derived from the op
+        /// walk.
+        derived: usize,
+        /// Stash depth the memory model declares.
+        declared: usize,
+    },
+    /// A stage's certified peak bytes exceed the usable device capacity.
+    MemoryBound {
+        /// Stage that does not fit.
+        stage: usize,
+        /// Certified peak bytes.
+        peak: u64,
+        /// Usable capacity after the memory model's reserve.
+        usable: u64,
+    },
+    /// A recorded peak-memory figure disagrees with the static
+    /// certificate (it exceeds the worst-case bound the stash depth
+    /// implies).
+    PeakMismatch {
+        /// Stage whose record is inconsistent.
+        stage: usize,
+        /// Peak bytes the artifact records.
+        recorded: u64,
+        /// Peak bytes the certificate allows at most.
+        certified: u64,
+    },
+    /// A structural defect in a plan artifact (partition coverage, device
+    /// order, Pareto front, bookkeeping counts, provenance references).
+    PlanStructure {
+        /// Human-readable description of the defect.
+        what: String,
+    },
+}
+
+impl VerifyError {
+    /// The `(stage, pc, micro)` sort key. Coordinates a variant does not
+    /// have sort as `usize::MAX`, so stage-level diagnostics follow the
+    /// op-level ones of the same stage and artifact-level diagnostics come
+    /// last. This ordering is what makes verifier output deterministic
+    /// across `--jobs`.
+    pub fn coords(&self) -> (usize, usize, usize) {
+        const NA: usize = usize::MAX;
+        match self {
+            VerifyError::DependencyOrder { stage, pc, micro }
+            | VerifyError::MicroOutOfRange { stage, pc, micro }
+            | VerifyError::MissingProducer { stage, pc, micro }
+            | VerifyError::TransferOrder { stage, pc, micro }
+            | VerifyError::DuplicateOp { stage, pc, micro, .. } => (*stage, *pc, *micro),
+            VerifyError::UpdateBeforeDrain { stage, pc } => (*stage, *pc, NA),
+            VerifyError::MissingOp { stage, micro, .. } => (*stage, NA, *micro),
+            VerifyError::UpdateCount { stage, .. }
+            | VerifyError::StalenessBound { stage, .. }
+            | VerifyError::StashDepth { stage, .. }
+            | VerifyError::MemoryBound { stage, .. }
+            | VerifyError::PeakMismatch { stage, .. } => (*stage, NA, NA),
+            VerifyError::DeadlockCycle { stages } => {
+                (stages.first().copied().unwrap_or(NA), NA, NA)
+            }
+            VerifyError::PlanStructure { .. } => (NA, NA, NA),
+        }
+    }
+}
+
+impl fmt::Display for VerifyError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            VerifyError::DependencyOrder { stage, pc, micro } => {
+                write!(f, "stage {stage} pc {pc}: bwd of micro-batch {micro} before its fwd")
+            }
+            VerifyError::DuplicateOp { stage, pc, micro, what } => {
+                write!(f, "stage {stage} pc {pc}: duplicate {what} of micro-batch {micro}")
+            }
+            VerifyError::MissingOp { stage, micro, what } => {
+                write!(f, "stage {stage}: missing {what} of micro-batch {micro}")
+            }
+            VerifyError::MicroOutOfRange { stage, pc, micro } => {
+                write!(f, "stage {stage} pc {pc}: micro-batch {micro} out of range")
+            }
+            VerifyError::UpdateBeforeDrain { stage, pc } => {
+                write!(f, "stage {stage} pc {pc}: update applied before the mini-batch drained")
+            }
+            VerifyError::UpdateCount { stage, found, expected } => {
+                write!(f, "stage {stage}: {found} update op(s), expected {expected}")
+            }
+            VerifyError::MissingProducer { stage, pc, micro } => write!(
+                f,
+                "stage {stage} pc {pc}: micro-batch {micro} consumed but never produced by \
+                 the neighbour stage"
+            ),
+            VerifyError::TransferOrder { stage, pc, micro } => write!(
+                f,
+                "stage {stage} pc {pc}: micro-batch {micro} crosses the stage boundary out \
+                 of FIFO order"
+            ),
+            VerifyError::DeadlockCycle { stages } => {
+                write!(f, "send/recv deadlock cycle through stages {stages:?}")
+            }
+            VerifyError::StalenessBound { stage, required, declared } => write!(
+                f,
+                "stage {stage}: schedule requires {required} shadow weight version(s) but \
+                 declares {declared}"
+            ),
+            VerifyError::StashDepth { stage, derived, declared } => write!(
+                f,
+                "stage {stage}: peak in-flight occupancy {derived} exceeds the declared \
+                 stash depth {declared}"
+            ),
+            VerifyError::MemoryBound { stage, peak, usable } => write!(
+                f,
+                "stage {stage}: certified peak {peak} B exceeds usable capacity {usable} B"
+            ),
+            VerifyError::PeakMismatch { stage, recorded, certified } => write!(
+                f,
+                "stage {stage}: recorded peak {recorded} B exceeds the certified bound \
+                 {certified} B"
+            ),
+            VerifyError::PlanStructure { what } => write!(f, "plan: {what}"),
+        }
+    }
+}
+
+/// The outcome of one verification pass: hard violations (typed) plus
+/// advisory warnings (things that look suspicious but do not falsify the
+/// plan). [`VerifyReport::exit_code`] maps this onto the `bapipe check`
+/// exit convention.
+#[derive(Debug, Clone, Default)]
+pub struct VerifyReport {
+    /// Hard violations, sorted by [`VerifyError::coords`].
+    pub violations: Vec<VerifyError>,
+    /// Advisory warnings, sorted lexicographically.
+    pub warnings: Vec<String>,
+}
+
+impl VerifyReport {
+    /// True when there is nothing to report at all.
+    pub fn is_clean(&self) -> bool {
+        self.violations.is_empty() && self.warnings.is_empty()
+    }
+
+    /// The `bapipe check` exit convention: 0 clean, 1 warnings only,
+    /// 2 violations.
+    pub fn exit_code(&self) -> i32 {
+        if !self.violations.is_empty() {
+            2
+        } else if !self.warnings.is_empty() {
+            1
+        } else {
+            0
+        }
+    }
+
+    /// Fold another report into this one.
+    pub fn merge(&mut self, other: VerifyReport) {
+        self.violations.extend(other.violations);
+        self.warnings.extend(other.warnings);
+    }
+
+    /// Sort diagnostics into the canonical coordinate order (and drop
+    /// exact duplicates), making the rendered output independent of the
+    /// order individual checks ran in.
+    pub fn sort(&mut self) {
+        // Same coordinates: fall back to the message so ties are still
+        // deterministic.
+        self.violations.sort_by_key(|e| (e.coords(), e.to_string()));
+        self.violations.dedup();
+        self.warnings.sort();
+        self.warnings.dedup();
+    }
+
+    /// Human-readable diagnostics, one per line, prefixed with the
+    /// subject (typically the artifact path or a schedule label).
+    pub fn render(&self, subject: &str) -> String {
+        if self.is_clean() {
+            return format!("{subject}: clean");
+        }
+        let mut out = format!(
+            "{subject}: {} violation(s), {} warning(s)",
+            self.violations.len(),
+            self.warnings.len()
+        );
+        for v in &self.violations {
+            out.push_str(&format!("\n  violation: {v}"));
+        }
+        for w in &self.warnings {
+            out.push_str(&format!("\n  warning: {w}"));
+        }
+        out
+    }
+}
+
+/// Statically verify the generated program of `kind` for an `n`-stage
+/// pipeline at `m` micro-batches: materialize every stage's op sequence
+/// from [`crate::schedule::generators::ProgramShape`] and run the full
+/// dependency / transfer / deadlock / staleness / stash analysis. A clean
+/// report is a certificate that the schedule is executable without ever
+/// running the DES.
+pub fn check_program(kind: ScheduleKind, n: usize, m: usize) -> VerifyReport {
+    if n == 0 || m == 0 {
+        let mut r = VerifyReport::default();
+        r.violations.push(VerifyError::PlanStructure {
+            what: format!("degenerate schedule shape: N={n}, M={m}"),
+        });
+        return r;
+    }
+    let programs: Vec<Vec<crate::schedule::Op>> =
+        (0..n).map(|i| materialize(kind, n, i, m)).collect();
+    check_stage_programs(kind, n, m, &programs)
+}
+
+/// Structural verification of a DES spec plus its generated program:
+/// vector lengths agree, every time is finite and non-negative, and the
+/// program certificate holds. This is what the `cfg(debug_assertions)`
+/// planner gate runs on every candidate.
+pub fn check_spec(spec: &SimSpec) -> VerifyReport {
+    let n = spec.n();
+    let mut report = VerifyReport::default();
+    let mut structural = |ok: bool, what: String| {
+        if !ok {
+            report.violations.push(VerifyError::PlanStructure { what });
+        }
+    };
+    structural(
+        spec.bwd.len() == n && spec.exec.len() == n,
+        format!(
+            "spec vector lengths disagree: fwd {n}, bwd {}, exec {}",
+            spec.bwd.len(),
+            spec.exec.len()
+        ),
+    );
+    structural(
+        spec.fwd_xfer.len() + 1 == n.max(1) && spec.bwd_xfer.len() + 1 == n.max(1),
+        format!(
+            "spec transfer lengths disagree: {} stages, {} fwd_xfer, {} bwd_xfer",
+            n,
+            spec.fwd_xfer.len(),
+            spec.bwd_xfer.len()
+        ),
+    );
+    let finite = |v: &[f64]| v.iter().all(|t| t.is_finite() && *t >= 0.0);
+    structural(
+        finite(&spec.fwd)
+            && finite(&spec.bwd)
+            && finite(&spec.fwd_xfer)
+            && finite(&spec.bwd_xfer)
+            && spec.update.is_finite()
+            && spec.update >= 0.0,
+        "spec has a negative or non-finite time".to_string(),
+    );
+    report.merge(check_program(spec.kind, n, spec.m));
+    report.sort();
+    report
+}
+
+/// Verify one planner candidate end to end: the program certificate plus
+/// the memory-bound certificate against the priced
+/// [`StageBytes`] and (optionally) per-stage usable capacities in
+/// pipeline order.
+pub fn check_candidate(
+    kind: ScheduleKind,
+    n: usize,
+    m: usize,
+    stage_bytes: &[StageBytes],
+    usable: Option<&[u64]>,
+) -> VerifyReport {
+    let mut report = check_program(kind, n, m);
+    let peaks: Vec<usize> =
+        (0..n).map(|i| program::peak_occupancy(&materialize(kind, n, i, m))).collect();
+    report.merge(check_memory(&peaks, stage_bytes, usable, None));
+    report.sort();
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::ExecMode;
+
+    #[test]
+    fn all_kinds_certify_clean() {
+        for kind in ScheduleKind::all() {
+            for n in [1usize, 2, 3, 4, 8] {
+                for m in [1usize, 2, 3, 4, 8, 16] {
+                    let r = check_program(kind, n, m);
+                    assert!(
+                        r.is_clean(),
+                        "{} N={n} M={m}: {}",
+                        kind.label(),
+                        r.render("program")
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn spec_check_accepts_uniform_specs() {
+        for kind in ScheduleKind::all() {
+            for exec in [ExecMode::Sync, ExecMode::Async] {
+                let spec = SimSpec::uniform(kind, 4, 8, 1.0, 2.0, 0.25, exec);
+                let r = check_spec(&spec);
+                assert!(r.is_clean(), "{} {exec:?}: {}", kind.label(), r.render("spec"));
+            }
+        }
+    }
+
+    #[test]
+    fn spec_check_rejects_nonfinite_times() {
+        let mut spec = SimSpec::uniform(ScheduleKind::GPipe, 3, 4, 1.0, 2.0, 0.25, ExecMode::Sync);
+        spec.fwd[1] = f64::NAN;
+        let r = check_spec(&spec);
+        assert_eq!(r.exit_code(), 2);
+        assert!(r
+            .violations
+            .iter()
+            .any(|v| matches!(v, VerifyError::PlanStructure { what } if what.contains("finite"))));
+    }
+
+    #[test]
+    fn degenerate_shape_is_a_violation_not_a_panic() {
+        assert_eq!(check_program(ScheduleKind::GPipe, 0, 4).exit_code(), 2);
+        assert_eq!(check_program(ScheduleKind::GPipe, 2, 0).exit_code(), 2);
+    }
+
+    #[test]
+    fn report_sorting_is_canonical() {
+        let mut r = VerifyReport::default();
+        r.violations.push(VerifyError::UpdateCount { stage: 2, found: 0, expected: 1 });
+        r.violations.push(VerifyError::DependencyOrder { stage: 0, pc: 3, micro: 1 });
+        r.violations.push(VerifyError::DependencyOrder { stage: 0, pc: 1, micro: 0 });
+        r.violations.push(VerifyError::PlanStructure { what: "x".into() });
+        r.sort();
+        let coords: Vec<(usize, usize, usize)> = r.violations.iter().map(|v| v.coords()).collect();
+        let mut sorted = coords.clone();
+        sorted.sort();
+        assert_eq!(coords, sorted);
+        assert!(matches!(r.violations[0], VerifyError::DependencyOrder { pc: 1, .. }));
+        assert!(matches!(r.violations.last(), Some(VerifyError::PlanStructure { .. })));
+    }
+
+    #[test]
+    fn render_counts_and_exit_codes() {
+        let mut r = VerifyReport::default();
+        assert_eq!(r.exit_code(), 0);
+        assert_eq!(r.render("x"), "x: clean");
+        r.warnings.push("odd".into());
+        assert_eq!(r.exit_code(), 1);
+        r.violations.push(VerifyError::PlanStructure { what: "bad".into() });
+        assert_eq!(r.exit_code(), 2);
+        let text = r.render("plan.json");
+        assert!(text.contains("1 violation(s), 1 warning(s)"));
+        assert!(text.contains("violation: plan: bad"));
+        assert!(text.contains("warning: odd"));
+    }
+}

@@ -1,0 +1,403 @@
+//! Structural audit of `plan.json` artifacts and plan-store contents.
+//!
+//! [`Plan::from_json`] already rejects malformed JSON shapes; this pass
+//! checks the *semantic* structure of a loaded plan — the invariants a
+//! consumer (a training launcher, a replan warm start, a plan-store
+//! client) silently relies on:
+//!
+//! * the partition covers all layers exactly once (bounds start at 0 and
+//!   strictly increase; every Pareto member covers the same layer total),
+//! * the device order is a permutation (of the cluster, when one is
+//!   given),
+//! * the chosen schedule's generated program passes the full static
+//!   certificate ([`super::check_program`]),
+//! * the Pareto front really is non-dominated and sorted fastest-first
+//!   with strictly decreasing peak memory,
+//! * bookkeeping adds up (`simulated_count`/`pruned_count` match the
+//!   evaluations; recorded peak memory stays under the worst-case stage
+//!   memory; order-provenance references resolve),
+//! * with a cluster in hand, every stage fits its device's usable
+//!   capacity under the default [`MemoryModel`].
+//!
+//! Byte-level pricing of occupancy (the `StageBytes` cross-check) lives
+//! in the planner's debug gate where the profile is available — an
+//! artifact alone does not carry per-micro-batch byte figures.
+
+use super::{VerifyError, VerifyReport};
+use crate::cluster::Cluster;
+use crate::partition::memfit::MemoryModel;
+use crate::planner::{Choice, Outcome, ParetoPoint, Plan};
+
+/// Audit a loaded plan artifact. `cluster` enables the capacity checks;
+/// without it the audit is purely self-consistency. Returns the sorted
+/// diagnostics report ([`VerifyReport::exit_code`] gives the `bapipe
+/// check` exit status).
+pub fn plan_audit(plan: &Plan, cluster: Option<&Cluster>) -> VerifyReport {
+    let mut report = VerifyReport::default();
+
+    let finite_time = |name: &str, t: f64, report: &mut VerifyReport| {
+        if !t.is_finite() || t < 0.0 {
+            report.violations.push(VerifyError::PlanStructure {
+                what: format!("{name} is {t}, expected a finite non-negative time"),
+            });
+        }
+    };
+    finite_time("minibatch_time", plan.minibatch_time, &mut report);
+    finite_time("epoch_time", plan.epoch_time, &mut report);
+
+    audit_device_order(&plan.device_order, cluster, &mut report);
+
+    match &plan.choice {
+        Choice::Pipeline { kind, m, micro, recompute: _, partition } => {
+            audit_bounds("partition", &partition.bounds, &mut report);
+            let n = partition.n_stages();
+            if *m == 0 {
+                report
+                    .violations
+                    .push(VerifyError::PlanStructure { what: "pipeline has M=0".into() });
+            }
+            if !(micro.is_finite() && *micro > 0.0) {
+                report.violations.push(VerifyError::PlanStructure {
+                    what: format!("micro-batch size {micro} is not positive"),
+                });
+            }
+            if plan.device_order.len() != n {
+                report.violations.push(VerifyError::PlanStructure {
+                    what: format!(
+                        "device order covers {} devices but the partition has {n} stages",
+                        plan.device_order.len()
+                    ),
+                });
+            }
+            if !plan.stage_memory.is_empty() && plan.stage_memory.len() != n {
+                report.violations.push(VerifyError::PlanStructure {
+                    what: format!(
+                        "stage_memory has {} entries for {n} stages",
+                        plan.stage_memory.len()
+                    ),
+                });
+            }
+            if *m >= 1 && n >= 1 {
+                report.merge(super::check_program(*kind, n, *m));
+            }
+            if let Some(cl) = cluster {
+                let mm = MemoryModel::default();
+                for (i, &bytes) in plan.stage_memory.iter().enumerate() {
+                    let dev = plan.device_order.get(i).and_then(|&d| cl.devices.get(d));
+                    if let Some(dev) = dev {
+                        let usable = mm.usable(dev.mem_capacity);
+                        if bytes > usable {
+                            report.violations.push(VerifyError::MemoryBound {
+                                stage: i,
+                                peak: bytes,
+                                usable,
+                            });
+                        }
+                    }
+                }
+            }
+            // The winning evaluation's simulated peaks must stay under the
+            // worst-case stage memory the plan reports.
+            if let Some(best) = plan.report.best_evaluation() {
+                let matches_choice = best.candidate.kind == *kind && best.candidate.m == *m;
+                if let Outcome::Evaluated { peak_memory, .. } = &best.outcome {
+                    if matches_choice && peak_memory.len() == plan.stage_memory.len() {
+                        for (i, (&rec, &bound)) in
+                            peak_memory.iter().zip(&plan.stage_memory).enumerate()
+                        {
+                            if rec > bound {
+                                report.violations.push(VerifyError::PeakMismatch {
+                                    stage: i,
+                                    recorded: rec,
+                                    certified: bound,
+                                });
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        Choice::DataParallel => {
+            if plan.stage_memory.len() > 1 {
+                report.violations.push(VerifyError::PlanStructure {
+                    what: format!(
+                        "data-parallel plan records {} stage memories, expected at most 1",
+                        plan.stage_memory.len()
+                    ),
+                });
+            }
+        }
+    }
+
+    audit_pareto(&plan.pareto_front, &plan.choice, &mut report);
+    audit_report_bookkeeping(plan, &mut report);
+
+    report.sort();
+    report
+}
+
+/// The device order must be a permutation of `0..len`, and match the
+/// cluster size when a cluster is given.
+fn audit_device_order(order: &[usize], cluster: Option<&Cluster>, report: &mut VerifyReport) {
+    let mut sorted: Vec<usize> = order.to_vec();
+    sorted.sort_unstable();
+    if sorted.iter().enumerate().any(|(i, &d)| i != d) {
+        report.violations.push(VerifyError::PlanStructure {
+            what: format!("device order {order:?} is not a permutation of 0..{}", order.len()),
+        });
+    }
+    if let Some(cl) = cluster {
+        if order.len() != cl.len() {
+            report.violations.push(VerifyError::PlanStructure {
+                what: format!(
+                    "device order covers {} devices but the cluster has {}",
+                    order.len(),
+                    cl.len()
+                ),
+            });
+        }
+    }
+}
+
+/// Partition bounds must start at 0 and strictly increase — every layer
+/// assigned to exactly one stage.
+fn audit_bounds(what: &str, bounds: &[usize], report: &mut VerifyReport) {
+    let ok = bounds.len() >= 2
+        && bounds[0] == 0
+        && bounds.windows(2).all(|w| w[0] < w[1]);
+    if !ok {
+        report.violations.push(VerifyError::PlanStructure {
+            what: format!("{what} bounds {bounds:?} do not cover the layers exactly once"),
+        });
+    }
+}
+
+/// The stored Pareto front must be sorted fastest-first with strictly
+/// decreasing peak memory — which for a front stored in that order is
+/// exactly pairwise non-domination — and every member must cover the same
+/// layer total as the chosen partition.
+fn audit_pareto(front: &[ParetoPoint], choice: &Choice, report: &mut VerifyReport) {
+    for (k, p) in front.iter().enumerate() {
+        audit_bounds(&format!("pareto[{k}]"), &p.partition.bounds, report);
+        if p.candidate.m == 0 {
+            report
+                .violations
+                .push(VerifyError::PlanStructure { what: format!("pareto[{k}] has M=0") });
+        }
+        if let Choice::Pipeline { partition, .. } = choice {
+            if p.partition.bounds.last() != partition.bounds.last() {
+                report.violations.push(VerifyError::PlanStructure {
+                    what: format!(
+                        "pareto[{k}] covers {:?} layers, plan covers {:?}",
+                        p.partition.bounds.last(),
+                        partition.bounds.last()
+                    ),
+                });
+            }
+        }
+    }
+    for (k, w) in front.windows(2).enumerate() {
+        let (a, b) = (&w[0], &w[1]);
+        let sorted = a.epoch_time < b.epoch_time && a.peak_memory > b.peak_memory;
+        if !sorted {
+            report.violations.push(VerifyError::PlanStructure {
+                what: format!(
+                    "pareto front not non-dominated/sorted at index {}: ({:.6}s, {} B) then \
+                     ({:.6}s, {} B)",
+                    k + 1,
+                    a.epoch_time,
+                    a.peak_memory,
+                    b.epoch_time,
+                    b.peak_memory
+                ),
+            });
+        }
+    }
+}
+
+/// The exploration record must add up: outcome counts match the recorded
+/// totals, per-evaluation structures are self-consistent, provenance
+/// references resolve, and no simulated epoch undercuts its own
+/// analytical lower bound.
+fn audit_report_bookkeeping(plan: &Plan, report: &mut VerifyReport) {
+    let r = &plan.report;
+    let evaluated =
+        r.evaluations.iter().filter(|e| matches!(e.outcome, Outcome::Evaluated { .. })).count();
+    let pruned =
+        r.evaluations.iter().filter(|e| matches!(e.outcome, Outcome::Pruned { .. })).count();
+    if evaluated != r.simulated_count {
+        report.violations.push(VerifyError::PlanStructure {
+            what: format!(
+                "simulated_count {} but {evaluated} evaluated outcomes",
+                r.simulated_count
+            ),
+        });
+    }
+    if pruned != r.pruned_count {
+        report.violations.push(VerifyError::PlanStructure {
+            what: format!("pruned_count {} but {pruned} pruned outcomes", r.pruned_count),
+        });
+    }
+    for (k, ev) in r.evaluations.iter().enumerate() {
+        if !r.order_provenance.is_empty() && ev.candidate.perm >= r.order_provenance.len() {
+            report.violations.push(VerifyError::PlanStructure {
+                what: format!(
+                    "evaluation {k} references device order {} but only {} provenance \
+                     entries exist",
+                    ev.candidate.perm,
+                    r.order_provenance.len()
+                ),
+            });
+        }
+        if let Outcome::Evaluated { epoch_time, lower_bound, partition, peak_memory, .. } =
+            &ev.outcome
+        {
+            if !peak_memory.is_empty() && peak_memory.len() != partition.n_stages() {
+                report.violations.push(VerifyError::PlanStructure {
+                    what: format!(
+                        "evaluation {k} records {} peaks for {} stages",
+                        peak_memory.len(),
+                        partition.n_stages()
+                    ),
+                });
+            }
+            // A simulated epoch below its own analytical lower bound means
+            // the pruning invariant is broken somewhere — suspicious but
+            // not plan-falsifying, so it is a warning.
+            if *epoch_time < lower_bound * (1.0 - 1e-6) {
+                report.warnings.push(format!(
+                    "evaluation {k}: simulated epoch {epoch_time:.6}s undercuts its \
+                     analytical lower bound {lower_bound:.6}s"
+                ));
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::partition::Partition;
+    use crate::planner::{Candidate, Evaluation, ExplorationReport};
+    use crate::schedule::ScheduleKind;
+
+    fn tiny_plan() -> Plan {
+        let kind = ScheduleKind::OneFOneBSno;
+        let partition = Partition::new(vec![0, 2, 5], 5);
+        let candidate = Candidate { kind, m: 4, micro: 2.0, perm: 0, recompute: false };
+        let outcome = Outcome::Evaluated {
+            minibatch_time: 1.0,
+            epoch_time: 10.0,
+            lower_bound: 8.0,
+            partition: partition.clone(),
+            peak_memory: vec![100, 90],
+        };
+        let report = ExplorationReport {
+            model: "tiny".into(),
+            cluster: "2x test".into(),
+            batch_per_device: 8.0,
+            samples_per_epoch: 100,
+            jobs: 1,
+            ineligible: vec![],
+            notes: vec![],
+            order_provenance: vec![],
+            evaluations: vec![Evaluation { candidate, outcome }],
+            simulated_count: 1,
+            pruned_count: 0,
+            cache_hits: 0,
+            dp_considered: true,
+            dp_fits: true,
+            dp_minibatch_time: 2.0,
+            dp_epoch_time: 20.0,
+        };
+        Plan {
+            choice: Choice::Pipeline { kind, m: 4, micro: 2.0, recompute: false, partition },
+            device_order: vec![0, 1],
+            minibatch_time: 1.0,
+            epoch_time: 10.0,
+            dp_epoch_time: 20.0,
+            speedup_over_dp: 2.0,
+            stage_memory: vec![120, 100],
+            pareto_front: vec![],
+            report,
+        }
+    }
+
+    #[test]
+    fn tiny_plan_audits_clean() {
+        let r = plan_audit(&tiny_plan(), None);
+        assert!(r.is_clean(), "{}", r.render("tiny"));
+    }
+
+    #[test]
+    fn broken_device_order_is_rejected() {
+        let mut plan = tiny_plan();
+        plan.device_order = vec![1, 1];
+        let r = plan_audit(&plan, None);
+        assert_eq!(r.exit_code(), 2);
+        assert!(r.violations.iter().any(
+            |v| matches!(v, VerifyError::PlanStructure { what } if what.contains("permutation"))
+        ));
+    }
+
+    #[test]
+    fn count_drift_is_rejected() {
+        let mut plan = tiny_plan();
+        plan.report.simulated_count = 7;
+        let r = plan_audit(&plan, None);
+        assert!(r.violations.iter().any(
+            |v| matches!(v, VerifyError::PlanStructure { what } if what.contains("simulated_count"))
+        ));
+    }
+
+    #[test]
+    fn recorded_peak_above_stage_memory_is_rejected() {
+        let mut plan = tiny_plan();
+        plan.stage_memory = vec![95, 100];
+        let r = plan_audit(&plan, None);
+        assert!(r.violations.iter().any(|v| matches!(
+            v,
+            VerifyError::PeakMismatch { stage: 0, recorded: 100, certified: 95 }
+        )));
+    }
+
+    #[test]
+    fn unsorted_pareto_front_is_rejected() {
+        let mut plan = tiny_plan();
+        let partition = Partition::new(vec![0, 2, 5], 5);
+        let mk = |epoch: f64, peak: u64| ParetoPoint {
+            candidate: Candidate {
+                kind: ScheduleKind::OneFOneBSno,
+                m: 4,
+                micro: 2.0,
+                perm: 0,
+                recompute: false,
+            },
+            minibatch_time: 1.0,
+            epoch_time: epoch,
+            peak_memory: peak,
+            partition: partition.clone(),
+        };
+        plan.pareto_front = vec![mk(10.0, 100), mk(12.0, 80)];
+        assert!(plan_audit(&plan, None).is_clean());
+        // A dominated second member: slower *and* bigger.
+        plan.pareto_front = vec![mk(10.0, 100), mk(12.0, 120)];
+        let r = plan_audit(&plan, None);
+        assert!(r.violations.iter().any(
+            |v| matches!(v, VerifyError::PlanStructure { what } if what.contains("pareto"))
+        ));
+    }
+
+    #[test]
+    fn undercut_lower_bound_is_a_warning_not_a_violation() {
+        let mut plan = tiny_plan();
+        if let Outcome::Evaluated { lower_bound, .. } =
+            &mut plan.report.evaluations[0].outcome
+        {
+            *lower_bound = 11.0; // epoch_time stays 10.0
+        }
+        let r = plan_audit(&plan, None);
+        assert_eq!(r.exit_code(), 1, "{}", r.render("tiny"));
+        assert!(r.warnings[0].contains("lower bound"));
+    }
+}

@@ -1,0 +1,622 @@
+//! Program-text analyses: dependency order, transfer FIFO, deadlock
+//! topology, weight-version staleness, peak occupancy.
+//!
+//! Everything here operates on materialized per-stage op sequences
+//! (`Vec<Op>`), so the same passes verify both generated programs (via
+//! [`materialize`]) and arbitrary — possibly mutated — programs fed in by
+//! the property harness.
+
+use super::{OpClass, VerifyError, VerifyReport};
+use crate::schedule::generators::ProgramShape;
+use crate::schedule::{Op, ScheduleKind};
+
+/// Materialize stage `i`'s op sequence from the closed-form
+/// [`ProgramShape`] — the verifier's single source of program text, the
+/// same shape the batched simulator executes.
+pub fn materialize(kind: ScheduleKind, n: usize, i: usize, m: usize) -> Vec<Op> {
+    let shape = ProgramShape::of(kind, n, i, m);
+    (0..shape.len()).map(|pc| shape.op_at(pc)).collect()
+}
+
+/// The result of one stage's dependency walk.
+#[derive(Debug, Clone)]
+pub struct StageWalk {
+    /// Violations found, in program order.
+    pub errors: Vec<VerifyError>,
+    /// High-water mark of simultaneously in-flight micro-batches (a
+    /// micro-batch is in flight from its forward until its backward
+    /// retires it; a fused `FwdBwd` slot admits its forward before
+    /// retiring its backward, matching the stash accounting).
+    pub peak_in_flight: usize,
+}
+
+/// Walk one stage's op sequence and prove the per-stage dependency
+/// discipline: forward before backward per micro-batch, no duplicates, no
+/// missing ops, micro-batch indices in range, and — for intra-batch
+/// schedules — exactly one update, applied only after every backward has
+/// drained.
+pub fn walk_stage(stage: usize, ops: &[Op], m: usize, intra_batch: bool) -> StageWalk {
+    let mut w = WalkState {
+        stage,
+        m,
+        errors: Vec::new(),
+        fwd_done: vec![false; m],
+        bwd_done: vec![false; m],
+        open: vec![false; m],
+        in_flight: 0,
+        peak: 0,
+    };
+    let mut updates: Vec<usize> = Vec::new();
+
+    for (pc, op) in ops.iter().enumerate() {
+        match *op {
+            Op::Fwd { mb } => w.fwd(pc, mb),
+            Op::Bwd { mb } => w.bwd(pc, mb),
+            Op::FwdBwd { fwd_mb, bwd_mb } => {
+                // The forward is admitted before the backward retires, so
+                // the fused slot's footprint counts both micro-batches.
+                w.fwd(pc, fwd_mb);
+                w.bwd(pc, bwd_mb);
+            }
+            Op::Update => updates.push(pc),
+        }
+    }
+
+    for mb in 0..m {
+        if !w.fwd_done[mb] {
+            w.errors.push(VerifyError::MissingOp { stage, micro: mb, what: OpClass::Fwd });
+        }
+        if !w.bwd_done[mb] {
+            w.errors.push(VerifyError::MissingOp { stage, micro: mb, what: OpClass::Bwd });
+        }
+    }
+
+    let expected_updates = usize::from(intra_batch);
+    if updates.len() != expected_updates {
+        w.errors.push(VerifyError::UpdateCount {
+            stage,
+            found: updates.len(),
+            expected: expected_updates,
+        });
+    }
+    if let Some(&first_update) = updates.first() {
+        // Any compute op after the first update reads the new weight
+        // version while the mini-batch it belongs to already started on
+        // the old one — inconsistent without a shadow copy, and plain
+        // intra-batch schedules declare none.
+        let compute_after = ops[first_update..].iter().any(|op| !matches!(op, Op::Update));
+        if compute_after {
+            w.errors.push(VerifyError::UpdateBeforeDrain { stage, pc: first_update });
+        }
+    }
+
+    StageWalk { errors: w.errors, peak_in_flight: w.peak }
+}
+
+/// Mutable state of one stage's dependency walk.
+struct WalkState {
+    stage: usize,
+    m: usize,
+    errors: Vec<VerifyError>,
+    fwd_done: Vec<bool>,
+    bwd_done: Vec<bool>,
+    open: Vec<bool>,
+    in_flight: usize,
+    peak: usize,
+}
+
+impl WalkState {
+    fn fwd(&mut self, pc: usize, mb: usize) {
+        let stage = self.stage;
+        if mb >= self.m {
+            self.errors.push(VerifyError::MicroOutOfRange { stage, pc, micro: mb });
+            return;
+        }
+        if self.fwd_done[mb] {
+            self.errors.push(VerifyError::DuplicateOp { stage, pc, micro: mb, what: OpClass::Fwd });
+            return;
+        }
+        self.fwd_done[mb] = true;
+        self.open[mb] = true;
+        self.in_flight += 1;
+        self.peak = self.peak.max(self.in_flight);
+    }
+
+    fn bwd(&mut self, pc: usize, mb: usize) {
+        let stage = self.stage;
+        if mb >= self.m {
+            self.errors.push(VerifyError::MicroOutOfRange { stage, pc, micro: mb });
+            return;
+        }
+        if !self.fwd_done[mb] {
+            self.errors.push(VerifyError::DependencyOrder { stage, pc, micro: mb });
+        }
+        if self.bwd_done[mb] {
+            self.errors.push(VerifyError::DuplicateOp { stage, pc, micro: mb, what: OpClass::Bwd });
+            return;
+        }
+        self.bwd_done[mb] = true;
+        if self.open[mb] {
+            self.open[mb] = false;
+            self.in_flight -= 1;
+        }
+    }
+}
+
+/// Peak simultaneous in-flight micro-batches of one op sequence — the
+/// occupancy the memory certificate prices through
+/// [`crate::partition::memfit::StageBytes::at_occupancy`].
+pub fn peak_occupancy(ops: &[Op]) -> usize {
+    let mut in_flight = 0usize;
+    let mut peak = 0usize;
+    for op in ops {
+        match op {
+            Op::Fwd { .. } => {
+                in_flight += 1;
+                peak = peak.max(in_flight);
+            }
+            Op::FwdBwd { .. } => {
+                in_flight += 1;
+                peak = peak.max(in_flight);
+                in_flight = in_flight.saturating_sub(1);
+            }
+            Op::Bwd { .. } => in_flight = in_flight.saturating_sub(1),
+            Op::Update => {}
+        }
+    }
+    peak
+}
+
+/// The forward events of one op sequence as `(pc, micro)` pairs in
+/// program order (fused slots contribute their forward half).
+fn fwd_events(ops: &[Op]) -> Vec<(usize, usize)> {
+    ops.iter()
+        .enumerate()
+        .filter_map(|(pc, op)| match *op {
+            Op::Fwd { mb } | Op::FwdBwd { fwd_mb: mb, .. } => Some((pc, mb)),
+            _ => None,
+        })
+        .collect()
+}
+
+/// The backward events of one op sequence as `(pc, micro)` pairs in
+/// program order (fused slots contribute their backward half).
+fn bwd_events(ops: &[Op]) -> Vec<(usize, usize)> {
+    ops.iter()
+        .enumerate()
+        .filter_map(|(pc, op)| match *op {
+            Op::Bwd { mb } | Op::FwdBwd { bwd_mb: mb, .. } => Some((pc, mb)),
+            _ => None,
+        })
+        .collect()
+}
+
+/// Keep the first occurrence per micro-batch (duplicates are reported by
+/// the stage walk; the transfer analysis reasons about first use).
+fn dedup_first(events: &[(usize, usize)]) -> Vec<(usize, usize)> {
+    let mut seen = std::collections::BTreeSet::new();
+    events.iter().copied().filter(|&(_, mb)| seen.insert(mb)).collect()
+}
+
+/// First occurrence per micro-batch as a `micro → pc` map.
+fn by_micro(events: &[(usize, usize)]) -> std::collections::BTreeMap<usize, usize> {
+    dedup_first(events).into_iter().map(|(pc, mb)| (mb, pc)).collect()
+}
+
+/// Check one direction of one stage boundary: every micro-batch the
+/// consumer reads must be produced by the neighbour, and the common
+/// micro-batches must cross in the same relative order on both sides
+/// (FIFO channels deliver in send order; a reordered consumer would wait
+/// on a tensor stuck behind the one it skipped).
+fn check_edge_direction(
+    producer: &[(usize, usize)],
+    consumer: &[(usize, usize)],
+    consumer_stage: usize,
+    errors: &mut Vec<VerifyError>,
+) {
+    let prod = dedup_first(producer);
+    let cons = dedup_first(consumer);
+    let produced: std::collections::BTreeSet<usize> = prod.iter().map(|&(_, mb)| mb).collect();
+    for &(pc, mb) in &cons {
+        if !produced.contains(&mb) {
+            errors.push(VerifyError::MissingProducer { stage: consumer_stage, pc, micro: mb });
+        }
+    }
+    let consumed: std::collections::BTreeSet<usize> = cons.iter().map(|&(_, mb)| mb).collect();
+    let prod_common: Vec<usize> =
+        prod.iter().map(|&(_, mb)| mb).filter(|mb| consumed.contains(mb)).collect();
+    let cons_common: Vec<(usize, usize)> =
+        cons.iter().copied().filter(|&(_, mb)| produced.contains(&mb)).collect();
+    for (&p_mb, &(c_pc, c_mb)) in prod_common.iter().zip(cons_common.iter()) {
+        if p_mb != c_mb {
+            // Report only the first mismatch per edge-direction: every
+            // later position is skewed by the same reorder.
+            errors.push(VerifyError::TransferOrder {
+                stage: consumer_stage,
+                pc: c_pc,
+                micro: c_mb,
+            });
+            break;
+        }
+    }
+}
+
+/// Prove cross-stage transfer sanity for every adjacent stage pair:
+/// forward activations flow `i → i+1` (stage 0's inputs are local),
+/// backward errors flow `i+1 → i` (the last stage's are local). Each
+/// direction gets the producer-exists and FIFO-order checks of
+/// [`check_edge_direction`].
+pub fn check_transfers(programs: &[Vec<Op>]) -> Vec<VerifyError> {
+    let mut errors = Vec::new();
+    for i in 0..programs.len().saturating_sub(1) {
+        // Forward direction: stage i produces, stage i+1 consumes.
+        check_edge_direction(
+            &fwd_events(&programs[i]),
+            &fwd_events(&programs[i + 1]),
+            i + 1,
+            &mut errors,
+        );
+        // Backward direction: stage i+1 produces, stage i consumes.
+        check_edge_direction(
+            &bwd_events(&programs[i + 1]),
+            &bwd_events(&programs[i]),
+            i,
+            &mut errors,
+        );
+    }
+    errors
+}
+
+/// Prove deadlock freedom: build the inter-stage op graph — each stage's
+/// program-order chain plus one edge per transfer (forward producer to
+/// its consumer downstream, backward producer to its consumer upstream)
+/// — and topologically sort it. A cycle means some send transitively
+/// waits on its own receiver and the schedule can never complete; the
+/// DES would hit its dynamic deadlock assertion, the verifier proves it
+/// without running.
+pub fn check_deadlock(programs: &[Vec<Op>]) -> Vec<VerifyError> {
+    let n = programs.len();
+    let mut offset = vec![0usize; n + 1];
+    for i in 0..n {
+        offset[i + 1] = offset[i] + programs[i].len();
+    }
+    let total = offset[n];
+    let mut adj: Vec<Vec<u32>> = vec![Vec::new(); total];
+    let mut indeg = vec![0u32; total];
+    let mut edge = |from: usize, to: usize| {
+        adj[from].push(to as u32);
+        indeg[to] += 1;
+    };
+
+    for i in 0..n {
+        for pc in 1..programs[i].len() {
+            edge(offset[i] + pc - 1, offset[i] + pc);
+        }
+    }
+    for i in 0..n.saturating_sub(1) {
+        // Forward transfers: first fwd of each micro-batch at stage i
+        // feeds the matching fwd at stage i+1.
+        let prod = by_micro(&fwd_events(&programs[i]));
+        for (pc, mb) in dedup_first(&fwd_events(&programs[i + 1])) {
+            if let Some(&p_pc) = prod.get(&mb) {
+                edge(offset[i] + p_pc, offset[i + 1] + pc);
+            }
+        }
+        // Backward transfers: first bwd of each micro-batch at stage i+1
+        // feeds the matching bwd at stage i.
+        let prod = by_micro(&bwd_events(&programs[i + 1]));
+        for (pc, mb) in dedup_first(&bwd_events(&programs[i])) {
+            if let Some(&p_pc) = prod.get(&mb) {
+                edge(offset[i + 1] + p_pc, offset[i] + pc);
+            }
+        }
+    }
+
+    // Kahn's algorithm; anything never popped sits on a cycle (or
+    // downstream of one — the reported stage set covers both).
+    let mut queue: Vec<usize> = (0..total).filter(|&v| indeg[v] == 0).collect();
+    let mut popped = 0usize;
+    while let Some(v) = queue.pop() {
+        popped += 1;
+        for &w in &adj[v] {
+            indeg[w as usize] -= 1;
+            if indeg[w as usize] == 0 {
+                queue.push(w as usize);
+            }
+        }
+    }
+    if popped == total {
+        return Vec::new();
+    }
+    let mut stages: Vec<usize> = (0..total)
+        .filter(|&v| indeg[v] > 0)
+        .map(|v| offset.partition_point(|&o| o <= v) - 1)
+        .collect();
+    stages.sort_unstable();
+    stages.dedup();
+    vec![VerifyError::DeadlockCycle { stages }]
+}
+
+/// Shadow weight versions the program text requires: for each micro-batch
+/// with both halves present, count the update events between its forward
+/// and its backward — each one is a version the pair must be shielded
+/// from. Inter-batch schedules (PipeDream) apply one asynchronous update
+/// per mini-batch, i.e. per foreign backward, so there every foreign
+/// backward in the window counts as an update.
+pub fn required_weight_versions(ops: &[Op], intra_batch: bool) -> usize {
+    let fwds = dedup_first(&fwd_events(ops));
+    let bwd_pcs = dedup_first(&bwd_events(ops));
+    let bwds = by_micro(&bwd_events(ops));
+    let update_pcs: Vec<usize> = ops
+        .iter()
+        .enumerate()
+        .filter_map(|(pc, op)| matches!(op, Op::Update).then_some(pc))
+        .collect();
+    let mut worst = 0usize;
+    for (f_pc, mb) in fwds {
+        let Some(&b_pc) = bwds.get(&mb) else { continue };
+        if b_pc <= f_pc {
+            continue;
+        }
+        let mut intervening = update_pcs.iter().filter(|&&u| f_pc < u && u < b_pc).count();
+        if !intra_batch {
+            intervening += bwd_pcs
+                .iter()
+                .filter(|&&(pc, other)| other != mb && f_pc < pc && pc < b_pc)
+                .count();
+        }
+        worst = worst.max(intervening);
+    }
+    worst
+}
+
+/// Certify the staleness bound of one stage: the versions the program
+/// requires must be covered by what the schedule kind declares
+/// ([`ScheduleKind::weight_versions`] — 0 for plain intra-batch kinds,
+/// exactly 1 shadow for `TwoBW`, `N−i−1` for PipeDream).
+pub fn check_weight_versions(
+    stage: usize,
+    ops: &[Op],
+    intra_batch: bool,
+    declared: usize,
+) -> Vec<VerifyError> {
+    let required = required_weight_versions(ops, intra_batch);
+    if required > declared {
+        vec![VerifyError::StalenessBound { stage, required, declared }]
+    } else {
+        Vec::new()
+    }
+}
+
+/// Run the full program-level analysis over explicit per-stage op
+/// sequences: per-stage dependency walks, stash-depth cross-check against
+/// the kind's declared depth, weight-version staleness, transfer
+/// ordering, and the deadlock topology. This is the mutation-harness
+/// entry point; [`super::check_program`] feeds it generated programs.
+pub fn check_stage_programs(
+    kind: ScheduleKind,
+    n: usize,
+    m: usize,
+    programs: &[Vec<Op>],
+) -> VerifyReport {
+    let mut report = VerifyReport::default();
+    if programs.len() != n {
+        report.violations.push(VerifyError::PlanStructure {
+            what: format!("{} stage programs for an N={n} pipeline", programs.len()),
+        });
+        report.sort();
+        return report;
+    }
+    let intra = kind.intra_batch();
+    for (i, ops) in programs.iter().enumerate() {
+        let walk = walk_stage(i, ops, m, intra);
+        report.violations.extend(walk.errors);
+        let declared = kind.stash_depth(n, i, m);
+        if walk.peak_in_flight > declared {
+            report.violations.push(VerifyError::StashDepth {
+                stage: i,
+                derived: walk.peak_in_flight,
+                declared,
+            });
+        }
+        report.violations.extend(check_weight_versions(
+            i,
+            ops,
+            intra,
+            kind.weight_versions(n, i),
+        ));
+    }
+    report.violations.extend(check_transfers(programs));
+    report.violations.extend(check_deadlock(programs));
+    report.sort();
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::schedule::generators;
+
+    /// Materialized shapes must agree with the generator programs the
+    /// DES executes — the verifier certifies what actually runs.
+    #[test]
+    fn materialize_matches_generator() {
+        for kind in ScheduleKind::all() {
+            for n in [1usize, 2, 3, 5] {
+                for i in 0..n {
+                    for m in [1usize, 2, 4, 9] {
+                        assert_eq!(
+                            materialize(kind, n, i, m),
+                            generators::program(kind, n, i, m).ops,
+                            "{} N={n} i={i} M={m}",
+                            kind.label()
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn walk_flags_bwd_before_fwd() {
+        let ops = vec![Op::Bwd { mb: 0 }, Op::Fwd { mb: 0 }, Op::Update];
+        let walk = walk_stage(1, &ops, 1, true);
+        assert!(walk
+            .errors
+            .iter()
+            .any(|e| matches!(e, VerifyError::DependencyOrder { stage: 1, pc: 0, micro: 0 })));
+    }
+
+    #[test]
+    fn walk_flags_duplicates_and_missing() {
+        let ops = vec![Op::Fwd { mb: 0 }, Op::Fwd { mb: 0 }, Op::Bwd { mb: 0 }, Op::Update];
+        let walk = walk_stage(0, &ops, 2, true);
+        assert!(walk.errors.iter().any(|e| matches!(
+            e,
+            VerifyError::DuplicateOp { pc: 1, micro: 0, what: OpClass::Fwd, .. }
+        )));
+        assert!(walk
+            .errors
+            .iter()
+            .any(|e| matches!(e, VerifyError::MissingOp { micro: 1, what: OpClass::Fwd, .. })));
+        assert!(walk
+            .errors
+            .iter()
+            .any(|e| matches!(e, VerifyError::MissingOp { micro: 1, what: OpClass::Bwd, .. })));
+    }
+
+    #[test]
+    fn walk_flags_early_update() {
+        let ops = vec![
+            Op::Fwd { mb: 0 },
+            Op::Fwd { mb: 1 },
+            Op::Bwd { mb: 0 },
+            Op::Update,
+            Op::Bwd { mb: 1 },
+        ];
+        let walk = walk_stage(0, &ops, 2, true);
+        assert!(walk
+            .errors
+            .iter()
+            .any(|e| matches!(e, VerifyError::UpdateBeforeDrain { stage: 0, pc: 3 })));
+    }
+
+    #[test]
+    fn peak_occupancy_matches_declared_stash() {
+        // The derived high-water mark never exceeds the declared stash
+        // depth and is exactly the in-flight figure for the plain kinds.
+        for kind in ScheduleKind::all() {
+            for n in [1usize, 2, 4, 6] {
+                for i in 0..n {
+                    for m in [1usize, 3, 8, 16] {
+                        let peak = peak_occupancy(&materialize(kind, n, i, m));
+                        let declared = kind.stash_depth(n, i, m);
+                        assert!(
+                            peak <= declared,
+                            "{} N={n} i={i} M={m}: peak {peak} > stash {declared}",
+                            kind.label()
+                        );
+                    }
+                }
+            }
+        }
+        // Spot-check the exact figures the paper's Table 1 predicts.
+        assert_eq!(peak_occupancy(&materialize(ScheduleKind::GPipe, 4, 0, 8)), 8);
+        assert_eq!(peak_occupancy(&materialize(ScheduleKind::OneFOneBSno, 4, 0, 8)), 4);
+        assert_eq!(peak_occupancy(&materialize(ScheduleKind::OneFOneBSno, 4, 3, 8)), 1);
+    }
+
+    #[test]
+    fn transfers_flag_dropped_producer() {
+        let mut programs: Vec<Vec<Op>> =
+            (0..3).map(|i| materialize(ScheduleKind::OneFOneBSno, 3, i, 4)).collect();
+        // Drop micro-batch 2's forward at stage 1: stage 2 now consumes a
+        // tensor nobody sends.
+        programs[1].retain(|op| !matches!(op, Op::Fwd { mb: 2 }));
+        let errors = check_transfers(&programs);
+        assert!(errors
+            .iter()
+            .any(|e| matches!(e, VerifyError::MissingProducer { stage: 2, micro: 2, .. })));
+    }
+
+    #[test]
+    fn transfers_flag_fifo_reorder() {
+        let mut programs: Vec<Vec<Op>> =
+            (0..2).map(|i| materialize(ScheduleKind::GPipe, 2, i, 4)).collect();
+        // Swap the first two forwards at the consumer only: the channel
+        // still delivers 0 first, but the consumer now wants 1 first.
+        let (a, b) = (0, 1);
+        programs[1].swap(a, b);
+        let errors = check_transfers(&programs);
+        assert!(errors
+            .iter()
+            .any(|e| matches!(e, VerifyError::TransferOrder { stage: 1, pc: 0, micro: 1 })));
+    }
+
+    #[test]
+    fn deadlock_cycle_detected() {
+        // Stage 0 wants its backward before sending forward 0 on; stage 1
+        // needs forward 0 before it can produce that backward: a classic
+        // send/recv cycle.
+        let programs = vec![
+            vec![Op::Bwd { mb: 0 }, Op::Fwd { mb: 0 }, Op::Update],
+            vec![Op::Fwd { mb: 0 }, Op::Bwd { mb: 0 }, Op::Update],
+        ];
+        let errors = check_deadlock(&programs);
+        assert_eq!(errors.len(), 1);
+        assert!(
+            matches!(&errors[0], VerifyError::DeadlockCycle { stages } if stages[..] == [0, 1])
+        );
+    }
+
+    #[test]
+    fn generated_programs_are_deadlock_free() {
+        for kind in ScheduleKind::all() {
+            for n in [1usize, 2, 4] {
+                for m in [1usize, 4, 9] {
+                    let programs: Vec<Vec<Op>> =
+                        (0..n).map(|i| materialize(kind, n, i, m)).collect();
+                    assert!(
+                        check_deadlock(&programs).is_empty(),
+                        "{} N={n} M={m}",
+                        kind.label()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn weight_versions_match_the_declared_bounds() {
+        // PipeDream at stage i of n needs min(n-i, m) - 1 versions; the
+        // kind declares n-i-1, which covers it. Intra-batch kinds need 0.
+        for n in [2usize, 4, 6] {
+            for i in 0..n {
+                for m in [1usize, 4, 16] {
+                    let ops = materialize(ScheduleKind::PipeDream, n, i, m);
+                    let required = required_weight_versions(&ops, false);
+                    assert_eq!(required, (n - i).min(m).saturating_sub(1), "N={n} i={i} M={m}");
+                    assert!(required <= ScheduleKind::PipeDream.weight_versions(n, i));
+                }
+            }
+        }
+        for kind in [ScheduleKind::OneFOneBSno, ScheduleKind::GPipe, ScheduleKind::TwoBW] {
+            let ops = materialize(kind, 4, 1, 8);
+            assert_eq!(required_weight_versions(&ops, true), 0);
+        }
+        // 2BW: exactly one shadow version declared, bounding stale <= 1.
+        assert_eq!(ScheduleKind::TwoBW.weight_versions(4, 1), 1);
+    }
+
+    #[test]
+    fn staleness_rejects_underdeclared_versions() {
+        let ops = materialize(ScheduleKind::PipeDream, 4, 0, 8);
+        let required = required_weight_versions(&ops, false);
+        assert!(required >= 1);
+        let errors = check_weight_versions(0, &ops, false, required - 1);
+        assert!(matches!(
+            errors.as_slice(),
+            [VerifyError::StalenessBound { stage: 0, declared, .. }] if *declared == required - 1
+        ));
+    }
+}

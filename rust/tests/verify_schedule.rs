@@ -1,0 +1,272 @@
+//! Property harness for the static schedule verifier (`bapipe::verify`).
+//!
+//! Three claims, each load-bearing for `bapipe check` and the planner's
+//! debug gate:
+//!
+//! 1. **Soundness on real programs** — every generated schedule (all 7
+//!    kinds, both exec modes, the whole M grid) certifies clean: the
+//!    verifier never rejects a program the DES would happily run.
+//! 2. **Sensitivity to seeded mutations** — swapped ops, dropped
+//!    transfers, FIFO reorders, duplicated/dropped ops, off-by-one stash
+//!    depths, under-declared weight versions and hand-built deadlock
+//!    cycles are each rejected with the *expected* typed [`VerifyError`]
+//!    variant carrying coordinates.
+//! 3. **Artifact round-trip** — a plan explored under each shipped train
+//!    config's (schedule, M), serialized with `emit_json` and re-loaded
+//!    with `Plan::from_json`, audits clean (exit 0, the `bapipe check`
+//!    contract), identically under `--jobs 1` and `--jobs 8`.
+
+use bapipe::cluster::{presets, ExecMode};
+use bapipe::config::TrainConfig;
+use bapipe::model::zoo;
+use bapipe::partition::memfit::StageBytes;
+use bapipe::planner;
+use bapipe::profile::analytical;
+use bapipe::schedule::{Op, ScheduleKind};
+use bapipe::sim::engine::SimSpec;
+use bapipe::util::json::Json;
+use bapipe::verify::{self, program, VerifyError};
+
+const M_GRID: [usize; 6] = [1, 2, 3, 4, 8, 16];
+
+/// Materialized per-stage programs for one (kind, n, m) shape.
+fn programs(kind: ScheduleKind, n: usize, m: usize) -> Vec<Vec<Op>> {
+    (0..n).map(|i| verify::materialize(kind, n, i, m)).collect()
+}
+
+// ---------------------------------------------------------------- claim 1
+
+#[test]
+fn all_kinds_exec_modes_and_m_certify_clean() {
+    for kind in ScheduleKind::all() {
+        for exec in [ExecMode::Sync, ExecMode::Async] {
+            for n in [1usize, 2, 3, 4, 6] {
+                for m in M_GRID {
+                    let spec = SimSpec::uniform(kind, n, m, 1.0, 2.0, 0.25, exec);
+                    let r = verify::check_spec(&spec);
+                    assert!(
+                        r.is_clean(),
+                        "{} {exec:?} N={n} M={m}: {}",
+                        kind.label(),
+                        r.render("spec")
+                    );
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------- claim 2
+
+#[test]
+fn mutation_swapped_ops_is_dependency_order() {
+    // Move micro-batch 0's backward in front of its forward at stage 0.
+    let kind = ScheduleKind::OneFOneBSno;
+    let mut progs = programs(kind, 2, 4);
+    let fwd = progs[0].iter().position(|o| matches!(o, Op::Fwd { mb: 0 })).unwrap();
+    let bwd = progs[0].iter().position(|o| matches!(o, Op::Bwd { mb: 0 })).unwrap();
+    progs[0].swap(fwd, bwd);
+    let r = verify::check_stage_programs(kind, 2, 4, &progs);
+    assert_eq!(r.exit_code(), 2);
+    assert!(
+        r.violations
+            .iter()
+            .any(|v| matches!(v, VerifyError::DependencyOrder { stage: 0, micro: 0, .. })),
+        "{}",
+        r.render("swapped")
+    );
+}
+
+#[test]
+fn mutation_dropped_transfer_is_missing_producer() {
+    // Stage 0 never forwards micro-batch 2: stage 1 consumes a tensor
+    // nobody sent. The producer stage also gets its own MissingOp.
+    let kind = ScheduleKind::GPipe;
+    let mut progs = programs(kind, 2, 4);
+    progs[0].retain(|o| !matches!(o, Op::Fwd { mb: 2 }));
+    let r = verify::check_stage_programs(kind, 2, 4, &progs);
+    assert_eq!(r.exit_code(), 2);
+    assert!(
+        r.violations
+            .iter()
+            .any(|v| matches!(v, VerifyError::MissingProducer { stage: 1, micro: 2, .. })),
+        "{}",
+        r.render("dropped transfer")
+    );
+    assert!(r
+        .violations
+        .iter()
+        .any(|v| matches!(v, VerifyError::MissingOp { stage: 0, micro: 2, .. })));
+}
+
+#[test]
+fn mutation_fifo_reorder_is_transfer_order() {
+    // The consumer stage reads micro-batch 1 before 0 while the producer
+    // emits 0 before 1 — the channel would deliver the wrong tensor.
+    let kind = ScheduleKind::GPipe;
+    let mut progs = programs(kind, 2, 4);
+    let p0 = progs[1].iter().position(|o| matches!(o, Op::Fwd { mb: 0 })).unwrap();
+    let p1 = progs[1].iter().position(|o| matches!(o, Op::Fwd { mb: 1 })).unwrap();
+    progs[1].swap(p0, p1);
+    let r = verify::check_stage_programs(kind, 2, 4, &progs);
+    assert_eq!(r.exit_code(), 2);
+    assert!(
+        r.violations
+            .iter()
+            .any(|v| matches!(v, VerifyError::TransferOrder { stage: 1, .. })),
+        "{}",
+        r.render("fifo reorder")
+    );
+}
+
+#[test]
+fn mutation_duplicate_and_dropped_ops_are_typed() {
+    let kind = ScheduleKind::OneFOneBSo;
+    // Duplicate a forward…
+    let mut dup = programs(kind, 2, 4);
+    let f = dup[0].iter().position(|o| matches!(o, Op::Fwd { mb: 1 })).unwrap();
+    let op = dup[0][f];
+    dup[0].insert(f + 1, op);
+    let r = verify::check_stage_programs(kind, 2, 4, &dup);
+    assert!(
+        r.violations
+            .iter()
+            .any(|v| matches!(v, VerifyError::DuplicateOp { stage: 0, micro: 1, .. })),
+        "{}",
+        r.render("duplicate")
+    );
+    // …and drop a backward.
+    let mut dropped = programs(kind, 2, 4);
+    dropped[1].retain(|o| !matches!(o, Op::Bwd { mb: 3 }));
+    let r = verify::check_stage_programs(kind, 2, 4, &dropped);
+    assert!(
+        r.violations
+            .iter()
+            .any(|v| matches!(v, VerifyError::MissingOp { stage: 1, micro: 3, .. })),
+        "{}",
+        r.render("dropped")
+    );
+}
+
+#[test]
+fn mutation_off_by_one_stash_depth_is_stash_depth() {
+    // The program genuinely needs 4 concurrent micro-batches; a memory
+    // model that budgeted 3 is under-provisioned by exactly one slot.
+    let kind = ScheduleKind::GPipe;
+    let ops = verify::materialize(kind, 2, 0, 4);
+    let derived = program::peak_occupancy(&ops);
+    assert_eq!(derived, 4, "GPipe stage 0 stashes all M");
+    let bytes =
+        [StageBytes { static_bytes: 100, per_mb_stash: 10, stash_depth: derived - 1 }];
+    let r = verify::check_memory(&[derived], &bytes, None, None);
+    assert!(
+        matches!(
+            r.violations.as_slice(),
+            [VerifyError::StashDepth { stage: 0, derived: 4, declared: 3 }]
+        ),
+        "{}",
+        r.render("stash")
+    );
+}
+
+#[test]
+fn mutation_underdeclared_weight_versions_is_staleness_bound() {
+    // PipeDream stage 0 at N=4 genuinely needs shadow versions; declaring
+    // one fewer than required breaks the staleness certificate.
+    let kind = ScheduleKind::PipeDream;
+    let ops = verify::materialize(kind, 4, 0, 8);
+    let required = program::required_weight_versions(&ops, kind.intra_batch());
+    assert!(required > 0, "PipeDream stage 0 is stale by construction");
+    let errs = program::check_weight_versions(0, &ops, kind.intra_batch(), required - 1);
+    assert!(
+        matches!(errs.as_slice(), [VerifyError::StalenessBound { stage: 0, .. }]),
+        "{errs:?}"
+    );
+    // Declared exactly right: accepted.
+    assert!(program::check_weight_versions(0, &ops, kind.intra_batch(), required).is_empty());
+}
+
+#[test]
+fn mutation_cyclic_programs_are_deadlock() {
+    // Stage 0 waits for micro-batch 0's error before forwarding it;
+    // stage 1 waits for the activation before backwarding. Neither can
+    // start — a send/recv cycle the topological pass must find.
+    let progs = vec![
+        vec![Op::Bwd { mb: 0 }, Op::Fwd { mb: 0 }, Op::Update],
+        vec![Op::Fwd { mb: 0 }, Op::Bwd { mb: 0 }, Op::Update],
+    ];
+    let errs = program::check_deadlock(&progs);
+    assert!(
+        errs.iter()
+            .any(|v| matches!(v, VerifyError::DeadlockCycle { stages } if stages[..] == [0, 1])),
+        "{errs:?}"
+    );
+}
+
+// ---------------------------------------------------------------- claim 3
+
+/// Explore a plan constrained to one (kind, M) pair — the shape every
+/// shipped train config pins — at a given parallelism.
+fn explore_pinned(kind: ScheduleKind, m: usize, jobs: usize) -> planner::Plan {
+    let net = zoo::vgg16(224);
+    let cl = presets::v100_cluster(4);
+    let prof = analytical::profile(&net, &cl);
+    let opts = planner::Options { jobs, ..Default::default() };
+    let mut space = planner::SearchSpace::bapipe(&net, &cl, &prof, &opts);
+    space.kinds = vec![kind];
+    space.m_grid = vec![m];
+    let mut cache = planner::EvalCache::new();
+    planner::explore_with_cache_in_space(&net, &cl, &prof, &space, &opts, &mut cache)
+}
+
+#[test]
+fn config_pinned_plans_round_trip_and_audit_clean() {
+    for name in ["train_lm10m.json", "train_lm100m.json"] {
+        let path = format!("{}/configs/{name}", env!("CARGO_MANIFEST_DIR"));
+        let cfg = TrainConfig::load(&path).unwrap();
+        let kind = cfg
+            .schedule_kind()
+            .unwrap()
+            .expect("shipped configs pin a pipeline schedule");
+        let plan = explore_pinned(kind, cfg.m, 1);
+        // Serialize exactly like `explore --emit`, re-load exactly like
+        // `bapipe check`, and require the audit's exit-0 contract.
+        let text = plan.emit_json().unwrap();
+        let loaded = planner::Plan::from_json(&Json::parse(&text).unwrap()).unwrap();
+        let cl = presets::v100_cluster(4);
+        let audit = verify::plan_audit(&loaded, Some(&cl));
+        assert_eq!(audit.exit_code(), 0, "{name}: {}", audit.render("plan"));
+    }
+}
+
+#[test]
+fn audit_diagnostics_agree_across_jobs() {
+    // The same pinned exploration under jobs=1 and jobs=8 must produce
+    // plans whose audits render identically — the verifier's coordinate
+    // sort makes diagnostics independent of evaluation order.
+    let plan1 = explore_pinned(ScheduleKind::OneFOneBSno, 8, 1);
+    let plan8 = explore_pinned(ScheduleKind::OneFOneBSno, 8, 8);
+    let a1 = verify::plan_audit(&plan1, None);
+    let a8 = verify::plan_audit(&plan8, None);
+    assert_eq!(a1.render("plan"), a8.render("plan"));
+    assert_eq!(a1.exit_code(), 0, "{}", a1.render("plan"));
+}
+
+#[test]
+fn report_ordering_is_insertion_order_independent() {
+    // Feed the same violations in two different orders; after sort() the
+    // rendered diagnostics are byte-identical.
+    let errs = [
+        VerifyError::UpdateCount { stage: 1, found: 0, expected: 1 },
+        VerifyError::DependencyOrder { stage: 0, pc: 5, micro: 2 },
+        VerifyError::PlanStructure { what: "x".into() },
+        VerifyError::TransferOrder { stage: 1, pc: 2, micro: 3 },
+    ];
+    let mut fwd = verify::VerifyReport::default();
+    fwd.violations.extend(errs.iter().cloned());
+    let mut rev = verify::VerifyReport::default();
+    rev.violations.extend(errs.iter().rev().cloned());
+    fwd.sort();
+    rev.sort();
+    assert_eq!(fwd.render("r"), rev.render("r"));
+}
